@@ -1,0 +1,69 @@
+//! Multi-device scaling demo (paper Section 5.3, Figs. 7b/7c): train the
+//! same tensor with 1, 2, and 4 simulated devices and report per-epoch
+//! time, speedup, and the communication volume the partition scheme costs.
+//!
+//! ```bash
+//! cargo run --release --example multi_gpu_scaling
+//! ```
+
+use anyhow::Result;
+
+use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+use fasttucker::kruskal::reconstruct::rmse;
+use fasttucker::model::TuckerModel;
+use fasttucker::parallel::{LatinSchedule, ParallelFastTucker, ParallelOptions};
+use fasttucker::util::Rng;
+
+fn main() -> Result<()> {
+    let spec = PlantedSpec {
+        dims: vec![400, 400, 400],
+        nnz: 1_000_000,
+        j: 8,
+        r_core: 8,
+        noise: 0.1,
+        clamp: None,
+    };
+    let mut rng = Rng::new(11);
+    println!("generating {} nonzeros...", spec.nnz);
+    let p = planted_tucker(&mut rng, &spec);
+
+    // Show the conflict-free schedule for 2 devices.
+    let s = LatinSchedule::new(2, 3);
+    println!("\nschedule for M=2, N=3 ({} rounds):", s.rounds());
+    for round in 0..s.rounds() {
+        let a = s.round_assignments(round);
+        println!("  round {round}: dev0->{:?} dev1->{:?}", a[0], a[1]);
+    }
+
+    // On single-core hosts the engine reports discrete-event device time
+    // (max worker time per round) — see DESIGN.md §Hardware-Adaptation.
+    println!("\ndevices  epoch_secs  speedup  rmse_after3  comm_MB");
+    let mut baseline = None;
+    for workers in [1usize, 2, 4] {
+        let mut rng = Rng::new(13);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = workers;
+        opts.hyper.lr_factor = fasttucker::sched::LrSchedule::new(0.01, 0.05);
+        opts.hyper.lr_core = fasttucker::sched::LrSchedule::new(0.005, 0.1);
+        opts.hyper.lambda_factor = 1e-3;
+        opts.hyper.lambda_core = 1e-3;
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut secs = 0.0;
+        for epoch in 0..3 {
+            let st = engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            secs += st.total_secs();
+        }
+        let secs = secs / 3.0;
+        let speedup = baseline.map(|b: f64| b / secs).unwrap_or(1.0);
+        if baseline.is_none() {
+            baseline = Some(secs);
+        }
+        println!(
+            "{workers:>7}  {secs:>10.3}  {speedup:>7.2}  {:>11.4}  {:>7.2}",
+            rmse(&model, &p.tensor),
+            engine.ledger.total_bytes() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

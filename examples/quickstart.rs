@@ -1,0 +1,64 @@
+//! Quickstart: decompose a small synthetic HOHDST tensor with FastTucker.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use fasttucker::config::{AlgoKind, TrainConfig};
+use fasttucker::coordinator::Trainer;
+use fasttucker::data::{split::train_test_split, Dataset};
+use fasttucker::util::Rng;
+
+fn main() -> Result<()> {
+    // 1. Data: a planted low-rank tensor from the registry.
+    let mut rng = Rng::new(42);
+    let tensor = Dataset::by_name("tiny", 1.0)?.build(&mut rng)?;
+    let (train, test) = train_test_split(&tensor, 0.1, &mut rng);
+    println!(
+        "tensor: dims={:?} nnz={} (train {} / test {})",
+        tensor.dims(),
+        tensor.nnz(),
+        train.nnz(),
+        test.nnz()
+    );
+
+    // 2. Config: FastTucker, rank J=4, Kruskal core rank R=4.
+    let mut cfg = TrainConfig::default();
+    cfg.algo = AlgoKind::FastTucker;
+    cfg.j = 4;
+    cfg.r_core = 4;
+    cfg.epochs = 40;
+    // NOMAD-style decaying rates (the paper's Table 7 style).
+    cfg.hyper.lr_factor = fasttucker::sched::LrSchedule::new(0.015, 0.02);
+    cfg.hyper.lr_core = fasttucker::sched::LrSchedule::new(0.008, 0.05);
+    cfg.hyper.lambda_factor = 1e-3;
+    cfg.hyper.lambda_core = 1e-3;
+
+    // 3. Train.
+    let dims = tensor.dims().to_vec();
+    let (mut trainer, mut model) = Trainer::from_config(&cfg, &dims, &mut rng)?;
+    trainer.opts.verbose = false;
+    let report = trainer.train(&mut model, &train, &test, &mut rng)?;
+
+    println!("epoch  rmse      mae");
+    for rec in &report.history {
+        println!("{:>5}  {:.5}  {:.5}", rec.epoch, rec.rmse, rec.mae);
+    }
+    println!(
+        "\ncompression: model holds {} params for a {} -element tensor",
+        model.param_count(),
+        tensor.dims().iter().product::<usize>()
+    );
+
+    // 4. Predict an individual entry.
+    let coords = tensor.index(0);
+    println!(
+        "x{:?} = {:.3} (observed {:.3})",
+        coords,
+        model.predict(coords),
+        tensor.value(0)
+    );
+    Ok(())
+}

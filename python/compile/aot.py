@@ -1,0 +1,115 @@
+"""AOT compile path: lower the L2 step functions to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile()` nor serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's bundled XLA (xla_extension 0.5.1) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Emits, per (J, R, B) variant:
+    artifacts/train_step_j{J}_r{R}_b{B}.hlo.txt
+    artifacts/factor_step_j{J}_r{R}_b{B}.hlo.txt
+    artifacts/predict_j{J}_r{R}_b{B}.hlo.txt
+plus artifacts/manifest.tsv, a tab-separated index the Rust runtime parses
+(no serde/json available offline on the Rust side):
+
+    <entry-point>\t<file>\t<J>\t<R>\t<B>\t<n_outputs>
+
+Run once via `make artifacts`; a no-op if inputs are unchanged (stamp file).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (J, R_core, batch) variants compiled by default. The small variant is used
+# by Rust integration tests; the default one by the end-to-end driver.
+DEFAULT_VARIANTS = (
+    (8, 8, 256),      # small batch: integration tests / tiny workloads
+    (8, 8, 2048),     # perf pass: large batch amortizes PJRT call overhead
+    (16, 16, 2048),
+)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(J: int, R: int, B: int):
+    row = jax.ShapeDtypeStruct((B, J), F32)
+    bfac = jax.ShapeDtypeStruct((R, J), F32)
+    vals = jax.ShapeDtypeStruct((B,), F32)
+    scalar = jax.ShapeDtypeStruct((), F32)
+    return row, bfac, vals, scalar
+
+
+def lower_variant(J: int, R: int, B: int):
+    """Lower all three step functions for one shape variant."""
+    row, bfac, vals, scalar = _specs(J, R, B)
+    entries = []
+    entries.append((
+        "train_step",
+        jax.jit(model.train_step).lower(row, row, row, bfac, bfac, bfac,
+                                        vals, scalar, scalar),
+        7,
+    ))
+    entries.append((
+        "factor_step",
+        jax.jit(model.factor_step).lower(row, row, row, bfac, bfac, bfac,
+                                         vals, scalar, scalar),
+        4,
+    ))
+    entries.append((
+        "predict",
+        jax.jit(model.predict).lower(row, row, row, bfac, bfac, bfac),
+        1,
+    ))
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=None,
+                    help="comma list of J:R:B triples, e.g. 8:8:256,16:16:2048")
+    args = ap.parse_args()
+
+    if args.variants:
+        variants = tuple(
+            tuple(int(x) for x in v.split(":")) for v in args.variants.split(",")
+        )
+    else:
+        variants = DEFAULT_VARIANTS
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for (J, R, B) in variants:
+        for name, lowered, n_out in lower_variant(J, R, B):
+            fname = f"{name}_j{J}_r{R}_b{B}.hlo.txt"
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name}\t{fname}\t{J}\t{R}\t{B}\t{n_out}")
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.tsv ({len(manifest_lines)} entries)")
+
+
+if __name__ == "__main__":
+    main()

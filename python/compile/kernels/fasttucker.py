@@ -1,0 +1,141 @@
+"""L1: Pallas kernel for the cuFastTucker Thm-1/2 contraction.
+
+This is the paper's Fig. 1 hot spot — the "two key steps" that build, for a
+batch of sampled nonzeros, the per-mode coefficient vectors
+
+    c_n[b, r]  = b_r^(n) . a_{i_n}^(n)            (warp-shuffle dot in CUDA)
+    w_n[b, r]  = prod_{m != n} c_m[b, r]          (Thm 1/2 reduction)
+    GS_n[b, :] = sum_r w_n[b, r] * b_r^(n)        (factor-update coefficient)
+    xhat[b]    = a_n[b, :] . GS_n[b, :]           (prediction, mode-invariant)
+    e[b]       = xhat[b] - x[b]                   (residual)
+
+`w_n` doubles as the core-update coefficient: Q^(n),r = w_n[b,r] * a_n[b,:]
+(Eq. 17), so downstream the core gradient is the matmul (e*w_n)^T @ a_n.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the Kruskal factors
+`b_n` (R x J, a few KB) are the VMEM-resident operand — the analogue of the
+paper keeping the core factors in shared memory — while the gathered factor
+rows stream through the batch grid tile by tile. All contractions are
+(TB,J)x(J,R) / (TB,R)x(R,J) matmuls, i.e. MXU-shaped.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax-CPU (tests)
+and the Rust PJRT client (runtime) execute bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. Must divide the batch size handed to contract().
+DEFAULT_TILE = 128
+
+
+def _contract_kernel(a1_ref, a2_ref, a3_ref, b1_ref, b2_ref, b3_ref, x_ref,
+                     gs1_ref, gs2_ref, gs3_ref, w1_ref, w2_ref, w3_ref, e_ref):
+    """One batch tile of the Thm-1/2 contraction (order 3).
+
+    a*_ref: (TB, J) gathered factor rows.  b*_ref: (R, J) Kruskal factors
+    (transposed layout, the paper's coalesced storage).  x_ref: (TB, 1).
+    """
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    a3 = a3_ref[...]
+    b1 = b1_ref[...]
+    b2 = b2_ref[...]
+    b3 = b3_ref[...]
+
+    # c_n[b, r] = <b_r^(n), a_n[b]> — the warp-shuffle dot products.
+    c1 = jnp.dot(a1, b1.T)  # (TB, R)
+    c2 = jnp.dot(a2, b2.T)
+    c3 = jnp.dot(a3, b3.T)
+
+    # w_n = prod over the other modes (Thm 1: Kronecker dot -> scalar products).
+    w1 = c2 * c3
+    w2 = c1 * c3
+    w3 = c1 * c2
+
+    # GS_n[b] = sum_r w_n[b, r] b_r^(n)  — (TB,R)x(R,J) matmul.
+    gs1 = jnp.dot(w1, b1)
+    gs2 = jnp.dot(w2, b2)
+    gs3 = jnp.dot(w3, b3)
+
+    # Prediction is mode-invariant; use mode 1.
+    xhat = jnp.sum(a1 * gs1, axis=1, keepdims=True)  # (TB, 1)
+
+    gs1_ref[...] = gs1
+    gs2_ref[...] = gs2
+    gs3_ref[...] = gs3
+    w1_ref[...] = w1
+    w2_ref[...] = w2
+    w3_ref[...] = w3
+    e_ref[...] = xhat - x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def contract(a1, a2, a3, b1, b2, b3, vals, *, tile: int = DEFAULT_TILE):
+    """Run the Pallas contraction over a batch.
+
+    Args:
+      a1, a2, a3: (B, J) gathered factor rows per mode.
+      b1, b2, b3: (R, J) Kruskal core factors (transposed layout).
+      vals: (B,) observed nonzero values.
+      tile: batch tile size; must divide B.
+
+    Returns:
+      (gs1, gs2, gs3, w1, w2, w3, e): per-sample coefficient vectors,
+      core coefficients, and residuals e = xhat - vals, shapes
+      (B,J)x3, (B,R)x3, (B,).
+    """
+    B, J = a1.shape
+    R = b1.shape[0]
+    tile = min(tile, B)  # small batches run as a single tile
+    if B % tile != 0:
+        raise ValueError(f"batch {B} not divisible by tile {tile}")
+    x2d = vals.reshape(B, 1)
+
+    grid = (B // tile,)
+    row_spec = pl.BlockSpec((tile, J), lambda i: (i, 0))
+    wcoef_spec = pl.BlockSpec((tile, R), lambda i: (i, 0))
+    full_b = pl.BlockSpec((R, J), lambda i: (0, 0))
+    val_spec = pl.BlockSpec((tile, 1), lambda i: (i, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, J), a1.dtype),
+        jax.ShapeDtypeStruct((B, J), a1.dtype),
+        jax.ShapeDtypeStruct((B, J), a1.dtype),
+        jax.ShapeDtypeStruct((B, R), a1.dtype),
+        jax.ShapeDtypeStruct((B, R), a1.dtype),
+        jax.ShapeDtypeStruct((B, R), a1.dtype),
+        jax.ShapeDtypeStruct((B, 1), a1.dtype),
+    )
+    out_specs = (row_spec, row_spec, row_spec,
+                 wcoef_spec, wcoef_spec, wcoef_spec, val_spec)
+
+    gs1, gs2, gs3, w1, w2, w3, e = pl.pallas_call(
+        _contract_kernel,
+        grid=grid,
+        in_specs=(row_spec, row_spec, row_spec,
+                  full_b, full_b, full_b, val_spec),
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=True,
+    )(a1, a2, a3, b1, b2, b3, x2d)
+    return gs1, gs2, gs3, w1, w2, w3, e.reshape(B)
+
+
+def vmem_footprint_bytes(tile: int, J: int, R: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes held live per grid step (inputs+outputs+temps).
+
+    Used by the perf notes in DESIGN.md: the paper's analogous number is the
+    shared-memory footprint of the core factors per thread block.
+    """
+    rows = 3 * tile * J            # a1..a3
+    bfac = 3 * R * J               # b1..b3 (resident)
+    outs = 3 * tile * J + 3 * tile * R + tile
+    temps = 3 * tile * R           # c1..c3
+    return dtype_bytes * (rows + bfac + outs + temps + tile)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the Pallas contraction kernel.
+
+Implements the same Thm-1/2 contraction as kernels/fasttucker.py with no
+Pallas machinery, and additionally a *naive* reference that materializes the
+dense Kruskal core explicitly (the exponential-cost path the paper's
+theorems remove) — used by tests to prove the reduction is exact, not
+approximate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def contract_ref(a1, a2, a3, b1, b2, b3, vals):
+    """Thm-1/2 contraction, plain jnp. Same returns as fasttucker.contract."""
+    c1 = a1 @ b1.T  # (B, R)
+    c2 = a2 @ b2.T
+    c3 = a3 @ b3.T
+    w1 = c2 * c3
+    w2 = c1 * c3
+    w3 = c1 * c2
+    gs1 = w1 @ b1  # (B, J)
+    gs2 = w2 @ b2
+    gs3 = w3 @ b3
+    xhat = jnp.sum(a1 * gs1, axis=1)
+    e = xhat - vals
+    return gs1, gs2, gs3, w1, w2, w3, e
+
+
+def predict_naive(a1, a2, a3, b1, b2, b3):
+    """Exponential-cost prediction through the *materialized* dense core.
+
+    Builds the Kruskal core G[j1,j2,j3] = sum_r b1[r,j1] b2[r,j2] b3[r,j3]
+    and contracts it against the factor rows directly — O(J^3) per sample,
+    the cost the paper's Theorems 1 and 2 eliminate. Tests assert this
+    equals the linear-cost path to float tolerance.
+    """
+    G = jnp.einsum("ri,rj,rk->ijk", b1, b2, b3)
+    return jnp.einsum("bi,bj,bk,ijk->b", a1, a2, a3, G)
+
+
+def gs_naive(a1, a2, a3, b1, b2, b3, mode: int):
+    """GS^(n) through the dense core: GS^(n) = G^(n) (kron of other rows)."""
+    G = jnp.einsum("ri,rj,rk->ijk", b1, b2, b3)
+    if mode == 0:
+        return jnp.einsum("ijk,bj,bk->bi", G, a2, a3)
+    if mode == 1:
+        return jnp.einsum("ijk,bi,bk->bj", G, a1, a3)
+    if mode == 2:
+        return jnp.einsum("ijk,bi,bj->bk", G, a1, a2)
+    raise ValueError(f"mode must be 0..2, got {mode}")

@@ -1,0 +1,77 @@
+"""L2: the cuFastTucker update step as a JAX compute graph.
+
+Three step functions, each lowered once by aot.py to HLO text and executed
+from the Rust coordinator via PJRT (python never runs at training time):
+
+  * train_step  — Eq. 13 factor SGD update for all three modes **and**
+                  Eq. 17 core-factor gradient sums, in one fused graph.
+  * factor_step — Eq. 13 only (the paper's "Factor" configuration, Fig. 4).
+  * predict     — batched x̂ for RMSE/MAE evaluation.
+
+All heavy lifting goes through the L1 Pallas kernel (kernels.fasttucker);
+the remaining arithmetic (SGD updates, the (e·w)^T A core-gradient matmuls)
+stays in jnp so XLA fuses it with the kernel output.
+
+Shapes are static: one artifact per (J, R, B) variant. The Rust side owns
+gather/scatter of factor rows (HLO cannot do dynamic-size scatter cheaply,
+and the coordinator already owns the index structure).
+
+Update semantics: within one batch every sample reads the *pre-batch*
+factors (mini-batch SGD at a single linearization point). The native Rust
+engine has an identical `batched` mode used for cross-checking artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import fasttucker as ker
+
+
+def train_step(a1, a2, a3, b1, b2, b3, vals, lr, lam):
+    """One mini-batch step: updated factor rows + core-factor gradient sums.
+
+    Args:
+      a1, a2, a3: (B, J) gathered factor rows.
+      b1, b2, b3: (R, J) Kruskal core factors (transposed layout).
+      vals: (B,) observed values.
+      lr, lam: scalar learning rate / regularization.
+
+    Returns:
+      (new_a1, new_a2, new_a3, gb1, gb2, gb3, e) where new_a* are the
+      SGD-updated rows (B, J), gb* are the *summed* core gradients (R, J)
+      (caller divides by the sample count, per Algorithm 1's M = |Ψ|),
+      and e is the per-sample residual (B,) (reused for loss logging).
+    """
+    gs1, gs2, gs3, w1, w2, w3, e = ker.contract(a1, a2, a3, b1, b2, b3, vals)
+
+    ecol = e[:, None]
+    # Eq. 13: grad a = e * GS + lam * a   (parts (1)+(3) fold into e*GS).
+    new_a1 = a1 - lr * (ecol * gs1 + lam * a1)
+    new_a2 = a2 - lr * (ecol * gs2 + lam * a2)
+    new_a3 = a3 - lr * (ecol * gs3 + lam * a3)
+
+    # Eq. 17: grad b_r^(n) = sum_b e_b * w_n[b,r] * a_n[b,:]  -> (R, J) matmul.
+    gb1 = (ecol * w1).T @ a1
+    gb2 = (ecol * w2).T @ a2
+    gb3 = (ecol * w3).T @ a3
+
+    return new_a1, new_a2, new_a3, gb1, gb2, gb3, e
+
+
+def factor_step(a1, a2, a3, b1, b2, b3, vals, lr, lam):
+    """Eq. 13 factor update only (paper's 'Factor' ablation, Fig. 4)."""
+    gs1, gs2, gs3, _, _, _, e = ker.contract(a1, a2, a3, b1, b2, b3, vals)
+    ecol = e[:, None]
+    new_a1 = a1 - lr * (ecol * gs1 + lam * a1)
+    new_a2 = a2 - lr * (ecol * gs2 + lam * a2)
+    new_a3 = a3 - lr * (ecol * gs3 + lam * a3)
+    return new_a1, new_a2, new_a3, e
+
+
+def predict(a1, a2, a3, b1, b2, b3):
+    """Batched prediction x̂[b] = Σ_r Π_n (a_n[b]·b_r^(n)) for evaluation."""
+    c1 = a1 @ b1.T
+    c2 = a2 @ b2.T
+    c3 = a3 @ b3.T
+    return jnp.sum(c1 * c2 * c3, axis=1)

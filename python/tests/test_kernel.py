@@ -1,0 +1,123 @@
+"""L1 kernel correctness: Pallas contraction vs pure-jnp oracle.
+
+The hypothesis sweep varies batch/J/R/tile shapes and value scales; every
+case asserts allclose against ref.contract_ref, and the Thm-1/2 linear path
+is checked against the exponential dense-core path (the identity the paper's
+theorems claim).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fasttucker as ker
+from compile.kernels import ref
+
+
+def make_case(rng, B, J, R, scale=1.0):
+    a = [jnp.asarray(rng.normal(scale=scale, size=(B, J)), jnp.float32)
+         for _ in range(3)]
+    b = [jnp.asarray(rng.normal(scale=scale, size=(R, J)), jnp.float32)
+         for _ in range(3)]
+    vals = jnp.asarray(rng.normal(size=(B,)), jnp.float32)
+    return a, b, vals
+
+
+def assert_contract_matches(a, b, vals, tile):
+    out_k = ker.contract(*a, *b, vals, tile=tile)
+    out_r = ref.contract_ref(*a, *b, vals)
+    names = ["gs1", "gs2", "gs3", "w1", "w2", "w3", "e"]
+    for name, k, r in zip(names, out_k, out_r):
+        np.testing.assert_allclose(k, r, rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+class TestContractBasic:
+    def test_small(self):
+        rng = np.random.default_rng(0)
+        a, b, vals = make_case(rng, 128, 8, 8)
+        assert_contract_matches(a, b, vals, tile=128)
+
+    def test_multi_tile(self):
+        rng = np.random.default_rng(1)
+        a, b, vals = make_case(rng, 512, 16, 8)
+        assert_contract_matches(a, b, vals, tile=128)
+
+    def test_tile_equals_batch(self):
+        rng = np.random.default_rng(2)
+        a, b, vals = make_case(rng, 64, 4, 4)
+        assert_contract_matches(a, b, vals, tile=64)
+
+    def test_rectangular_j_ne_r(self):
+        rng = np.random.default_rng(3)
+        a, b, vals = make_case(rng, 128, 32, 4)
+        assert_contract_matches(a, b, vals, tile=64)
+
+    def test_rank_one_core(self):
+        rng = np.random.default_rng(4)
+        a, b, vals = make_case(rng, 128, 8, 1)
+        assert_contract_matches(a, b, vals, tile=128)
+
+    def test_bad_tile_raises(self):
+        rng = np.random.default_rng(5)
+        a, b, vals = make_case(rng, 100, 8, 8)
+        with pytest.raises(ValueError):
+            ker.contract(*a, *b, vals, tile=64)
+
+    def test_zero_inputs(self):
+        B, J, R = 128, 8, 8
+        a = [jnp.zeros((B, J), jnp.float32)] * 3
+        b = [jnp.zeros((R, J), jnp.float32)] * 3
+        vals = jnp.ones((B,), jnp.float32)
+        *_, e = ker.contract(*a, *b, vals)
+        np.testing.assert_allclose(e, -vals)
+
+    def test_residual_zero_when_exact(self):
+        # If vals == xhat the residual must be identically ~0.
+        rng = np.random.default_rng(6)
+        a, b, _ = make_case(rng, 128, 8, 8)
+        xhat = ref.predict_naive(*a, *b)
+        *_, e = ker.contract(*a, *b, xhat)
+        np.testing.assert_allclose(e, np.zeros(128), atol=1e-3)
+
+
+class TestTheoremIdentity:
+    """Thm 1/2: linear-cost contraction == exponential dense-core contraction."""
+
+    def test_prediction_identity(self):
+        rng = np.random.default_rng(7)
+        a, b, vals = make_case(rng, 64, 8, 8)
+        gs1, *_, e = ker.contract(*a, *b, vals)
+        xhat_naive = ref.predict_naive(*a, *b)
+        np.testing.assert_allclose(e + vals, xhat_naive, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("mode", [0, 1, 2])
+    def test_gs_identity(self, mode):
+        rng = np.random.default_rng(8 + mode)
+        a, b, vals = make_case(rng, 64, 8, 8)
+        out = ker.contract(*a, *b, vals)
+        gs = out[mode]
+        gs_naive = ref.gs_naive(*a, *b, mode)
+        np.testing.assert_allclose(gs, gs_naive, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([32, 64, 128]),
+    J=st.sampled_from([4, 8, 16, 32]),
+    R=st.sampled_from([1, 4, 8, 16]),
+    scale=st.sampled_from([0.1, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_contract_hypothesis(b_tiles, tile, J, R, scale, seed):
+    rng = np.random.default_rng(seed)
+    a, b, vals = make_case(rng, b_tiles * tile, J, R, scale=scale)
+    assert_contract_matches(a, b, vals, tile=tile)
+
+
+def test_vmem_footprint_sane():
+    # Default variant must fit comfortably in a 16 MB VMEM budget.
+    fp = ker.vmem_footprint_bytes(tile=128, J=16, R=16)
+    assert fp < 16 * 1024 * 1024
+    assert fp > 0

@@ -1,0 +1,132 @@
+"""L2 model-step correctness: SGD semantics, gradient identity vs jax.grad,
+and convergence of the step functions on a tiny planted problem."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_state(rng, B, J, R, scale=0.3):
+    a = [jnp.asarray(rng.normal(scale=scale, size=(B, J)), jnp.float32)
+         for _ in range(3)]
+    b = [jnp.asarray(rng.normal(scale=scale, size=(R, J)), jnp.float32)
+         for _ in range(3)]
+    vals = jnp.asarray(rng.normal(size=(B,)), jnp.float32)
+    return a, b, vals
+
+
+class TestFactorStepGradient:
+    """Eq. 13's hand-built gradient must equal autodiff of the loss."""
+
+    def test_matches_jax_grad(self):
+        rng = np.random.default_rng(0)
+        B, J, R = 64, 8, 4
+        a, b, vals = make_state(rng, B, J, R)
+        lr, lam = jnp.float32(0.05), jnp.float32(0.01)
+
+        def loss(a1, a2, a3):
+            xh = model.predict(a1, a2, a3, *b)
+            # Per-sample loss (x - xhat)^2 / ... paper uses unscaled squared
+            # error per sample; Eq.13's gradient is e*GS with e = xhat - x,
+            # matching d/da of 0.5*(xhat - x)^2 + 0.5*lam*|a|^2.
+            return 0.5 * jnp.sum((xh - vals) ** 2) + 0.5 * lam * (
+                jnp.sum(a1**2) + jnp.sum(a2**2) + jnp.sum(a3**2))
+
+        g1, g2, g3 = jax.grad(loss, argnums=(0, 1, 2))(*a)
+        new_a1, new_a2, new_a3, e = model.factor_step(*a, *b, vals, lr, lam)
+        np.testing.assert_allclose(new_a1, a[0] - lr * g1, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(new_a2, a[1] - lr * g2, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(new_a3, a[2] - lr * g3, rtol=1e-3, atol=1e-4)
+
+    def test_core_grad_matches_jax_grad(self):
+        rng = np.random.default_rng(1)
+        B, J, R = 64, 8, 4
+        a, b, vals = make_state(rng, B, J, R)
+
+        def data_loss(b1, b2, b3):
+            xh = model.predict(*a, b1, b2, b3)
+            return 0.5 * jnp.sum((xh - vals) ** 2)
+
+        g1, g2, g3 = jax.grad(data_loss, argnums=(0, 1, 2))(*b)
+        _, _, _, gb1, gb2, gb3, _ = model.train_step(
+            *a, *b, vals, jnp.float32(0.0), jnp.float32(0.0))
+        np.testing.assert_allclose(gb1, g1, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gb2, g2, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gb3, g3, rtol=1e-3, atol=1e-4)
+
+
+class TestTrainStepSemantics:
+    def test_zero_lr_is_identity(self):
+        rng = np.random.default_rng(2)
+        a, b, vals = make_state(rng, 64, 8, 4)
+        na1, na2, na3, *_ = model.train_step(
+            *a, *b, vals, jnp.float32(0.0), jnp.float32(0.0))
+        np.testing.assert_array_equal(na1, a[0])
+        np.testing.assert_array_equal(na2, a[1])
+        np.testing.assert_array_equal(na3, a[2])
+
+    def test_factor_step_equals_train_step_factor_part(self):
+        rng = np.random.default_rng(3)
+        a, b, vals = make_state(rng, 64, 8, 4)
+        lr, lam = jnp.float32(0.01), jnp.float32(0.001)
+        f = model.factor_step(*a, *b, vals, lr, lam)
+        t = model.train_step(*a, *b, vals, lr, lam)
+        for i in range(3):
+            np.testing.assert_allclose(f[i], t[i], rtol=1e-6, atol=1e-6)
+
+    def test_residual_consistent_with_predict(self):
+        rng = np.random.default_rng(4)
+        a, b, vals = make_state(rng, 64, 8, 4)
+        *_, e = model.train_step(*a, *b, vals, jnp.float32(0.0), jnp.float32(0.0))
+        xh = model.predict(*a, *b)
+        np.testing.assert_allclose(e, xh - vals, rtol=1e-4, atol=1e-5)
+
+
+class TestConvergence:
+    def test_sgd_descends_on_planted_problem(self):
+        """Repeated train_step on a planted rank-R problem must shrink RMSE."""
+        rng = np.random.default_rng(5)
+        B, J, R = 256, 8, 4
+        a, b, _ = make_state(rng, B, J, R, scale=0.4)
+        # Plant a ground truth and synthesize values from it.
+        at, bt, _ = make_state(rng, B, J, R, scale=0.5)
+        vals = model.predict(*at, *bt)
+
+        lr, lam = jnp.float32(0.02), jnp.float32(1e-4)
+        a = list(a)
+        b = list(b)
+        rmse0 = float(jnp.sqrt(jnp.mean((model.predict(*a, *b) - vals) ** 2)))
+        for step in range(60):
+            na1, na2, na3, gb1, gb2, gb3, e = model.train_step(
+                *a, *b, vals, lr, lam)
+            a = [na1, na2, na3]
+            b = [b[0] - lr * (gb1 / B + lam * b[0]),
+                 b[1] - lr * (gb2 / B + lam * b[1]),
+                 b[2] - lr * (gb3 / B + lam * b[2])]
+        rmse1 = float(jnp.sqrt(jnp.mean((model.predict(*a, *b) - vals) ** 2)))
+        assert rmse1 < 0.7 * rmse0, (rmse0, rmse1)
+
+
+class TestPredict:
+    def test_against_dense_core(self):
+        rng = np.random.default_rng(6)
+        a, b, _ = make_state(rng, 64, 8, 8)
+        np.testing.assert_allclose(
+            model.predict(*a, *b), ref.predict_naive(*a, *b),
+            rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("R", [1, 2, 4])
+    def test_rank_additivity(self, R):
+        """Kruskal prediction is additive over rank-1 terms."""
+        rng = np.random.default_rng(7 + R)
+        a, b, _ = make_state(rng, 32, 8, R)
+        total = model.predict(*a, *b)
+        acc = jnp.zeros(32, jnp.float32)
+        for r in range(R):
+            br = [x[r:r + 1, :] for x in b]
+            acc = acc + model.predict(*a, *br)
+        np.testing.assert_allclose(total, acc, rtol=1e-3, atol=1e-4)

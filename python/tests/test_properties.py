@@ -1,0 +1,105 @@
+"""Hypothesis-driven property tests for the L1/L2 math (beyond the direct
+kernel-vs-ref sweep in test_kernel.py)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import fasttucker as ker
+from compile.kernels import ref
+
+
+def make(rng, B, J, R, scale=0.5):
+    a = [jnp.asarray(rng.normal(scale=scale, size=(B, J)), jnp.float32)
+         for _ in range(3)]
+    b = [jnp.asarray(rng.normal(scale=scale, size=(R, J)), jnp.float32)
+         for _ in range(3)]
+    vals = jnp.asarray(rng.normal(size=(B,)), jnp.float32)
+    return a, b, vals
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    J=st.sampled_from([2, 4, 8, 16]),
+    R=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prediction_is_multilinear_in_each_factor(J, R, seed):
+    """x̂ is linear in each a_n separately: predict(α·a1) == α·predict(a1)."""
+    rng = np.random.default_rng(seed)
+    a, b, _ = make(rng, 32, J, R)
+    base = model.predict(*a, *b)
+    alpha = 2.5
+    scaled = model.predict(alpha * a[0], a[1], a[2], *b)
+    np.testing.assert_allclose(scaled, alpha * base, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    J=st.sampled_from([4, 8]),
+    R=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_residual_invariant_to_mode_used(J, R, seed):
+    """The kernel predicts through mode 0's GS; the identity x̂ = a_n·GS_n
+    must hold for every mode."""
+    rng = np.random.default_rng(seed)
+    a, b, vals = make(rng, 32, J, R)
+    gs1, gs2, gs3, *_rest, e = ker.contract(*a, *b, vals)
+    x1 = jnp.sum(a[0] * gs1, axis=1)
+    x2 = jnp.sum(a[1] * gs2, axis=1)
+    x3 = jnp.sum(a[2] * gs3, axis=1)
+    np.testing.assert_allclose(x1, x2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(x1, x3, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(e, x1 - vals, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    J=st.sampled_from([4, 8]),
+    R=st.sampled_from([2, 4]),
+    lr=st.sampled_from([1e-4, 1e-3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_one_step_reduces_batch_loss(J, R, lr, seed):
+    """A small factor_step strictly decreases the batch squared error."""
+    rng = np.random.default_rng(seed)
+    a, b, vals = make(rng, 64, J, R)
+    e0 = model.predict(*a, *b) - vals
+    loss0 = float(jnp.sum(e0**2))
+    na = model.factor_step(*a, *b, vals, jnp.float32(lr), jnp.float32(0.0))[:3]
+    e1 = model.predict(*na, *b) - vals
+    loss1 = float(jnp.sum(e1**2))
+    assert loss1 <= loss0 * (1.0 + 1e-5), (loss0, loss1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    J=st.sampled_from([4, 8]),
+    R=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_core_grad_zero_at_zero_residual(J, R, seed):
+    """When vals == x̂ the core gradients vanish."""
+    rng = np.random.default_rng(seed)
+    a, b, _ = make(rng, 32, J, R)
+    vals = model.predict(*a, *b)
+    _, _, _, gb1, gb2, gb3, e = model.train_step(
+        *a, *b, vals, jnp.float32(0.0), jnp.float32(0.0))
+    np.testing.assert_allclose(e, np.zeros(32), atol=2e-3)
+    for gb in (gb1, gb2, gb3):
+        assert float(jnp.max(jnp.abs(gb))) < 5e-2
+
+
+def test_factor_step_grad_composes_with_jax():
+    """The L2 graph (including the Pallas kernel output path) is traceable
+    under jit with donated-style reuse — guards against kernel opacity in
+    the lowering used by aot.py."""
+    rng = np.random.default_rng(0)
+    a, b, vals = make(rng, 32, 4, 2)
+    jitted = jax.jit(model.factor_step)
+    outs = jitted(*a, *b, vals, jnp.float32(1e-3), jnp.float32(0.0))
+    assert outs[0].shape == (32, 4)
+    assert all(bool(jnp.all(jnp.isfinite(o))) for o in outs)

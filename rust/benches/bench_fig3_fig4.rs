@@ -1,0 +1,126 @@
+//! Figs. 3 and 4: accuracy (RMSE/MAE per epoch) of cuTucker vs
+//! cuFastTucker.
+//!
+//! Fig. 3 — fixed J, varying R_core ∈ {8, 16, 32}: cuFastTucker matches
+//! (or beats) the dense-core cuTucker once R_core = J, demonstrating the
+//! core's low-rank inherence.
+//! Fig. 4 — J = R_core, 'Factor' (factor-only updates) vs 'Factor+Core'.
+//!
+//! Run a subset: `cargo bench --bench bench_fig3_fig4 -- fig3` (or fig4).
+
+use fasttucker::algo::{CuTucker, Decomposer, FastTucker, SgdHyper};
+use fasttucker::bench_support::{bench_filter, bench_scale};
+use fasttucker::data::split::train_test_split;
+use fasttucker::data::Dataset;
+use fasttucker::kruskal::reconstruct::rmse_mae;
+use fasttucker::model::TuckerModel;
+use fasttucker::util::Rng;
+
+const EPOCHS: usize = 12;
+
+fn hyper() -> SgdHyper {
+    let mut h = SgdHyper::default();
+    h.lr_factor = fasttucker::sched::LrSchedule::new(0.02, 0.05);
+    h.lr_core = fasttucker::sched::LrSchedule::new(0.01, 0.1);
+    h.lambda_factor = 1e-3;
+    h.lambda_core = 1e-3;
+    h
+}
+
+fn dataset(name: &str, scale: f64) -> (fasttucker::SparseTensor, fasttucker::SparseTensor) {
+    let mut rng = Rng::new(1);
+    let tensor = Dataset::by_name(name, scale).unwrap().build(&mut rng).unwrap();
+    train_test_split(&tensor, 0.1, &mut rng)
+}
+
+fn curve_fasttucker(
+    train: &fasttucker::SparseTensor,
+    test: &fasttucker::SparseTensor,
+    j: usize,
+    r: usize,
+    update_core: bool,
+) -> Vec<(f64, f64)> {
+    let mut rng = Rng::new(2);
+    let mut model = TuckerModel::init_kruskal(&mut rng, train.dims(), j, r);
+    let mut algo = FastTucker::with_defaults();
+    algo.config.hyper = hyper();
+    algo.config.hyper.update_core = update_core;
+    let mut out = Vec::new();
+    for epoch in 0..EPOCHS {
+        algo.train_epoch(&mut model, train, epoch, &mut rng);
+        out.push(rmse_mae(&model, test));
+    }
+    out
+}
+
+fn curve_cutucker(
+    train: &fasttucker::SparseTensor,
+    test: &fasttucker::SparseTensor,
+    j: usize,
+    update_core: bool,
+) -> Vec<(f64, f64)> {
+    let mut rng = Rng::new(2);
+    let mut model = TuckerModel::init_dense(&mut rng, train.dims(), j);
+    let mut algo = CuTucker::new(hyper());
+    algo.hyper.update_core = update_core;
+    let mut out = Vec::new();
+    for epoch in 0..EPOCHS {
+        algo.train_epoch(&mut model, train, epoch, &mut rng);
+        out.push(rmse_mae(&model, test));
+    }
+    out
+}
+
+fn print_series(label: &str, series: &[(f64, f64)]) {
+    print!("{label}\trmse");
+    for (r, _) in series {
+        print!("\t{r:.4}");
+    }
+    println!();
+    print!("{label}\tmae");
+    for (_, m) in series {
+        print!("\t{m:.4}");
+    }
+    println!();
+}
+
+fn fig3(scale: f64) {
+    println!("\nFig. 3 — accuracy vs epoch, fixed J = 8, varying R_core");
+    for ds in ["netflix-like", "yahoo-like"] {
+        let (train, test) = dataset(ds, scale);
+        eprintln!("{ds}: train nnz={}", train.nnz());
+        println!("## {ds} (epochs 1..{EPOCHS})");
+        let cu = curve_cutucker(&train, &test, 8, true);
+        print_series("cuTucker J=8", &cu);
+        for r_core in [8usize, 16, 32] {
+            let ft = curve_fasttucker(&train, &test, 8, r_core, true);
+            print_series(&format!("cuFastTucker J=8 R={r_core}"), &ft);
+        }
+    }
+}
+
+fn fig4(scale: f64) {
+    println!("\nFig. 4 — Factor vs Factor+Core, J = R_core");
+    for ds in ["netflix-like", "yahoo-like"] {
+        let (train, test) = dataset(ds, scale);
+        println!("## {ds} (epochs 1..{EPOCHS})");
+        for j in [8usize, 16] {
+            let both = curve_fasttucker(&train, &test, j, j, true);
+            let factor_only = curve_fasttucker(&train, &test, j, j, false);
+            print_series(&format!("cuFastTucker J=R={j} Factor+Core"), &both);
+            print_series(&format!("cuFastTucker J=R={j} Factor"), &factor_only);
+        }
+    }
+}
+
+fn main() {
+    let scale = 0.05 * bench_scale();
+    match bench_filter().as_deref() {
+        Some("fig3") => fig3(scale),
+        Some("fig4") => fig4(scale),
+        _ => {
+            fig3(scale);
+            fig4(scale);
+        }
+    }
+}

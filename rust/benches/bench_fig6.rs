@@ -1,0 +1,73 @@
+//! Fig. 6: convergence — RMSE vs wall-clock time for all five methods
+//! (J = R_core = 4) on the netflix-like and yahoo-like datasets.
+//!
+//! Paper shape: cuFastTucker and cuTucker converge fastest in wall time;
+//! P-Tucker drops quickly per iteration but each iteration is orders of
+//! magnitude slower; everyone reaches comparable RMSE eventually.
+
+use fasttucker::algo::{
+    CuTucker, Decomposer, FastTucker, PTucker, SgdHyper, SgdTucker, Vest,
+};
+use fasttucker::bench_support::bench_scale;
+use fasttucker::data::split::train_test_split;
+use fasttucker::data::Dataset;
+use fasttucker::kruskal::reconstruct::rmse_mae;
+use fasttucker::model::TuckerModel;
+use fasttucker::util::Rng;
+
+fn run(
+    name: &str,
+    algo: &mut dyn Decomposer,
+    mut model: TuckerModel,
+    train: &fasttucker::SparseTensor,
+    test: &fasttucker::SparseTensor,
+    epochs: usize,
+) {
+    let mut rng = Rng::new(9);
+    let mut cum = 0.0f64;
+    println!("# {name}");
+    println!("epoch\tcum_secs\trmse\tmae");
+    for epoch in 0..epochs {
+        let st = algo.train_epoch(&mut model, train, epoch, &mut rng);
+        cum += st.total_secs();
+        let (rmse, mae) = rmse_mae(&model, test);
+        println!("{}\t{cum:.4}\t{rmse:.5}\t{mae:.5}", epoch + 1);
+    }
+}
+
+fn main() {
+    let scale = 0.05 * bench_scale();
+    let mut h = SgdHyper::default();
+    h.lr_factor = fasttucker::sched::LrSchedule::new(0.02, 0.05);
+    h.lr_core = fasttucker::sched::LrSchedule::new(0.01, 0.1);
+    h.lambda_factor = 1e-3;
+    h.lambda_core = 1e-3;
+
+    for ds in ["netflix-like", "yahoo-like"] {
+        let mut rng = Rng::new(1);
+        let tensor = Dataset::by_name(ds, scale).unwrap().build(&mut rng).unwrap();
+        let (train, test) = train_test_split(&tensor, 0.1, &mut rng);
+        println!("\n== Fig. 6 on {ds}: dims={:?} train nnz={} ==", train.dims(), train.nnz());
+        let dims = train.dims().to_vec();
+
+        let mut rng2 = Rng::new(2);
+        let kmodel = TuckerModel::init_kruskal(&mut rng2, &dims, 4, 4);
+        let dmodel = TuckerModel::init_dense(&mut rng2, &dims, 4);
+
+        let mut ft = FastTucker::with_defaults();
+        ft.config.hyper = h;
+        run("cuFastTucker", &mut ft, kmodel.clone(), &train, &test, 10);
+
+        let mut cu = CuTucker::new(h);
+        run("cuTucker", &mut cu, dmodel.clone(), &train, &test, 10);
+
+        let mut sgd = SgdTucker::new(h);
+        run("SGD_Tucker", &mut sgd, dmodel.clone(), &train, &test, 6);
+
+        let mut pt = PTucker::with_defaults();
+        run("P-Tucker", &mut pt, dmodel.clone(), &train, &test, 4);
+
+        let mut vest = Vest::with_defaults();
+        run("Vest", &mut vest, dmodel.clone(), &train, &test, 4);
+    }
+}

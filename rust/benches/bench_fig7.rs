@@ -1,0 +1,123 @@
+//! Fig. 7: (a) scalability with tensor order 3–10 on the synthesis
+//! datasets; (b)/(c) multi-device speedup with 1/2/4/5 workers.
+//!
+//! Paper shape: both methods scale with order, cuTucker far slower
+//! (exponential in order through J^N); near-linear device speedup.
+//! Run a subset with `cargo bench --bench bench_fig7 -- scalability`
+//! or `-- speedup`.
+
+use fasttucker::algo::{CuTucker, Decomposer, FastTucker, SgdHyper};
+use fasttucker::bench_support::{bench, bench_filter, bench_scale, Table};
+use fasttucker::data::Dataset;
+use fasttucker::model::TuckerModel;
+use fasttucker::parallel::{ParallelFastTucker, ParallelOptions};
+use fasttucker::util::Rng;
+
+fn scalability(scale: f64) {
+    let mut table = Table::new(&[
+        "order",
+        "nnz",
+        "cuFastTucker secs/iter",
+        "cuTucker secs/iter",
+    ]);
+    for order in 3..=10usize {
+        let mut rng = Rng::new(order as u64);
+        let tensor = Dataset::by_name(&format!("synth-order{order}"), 0.2 * scale)
+            .unwrap()
+            .build(&mut rng)
+            .unwrap();
+        let dims = tensor.dims().to_vec();
+
+        let mut model = TuckerModel::init_kruskal(&mut rng, &dims, 4, 4);
+        let mut algo = FastTucker::with_defaults();
+        let mut e = 0;
+        let r = bench("ft", 1, 2, |i| {
+            let mut rr = Rng::new(40 + i as u64);
+            algo.train_epoch(&mut model, &tensor, e, &mut rr);
+            e += 1;
+        });
+
+        // cuTucker: J^order core entries per sample; cap at order <= 6 on
+        // CPU (order 7 at J=4 is 16k entries/sample) and say so.
+        let cu = if order <= 6 {
+            let mut model = TuckerModel::init_dense(&mut rng, &dims, 4);
+            let mut algo = CuTucker::new(SgdHyper::default());
+            let mut e = 0;
+            let r = bench("cu", 0, 1, |i| {
+                let mut rr = Rng::new(40 + i as u64);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            format!("{:.4}", r.mean_secs)
+        } else {
+            "(skipped: 4^order per sample intractable on CPU)".into()
+        };
+        table.row(&[
+            order.to_string(),
+            tensor.nnz().to_string(),
+            format!("{:.4}", r.mean_secs),
+            cu,
+        ]);
+    }
+    println!("\nFig. 7(a) — scalability vs order (J = R_core = 4)");
+    table.print();
+}
+
+fn speedup(scale: f64) {
+    let mut table = Table::new(&["dataset", "workers", "secs/iter", "speedup", "efficiency"]);
+    for ds_name in ["netflix-like", "yahoo-like"] {
+        let mut rng = Rng::new(2);
+        let tensor = Dataset::by_name(ds_name, 0.25 * scale)
+            .unwrap()
+            .build(&mut rng)
+            .unwrap();
+        eprintln!("{ds_name}: dims={:?} nnz={}", tensor.dims(), tensor.nnz());
+        let dims = tensor.dims().to_vec();
+        let mut base = None;
+        for workers in [1usize, 2, 4, 5] {
+            let mut rng = Rng::new(3);
+            let mut model = TuckerModel::init_kruskal(&mut rng, &dims, 8, 8);
+            let mut opts = ParallelOptions::default();
+            opts.workers = workers;
+            let mut engine = ParallelFastTucker::new(opts);
+            // Time from EpochStats (discrete-event device time in the
+            // single-core Simulated mode; wall time under Threads).
+            let mut secs = 0.0;
+            let mut e = 0;
+            bench("par", 1, 3, |i| {
+                let mut rr = Rng::new(50 + i as u64);
+                let st = engine.train_epoch(&mut model, &tensor, e, &mut rr);
+                if i >= 1 {
+                    secs += st.total_secs();
+                }
+                e += 1;
+            });
+            let secs = secs / 3.0;
+            let speedup = base.map(|b: f64| b / secs).unwrap_or(1.0);
+            if base.is_none() {
+                base = Some(secs);
+            }
+            table.row(&[
+                ds_name.into(),
+                workers.to_string(),
+                format!("{secs:.4}"),
+                format!("{speedup:.2}X"),
+                format!("{:.0}%", 100.0 * speedup / workers as f64),
+            ]);
+        }
+    }
+    println!("\nFig. 7(b,c) — multi-device speedup (J = R_core = 8)");
+    table.print();
+}
+
+fn main() {
+    let scale = bench_scale();
+    match bench_filter().as_deref() {
+        Some("scalability") => scalability(scale),
+        Some("speedup") => speedup(scale),
+        _ => {
+            scalability(scale);
+            speedup(scale);
+        }
+    }
+}

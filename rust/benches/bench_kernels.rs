@@ -1,0 +1,136 @@
+//! Kernel microbenches (perf-pass instrumentation, EXPERIMENTS.md §Perf):
+//! * the Thm-1/2 contraction throughput (samples/sec) vs (J, R_core),
+//!   Packed vs Strided;
+//! * PJRT `train_step` batch execution vs the native batch loop;
+//! * evaluation throughput.
+
+use std::time::Instant;
+
+use fasttucker::algo::fasttucker::{build_strided, contract_staged, CoreLayout, Workspace};
+use fasttucker::algo::SgdHyper;
+use fasttucker::bench_support::Table;
+use fasttucker::coordinator::PjrtEngine;
+use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+use fasttucker::kruskal::KruskalCore;
+use fasttucker::model::TuckerModel;
+use fasttucker::util::Rng;
+
+fn contraction_bench() {
+    println!("\n== Thm-1/2 contraction throughput (order 3) ==");
+    let mut table = Table::new(&["J", "R", "layout", "Msamples/sec", "ns/sample"]);
+    let mut rng = Rng::new(1);
+    for (j, r) in [(4usize, 4usize), (8, 8), (16, 16), (32, 32), (8, 32), (32, 8)] {
+        let core = KruskalCore::random(&mut rng, 3, j, r, 0.5);
+        let strided = build_strided(&core);
+        let rows: Vec<f32> = (0..3 * j).map(|_| rng.normal()).collect();
+        for layout in [CoreLayout::Packed, CoreLayout::Strided] {
+            let mut ws = Workspace::new(3, r, j);
+            for n in 0..3 {
+                ws.stage_row(n, &rows[n * j..(n + 1) * j]);
+            }
+            let iters = 2_000_000 / (j * r / 16 + 1);
+            let t0 = Instant::now();
+            let mut acc = 0.0f32;
+            for _ in 0..iters {
+                acc += contract_staged(&mut ws, &core, &strided, layout, 1.0);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            std::hint::black_box(acc);
+            table.row(&[
+                j.to_string(),
+                r.to_string(),
+                format!("{layout:?}"),
+                format!("{:.2}", iters as f64 / secs / 1e6),
+                format!("{:.0}", secs / iters as f64 * 1e9),
+            ]);
+        }
+    }
+    table.print();
+}
+
+fn pjrt_vs_native() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.tsv").exists() {
+        println!("\n(pjrt bench skipped: run `make artifacts`)");
+        return;
+    }
+    println!("\n== PJRT train_step vs native epoch (J=R=8, order 3) ==");
+    let spec = PlantedSpec {
+        dims: vec![200, 200, 200],
+        nnz: 100_000,
+        j: 8,
+        r_core: 8,
+        noise: 0.1,
+        clamp: None,
+    };
+    let mut rng = Rng::new(2);
+    let p = planted_tucker(&mut rng, &spec);
+    let mut table = Table::new(&["engine", "secs/epoch", "Msamples/sec"]);
+
+    // Native.
+    {
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 8, 8);
+        let mut algo = fasttucker::algo::FastTucker::with_defaults();
+        use fasttucker::algo::Decomposer;
+        let mut rr = Rng::new(3);
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rr); // warmup
+        let t0 = Instant::now();
+        let st = algo.train_epoch(&mut model, &p.tensor, 1, &mut rr);
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "native".into(),
+            format!("{secs:.4}"),
+            format!("{:.2}", st.samples as f64 / secs / 1e6),
+        ]);
+    }
+    // PJRT.
+    {
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 8, 8);
+        let mut engine = PjrtEngine::new(artifacts, 8, 8, SgdHyper::default()).unwrap();
+        let mut rr = Rng::new(3);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rr).unwrap(); // warmup+compile
+        let t0 = Instant::now();
+        let st = engine.train_epoch(&mut model, &p.tensor, 1, &mut rr).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            format!("pjrt (batch {})", engine.batch()),
+            format!("{secs:.4}"),
+            format!("{:.2}", st.samples as f64 / secs / 1e6),
+        ]);
+    }
+    table.print();
+}
+
+fn eval_bench() {
+    println!("\n== evaluation throughput ==");
+    let spec = PlantedSpec {
+        dims: vec![300, 300, 300],
+        nnz: 500_000,
+        j: 16,
+        r_core: 16,
+        noise: 0.1,
+        clamp: None,
+    };
+    let mut rng = Rng::new(4);
+    let p = planted_tucker(&mut rng, &spec);
+    let model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 16, 16);
+    let mut table = Table::new(&["threads", "secs", "Mpred/sec"]);
+    for threads in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let (rm, _) = fasttucker::coordinator::eval::rmse_mae_parallel(&model, &p.tensor, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(rm);
+        table.row(&[
+            threads.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.2}", p.tensor.nnz() as f64 / secs / 1e6),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    contraction_bench();
+    pjrt_vs_native();
+    eval_bench();
+}

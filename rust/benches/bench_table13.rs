@@ -1,0 +1,118 @@
+//! Table 13: time to update the factor matrices for one iteration (epoch),
+//! for P-Tucker, Vest, SGD_Tucker, cuTucker, cuFastTucker, on the
+//! netflix-like and yahoo-like datasets (J = R_core = 4), with speedups
+//! relative to cuFastTucker.
+//!
+//! Paper shape to reproduce: cuFastTucker fastest; cuTucker ~2.6–3.6×
+//! slower; SGD_Tucker/P-Tucker/Vest one-to-three orders of magnitude
+//! slower.
+
+use fasttucker::algo::{
+    CuTucker, Decomposer, FastTucker, PTucker, SgdHyper, SgdTucker, Vest,
+};
+use fasttucker::bench_support::{bench, bench_scale, Table};
+use fasttucker::data::Dataset;
+use fasttucker::model::TuckerModel;
+use fasttucker::util::Rng;
+
+fn main() {
+    let scale = 0.1 * bench_scale();
+    let mut table = Table::new(&["dataset", "algorithm", "secs/iter", "vs cuFastTucker"]);
+
+    for ds_name in ["netflix-like", "yahoo-like"] {
+        let mut rng = Rng::new(1);
+        let tensor = Dataset::by_name(ds_name, scale)
+            .unwrap()
+            .build(&mut rng)
+            .unwrap();
+        eprintln!("{ds_name}: dims={:?} nnz={}", tensor.dims(), tensor.nnz());
+        let dims = tensor.dims().to_vec();
+
+        // Factor-update timing only (paper: "we only compare the update of
+        // the factor matrix here") -> update_core = false for SGD family.
+        let mut hyper = SgdHyper::default();
+        hyper.update_core = false;
+
+        let mut results: Vec<(String, f64)> = Vec::new();
+
+        // cuFastTucker.
+        {
+            let mut model = TuckerModel::init_kruskal(&mut rng, &dims, 4, 4);
+            let mut algo = FastTucker::with_defaults();
+            algo.config.hyper = hyper;
+            let mut e = 0;
+            let r = bench("fasttucker", 1, 3, |i| {
+                let mut rr = Rng::new(100 + i as u64);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            results.push(("cuFastTucker".into(), r.mean_secs));
+        }
+        // cuTucker.
+        {
+            let mut model = TuckerModel::init_dense(&mut rng, &dims, 4);
+            let mut algo = CuTucker::new(hyper);
+            let mut e = 0;
+            let r = bench("cutucker", 1, 3, |i| {
+                let mut rr = Rng::new(100 + i as u64);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            results.push(("cuTucker".into(), r.mean_secs));
+        }
+        // SGD_Tucker.
+        {
+            let mut model = TuckerModel::init_dense(&mut rng, &dims, 4);
+            let mut algo = SgdTucker::new(hyper);
+            let mut e = 0;
+            let r = bench("sgd_tucker", 0, 2, |i| {
+                let mut rr = Rng::new(100 + i as u64);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            results.push(("SGD_Tucker".into(), r.mean_secs));
+        }
+        // P-Tucker (full ALS sweep per iteration).
+        {
+            let mut model = TuckerModel::init_dense(&mut rng, &dims, 4);
+            let mut algo = PTucker::with_defaults();
+            let mut e = 0;
+            let r = bench("ptucker", 0, 2, |_| {
+                let mut rr = Rng::new(100);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            results.push(("P-Tucker".into(), r.mean_secs));
+        }
+        // Vest (full CCD sweep per iteration).
+        {
+            let mut model = TuckerModel::init_dense(&mut rng, &dims, 4);
+            let mut algo = Vest::with_defaults();
+            let mut e = 0;
+            let r = bench("vest", 0, 2, |_| {
+                let mut rr = Rng::new(100);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                e += 1;
+            });
+            results.push(("Vest".into(), r.mean_secs));
+        }
+
+        let fast = results
+            .iter()
+            .find(|(n, _)| n == "cuFastTucker")
+            .unwrap()
+            .1;
+        // Paper row order: P-Tucker, Vest, SGD_Tucker, cuTucker, cuFastTucker.
+        for name in ["P-Tucker", "Vest", "SGD_Tucker", "cuTucker", "cuFastTucker"] {
+            let secs = results.iter().find(|(n, _)| n == name).unwrap().1;
+            table.row(&[
+                ds_name.into(),
+                name.into(),
+                format!("{secs:.6}"),
+                format!("{:.2}X", secs / fast),
+            ]);
+        }
+    }
+    println!("\nTable 13 — factor-update time per iteration (J = R_core = 4)");
+    table.print();
+}

@@ -1,0 +1,102 @@
+//! The decomposition algorithms: the paper's **cuFastTucker** plus the four
+//! comparison methods of its evaluation (Section 6.3).
+//!
+//! | Algorithm   | Core repr | Update rule | Per-nonzero cost |
+//! |-------------|-----------|-------------|------------------|
+//! | FastTucker  | Kruskal   | SGD, Thm 1/2 reduction | O(N·R·J) |
+//! | cuTucker    | dense     | SGD, direct contraction | O(N·J^N) |
+//! | SGD_Tucker  | dense     | SGD, materialized Kronecker rows | O(N·J^N) + churn |
+//! | P-Tucker    | dense     | row-wise ALS (normal equations) | O(J^N + J²) |
+//! | Vest        | dense     | element-wise coordinate descent | O(J^N + J) |
+//!
+//! All expose the [`Decomposer`] trait so the trainer, the benches, and the
+//! multi-device scheduler are algorithm-agnostic.
+
+pub mod fasttucker;
+pub mod cutucker;
+pub mod sgd_tucker;
+pub mod ptucker;
+pub mod vest;
+
+pub use cutucker::CuTucker;
+pub use fasttucker::{CoreLayout, FastTucker, FastTuckerConfig};
+pub use ptucker::PTucker;
+pub use sgd_tucker::SgdTucker;
+pub use vest::Vest;
+
+use crate::model::TuckerModel;
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// Timing/volume statistics for one training epoch, split the way the
+/// paper's tables split them (factor-update time vs core-update time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochStats {
+    /// Nonzeros visited this epoch (|Ψ| summed over rounds).
+    pub samples: usize,
+    /// Seconds spent updating factor matrices.
+    pub factor_secs: f64,
+    /// Seconds spent updating the core (0 for factor-only methods).
+    pub core_secs: f64,
+}
+
+impl EpochStats {
+    pub fn total_secs(&self) -> f64 {
+        self.factor_secs + self.core_secs
+    }
+
+    pub fn merge(&mut self, other: &EpochStats) {
+        self.samples += other.samples;
+        self.factor_secs += other.factor_secs;
+        self.core_secs += other.core_secs;
+    }
+}
+
+/// A sparse-Tucker training algorithm.
+pub trait Decomposer {
+    /// Short identifier used in logs and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Run one epoch over `train`, mutating `model` in place.
+    fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> EpochStats;
+
+    /// Whether this method updates the core tensor (P-Tucker/Vest do not,
+    /// matching the paper: "Some algorithms lack the update of the core
+    /// tensor, and we only compare the update of the factor matrix").
+    fn updates_core(&self) -> bool {
+        true
+    }
+}
+
+/// Shared hyperparameters for the SGD-family methods.
+#[derive(Clone, Copy, Debug)]
+pub struct SgdHyper {
+    pub lr_factor: crate::sched::LrSchedule,
+    pub lr_core: crate::sched::LrSchedule,
+    pub lambda_factor: f32,
+    pub lambda_core: f32,
+    /// Fraction of nonzeros visited per epoch (|Ψ|/|Ω|); 1.0 = full pass.
+    pub sample_frac: f64,
+    /// Whether to update the core at all (paper Fig. 4's Factor vs
+    /// Factor+Core ablation).
+    pub update_core: bool,
+}
+
+impl Default for SgdHyper {
+    fn default() -> Self {
+        SgdHyper {
+            lr_factor: crate::sched::LrSchedule::new(0.006, 0.05),
+            lr_core: crate::sched::LrSchedule::new(0.0045, 0.1),
+            lambda_factor: 0.01,
+            lambda_core: 0.01,
+            sample_frac: 1.0,
+            update_core: true,
+        }
+    }
+}

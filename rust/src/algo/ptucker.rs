@@ -1,0 +1,208 @@
+//! **P-Tucker** (Oh et al., ICDE'18) — row-wise ALS for sparse Tucker:
+//! for every mode `n` and row `i`, solve the exact least-squares problem
+//! over that row's nonzeros,
+//!
+//! `(Σ_{nz∈Ω_i} d d^T + λI) a_i = Σ_{nz∈Ω_i} x · d`,
+//!
+//! where `d = D^(n)` is the per-nonzero coefficient vector through the
+//! dense core (`O(J^N)` each — P-Tucker has no Kruskal reduction). The
+//! J×J normal equations are solved with an in-tree Cholesky.
+//!
+//! P-Tucker does not update the core tensor (the paper compares
+//! factor-update time only for this method).
+
+use std::time::Instant;
+
+use crate::algo::{Decomposer, EpochStats};
+use crate::model::{CoreRepr, TuckerModel};
+use crate::tensor::{ModeSlices, SparseTensor};
+use crate::util::linalg::{cholesky_solve, syr};
+use crate::util::Rng;
+
+/// The P-Tucker decomposer.
+pub struct PTucker {
+    pub lambda: f32,
+    slices: Vec<ModeSlices>,
+    slices_for: Option<(usize, usize)>, // (nnz, order) fingerprint
+}
+
+impl PTucker {
+    pub fn new(lambda: f32) -> Self {
+        PTucker { lambda, slices: Vec::new(), slices_for: None }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(0.01)
+    }
+
+    fn ensure_slices(&mut self, train: &SparseTensor) {
+        let fp = (train.nnz(), train.order());
+        if self.slices_for != Some(fp) {
+            self.slices = (0..train.order())
+                .map(|n| ModeSlices::build(train, n))
+                .collect();
+            self.slices_for = Some(fp);
+        }
+    }
+}
+
+impl Decomposer for PTucker {
+    fn name(&self) -> &'static str {
+        "ptucker"
+    }
+
+    fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        _epoch: usize,
+        _rng: &mut Rng,
+    ) -> EpochStats {
+        self.ensure_slices(train);
+        let order = model.order();
+        let j = model.rank();
+        let t0 = Instant::now();
+
+        let core = match &model.core {
+            CoreRepr::Dense(c) => c.clone(),
+            CoreRepr::Kruskal(_) => panic!("PTucker requires a dense core"),
+        };
+
+        let mut ata = vec![0.0f32; j * j];
+        let mut atb = vec![0.0f32; j];
+        let mut d = vec![0.0f32; j];
+        let mut visited = 0usize;
+
+        for n in 0..order {
+            let slices = &self.slices[n];
+            for i in slices.nonempty_rows() {
+                ata.fill(0.0);
+                atb.fill(0.0);
+                for &nz in slices.slice(i) {
+                    let coords = train.index(nz as usize);
+                    let x = train.value(nz as usize);
+                    core.mode_coeff(&model.factors, coords, n, &mut d);
+                    syr(1.0, &d, &mut ata);
+                    for (b, &dv) in atb.iter_mut().zip(d.iter()) {
+                        *b += x * dv;
+                    }
+                    visited += 1;
+                }
+                // Ridge term.
+                for k in 0..j {
+                    ata[k * j + k] += self.lambda;
+                }
+                if let Some(sol) = cholesky_solve(&ata, &atb, j) {
+                    model.factors.row_mut(n, i).copy_from_slice(&sol);
+                }
+                // On numerical failure the row is left unchanged (the
+                // original implementation guards similarly).
+            }
+        }
+
+        EpochStats {
+            samples: visited,
+            factor_secs: t0.elapsed().as_secs_f64(),
+            core_secs: 0.0,
+        }
+    }
+
+    fn updates_core(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::kruskal::reconstruct::rmse;
+
+    #[test]
+    fn als_converges_fast_on_planted() {
+        let spec = PlantedSpec {
+            dims: vec![20, 20, 20],
+            nnz: 4000,
+            j: 3,
+            r_core: 3,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(1);
+        let p = planted_tucker(&mut rng, &spec);
+        // Give P-Tucker the true dense core (it does not learn the core)
+        // and random factors: ALS should fit factors in a few sweeps.
+        let mut model = TuckerModel {
+            factors: crate::model::factors::FactorMatrices::random(
+                &mut rng,
+                &spec.dims,
+                spec.j,
+                0.5,
+            ),
+            core: CoreRepr::Dense(p.truth_core.to_dense()),
+        };
+        let mut algo = PTucker::with_defaults();
+        let before = rmse(&model, &p.tensor);
+        for epoch in 0..5 {
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+        }
+        let after = rmse(&model, &p.tensor);
+        assert!(after < 0.2 * before, "rmse {before} -> {after}");
+    }
+
+    #[test]
+    fn single_row_solves_exactly() {
+        // A mode-0 row with >= J nonzeros and no noise: ALS recovers the
+        // least-squares optimum, which reproduces the observations.
+        let spec = PlantedSpec {
+            dims: vec![4, 10, 10],
+            nnz: 600,
+            j: 2,
+            r_core: 2,
+            noise: 0.0,
+            clamp: None,
+        };
+        let mut rng = Rng::new(2);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel {
+            factors: p.truth_factors.clone(),
+            core: CoreRepr::Dense(p.truth_core.to_dense()),
+        };
+        // Perturb mode-0 rows only.
+        for i in 0..4 {
+            for v in model.factors.row_mut(0, i) {
+                *v += 0.5;
+            }
+        }
+        let mut algo = PTucker::new(1e-6);
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        let after = rmse(&model, &p.tensor);
+        assert!(after < 1e-2, "rmse {after}");
+    }
+
+    #[test]
+    fn does_not_touch_core() {
+        let spec = PlantedSpec {
+            dims: vec![8, 8, 8],
+            nnz: 300,
+            j: 2,
+            r_core: 2,
+            noise: 0.1,
+            clamp: None,
+        };
+        let mut rng = Rng::new(3);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel::init_dense(&mut rng, &spec.dims, spec.j);
+        let core_before = match &model.core {
+            CoreRepr::Dense(c) => c.data().to_vec(),
+            _ => unreachable!(),
+        };
+        let mut algo = PTucker::with_defaults();
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        let core_after = match &model.core {
+            CoreRepr::Dense(c) => c.data().to_vec(),
+            _ => unreachable!(),
+        };
+        assert_eq!(core_before, core_after);
+    }
+}

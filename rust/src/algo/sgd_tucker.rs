@@ -1,0 +1,327 @@
+//! **SGD_Tucker** (Li et al., 2020) — the stochastic STD strategy *without*
+//! the Theorem-1/2 reduction: per sample it **materializes** the Kronecker
+//! rows `s^(n) = a^(N) ⊗ … ⊗ a^(n+1) ⊗ a^(n-1) ⊗ … ⊗ a^(1)` (length
+//! `∏_{m≠n} J`) and contracts them against the matricized dense core
+//! `G^(n)`, exactly the intermediate-matrix construction the paper's
+//! complexity analysis (Section 4.3) charges `O(∏ J_k)` per sample, plus
+//! the memory traffic of writing/reading the materialized rows.
+
+use std::time::Instant;
+
+use crate::algo::{Decomposer, EpochStats, SgdHyper};
+use crate::model::{CoreRepr, TuckerModel};
+use crate::sched::Sampler;
+use crate::tensor::{indexing, SparseTensor};
+use crate::util::linalg::{dot, scale_axpy};
+use crate::util::Rng;
+
+/// Scratch: the materialized Kronecker row, per-mode matricization tables,
+/// and the epoch core-gradient accumulator.
+struct KronWs {
+    order: usize,
+    j: usize,
+    core_len: usize,
+    /// `tables[n][jn * ncols + col]` = dense core index of `G^(n)[jn, col]`.
+    tables: Vec<Vec<u32>>,
+    /// Materialized Kronecker row (ncols = core_len / j).
+    s: Vec<f32>,
+    /// Per-mode coefficient vectors `D^(n)`, flattened `[n][j]`.
+    d: Vec<f32>,
+    core_grad: Vec<f32>,
+    core_grad_count: usize,
+}
+
+impl KronWs {
+    fn new(order: usize, j: usize) -> Self {
+        let core_len = j.pow(order as u32);
+        let ncols = core_len / j;
+        let dims = vec![j; order];
+        let mut tables = Vec::with_capacity(order);
+        let mut coords = vec![0u32; order];
+        for n in 0..order {
+            let mut tbl = vec![0u32; core_len];
+            for jn in 0..j {
+                coords[n] = jn as u32;
+                for col in 0..ncols {
+                    indexing::col_to_coords(col, &dims, n, &mut coords);
+                    coords[n] = jn as u32;
+                    tbl[jn * ncols + col] = indexing::dense_index(&coords, &dims) as u32;
+                }
+            }
+            tables.push(tbl);
+        }
+        KronWs {
+            order,
+            j,
+            core_len,
+            tables,
+            s: vec![0.0; ncols.max(1)],
+            d: vec![0.0; order * j],
+            core_grad: vec![0.0; core_len],
+            core_grad_count: 0,
+        }
+    }
+
+    /// Materialize `s^(n)` for the sample's factor rows: iterated Kronecker
+    /// expansion in mode order (mode 0 fastest), skipping mode `n` — the
+    /// ordering `unfold_strides` defines.
+    fn materialize_kron(&mut self, model: &TuckerModel, coords: &[u32], n: usize) -> usize {
+        let j = self.j;
+        self.s[0] = 1.0;
+        let mut len = 1usize;
+        for m in 0..self.order {
+            if m == n {
+                continue;
+            }
+            let a_row = model.factors.row(m, coords[m] as usize);
+            // Expand in place from the back to avoid aliasing.
+            for jm in (0..j).rev() {
+                for t in (0..len).rev() {
+                    self.s[jm * len + t] = a_row[jm] * self.s[t];
+                }
+            }
+            len *= j;
+        }
+        len
+    }
+}
+
+/// The SGD_Tucker decomposer.
+pub struct SgdTucker {
+    pub hyper: SgdHyper,
+    ws: Option<KronWs>,
+}
+
+impl SgdTucker {
+    pub fn new(hyper: SgdHyper) -> Self {
+        SgdTucker { hyper, ws: None }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(SgdHyper::default())
+    }
+
+    fn ensure_ws(&mut self, order: usize, j: usize) {
+        let stale = match &self.ws {
+            Some(w) => w.order != order || w.j != j,
+            None => true,
+        };
+        if stale {
+            self.ws = Some(KronWs::new(order, j));
+        }
+    }
+}
+
+impl Decomposer for SgdTucker {
+    fn name(&self) -> &'static str {
+        "sgd_tucker"
+    }
+
+    fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> EpochStats {
+        let (order, j) = (model.order(), model.rank());
+        self.ensure_ws(order, j);
+        let h = self.hyper;
+        let lr_f = h.lr_factor.at(epoch);
+        let lr_c = h.lr_core.at(epoch);
+
+        let sampler = Sampler::new(train.nnz());
+        let m = ((train.nnz() as f64) * h.sample_frac).round().max(1.0) as usize;
+        let psi = if h.sample_frac >= 1.0 {
+            let mut ids: Vec<usize> = (0..train.nnz()).collect();
+            rng.shuffle(&mut ids);
+            ids
+        } else {
+            sampler.one_step(rng, m)
+        };
+
+        let ws = self.ws.as_mut().unwrap();
+        let ncols = ws.core_len / j;
+        let t0 = Instant::now();
+        for &k in &psi {
+            let coords = train.index(k);
+            let x = train.value(k);
+            let core_data = match &model.core {
+                CoreRepr::Dense(c) => c.data().to_vec(),
+                CoreRepr::Kruskal(_) => panic!("SgdTucker requires a dense core"),
+            };
+
+            // Materialize every mode's Kronecker row and contract it
+            // against the matricized core — all from the *pre-update*
+            // factor rows (same linearization point as cuTucker /
+            // FastTucker). Mode 0's s is materialized last so it is the
+            // one left in `ws.s` for the core-gradient pass below.
+            for n in (0..order).rev() {
+                let len = ws.materialize_kron(model, coords, n);
+                debug_assert_eq!(len, ncols);
+                let tbl = &ws.tables[n];
+                for jn in 0..j {
+                    let mut acc = 0.0f32;
+                    for col in 0..ncols {
+                        acc += core_data[tbl[jn * ncols + col] as usize] * ws.s[col];
+                    }
+                    ws.d[n * j + jn] = acc;
+                }
+            }
+            let e = dot(model.factors.row(0, coords[0] as usize), &ws.d[0..j]) - x;
+
+            // Core gradient via mode-0's materialized row:
+            // grad G^(n=0)[jn, col] += e * a0[jn] * s[col].
+            if h.update_core {
+                let a0: Vec<f32> = model.factors.row(0, coords[0] as usize).to_vec();
+                let tbl = &ws.tables[0];
+                for jn in 0..j {
+                    let coef = e * a0[jn];
+                    for col in 0..ncols {
+                        ws.core_grad[tbl[jn * ncols + col] as usize] += coef * ws.s[col];
+                    }
+                }
+                ws.core_grad_count += 1;
+            }
+
+            // Factor SGD updates (Eq. 13 with the dense-core D vectors).
+            for n in 0..order {
+                let d_n = &ws.d[n * j..(n + 1) * j];
+                let row = model.factors.row_mut(n, coords[n] as usize);
+                scale_axpy(1.0 - lr_f * h.lambda_factor, -lr_f * e, d_n, row);
+            }
+        }
+        let factor_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        if h.update_core && ws.core_grad_count > 0 {
+            let mcount = ws.core_grad_count as f32;
+            let core = match &mut model.core {
+                CoreRepr::Dense(c) => c,
+                CoreRepr::Kruskal(_) => unreachable!(),
+            };
+            for (gv, &grad) in core.data_mut().iter_mut().zip(ws.core_grad.iter()) {
+                *gv = (1.0 - lr_c * h.lambda_core) * *gv - lr_c * grad / mcount;
+            }
+            ws.core_grad.fill(0.0);
+            ws.core_grad_count = 0;
+        }
+        let core_secs = t1.elapsed().as_secs_f64();
+
+        EpochStats { samples: psi.len(), factor_secs, core_secs }
+    }
+
+    fn updates_core(&self) -> bool {
+        self.hyper.update_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::kruskal::reconstruct::rmse;
+
+    #[test]
+    fn kron_materialization_matches_definition() {
+        // s[col] must equal Π_{m≠n} a^(m)[j_m] with the unfold_strides digit
+        // ordering.
+        let mut rng = Rng::new(1);
+        let model = TuckerModel::init_dense(&mut rng, &[5, 6, 7], 3);
+        let mut ws = KronWs::new(3, 3);
+        let coords = [4u32, 5, 6];
+        for n in 0..3 {
+            let len = ws.materialize_kron(&model, &coords, n);
+            assert_eq!(len, 9);
+            let dims = vec![3usize; 3];
+            let mut cc = vec![0u32; 3];
+            for col in 0..len {
+                indexing::col_to_coords(col, &dims, n, &mut cc);
+                let mut want = 1.0f32;
+                for m in 0..3 {
+                    if m != n {
+                        want *= model.factors.row(m, coords[m] as usize)[cc[m] as usize];
+                    }
+                }
+                assert!(
+                    (ws.s[col] - want).abs() < 1e-5,
+                    "n={n} col={col}: {} vs {want}",
+                    ws.s[col]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matricization_tables_are_bijections() {
+        let ws = KronWs::new(3, 4);
+        for n in 0..3 {
+            let mut seen = vec![false; ws.core_len];
+            for &ix in &ws.tables[n] {
+                assert!(!seen[ix as usize]);
+                seen[ix as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn converges_on_planted() {
+        let spec = PlantedSpec {
+            dims: vec![20, 20, 20],
+            nnz: 2500,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(2);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel::init_dense(&mut rng, &spec.dims, spec.j);
+        let mut algo = SgdTucker::with_defaults();
+        algo.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+        algo.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+        let before = rmse(&model, &p.tensor);
+        for epoch in 0..25 {
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+        }
+        let after = rmse(&model, &p.tensor);
+        assert!(after < 0.6 * before, "rmse {before} -> {after}");
+    }
+
+    #[test]
+    fn agrees_with_cutucker_direction() {
+        // One epoch of SGD_Tucker and cuTucker from the same init with the
+        // same sample order must produce identical models (they compute the
+        // same math differently).
+        let spec = PlantedSpec {
+            dims: vec![12, 12, 12],
+            nnz: 400,
+            j: 3,
+            r_core: 3,
+            noise: 0.1,
+            clamp: None,
+        };
+        let mut rng = Rng::new(3);
+        let p = planted_tucker(&mut rng, &spec);
+        let init = TuckerModel::init_dense(&mut rng, &spec.dims, spec.j);
+
+        let mut m1 = init.clone();
+        let mut a1 = SgdTucker::with_defaults();
+        let mut r1 = Rng::new(42);
+        a1.train_epoch(&mut m1, &p.tensor, 0, &mut r1);
+
+        let mut m2 = init.clone();
+        let mut a2 = crate::algo::CuTucker::with_defaults();
+        let mut r2 = Rng::new(42);
+        a2.train_epoch(&mut m2, &p.tensor, 0, &mut r2);
+
+        for n in 0..3 {
+            let d1 = m1.factors.mat(n).data();
+            let d2 = m2.factors.mat(n).data();
+            for (x, y) in d1.iter().zip(d2.iter()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Bench harness (offline build: no criterion). Each `rust/benches/*.rs`
+//! binary uses [`bench`] / [`Table`] to time closures with warmup and
+//! repetition and print paper-style tables to stdout.
+
+use std::time::Instant;
+
+use crate::metrics::Stats;
+
+/// Result of one timed case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_iter_display(&self) -> String {
+        format!("{:.6}s ± {:.6}", self.mean_secs, self.std_secs)
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` unmeasured ones.
+/// `f` receives the 0-based run index (warmup runs get indices too, so
+/// epoch-dependent schedules keep advancing).
+pub fn bench<F: FnMut(usize)>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut stats = Stats::new();
+    for i in 0..iters {
+        let t0 = Instant::now();
+        f(warmup + i);
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_secs: stats.mean(),
+        std_secs: stats.std(),
+        iters,
+    }
+}
+
+/// A fixed-width text table printer for the bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Parse `--filter substr` style args for bench binaries (cargo bench
+/// passes through extra args after `--`).
+pub fn bench_filter() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    // Accept both `--filter x` and a bare positional filter.
+    let mut it = args.iter().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if a == "--filter" {
+            return it.next().cloned();
+        }
+        if a == "--bench" || a.starts_with("--") {
+            continue;
+        }
+        return Some(a.clone());
+    }
+    None
+}
+
+/// `FASTTUCKER_BENCH_SCALE` scales workload sizes (default 1.0); CI can set
+/// 0.1 for fast smoke runs.
+pub fn bench_scale() -> f64 {
+    std::env::var("FASTTUCKER_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let r = bench("noop", 2, 5, |_| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_secs >= 0.0);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

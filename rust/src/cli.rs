@@ -1,0 +1,115 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap).
+//!
+//! Grammar: `fasttucker <subcommand> [--key value]... [--flag]...`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--dataset", "tiny", "--epochs", "5", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("dataset"), Some("tiny"));
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(5));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("nope"), None);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["train", "--j=16", "--scale=0.5"]);
+        assert_eq!(a.get_usize("j").unwrap(), Some(16));
+        assert_eq!(a.get_f64("scale").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["eval", "model.ftck", "--dataset", "tiny"]);
+        assert_eq!(a.positional(), &["model.ftck".to_string()]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["train", "--epochs", "abc"]);
+        assert!(a.get_usize("epochs").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["train", "--quiet"]);
+        assert!(a.has_flag("quiet"));
+    }
+}

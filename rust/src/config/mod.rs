@@ -1,0 +1,305 @@
+//! Config system: a minimal TOML-subset parser (offline build: no serde)
+//! plus the typed [`TrainConfig`] the launcher consumes.
+
+pub mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::SgdHyper;
+use crate::sched::LrSchedule;
+
+/// Which algorithm to train with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    FastTucker,
+    CuTucker,
+    SgdTucker,
+    PTucker,
+    Vest,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fasttucker" => AlgoKind::FastTucker,
+            "cutucker" => AlgoKind::CuTucker,
+            "sgd_tucker" | "sgdtucker" => AlgoKind::SgdTucker,
+            "ptucker" | "p-tucker" => AlgoKind::PTucker,
+            "vest" => AlgoKind::Vest,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::FastTucker => "fasttucker",
+            AlgoKind::CuTucker => "cutucker",
+            AlgoKind::SgdTucker => "sgd_tucker",
+            AlgoKind::PTucker => "ptucker",
+            AlgoKind::Vest => "vest",
+        }
+    }
+}
+
+/// Which compute engine executes the SGD steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust order-N engine.
+    Native,
+    /// AOT JAX/Pallas artifacts through PJRT (order-3, fixed shapes).
+    Pjrt,
+    /// Multi-device simulation (native math, M workers).
+    Parallel,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => EngineKind::Native,
+            "pjrt" => EngineKind::Pjrt,
+            "parallel" => EngineKind::Parallel,
+            other => bail!("unknown engine {other:?}"),
+        })
+    }
+}
+
+/// Full training configuration (file + CLI overrides).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub algo: AlgoKind,
+    pub engine: EngineKind,
+    pub j: usize,
+    pub r_core: usize,
+    pub epochs: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub test_frac: f64,
+    pub hyper: SgdHyper,
+    pub artifacts_dir: String,
+    pub checkpoint: Option<String>,
+    pub eval_every: usize,
+    /// Cap on the PJRT artifact batch size (None = largest compiled).
+    pub pjrt_batch_cap: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: "small".into(),
+            scale: 1.0,
+            algo: AlgoKind::FastTucker,
+            engine: EngineKind::Native,
+            j: 8,
+            r_core: 8,
+            epochs: 20,
+            workers: 1,
+            seed: 42,
+            test_frac: 0.1,
+            hyper: SgdHyper::default(),
+            artifacts_dir: "artifacts".into(),
+            checkpoint: None,
+            eval_every: 1,
+            pjrt_batch_cap: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML-subset text. Recognized keys (all optional):
+    ///
+    /// ```toml
+    /// dataset = "netflix-like"
+    /// scale = 1.0
+    /// algo = "fasttucker"
+    /// engine = "native"
+    /// j = 16
+    /// r_core = 16
+    /// epochs = 20
+    /// workers = 4
+    /// seed = 42
+    /// test_frac = 0.1
+    /// eval_every = 1
+    /// artifacts_dir = "artifacts"
+    /// checkpoint = "model.ftck"
+    ///
+    /// [sgd]
+    /// lr_factor_alpha = 0.006
+    /// lr_factor_beta = 0.05
+    /// lr_core_alpha = 0.0045
+    /// lr_core_beta = 0.1
+    /// lambda_factor = 0.01
+    /// lambda_core = 0.01
+    /// sample_frac = 1.0
+    /// update_core = true
+    /// ```
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        if let Some(v) = doc.get("", "dataset") {
+            cfg.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("", "scale") {
+            cfg.scale = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("", "algo") {
+            cfg.algo = AlgoKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("", "engine") {
+            cfg.engine = EngineKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("", "j") {
+            cfg.j = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "r_core") {
+            cfg.r_core = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "epochs") {
+            cfg.epochs = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "seed") {
+            cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.get("", "test_frac") {
+            cfg.test_frac = v.as_f64()?;
+        }
+        if let Some(v) = doc.get("", "eval_every") {
+            cfg.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("", "checkpoint") {
+            cfg.checkpoint = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("", "pjrt_batch_cap") {
+            cfg.pjrt_batch_cap = Some(v.as_usize()?);
+        }
+
+        let mut h = SgdHyper::default();
+        let g = |k: &str| doc.get("sgd", k);
+        let lr_fa = g("lr_factor_alpha").map(|v| v.as_f64()).transpose()?;
+        let lr_fb = g("lr_factor_beta").map(|v| v.as_f64()).transpose()?;
+        if lr_fa.is_some() || lr_fb.is_some() {
+            h.lr_factor = LrSchedule::new(
+                lr_fa.unwrap_or(h.lr_factor.alpha as f64) as f32,
+                lr_fb.unwrap_or(h.lr_factor.beta as f64) as f32,
+            );
+        }
+        let lr_ca = g("lr_core_alpha").map(|v| v.as_f64()).transpose()?;
+        let lr_cb = g("lr_core_beta").map(|v| v.as_f64()).transpose()?;
+        if lr_ca.is_some() || lr_cb.is_some() {
+            h.lr_core = LrSchedule::new(
+                lr_ca.unwrap_or(h.lr_core.alpha as f64) as f32,
+                lr_cb.unwrap_or(h.lr_core.beta as f64) as f32,
+            );
+        }
+        if let Some(v) = g("lambda_factor") {
+            h.lambda_factor = v.as_f64()? as f32;
+        }
+        if let Some(v) = g("lambda_core") {
+            h.lambda_core = v.as_f64()? as f32;
+        }
+        if let Some(v) = g("sample_frac") {
+            h.sample_frac = v.as_f64()?;
+        }
+        if let Some(v) = g("update_core") {
+            h.update_core = v.as_bool()?;
+        }
+        cfg.hyper = h;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.j == 0 || self.r_core == 0 {
+            bail!("j and r_core must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.test_frac) {
+            bail!("test_frac must be in [0, 1)");
+        }
+        if self.hyper.sample_frac <= 0.0 || self.hyper.sample_frac > 1.0 {
+            bail!("sample_frac must be in (0, 1]");
+        }
+        if self.engine == EngineKind::Parallel && self.algo != AlgoKind::FastTucker {
+            bail!("the parallel engine supports only fasttucker");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# experiment config
+dataset = "netflix-like"
+algo = "cutucker"
+engine = "native"
+j = 16
+r_core = 8
+epochs = 5
+workers = 2
+seed = 7
+test_frac = 0.2
+
+[sgd]
+lr_factor_alpha = 0.01
+lr_factor_beta = 0.2
+lambda_factor = 0.02
+sample_frac = 0.5
+update_core = false
+"#;
+        let cfg = TrainConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.dataset, "netflix-like");
+        assert_eq!(cfg.algo, AlgoKind::CuTucker);
+        assert_eq!(cfg.j, 16);
+        assert_eq!(cfg.r_core, 8);
+        assert_eq!(cfg.epochs, 5);
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.hyper.lr_factor.alpha - 0.01).abs() < 1e-9);
+        assert!((cfg.hyper.lr_factor.beta - 0.2).abs() < 1e-9);
+        assert!((cfg.hyper.lambda_factor - 0.02).abs() < 1e-9);
+        assert!((cfg.hyper.sample_frac - 0.5).abs() < 1e-12);
+        assert!(!cfg.hyper.update_core);
+    }
+
+    #[test]
+    fn rejects_invalid_combinations() {
+        assert!(TrainConfig::from_toml_str("j = 0").is_err());
+        assert!(TrainConfig::from_toml_str("algo = \"nope\"").is_err());
+        assert!(
+            TrainConfig::from_toml_str("engine = \"parallel\"\nalgo = \"vest\"").is_err()
+        );
+    }
+
+    #[test]
+    fn algo_kind_roundtrip() {
+        for k in ["fasttucker", "cutucker", "sgd_tucker", "ptucker", "vest"] {
+            assert_eq!(AlgoKind::parse(k).unwrap().name(), k);
+        }
+    }
+}

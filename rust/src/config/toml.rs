@@ -1,0 +1,181 @@
+//! A deliberately small TOML-subset parser: `[sections]`, `key = value`
+//! pairs, `#` comments. Values: quoted strings, booleans, integers,
+//! floats. Enough for experiment configs without pulling in serde (which
+//! the offline build cannot).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed document: `(section, key) -> value`, root section is `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: HashMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() || val.is_empty() {
+                bail!("line {}: empty key or value", lineno + 1);
+            }
+            let value = parse_value(val)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            entries.insert((section.clone(), key), value);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s:?}");
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_types() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[sec]\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("sec", "e"), Some(&TomlValue::Bool(false)));
+        assert_eq!(doc.get("sec", "a"), None);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse("# c\n\na = 1 # trailing\ns = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "s"), Some(&TomlValue::Str("x # y".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("just words").is_err());
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = TomlDoc::parse("a = -3\nb = -0.5\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_f64().unwrap(), -3.0);
+        assert!(doc.get("", "a").unwrap().as_usize().is_err());
+        assert_eq!(doc.get("", "b").unwrap().as_f64().unwrap(), -0.5);
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert!(TomlValue::Int(5).as_usize().unwrap() == 5);
+        assert!(TomlValue::Str("x".into()).as_bool().is_err());
+        assert!(TomlValue::Bool(true).as_f64().is_err());
+    }
+}

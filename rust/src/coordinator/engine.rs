@@ -1,0 +1,412 @@
+//! Compute engines: every way one epoch of training can be executed.
+//!
+//! * [`Engine::Native`] — any [`Decomposer`] on the pure-Rust order-N path.
+//! * [`Engine::Parallel`] — the multi-device FastTucker simulation.
+//! * [`Engine::Pjrt`] — the three-layer path: gather factor rows in Rust,
+//!   execute the AOT JAX/Pallas `train_step` artifact via PJRT, scatter
+//!   the updated rows back. Order-3, shapes fixed at artifact build time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::{Decomposer, EpochStats, SgdHyper};
+use crate::model::{CoreRepr, TuckerModel};
+use crate::parallel::ParallelFastTucker;
+use crate::runtime::PjrtRuntime;
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// A training engine.
+pub enum Engine {
+    Native(Box<dyn Decomposer + Send>),
+    Parallel(ParallelFastTucker),
+    Pjrt(PjrtEngine),
+}
+
+impl Engine {
+    pub fn name(&self) -> String {
+        match self {
+            Engine::Native(d) => format!("native/{}", d.name()),
+            Engine::Parallel(p) => format!("parallel×{}", p.opts.workers),
+            Engine::Pjrt(_) => "pjrt/fasttucker".to_string(),
+        }
+    }
+
+    pub fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> Result<EpochStats> {
+        Ok(match self {
+            Engine::Native(d) => d.train_epoch(model, train, epoch, rng),
+            Engine::Parallel(p) => p.train_epoch(model, train, epoch, rng),
+            Engine::Pjrt(p) => p.train_epoch(model, train, epoch, rng)?,
+        })
+    }
+}
+
+/// The three-layer engine: Rust gather/scatter + PJRT-executed JAX step.
+pub struct PjrtEngine {
+    runtime: PjrtRuntime,
+    pub hyper: SgdHyper,
+    j: usize,
+    r_core: usize,
+    batch: usize,
+    /// Gather buffers (B×J per mode) reused across batches.
+    gather: [Vec<f32>; 3],
+    vals: Vec<f32>,
+    /// Core-gradient accumulation ([n][r][j] flattened) + sample count.
+    core_grad: Vec<f32>,
+    core_grad_count: usize,
+    /// Native fallback workspace for the ragged tail batch.
+    tail_ws: crate::algo::fasttucker::Workspace,
+}
+
+impl PjrtEngine {
+    /// Load artifacts for shape (J, R); fails with a remediation hint if
+    /// the variant was not AOT-compiled. Picks the largest compiled batch
+    /// (best throughput on large tensors); use [`Self::with_batch_cap`]
+    /// for small workloads where huge batches would average away too many
+    /// duplicate-row updates.
+    pub fn new(artifacts_dir: &std::path::Path, j: usize, r_core: usize, hyper: SgdHyper) -> Result<Self> {
+        Self::with_batch_cap(artifacts_dir, j, r_core, hyper, usize::MAX)
+    }
+
+    /// Like [`Self::new`] but only considers artifacts with batch ≤ `cap`.
+    pub fn with_batch_cap(
+        artifacts_dir: &std::path::Path,
+        j: usize,
+        r_core: usize,
+        hyper: SgdHyper,
+        cap: usize,
+    ) -> Result<Self> {
+        let mut runtime = PjrtRuntime::new(artifacts_dir)?;
+        runtime.set_batch_cap(cap);
+        let entry = runtime
+            .load("train_step", j, r_core)
+            .context("loading train_step artifact")?;
+        let batch = entry.entry.batch;
+        runtime.load("predict", j, r_core).context("loading predict artifact")?;
+        Ok(PjrtEngine {
+            runtime,
+            hyper,
+            j,
+            r_core,
+            batch,
+            gather: [
+                vec![0.0; batch * j],
+                vec![0.0; batch * j],
+                vec![0.0; batch * j],
+            ],
+            vals: vec![0.0; batch],
+            core_grad: vec![0.0; 3 * r_core * j],
+            core_grad_count: 0,
+            tail_ws: crate::algo::fasttucker::Workspace::new(3, r_core, j),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// One epoch: full batches through the AOT artifact, the ragged tail
+    /// through the bit-identical native math.
+    pub fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> Result<EpochStats> {
+        if model.order() != 3 {
+            bail!("the PJRT engine supports order-3 tensors (artifacts are fixed-shape)");
+        }
+        if model.rank() != self.j {
+            bail!("model rank {} != artifact J {}", model.rank(), self.j);
+        }
+        let h = self.hyper;
+        let lr_f = h.lr_factor.at(epoch);
+        let lr_c = h.lr_core.at(epoch);
+
+        let m = ((train.nnz() as f64) * h.sample_frac).round().max(1.0) as usize;
+        let mut ids: Vec<usize> = if h.sample_frac >= 1.0 {
+            (0..train.nnz()).collect()
+        } else {
+            crate::sched::Sampler::new(train.nnz()).one_step(rng, m)
+        };
+        if h.sample_frac >= 1.0 {
+            rng.shuffle(&mut ids);
+        }
+
+        let t0 = std::time::Instant::now();
+        let b = self.batch;
+        let n_full = ids.len() / b;
+        for bi in 0..n_full {
+            self.run_batch(model, train, &ids[bi * b..(bi + 1) * b], lr_f)?;
+        }
+        // Ragged tail: native math (identical update rule).
+        let tail = &ids[n_full * b..];
+        if !tail.is_empty() {
+            self.run_tail(model, train, tail, lr_f);
+        }
+        let factor_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        if h.update_core && self.core_grad_count > 0 {
+            let mcount = self.core_grad_count as f32;
+            let core = match &mut model.core {
+                CoreRepr::Kruskal(k) => k,
+                CoreRepr::Dense(_) => bail!("PJRT engine requires a Kruskal core"),
+            };
+            for n in 0..3 {
+                for r in 0..self.r_core {
+                    let base = (n * self.r_core + r) * self.j;
+                    let g = &self.core_grad[base..base + self.j];
+                    let row = core.row_mut(n, r);
+                    for (bv, &gv) in row.iter_mut().zip(g.iter()) {
+                        *bv = (1.0 - lr_c * h.lambda_core) * *bv - lr_c * gv / mcount;
+                    }
+                }
+            }
+            self.core_grad.fill(0.0);
+            self.core_grad_count = 0;
+        }
+        let core_secs = t1.elapsed().as_secs_f64();
+
+        Ok(EpochStats { samples: ids.len(), factor_secs, core_secs })
+    }
+
+    fn run_batch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        ids: &[usize],
+        lr_f: f32,
+    ) -> Result<()> {
+        let (j, r, b) = (self.j, self.r_core, self.batch);
+        debug_assert_eq!(ids.len(), b);
+        // Gather.
+        for (s, &k) in ids.iter().enumerate() {
+            let coords = train.index(k);
+            for n in 0..3 {
+                self.gather[n][s * j..(s + 1) * j]
+                    .copy_from_slice(model.factors.row(n, coords[n] as usize));
+            }
+            self.vals[s] = train.value(k);
+        }
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k,
+            CoreRepr::Dense(_) => bail!("PJRT engine requires a Kruskal core"),
+        };
+        let row_shape = [b as i64, j as i64];
+        let b_shape = [r as i64, j as i64];
+        let scalar: [i64; 0] = [];
+        let lr_buf = [lr_f];
+        let lam_buf = [self.hyper.lambda_factor];
+        let exe = self.runtime.load("train_step", j, r)?;
+        let outs = exe.run(&[
+            (&self.gather[0], &row_shape),
+            (&self.gather[1], &row_shape),
+            (&self.gather[2], &row_shape),
+            (core.factor(0).data(), &b_shape),
+            (core.factor(1).data(), &b_shape),
+            (core.factor(2).data(), &b_shape),
+            (&self.vals, &[b as i64]),
+            (&lr_buf, &scalar),
+            (&lam_buf, &scalar),
+        ])?;
+        // Scatter: deltas of duplicate rows within a batch accumulate
+        // additively — the exact mini-batch (sum) gradient. Like any
+        // sum-reduced mini-batch SGD, very large batches relative to a
+        // mode's dimension need a smaller learning rate; cap the batch
+        // via `TrainConfig::pjrt_batch_cap` / `with_batch_cap` when the
+        // workload is small. (The paper's CUDA kernels race concurrent
+        // writers hogwild-style; summed deltas are the deterministic
+        // analogue.)
+        for n in 0..3 {
+            let new_rows = &outs[n];
+            for (s, &k) in ids.iter().enumerate() {
+                let coords = train.index(k);
+                let old = &self.gather[n][s * j..(s + 1) * j];
+                let row = model.factors.row_mut(n, coords[n] as usize);
+                for jj in 0..j {
+                    row[jj] += new_rows[s * j + jj] - old[jj];
+                }
+            }
+        }
+        if self.hyper.update_core {
+            for n in 0..3 {
+                let gb = &outs[3 + n];
+                let base = n * self.r_core * self.j;
+                for (slot, &g) in self.core_grad[base..base + r * j].iter_mut().zip(gb) {
+                    *slot += g;
+                }
+            }
+            self.core_grad_count += ids.len();
+        }
+        Ok(())
+    }
+
+    fn run_tail(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        ids: &[usize],
+        lr_f: f32,
+    ) {
+        use crate::algo::fasttucker::{accumulate_core_grad, contract_staged, CoreLayout};
+        use crate::util::linalg::scale_axpy;
+        for &k in ids {
+            let coords = train.index(k);
+            for n in 0..3 {
+                self.tail_ws
+                    .stage_row(n, model.factors.row(n, coords[n] as usize));
+            }
+            let core = match &model.core {
+                CoreRepr::Kruskal(c) => c,
+                CoreRepr::Dense(_) => unreachable!(),
+            };
+            let e = contract_staged(&mut self.tail_ws, core, &[], CoreLayout::Packed, train.value(k));
+            if self.hyper.update_core {
+                accumulate_core_grad(&mut self.tail_ws, e);
+            }
+            for n in 0..3 {
+                let gs_n = self.tail_ws.gs_row(n).to_vec();
+                let row = model.factors.row_mut(n, coords[n] as usize);
+                scale_axpy(1.0 - lr_f * self.hyper.lambda_factor, -lr_f * e, &gs_n, row);
+            }
+        }
+        // Fold the tail workspace's core grads into the engine accumulator.
+        if self.hyper.update_core {
+            for (slot, &g) in self.core_grad.iter_mut().zip(self.tail_ws.core_grad.iter()) {
+                *slot += g;
+            }
+            self.core_grad_count += self.tail_ws.core_grad_count;
+            self.tail_ws.core_grad.fill(0.0);
+            self.tail_ws.core_grad_count = 0;
+        }
+    }
+
+    /// Batched prediction through the `predict` artifact (used by eval).
+    pub fn predict_batch(
+        &mut self,
+        model: &TuckerModel,
+        test: &SparseTensor,
+        ids: &[usize],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (j, r, b) = (self.j, self.r_core, self.batch);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k,
+            CoreRepr::Dense(_) => bail!("PJRT engine requires a Kruskal core"),
+        };
+        out.clear();
+        let mut pos = 0;
+        while pos < ids.len() {
+            let chunk = (ids.len() - pos).min(b);
+            for s in 0..b {
+                // Pad by repeating the last sample; padded outputs are
+                // discarded below.
+                let k = ids[pos + s.min(chunk - 1)];
+                let coords = test.index(k);
+                for n in 0..3 {
+                    self.gather[n][s * j..(s + 1) * j]
+                        .copy_from_slice(model.factors.row(n, coords[n] as usize));
+                }
+            }
+            let row_shape = [b as i64, j as i64];
+            let b_shape = [r as i64, j as i64];
+            let exe = self.runtime.load("predict", j, r)?;
+            let outs = exe.run(&[
+                (&self.gather[0], &row_shape),
+                (&self.gather[1], &row_shape),
+                (&self.gather[2], &row_shape),
+                (core.factor(0).data(), &b_shape),
+                (core.factor(1).data(), &b_shape),
+                (core.factor(2).data(), &b_shape),
+            ])?;
+            out.extend_from_slice(&outs[0][..chunk]);
+            pos += chunk;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::kruskal::reconstruct::rmse;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn pjrt_engine_converges_and_matches_native_shape() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let spec = PlantedSpec {
+            dims: vec![50, 40, 30],
+            nnz: 4000,
+            j: 8,
+            r_core: 8,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(1);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 8, 8);
+        let mut hyper = SgdHyper::default();
+        hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+        hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+        // Small workload: cap the batch so duplicate-row averaging does
+        // not swallow the per-epoch progress.
+        let mut engine =
+            PjrtEngine::with_batch_cap(&artifacts_dir(), 8, 8, hyper, 256).unwrap();
+        let before = rmse(&model, &p.tensor);
+        for epoch in 0..8 {
+            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
+        }
+        let after = rmse(&model, &p.tensor);
+        assert!(after < 0.7 * before, "rmse {before} -> {after}");
+    }
+
+    #[test]
+    fn pjrt_predict_matches_native_predict() {
+        if !have_artifacts() {
+            return;
+        }
+        let spec = PlantedSpec {
+            dims: vec![30, 30, 30],
+            nnz: 700, // not a multiple of the 256 batch: exercises padding
+            j: 8,
+            r_core: 8,
+            noise: 0.3,
+            clamp: None,
+        };
+        let mut rng = Rng::new(2);
+        let p = planted_tucker(&mut rng, &spec);
+        let model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 8, 8);
+        let mut engine = PjrtEngine::new(&artifacts_dir(), 8, 8, SgdHyper::default()).unwrap();
+        let ids: Vec<usize> = (0..p.tensor.nnz()).collect();
+        let mut out = Vec::new();
+        engine.predict_batch(&model, &p.tensor, &ids, &mut out).unwrap();
+        assert_eq!(out.len(), p.tensor.nnz());
+        for k in [0usize, 123, 699] {
+            let want = model.predict(p.tensor.index(k));
+            assert!((out[k] - want).abs() < 1e-3, "{} vs {}", out[k], want);
+        }
+    }
+}

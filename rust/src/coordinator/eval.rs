@@ -1,0 +1,93 @@
+//! Multi-threaded evaluation: RMSE/MAE over the test set Γ, parallelized
+//! over nonzeros (read-only, embarrassingly parallel).
+
+use crate::model::{CoreRepr, TuckerModel};
+use crate::tensor::SparseTensor;
+
+/// RMSE and MAE of `model` on `test`, computed with `threads` workers.
+pub fn rmse_mae_parallel(model: &TuckerModel, test: &SparseTensor, threads: usize) -> (f64, f64) {
+    if test.nnz() == 0 {
+        return (0.0, 0.0);
+    }
+    let threads = threads.max(1).min(test.nnz());
+    if threads == 1 {
+        return crate::kruskal::reconstruct::rmse_mae(model, test);
+    }
+    let chunk = test.nnz().div_ceil(threads);
+    let mut partials = vec![(0.0f64, 0.0f64); threads];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(test.nnz());
+            handles.push(scope.spawn(move || {
+                let (mut se, mut ae) = (0.0f64, 0.0f64);
+                match &model.core {
+                    CoreRepr::Kruskal(core) => {
+                        for k in start..end {
+                            let e = (crate::data::synth::predict_planted(
+                                &model.factors,
+                                core,
+                                test.index(k),
+                            ) - test.value(k)) as f64;
+                            se += e * e;
+                            ae += e.abs();
+                        }
+                    }
+                    CoreRepr::Dense(core) => {
+                        for k in start..end {
+                            let e = (core.predict(&model.factors, test.index(k))
+                                - test.value(k)) as f64;
+                            se += e * e;
+                            ae += e.abs();
+                        }
+                    }
+                }
+                (se, ae)
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            partials[t] = h.join().expect("eval worker panicked");
+        }
+    });
+    let se: f64 = partials.iter().map(|p| p.0).sum();
+    let ae: f64 = partials.iter().map(|p| p.1).sum();
+    let n = test.nnz() as f64;
+    ((se / n).sqrt(), ae / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let spec = PlantedSpec {
+            dims: vec![20, 20, 20],
+            nnz: 5000,
+            j: 4,
+            r_core: 4,
+            noise: 0.5,
+            clamp: None,
+        };
+        let mut rng = Rng::new(1);
+        let p = planted_tucker(&mut rng, &spec);
+        let model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 4, 4);
+        let (r1, m1) = crate::kruskal::reconstruct::rmse_mae(&model, &p.tensor);
+        for threads in [1, 2, 4, 7] {
+            let (r, m) = rmse_mae_parallel(&model, &p.tensor, threads);
+            assert!((r - r1).abs() < 1e-9, "threads {threads}");
+            assert!((m - m1).abs() < 1e-9, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_test_set() {
+        let mut rng = Rng::new(2);
+        let model = TuckerModel::init_kruskal(&mut rng, &[4, 4], 2, 2);
+        let empty = SparseTensor::empty(vec![4, 4]);
+        assert_eq!(rmse_mae_parallel(&model, &empty, 4), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! The L3 coordinator: ties datasets, algorithms, engines (native /
+//! multi-device / PJRT), evaluation, and checkpointing into the training
+//! loop the CLI and the experiment drivers invoke.
+
+pub mod engine;
+pub mod trainer;
+pub mod eval;
+
+pub use engine::{Engine, PjrtEngine};
+pub use trainer::{EpochRecord, TrainOptions, TrainReport, Trainer};

@@ -1,0 +1,259 @@
+//! The training orchestrator: builds the engine from a [`TrainConfig`],
+//! runs the epoch loop with periodic evaluation, collects the history the
+//! experiment drivers plot, and writes checkpoints.
+
+use anyhow::{bail, Result};
+
+use crate::algo::{CuTucker, Decomposer, EpochStats, FastTucker, FastTuckerConfig, PTucker, SgdTucker, Vest};
+use crate::config::{AlgoKind, EngineKind, TrainConfig};
+use crate::coordinator::engine::{Engine, PjrtEngine};
+use crate::coordinator::eval::rmse_mae_parallel;
+use crate::model::TuckerModel;
+use crate::parallel::{ParallelFastTucker, ParallelOptions};
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+use crate::log_info;
+
+/// Options the trainer needs beyond the model/data (a subset of
+/// [`TrainConfig`], so drivers can construct it directly).
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub epochs: usize,
+    pub eval_every: usize,
+    pub eval_threads: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { epochs: 20, eval_every: 1, eval_threads: 4, verbose: true }
+    }
+}
+
+/// One evaluated point of the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub rmse: f64,
+    pub mae: f64,
+    /// Cumulative training seconds up to this point (excludes eval).
+    pub train_secs: f64,
+    pub factor_secs: f64,
+    pub core_secs: f64,
+}
+
+/// The full result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub history: Vec<EpochRecord>,
+    pub total_stats: EpochStats,
+}
+
+impl TrainReport {
+    pub fn final_rmse(&self) -> f64 {
+        self.history.last().map(|r| r.rmse).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_mae(&self) -> f64 {
+        self.history.last().map(|r| r.mae).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_train_secs(&self) -> f64 {
+        self.total_stats.total_secs()
+    }
+}
+
+/// The trainer: an engine plus loop options.
+pub struct Trainer {
+    pub engine: Engine,
+    pub opts: TrainOptions,
+}
+
+impl Trainer {
+    /// Build engine + model from a full config (the launcher path).
+    pub fn from_config(cfg: &TrainConfig, dims: &[usize], rng: &mut Rng) -> Result<(Self, TuckerModel)> {
+        let model = match cfg.algo {
+            AlgoKind::FastTucker => TuckerModel::init_kruskal(rng, dims, cfg.j, cfg.r_core),
+            _ => TuckerModel::init_dense(rng, dims, cfg.j),
+        };
+        let engine = match cfg.engine {
+            EngineKind::Native => {
+                let decomposer: Box<dyn Decomposer + Send> = match cfg.algo {
+                    AlgoKind::FastTucker => {
+                        let mut fc = FastTuckerConfig::default();
+                        fc.hyper = cfg.hyper;
+                        Box::new(FastTucker::new(fc))
+                    }
+                    AlgoKind::CuTucker => Box::new(CuTucker::new(cfg.hyper)),
+                    AlgoKind::SgdTucker => Box::new(SgdTucker::new(cfg.hyper)),
+                    AlgoKind::PTucker => Box::new(PTucker::new(cfg.hyper.lambda_factor)),
+                    AlgoKind::Vest => Box::new(Vest::new(cfg.hyper.lambda_factor)),
+                };
+                Engine::Native(decomposer)
+            }
+            EngineKind::Parallel => {
+                if cfg.algo != AlgoKind::FastTucker {
+                    bail!("parallel engine requires algo = fasttucker");
+                }
+                let mut po = ParallelOptions::default();
+                po.workers = cfg.workers;
+                po.hyper = cfg.hyper;
+                Engine::Parallel(ParallelFastTucker::new(po))
+            }
+            EngineKind::Pjrt => {
+                if cfg.algo != AlgoKind::FastTucker {
+                    bail!("pjrt engine requires algo = fasttucker");
+                }
+                Engine::Pjrt(PjrtEngine::with_batch_cap(
+                    std::path::Path::new(&cfg.artifacts_dir),
+                    cfg.j,
+                    cfg.r_core,
+                    cfg.hyper,
+                    cfg.pjrt_batch_cap.unwrap_or(usize::MAX),
+                )?)
+            }
+        };
+        let opts = TrainOptions {
+            epochs: cfg.epochs,
+            eval_every: cfg.eval_every.max(1),
+            eval_threads: 4,
+            verbose: true,
+        };
+        Ok((Trainer { engine, opts }, model))
+    }
+
+    /// Run the training loop.
+    pub fn train(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        test: &SparseTensor,
+        rng: &mut Rng,
+    ) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        let mut cum = EpochStats::default();
+        // Epoch 0 baseline point.
+        let (rmse0, mae0) = rmse_mae_parallel(model, test, self.opts.eval_threads);
+        report.history.push(EpochRecord {
+            epoch: 0,
+            rmse: rmse0,
+            mae: mae0,
+            train_secs: 0.0,
+            factor_secs: 0.0,
+            core_secs: 0.0,
+        });
+        if self.opts.verbose {
+            log_info!("epoch 0 (init): rmse={rmse0:.5} mae={mae0:.5}");
+        }
+        for epoch in 0..self.opts.epochs {
+            let stats = self.engine.train_epoch(model, train, epoch, rng)?;
+            cum.merge(&stats);
+            if (epoch + 1) % self.opts.eval_every == 0 || epoch + 1 == self.opts.epochs {
+                let (rmse, mae) = rmse_mae_parallel(model, test, self.opts.eval_threads);
+                report.history.push(EpochRecord {
+                    epoch: epoch + 1,
+                    rmse,
+                    mae,
+                    train_secs: cum.total_secs(),
+                    factor_secs: cum.factor_secs,
+                    core_secs: cum.core_secs,
+                });
+                if self.opts.verbose {
+                    log_info!(
+                        "epoch {}: rmse={rmse:.5} mae={mae:.5} t={:.3}s ({})",
+                        epoch + 1,
+                        cum.total_secs(),
+                        self.engine.name()
+                    );
+                }
+            }
+        }
+        report.total_stats = cum;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::split::train_test_split;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+
+    fn quick_cfg(algo: AlgoKind) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.algo = algo;
+        cfg.j = 4;
+        cfg.r_core = 4;
+        cfg.epochs = 6;
+        cfg.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+        cfg.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+        cfg
+    }
+
+    fn quick_data(seed: u64) -> (SparseTensor, SparseTensor, Vec<usize>) {
+        let spec = PlantedSpec {
+            dims: vec![25, 25, 25],
+            nnz: 4000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        };
+        let mut rng = Rng::new(seed);
+        let p = planted_tucker(&mut rng, &spec);
+        let (train, test) = train_test_split(&p.tensor, 0.1, &mut rng);
+        (train, test, spec.dims)
+    }
+
+    #[test]
+    fn all_native_algorithms_train_and_descend() {
+        for algo in [
+            AlgoKind::FastTucker,
+            AlgoKind::CuTucker,
+            AlgoKind::SgdTucker,
+            AlgoKind::PTucker,
+            AlgoKind::Vest,
+        ] {
+            let cfg = quick_cfg(algo);
+            let (train, test, dims) = quick_data(1);
+            let mut rng = Rng::new(2);
+            let (mut trainer, mut model) =
+                Trainer::from_config(&cfg, &dims, &mut rng).unwrap();
+            trainer.opts.verbose = false;
+            let report = trainer.train(&mut model, &train, &test, &mut rng).unwrap();
+            let first = report.history.first().unwrap().rmse;
+            let last = report.final_rmse();
+            assert!(
+                last < first,
+                "{}: rmse {first} -> {last} did not descend",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_engine_from_config() {
+        let mut cfg = quick_cfg(AlgoKind::FastTucker);
+        cfg.engine = EngineKind::Parallel;
+        cfg.workers = 2;
+        let (train, test, dims) = quick_data(3);
+        let mut rng = Rng::new(4);
+        let (mut trainer, mut model) = Trainer::from_config(&cfg, &dims, &mut rng).unwrap();
+        trainer.opts.verbose = false;
+        let report = trainer.train(&mut model, &train, &test, &mut rng).unwrap();
+        assert!(report.final_rmse() < report.history[0].rmse);
+    }
+
+    #[test]
+    fn history_records_monotone_time() {
+        let cfg = quick_cfg(AlgoKind::FastTucker);
+        let (train, test, dims) = quick_data(5);
+        let mut rng = Rng::new(6);
+        let (mut trainer, mut model) = Trainer::from_config(&cfg, &dims, &mut rng).unwrap();
+        trainer.opts.verbose = false;
+        let report = trainer.train(&mut model, &train, &test, &mut rng).unwrap();
+        let times: Vec<f64> = report.history.iter().map(|r| r.train_secs).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(report.history.len(), 7); // init + 6 epochs
+    }
+}

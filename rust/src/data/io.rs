@@ -1,0 +1,146 @@
+//! FROSTT-style `.tns` text I/O.
+//!
+//! Format: one nonzero per line, `i_1 i_2 ... i_N value`, 1-based indices,
+//! `#` comments allowed — the format of frostt.io (the paper's Amazon
+//! Reviews source). Mode sizes are inferred as the max index per mode
+//! unless explicitly given.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::SparseTensor;
+
+/// Load a `.tns` file. `dims`: pass `Some` to validate/fix mode sizes,
+/// `None` to infer them from the data.
+pub fn load_tns(path: &Path, dims: Option<Vec<usize>>) -> Result<SparseTensor> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut order: Option<usize> = None;
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut max_ix: Vec<u32> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let fields: Vec<&str> = parts.by_ref().collect();
+        if fields.len() < 2 {
+            bail!("{path:?}:{}: expected at least 2 fields", lineno + 1);
+        }
+        let n = fields.len() - 1;
+        match order {
+            None => {
+                order = Some(n);
+                max_ix = vec![0; n];
+            }
+            Some(o) if o != n => {
+                bail!("{path:?}:{}: inconsistent order {n} vs {o}", lineno + 1)
+            }
+            _ => {}
+        }
+        for (k, f) in fields[..n].iter().enumerate() {
+            let ix: u64 = f
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad index {f:?}", lineno + 1))?;
+            if ix == 0 {
+                bail!("{path:?}:{}: .tns indices are 1-based, got 0", lineno + 1);
+            }
+            let zero_based = (ix - 1) as u32;
+            max_ix[k] = max_ix[k].max(zero_based);
+            indices.push(zero_based);
+        }
+        let v: f32 = fields[n]
+            .parse()
+            .with_context(|| format!("{path:?}:{}: bad value", lineno + 1))?;
+        values.push(v);
+    }
+
+    let order = order.context("empty .tns file")?;
+    let dims = match dims {
+        Some(d) => {
+            if d.len() != order {
+                bail!("given dims order {} != data order {}", d.len(), order);
+            }
+            d
+        }
+        None => max_ix.iter().map(|&m| m as usize + 1).collect(),
+    };
+    SparseTensor::new(dims, indices, values)
+}
+
+/// Write a tensor as `.tns` (1-based indices).
+pub fn save_tns(t: &SparseTensor, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# order={} dims={:?} nnz={}", t.order(), t.dims(), t.nnz())?;
+    for (ix, v) in t.iter() {
+        for &i in ix {
+            write!(w, "{} ", i + 1)?;
+        }
+        writeln!(w, "{v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = synth::random_uniform(&mut rng, &[8, 9, 10], 100, 1.0, 5.0);
+        let dir = std::env::temp_dir().join("fasttucker_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.tns");
+        save_tns(&t, &path).unwrap();
+        let loaded = load_tns(&path, Some(vec![8, 9, 10])).unwrap();
+        assert_eq!(loaded.nnz(), t.nnz());
+        for k in 0..t.nnz() {
+            assert_eq!(loaded.index(k), t.index(k));
+            assert!((loaded.value(k) - t.value(k)).abs() < 1e-4);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parses_comments_and_infers_dims() {
+        let dir = std::env::temp_dir().join("fasttucker_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comments.tns");
+        std::fs::write(&path, "# hello\n1 1 1 2.5\n3 2 4 1.0\n\n").unwrap();
+        let t = load_tns(&path, None).unwrap();
+        assert_eq!(t.dims(), &[3, 2, 4]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.index(1), &[2, 1, 3]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let dir = std::env::temp_dir().join("fasttucker_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero.tns");
+        std::fs::write(&path, "0 1 1.0\n").unwrap();
+        assert!(load_tns(&path, None).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_mixed_order() {
+        let dir = std::env::temp_dir().join("fasttucker_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.tns");
+        std::fs::write(&path, "1 1 1.0\n1 1 1 1.0\n").unwrap();
+        assert!(load_tns(&path, None).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

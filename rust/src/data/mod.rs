@@ -1,0 +1,16 @@
+//! Dataset substrate: synthetic HOHDST generators, FROSTT-style `.tns`
+//! text I/O, train/test splitting, and the named dataset registry used by
+//! the experiment drivers.
+//!
+//! The paper evaluates on Netflix, Yahoo!Music and Amazon Reviews, none of
+//! which are redistributable here; the registry provides *shaped* synthetic
+//! replicas (same order, proportional mode sizes, planted low-rank Tucker
+//! structure + noise) — see DESIGN.md §Hardware-Adaptation for why this
+//! substitution preserves the evaluation's comparative claims.
+
+pub mod synth;
+pub mod io;
+pub mod split;
+pub mod registry;
+
+pub use registry::Dataset;

@@ -1,0 +1,207 @@
+//! Named dataset registry used by experiment drivers and benches.
+//!
+//! Mirrors the paper's Tables 4 (real) and 5 (synthesis) at laptop scale:
+//! mode-size *ratios* and order are preserved, absolute sizes and nonzero
+//! counts are scaled down so every experiment runs in seconds on a CPU.
+//! Real `.tns` files, when available, can be loaded with `Dataset::File`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::data::synth::{self, PlantedSpec};
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// A named dataset the drivers can instantiate.
+#[derive(Clone, Debug)]
+pub enum Dataset {
+    /// Planted low-rank synthetic replica with a paper-shaped geometry.
+    Planted(PlantedSpec),
+    /// Structureless uniform tensor (paper's Table 5 synthesis sets).
+    Uniform { dims: Vec<usize>, nnz: usize, lo: f32, hi: f32 },
+    /// A `.tns` file on disk.
+    File(PathBuf),
+}
+
+impl Dataset {
+    /// Look up a dataset by name. `scale` multiplies mode sizes and nnz
+    /// (1.0 = default laptop scale).
+    pub fn by_name(name: &str, scale: f64) -> Result<Dataset> {
+        let s = |x: usize| ((x as f64 * scale).round() as usize).max(4);
+        Ok(match name {
+            // Netflix: 480189 x 17770 x 2182, 99M nnz -> ~1/100 linear
+            // scale, keeping the observations-per-user ratio (~200) so
+            // the planted structure is statistically recoverable.
+            "netflix-like" => Dataset::Planted(PlantedSpec {
+                dims: vec![s(4802), s(1777), s(218)],
+                nnz: s(1_000_000),
+                j: 8,
+                r_core: 4,
+                noise: 0.3,
+                clamp: Some((1.0, 5.0)),
+            }),
+            // Yahoo!Music: 1M x 625k x 3075, 250M nnz.
+            "yahoo-like" => Dataset::Planted(PlantedSpec {
+                dims: vec![s(10_010), s(6250), s(308)],
+                nnz: s(2_500_000),
+                j: 8,
+                r_core: 4,
+                noise: 0.5,
+                clamp: Some((0.025, 5.0)),
+            }),
+            // Amazon Reviews: 4.8M x 1.8M x 1.8M, 1.7G nnz (scale test).
+            "amazon-like" => Dataset::Planted(PlantedSpec {
+                dims: vec![s(48_212), s(17_743), s(18_052)],
+                nnz: s(4_000_000),
+                j: 4,
+                r_core: 4,
+                noise: 0.5,
+                clamp: Some((1.0, 5.0)),
+            }),
+            // Small versions for tests and quick examples.
+            "tiny" => Dataset::Planted(PlantedSpec {
+                dims: vec![60, 50, 40],
+                nnz: 6_000,
+                j: 4,
+                r_core: 4,
+                noise: 0.05,
+                clamp: None,
+            }),
+            "small" => Dataset::Planted(PlantedSpec {
+                dims: vec![300, 250, 200],
+                nnz: 60_000,
+                j: 8,
+                r_core: 8,
+                noise: 0.1,
+                clamp: None,
+            }),
+            other => {
+                // Table 5 synthesis sets: "synth-orderK[-nnzM]".
+                if let Some(rest) = other.strip_prefix("synth-order") {
+                    let mut parts = rest.split('-');
+                    let order: usize = parts
+                        .next()
+                        .and_then(|p| p.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("bad synth name {other}"))?;
+                    if !(3..=10).contains(&order) {
+                        bail!("synth order must be 3..=10, got {order}");
+                    }
+                    let nnz: usize = match parts.next() {
+                        Some(p) => p.parse()?,
+                        // Paper: order-3 1G, order-4 800M, order-5 600M,
+                        // order-6..10 100M — scaled down by ~1e3.
+                        None => match order {
+                            3 => 1_000_000,
+                            4 => 800_000,
+                            5 => 600_000,
+                            _ => 100_000,
+                        },
+                    };
+                    let nnz = ((nnz as f64) * scale).round() as usize;
+                    // Paper uses I = 10,000 per mode; scaled to 1,000.
+                    let dim = s(1000);
+                    Dataset::Uniform {
+                        dims: vec![dim; order],
+                        nnz: nnz.max(order),
+                        lo: 1.0,
+                        hi: 5.0,
+                    }
+                } else {
+                    bail!("unknown dataset {other:?}");
+                }
+            }
+        })
+    }
+
+    /// All registry names (for `--help` and the data generator CLI).
+    pub fn names() -> &'static [&'static str] {
+        &[
+            "netflix-like",
+            "yahoo-like",
+            "amazon-like",
+            "tiny",
+            "small",
+            "synth-order3",
+            "synth-order4",
+            "synth-order5",
+            "synth-order6",
+            "synth-order7",
+            "synth-order8",
+            "synth-order9",
+            "synth-order10",
+        ]
+    }
+
+    /// Materialize the dataset.
+    pub fn build(&self, rng: &mut Rng) -> Result<SparseTensor> {
+        Ok(match self {
+            Dataset::Planted(spec) => synth::planted_tucker(rng, spec).tensor,
+            Dataset::Uniform { dims, nnz, lo, hi } => {
+                synth::random_uniform(rng, dims, *nnz, *lo, *hi)
+            }
+            Dataset::File(path) => crate::data::io::load_tns(path, None)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_resolve() {
+        for name in Dataset::names() {
+            Dataset::by_name(name, 1.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(Dataset::by_name("nope", 1.0).is_err());
+    }
+
+    #[test]
+    fn tiny_builds() {
+        let mut rng = Rng::new(1);
+        let d = Dataset::by_name("tiny", 1.0).unwrap();
+        let t = d.build(&mut rng).unwrap();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 6000);
+    }
+
+    #[test]
+    fn synth_orders_have_right_order() {
+        let mut rng = Rng::new(2);
+        for order in [3usize, 5, 10] {
+            let d = Dataset::by_name(&format!("synth-order{order}"), 0.01).unwrap();
+            let t = d.build(&mut rng).unwrap();
+            assert_eq!(t.order(), order);
+        }
+    }
+
+    #[test]
+    fn scale_shrinks() {
+        let d1 = Dataset::by_name("netflix-like", 1.0).unwrap();
+        let d2 = Dataset::by_name("netflix-like", 0.1).unwrap();
+        match (d1, d2) {
+            (Dataset::Planted(a), Dataset::Planted(b)) => {
+                assert!(b.dims[0] < a.dims[0]);
+                assert!(b.nnz < a.nnz);
+            }
+            _ => panic!("expected planted"),
+        }
+    }
+
+    #[test]
+    fn custom_synth_nnz() {
+        let d = Dataset::by_name("synth-order4-5000", 1.0).unwrap();
+        match d {
+            Dataset::Uniform { nnz, dims, .. } => {
+                assert_eq!(nnz, 5000);
+                assert_eq!(dims.len(), 4);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Train/test splitting of a sparse tensor (the paper's |Ω| / |Γ| split).
+
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// Split nonzeros uniformly at random: `test_frac` of them become the test
+/// set Γ, the rest the training set Ω.
+pub fn train_test_split(
+    t: &SparseTensor,
+    test_frac: f64,
+    rng: &mut Rng,
+) -> (SparseTensor, SparseTensor) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let nnz = t.nnz();
+    let n_test = ((nnz as f64) * test_frac).round() as usize;
+    let mut ids: Vec<usize> = (0..nnz).collect();
+    rng.shuffle(&mut ids);
+    let (test_ids, train_ids) = ids.split_at(n_test);
+    let mut train_sorted = train_ids.to_vec();
+    let mut test_sorted = test_ids.to_vec();
+    // Keep original nonzero order within each side (cache-friendlier).
+    train_sorted.sort_unstable();
+    test_sorted.sort_unstable();
+    (t.gather(&train_sorted), t.gather(&test_sorted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn split_sizes() {
+        let mut rng = Rng::new(7);
+        let t = synth::random_uniform(&mut rng, &[20, 20, 20], 1000, 1.0, 5.0);
+        let (train, test) = train_test_split(&t, 0.1, &mut rng);
+        assert_eq!(test.nnz(), 100);
+        assert_eq!(train.nnz(), 900);
+        assert_eq!(train.dims(), t.dims());
+    }
+
+    #[test]
+    fn prop_split_is_partition() {
+        forall("train/test split partitions values", 16, |rng| {
+            let t = synth::random_uniform(rng, &[15, 15], 200, 0.0, 1.0);
+            let frac = 0.05 + 0.4 * rng.uniform() as f64;
+            let (train, test) = train_test_split(&t, frac, rng);
+            assert_eq!(train.nnz() + test.nnz(), t.nnz());
+            // Value multiset is preserved.
+            let mut all: Vec<u32> = t.values().iter().map(|v| v.to_bits()).collect();
+            let mut got: Vec<u32> = train
+                .values()
+                .iter()
+                .chain(test.values())
+                .map(|v| v.to_bits())
+                .collect();
+            all.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(all, got);
+        });
+    }
+
+    #[test]
+    fn zero_frac_keeps_everything_in_train() {
+        let mut rng = Rng::new(8);
+        let t = synth::random_uniform(&mut rng, &[10, 10], 50, 1.0, 2.0);
+        let (train, test) = train_test_split(&t, 0.0, &mut rng);
+        assert_eq!(train.nnz(), 50);
+        assert_eq!(test.nnz(), 0);
+    }
+}

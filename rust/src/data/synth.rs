@@ -1,0 +1,218 @@
+//! Synthetic HOHDST generators.
+//!
+//! Two families:
+//! * [`random_uniform`] — structureless noise tensors (used by unit tests
+//!   and the pure-throughput benches, matching the paper's Table 5
+//!   synthesis sets whose values are uniform in [1, 5]).
+//! * [`planted_tucker`] — tensors whose values come from a ground-truth
+//!   low-rank Tucker model (Kruskal core) plus Gaussian noise, so accuracy
+//!   experiments have a recoverable signal and a known noise floor.
+
+use crate::kruskal::KruskalCore;
+use crate::model::factors::FactorMatrices;
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// Uniform random tensor: `nnz` coordinates drawn iid (duplicates allowed,
+/// as in real recommender logs re-rating), values uniform in `[lo, hi]`.
+pub fn random_uniform(
+    rng: &mut Rng,
+    dims: &[usize],
+    nnz: usize,
+    lo: f32,
+    hi: f32,
+) -> SparseTensor {
+    let order = dims.len();
+    let mut indices = Vec::with_capacity(nnz * order);
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for &d in dims {
+            indices.push(rng.gen_range(d) as u32);
+        }
+        values.push(lo + (hi - lo) * rng.uniform());
+    }
+    SparseTensor::new_unchecked(dims.to_vec(), indices, values)
+}
+
+/// Parameters for the planted-model generator.
+#[derive(Clone, Debug)]
+pub struct PlantedSpec {
+    pub dims: Vec<usize>,
+    pub nnz: usize,
+    /// Factor rank J (same for every mode, like the paper's experiments).
+    pub j: usize,
+    /// Kruskal core rank R_core of the ground truth.
+    pub r_core: usize,
+    /// Std-dev of additive Gaussian observation noise.
+    pub noise: f32,
+    /// Clamp values into `[lo, hi]` if set (ratings-style data).
+    pub clamp: Option<(f32, f32)>,
+}
+
+/// Output of [`planted_tucker`]: the observations plus the ground truth
+/// (handy for oracle checks; the noise floor is `spec.noise`).
+pub struct Planted {
+    pub tensor: SparseTensor,
+    pub truth_factors: FactorMatrices,
+    pub truth_core: KruskalCore,
+}
+
+/// Generate a sparse tensor whose values are
+/// `x = Σ_r Π_n (a^(n)_{i_n} · b^(n)_r) + ε`.
+pub fn planted_tucker(rng: &mut Rng, spec: &PlantedSpec) -> Planted {
+    let order = spec.dims.len();
+    let scale = (1.0 / (spec.j as f32)).sqrt();
+    // Ratings-style data (clamp set) gets *biased* factors — entries
+    // `scale·(1 + 0.6·N(0,1))` — giving the dominant rank-1
+    // popularity/bias structure real ratings matrices show; unclamped
+    // data keeps plain zero-mean Gaussian factors.
+    let factors = if spec.clamp.is_some() {
+        let mats = spec
+            .dims
+            .iter()
+            .map(|&d| {
+                let data: Vec<f32> = (0..d * spec.j)
+                    .map(|_| scale * (1.0 + 0.6 * rng.normal()))
+                    .collect();
+                crate::model::factors::Matrix::from_data(d, spec.j, data)
+            })
+            .collect();
+        FactorMatrices::from_mats(mats)
+    } else {
+        FactorMatrices::random(rng, &spec.dims, spec.j, scale)
+    };
+    let core = KruskalCore::random(rng, order, spec.j, spec.r_core, 1.0);
+
+    let mut indices = Vec::with_capacity(spec.nnz * order);
+    let mut values = Vec::with_capacity(spec.nnz);
+    let mut coords = vec![0u32; order];
+    // Clamped data: empirically recenter/rescale the planted signal into
+    // the middle half of the range so the clamp rarely saturates —
+    // otherwise the low-rank structure is destroyed and nothing is
+    // learnable from the generated tensor.
+    let (offset, gain) = match spec.clamp {
+        Some((lo, hi)) => {
+            let probes = 2000.min(spec.nnz.max(16));
+            let mut sample = Vec::with_capacity(probes);
+            for _ in 0..probes {
+                for (n, &d) in spec.dims.iter().enumerate() {
+                    coords[n] = rng.gen_range(d) as u32;
+                }
+                sample.push(predict_planted(&factors, &core, &coords));
+            }
+            let m = sample.iter().sum::<f32>() / probes as f32;
+            let s = (sample.iter().map(|v| (v - m) * (v - m)).sum::<f32>()
+                / probes as f32)
+                .sqrt()
+                .max(1e-6);
+            let gain = 0.25 * (hi - lo) / s;
+            (0.5 * (lo + hi) - gain * m, gain)
+        }
+        None => (0.0, 1.0),
+    };
+    for _ in 0..spec.nnz {
+        for (n, &d) in spec.dims.iter().enumerate() {
+            coords[n] = rng.gen_range(d) as u32;
+        }
+        let mut x = offset + gain * predict_planted(&factors, &core, &coords);
+        x += spec.noise * rng.normal();
+        if let Some((lo, hi)) = spec.clamp {
+            x = x.clamp(lo, hi);
+        }
+        indices.extend_from_slice(&coords);
+        values.push(x);
+    }
+    Planted {
+        tensor: SparseTensor::new_unchecked(spec.dims.clone(), indices, values),
+        truth_factors: factors,
+        truth_core: core,
+    }
+}
+
+/// Ground-truth prediction for one coordinate (linear Thm-1 path).
+pub fn predict_planted(factors: &FactorMatrices, core: &KruskalCore, coords: &[u32]) -> f32 {
+    let r_core = core.rank();
+    let mut acc = 0.0f32;
+    for r in 0..r_core {
+        let mut prod = 1.0f32;
+        for n in 0..factors.order() {
+            let a_row = factors.row(n, coords[n] as usize);
+            let b_row = core.row(n, r);
+            prod *= crate::util::linalg::dot(a_row, b_row);
+        }
+        acc += prod;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn random_uniform_respects_bounds() {
+        let mut rng = Rng::new(1);
+        let t = random_uniform(&mut rng, &[10, 20, 30], 500, 1.0, 5.0);
+        assert_eq!(t.nnz(), 500);
+        for (ix, v) in t.iter() {
+            assert!(ix[0] < 10 && ix[1] < 20 && ix[2] < 30);
+            assert!((1.0..=5.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn planted_values_match_truth_when_noiseless() {
+        let mut rng = Rng::new(2);
+        let spec = PlantedSpec {
+            dims: vec![20, 30, 25],
+            nnz: 300,
+            j: 4,
+            r_core: 2,
+            noise: 0.0,
+            clamp: None,
+        };
+        let p = planted_tucker(&mut rng, &spec);
+        for k in 0..p.tensor.nnz() {
+            let want = predict_planted(&p.truth_factors, &p.truth_core, p.tensor.index(k));
+            assert!((p.tensor.value(k) - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn clamp_applies() {
+        let mut rng = Rng::new(3);
+        let spec = PlantedSpec {
+            dims: vec![10, 10, 10],
+            nnz: 200,
+            j: 4,
+            r_core: 4,
+            noise: 3.0,
+            clamp: Some((1.0, 5.0)),
+        };
+        let p = planted_tucker(&mut rng, &spec);
+        for (_, v) in p.tensor.iter() {
+            assert!((1.0..=5.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn prop_planted_any_order() {
+        forall("planted generator valid for orders 2..6", 12, |rng| {
+            let order = 2 + rng.gen_range(5);
+            let dims: Vec<usize> = (0..order).map(|_| 4 + rng.gen_range(10)).collect();
+            let spec = PlantedSpec {
+                dims: dims.clone(),
+                nnz: 50,
+                j: 2 + rng.gen_range(3),
+                r_core: 1 + rng.gen_range(3),
+                noise: 0.1,
+                clamp: None,
+            };
+            let p = planted_tucker(rng, &spec);
+            assert_eq!(p.tensor.order(), order);
+            assert_eq!(p.tensor.nnz(), 50);
+            assert!(p.tensor.values().iter().all(|v| v.is_finite()));
+        });
+    }
+}

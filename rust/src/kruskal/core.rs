@@ -1,0 +1,149 @@
+//! The Kruskal-factored core: N matrices `B^(n)`, stored **transposed**
+//! (`R_core × J_n`, one rank-1 component per row) — the paper's coalesced
+//! layout (`B^(n)T ∈ R^{R_core × J_n}`, Section 5.1 Memory Coalescing):
+//! the SGD inner loop walks `b_r^(n)` as a contiguous slice.
+
+use crate::kruskal::DenseCore;
+use crate::model::factors::Matrix;
+use crate::tensor::indexing;
+use crate::util::Rng;
+
+/// Kruskal core factors, transposed layout.
+#[derive(Clone, Debug)]
+pub struct KruskalCore {
+    /// One `R_core × J` matrix per mode.
+    factors: Vec<Matrix>,
+    rank: usize,
+}
+
+impl KruskalCore {
+    pub fn random(rng: &mut Rng, order: usize, j: usize, r_core: usize, scale: f32) -> Self {
+        let factors = (0..order)
+            .map(|_| Matrix::random(rng, r_core, j, scale))
+            .collect();
+        KruskalCore { factors, rank: r_core }
+    }
+
+    pub fn zeros(order: usize, j: usize, r_core: usize) -> Self {
+        let factors = (0..order).map(|_| Matrix::zeros(r_core, j)).collect();
+        KruskalCore { factors, rank: r_core }
+    }
+
+    pub fn from_factors(factors: Vec<Matrix>) -> Self {
+        let rank = factors.first().map(|m| m.rows()).unwrap_or(0);
+        assert!(factors.iter().all(|m| m.rows() == rank));
+        KruskalCore { factors, rank }
+    }
+
+    /// R_core.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Per-mode J (may differ across modes in principle; equal in practice).
+    pub fn j(&self, n: usize) -> usize {
+        self.factors[n].cols()
+    }
+
+    /// `b_r^(n)` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, n: usize, r: usize) -> &[f32] {
+        self.factors[n].row(r)
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, n: usize, r: usize) -> &mut [f32] {
+        self.factors[n].row_mut(r)
+    }
+
+    pub fn factor(&self, n: usize) -> &Matrix {
+        &self.factors[n]
+    }
+
+    pub fn factor_mut(&mut self, n: usize) -> &mut Matrix {
+        &mut self.factors[n]
+    }
+
+    /// Σ_n R·J_n parameters (vs ∏ J_n dense) — the compression the paper
+    /// reports as `(Σ_n R_core J_n) / (∏_n J_n)`.
+    pub fn param_count(&self) -> usize {
+        self.factors.iter().map(|m| m.rows() * m.cols()).sum()
+    }
+
+    /// Paper's compression rate relative to the dense core.
+    pub fn compression_rate(&self) -> f64 {
+        let dense: f64 = self.factors.iter().map(|m| m.cols() as f64).product();
+        self.param_count() as f64 / dense
+    }
+
+    /// Materialize the dense core `G[j_1..j_N] = Σ_r Π_n b^(n)_{r,j_n}`.
+    /// Exponential in N — used by baselines and oracle tests only.
+    pub fn to_dense(&self) -> DenseCore {
+        let dims: Vec<usize> = self.factors.iter().map(|m| m.cols()).collect();
+        let len: usize = dims.iter().product();
+        let mut data = vec![0.0f32; len];
+        let mut coords = vec![0u32; self.order()];
+        for (idx, slot) in data.iter_mut().enumerate() {
+            indexing::dense_coords(idx, &dims, &mut coords);
+            let mut acc = 0.0f32;
+            for r in 0..self.rank {
+                let mut prod = 1.0f32;
+                for n in 0..self.order() {
+                    prod *= self.factors[n].get(r, coords[n] as usize);
+                }
+                acc += prod;
+            }
+            *slot = acc;
+        }
+        DenseCore::from_data(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_params() {
+        let mut rng = Rng::new(1);
+        let k = KruskalCore::random(&mut rng, 3, 4, 2, 1.0);
+        assert_eq!(k.order(), 3);
+        assert_eq!(k.rank(), 2);
+        assert_eq!(k.j(0), 4);
+        assert_eq!(k.param_count(), 3 * 2 * 4);
+        assert!((k.compression_rate() - 24.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn to_dense_matches_definition() {
+        let mut rng = Rng::new(2);
+        let k = KruskalCore::random(&mut rng, 3, 3, 2, 1.0);
+        let d = k.to_dense();
+        // Check a few entries against the rank-1 sum by hand.
+        for coords in [[0u32, 0, 0], [2, 1, 0], [1, 2, 2]] {
+            let mut want = 0.0f32;
+            for r in 0..2 {
+                want += k.row(0, r)[coords[0] as usize]
+                    * k.row(1, r)[coords[1] as usize]
+                    * k.row(2, r)[coords[2] as usize];
+            }
+            assert!((d.get(&coords) - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rank_one_dense_is_outer_product() {
+        let b0 = Matrix::from_data(1, 2, vec![2.0, 3.0]);
+        let b1 = Matrix::from_data(1, 2, vec![5.0, 7.0]);
+        let k = KruskalCore::from_factors(vec![b0, b1]);
+        let d = k.to_dense();
+        assert_eq!(d.get(&[0, 0]), 10.0);
+        assert_eq!(d.get(&[1, 0]), 15.0);
+        assert_eq!(d.get(&[0, 1]), 14.0);
+        assert_eq!(d.get(&[1, 1]), 21.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Explicit dense Tucker core `G ∈ R^{J_1 × … × J_N}` — the representation
+//! the baselines (cuTucker, SGD_Tucker, P-Tucker, Vest) carry, with the
+//! exponential-cost contraction the paper's Kruskal strategy replaces.
+
+use crate::model::factors::FactorMatrices;
+use crate::tensor::{indexing, DenseTensor};
+use crate::util::Rng;
+
+/// Dense core tensor.
+#[derive(Clone, Debug)]
+pub struct DenseCore {
+    tensor: DenseTensor,
+}
+
+impl DenseCore {
+    pub fn random(rng: &mut Rng, order: usize, j: usize, scale: f32) -> Self {
+        let dims = vec![j; order];
+        let len: usize = dims.iter().product();
+        let data = (0..len).map(|_| scale * rng.normal()).collect();
+        DenseCore { tensor: DenseTensor::from_data(dims, data) }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        DenseCore { tensor: DenseTensor::zeros(dims) }
+    }
+
+    pub fn from_data(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        DenseCore { tensor: DenseTensor::from_data(dims, data) }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.tensor.dims()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensor.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensor.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        self.tensor.data()
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        self.tensor.data_mut()
+    }
+
+    #[inline]
+    pub fn get(&self, coords: &[u32]) -> f32 {
+        self.tensor.get(coords)
+    }
+
+    /// Predict one entry by the full contraction
+    /// `x̂ = Σ_{j_1..j_N} G[j..] Π_n a^(n)_{i_n, j_n}` — O(∏ J) per entry,
+    /// the exponential path the paper's Theorems remove.
+    pub fn predict(&self, factors: &FactorMatrices, coords: &[u32]) -> f32 {
+        let dims = self.dims();
+        let order = dims.len();
+        let mut core_coords = vec![0u32; order];
+        let mut acc = 0.0f64;
+        for (idx, &g) in self.data().iter().enumerate() {
+            indexing::dense_coords(idx, dims, &mut core_coords);
+            let mut prod = g as f64;
+            for n in 0..order {
+                prod *= factors.row(n, coords[n] as usize)[core_coords[n] as usize] as f64;
+            }
+            acc += prod;
+        }
+        acc as f32
+    }
+
+    /// The per-sample mode-`n` coefficient vector through the dense core:
+    /// `D^(n)[j_n] = Σ_{j_m, m≠n} G[j..] Π_{m≠n} a^(m)_{i_m, j_m}`
+    /// (the paper's `D = G^(n) S^T` column for one sample). Cost O(∏ J).
+    pub fn mode_coeff(
+        &self,
+        factors: &FactorMatrices,
+        coords: &[u32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let dims = self.dims();
+        let order = dims.len();
+        assert_eq!(out.len(), dims[n]);
+        out.fill(0.0);
+        let mut core_coords = vec![0u32; order];
+        for (idx, &g) in self.data().iter().enumerate() {
+            indexing::dense_coords(idx, dims, &mut core_coords);
+            let mut prod = g;
+            for m in 0..order {
+                if m != n {
+                    prod *= factors.row(m, coords[m] as usize)[core_coords[m] as usize];
+                }
+            }
+            out[core_coords[n] as usize] += prod;
+        }
+    }
+
+    /// Gradient direction of the core for one sample: `Π_n a^(n)_{i_n, j_n}`
+    /// accumulated into `grad` scaled by `scale` (typically `e`).
+    pub fn accumulate_core_grad(
+        &self,
+        factors: &FactorMatrices,
+        coords: &[u32],
+        scale: f32,
+        grad: &mut [f32],
+    ) {
+        let dims = self.dims();
+        let order = dims.len();
+        assert_eq!(grad.len(), self.len());
+        let mut core_coords = vec![0u32; order];
+        for (idx, slot) in grad.iter_mut().enumerate() {
+            indexing::dense_coords(idx, dims, &mut core_coords);
+            let mut prod = scale;
+            for n in 0..order {
+                prod *= factors.row(n, coords[n] as usize)[core_coords[n] as usize];
+            }
+            *slot += prod;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::dot;
+
+    #[test]
+    fn predict_equals_mode_coeff_dot_row() {
+        // x̂ = a^(n) · D^(n) must hold for every n.
+        let mut rng = Rng::new(3);
+        let dims = [6usize, 7, 8];
+        let factors = FactorMatrices::random(&mut rng, &dims, 3, 1.0);
+        let core = DenseCore::random(&mut rng, 3, 3, 1.0);
+        let coords = [5u32, 6, 7];
+        let xhat = core.predict(&factors, &coords);
+        for n in 0..3 {
+            let mut d = vec![0.0f32; 3];
+            core.mode_coeff(&factors, &coords, n, &mut d);
+            let via = dot(factors.row(n, coords[n] as usize), &d);
+            assert!((xhat - via).abs() < 1e-4, "mode {n}: {xhat} vs {via}");
+        }
+    }
+
+    #[test]
+    fn core_grad_is_outer_product_of_rows() {
+        let mut rng = Rng::new(4);
+        let factors = FactorMatrices::random(&mut rng, &[4, 5], 2, 1.0);
+        let core = DenseCore::random(&mut rng, 2, 2, 1.0);
+        let coords = [1u32, 2];
+        let mut grad = vec![0.0f32; core.len()];
+        core.accumulate_core_grad(&factors, &coords, 2.0, &mut grad);
+        let a0 = factors.row(0, 1);
+        let a1 = factors.row(1, 2);
+        // Layout: mode-0 fastest.
+        for j1 in 0..2 {
+            for j0 in 0..2 {
+                let want = 2.0 * a0[j0] * a1[j1];
+                assert!((grad[j1 * 2 + j0] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

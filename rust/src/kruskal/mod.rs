@@ -1,0 +1,9 @@
+//! Kruskal (CP) approximation of the Tucker core — the paper's central
+//! memory/compute reduction (Eq. 9): `G ≈ Σ_r b^(1)_r ∘ … ∘ b^(N)_r`.
+
+pub mod core;
+pub mod dense_core;
+pub mod reconstruct;
+
+pub use core::KruskalCore;
+pub use dense_core::DenseCore;

@@ -1,0 +1,142 @@
+//! Full reconstruction of small tensors (oracle for tests) and error
+//! measurement against sparse observations.
+
+use crate::kruskal::KruskalCore;
+use crate::model::factors::FactorMatrices;
+use crate::model::{CoreRepr, TuckerModel};
+use crate::tensor::{indexing, DenseTensor, SparseTensor};
+
+/// Reconstruct the entire dense tensor `X̂ = G ×_1 A^(1) … ×_N A^(N)`
+/// from a Kruskal-cored model. Exponential — tests only.
+pub fn reconstruct_dense(factors: &FactorMatrices, core: &KruskalCore) -> DenseTensor {
+    let dims = factors.dims();
+    let mut out = DenseTensor::zeros(dims.clone());
+    let mut coords = vec![0u32; dims.len()];
+    let len = out.len();
+    for idx in 0..len {
+        indexing::dense_coords(idx, &dims, &mut coords);
+        out.data_mut()[idx] = crate::data::synth::predict_planted(factors, core, &coords);
+    }
+    out
+}
+
+/// RMSE of a model against a sparse test set Γ (the paper's metric).
+pub fn rmse(model: &TuckerModel, test: &SparseTensor) -> f64 {
+    if test.nnz() == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (coords, v) in test.iter() {
+        let e = (model.predict(coords) - v) as f64;
+        acc += e * e;
+    }
+    (acc / test.nnz() as f64).sqrt()
+}
+
+/// MAE of a model against a sparse test set Γ.
+pub fn mae(model: &TuckerModel, test: &SparseTensor) -> f64 {
+    if test.nnz() == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (coords, v) in test.iter() {
+        acc += ((model.predict(coords) - v) as f64).abs();
+    }
+    acc / test.nnz() as f64
+}
+
+/// Both metrics in one pass (evaluation hot path).
+pub fn rmse_mae(model: &TuckerModel, test: &SparseTensor) -> (f64, f64) {
+    if test.nnz() == 0 {
+        return (0.0, 0.0);
+    }
+    let (mut se, mut ae) = (0.0f64, 0.0f64);
+    match &model.core {
+        // Fast path: Kruskal prediction is linear-cost.
+        CoreRepr::Kruskal(core) => {
+            for (coords, v) in test.iter() {
+                let e = (crate::data::synth::predict_planted(&model.factors, core, coords)
+                    - v) as f64;
+                se += e * e;
+                ae += e.abs();
+            }
+        }
+        CoreRepr::Dense(core) => {
+            for (coords, v) in test.iter() {
+                let e = (core.predict(&model.factors, coords) - v) as f64;
+                se += e * e;
+                ae += e.abs();
+            }
+        }
+    }
+    let n = test.nnz() as f64;
+    ((se / n).sqrt(), ae / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_error_on_planted_truth() {
+        let mut rng = Rng::new(6);
+        let spec = crate::data::synth::PlantedSpec {
+            dims: vec![10, 12, 8],
+            nnz: 200,
+            j: 3,
+            r_core: 2,
+            noise: 0.0,
+            clamp: None,
+        };
+        let p = crate::data::synth::planted_tucker(&mut rng, &spec);
+        let model = TuckerModel {
+            factors: p.truth_factors.clone(),
+            core: CoreRepr::Kruskal(p.truth_core.clone()),
+        };
+        assert!(rmse(&model, &p.tensor) < 1e-4);
+        assert!(mae(&model, &p.tensor) < 1e-4);
+    }
+
+    #[test]
+    fn rmse_mae_consistent_with_singles() {
+        let mut rng = Rng::new(7);
+        let spec = crate::data::synth::PlantedSpec {
+            dims: vec![10, 10, 10],
+            nnz: 100,
+            j: 3,
+            r_core: 2,
+            noise: 0.5,
+            clamp: None,
+        };
+        let p = crate::data::synth::planted_tucker(&mut rng, &spec);
+        let model = TuckerModel::init_kruskal(&mut rng, &[10, 10, 10], 3, 2);
+        let (r, m) = rmse_mae(&model, &p.tensor);
+        assert!((r - rmse(&model, &p.tensor)).abs() < 1e-9);
+        assert!((m - mae(&model, &p.tensor)).abs() < 1e-9);
+        assert!(r >= m); // RMSE dominates MAE.
+    }
+
+    #[test]
+    fn reconstruct_matches_pointwise_predict() {
+        let mut rng = Rng::new(8);
+        let model = TuckerModel::init_kruskal(&mut rng, &[4, 5, 6], 3, 2);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k,
+            _ => unreachable!(),
+        };
+        let dense = reconstruct_dense(&model.factors, core);
+        for coords in [[0u32, 0, 0], [3, 4, 5], [2, 2, 2]] {
+            assert!((dense.get(&coords) - model.predict(&coords)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_test_set_is_zero_error() {
+        let mut rng = Rng::new(9);
+        let model = TuckerModel::init_kruskal(&mut rng, &[4, 4], 2, 2);
+        let empty = SparseTensor::empty(vec![4, 4]);
+        assert_eq!(rmse(&model, &empty), 0.0);
+        assert_eq!(rmse_mae(&model, &empty), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,39 @@
+//! # fasttucker
+//!
+//! A reproduction of **cuFastTucker** (Li, 2022): a compact stochastic
+//! strategy for large-scale sparse Tucker decomposition, built as a
+//! three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: datasets, sampling, the
+//!   order-N reference engine, four baseline algorithms, the multi-device
+//!   partition scheduler, metrics, and the PJRT runtime that executes the
+//!   AOT-compiled JAX step functions.
+//! * **L2** (`python/compile/model.py`) — the order-3 SGD step as a JAX
+//!   graph, lowered once to HLO text in `artifacts/`.
+//! * **L1** (`python/compile/kernels/fasttucker.py`) — the Thm-1/2
+//!   contraction as a Pallas kernel.
+//!
+//! Python never runs at training time; the binary is self-contained once
+//! `make artifacts` has produced the HLO files.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod util;
+pub mod tensor;
+pub mod data;
+pub mod kruskal;
+pub mod model;
+pub mod algo;
+pub mod sched;
+pub mod parallel;
+pub mod metrics;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;
+pub mod cli;
+pub mod bench_support;
+
+pub use tensor::SparseTensor;
+pub use model::TuckerModel;
+pub use coordinator::trainer::{Trainer, TrainOptions};

@@ -1,0 +1,251 @@
+//! `fasttucker` — the launcher.
+//!
+//! ```text
+//! fasttucker train  [--config exp.toml] [--dataset NAME] [--algo A]
+//!                   [--engine native|parallel|pjrt] [--j N] [--r-core N]
+//!                   [--epochs N] [--workers M] [--seed S] [--scale F]
+//!                   [--checkpoint OUT.ftck]
+//! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
+//! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
+//! fasttucker partition-plan --workers M --order N
+//! fasttucker info   [--artifacts DIR]
+//! fasttucker datasets
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use fasttucker::cli::Args;
+use fasttucker::config::{AlgoKind, EngineKind, TrainConfig};
+use fasttucker::coordinator::Trainer;
+use fasttucker::data::{split::train_test_split, Dataset};
+use fasttucker::parallel::LatinSchedule;
+use fasttucker::util::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "partition-plan" => cmd_partition_plan(&args),
+        "info" => cmd_info(&args),
+        "datasets" => cmd_datasets(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand {other:?}; see `fasttucker help`")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+fasttucker — compact stochastic sparse Tucker decomposition (cuFastTucker reproduction)
+
+USAGE:
+  fasttucker train  [--config exp.toml] [--dataset NAME] [--algo ALGO]
+                    [--engine native|parallel|pjrt] [--j N] [--r-core N]
+                    [--epochs N] [--workers M] [--seed S] [--scale F]
+                    [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
+  fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
+  fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
+  fasttucker partition-plan --workers M --order N
+  fasttucker info   [--artifacts DIR]
+  fasttucker datasets
+
+ALGO: fasttucker | cutucker | sgd_tucker | ptucker | vest
+";
+
+fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.get("algo") {
+        cfg.algo = AlgoKind::parse(v)?;
+    }
+    if let Some(v) = args.get("engine") {
+        cfg.engine = EngineKind::parse(v)?;
+    }
+    if let Some(v) = args.get_usize("j")? {
+        cfg.j = v;
+    }
+    if let Some(v) = args.get_usize("r-core")? {
+        cfg.r_core = v;
+    }
+    if let Some(v) = args.get_usize("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get_f64("scale")? {
+        cfg.scale = v;
+    }
+    if let Some(v) = args.get_f64("sample-frac")? {
+        cfg.hyper.sample_frac = v;
+    }
+    if args.has_flag("no-core") {
+        cfg.hyper.update_core = false;
+    }
+    if let Some(v) = args.get("checkpoint") {
+        cfg.checkpoint = Some(v.to_string());
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    cfg.validate()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    apply_overrides(&mut cfg, args)?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let dataset = Dataset::by_name(&cfg.dataset, cfg.scale)?;
+    let tensor = dataset.build(&mut rng)?;
+    println!(
+        "dataset={} order={} dims={:?} nnz={} density={:.2e}",
+        cfg.dataset,
+        tensor.order(),
+        tensor.dims(),
+        tensor.nnz(),
+        tensor.density()
+    );
+    let (train, test) = train_test_split(&tensor, cfg.test_frac, &mut rng);
+    println!("train nnz={} test nnz={}", train.nnz(), test.nnz());
+
+    let dims = tensor.dims().to_vec();
+    let (mut trainer, mut model) = Trainer::from_config(&cfg, &dims, &mut rng)?;
+    println!(
+        "algo={} engine={} J={} R_core={} params={}",
+        cfg.algo.name(),
+        trainer.engine.name(),
+        cfg.j,
+        cfg.r_core,
+        model.param_count()
+    );
+    let report = trainer.train(&mut model, &train, &test, &mut rng)?;
+    println!("epoch\trmse\tmae\ttrain_secs");
+    for rec in &report.history {
+        println!(
+            "{}\t{:.6}\t{:.6}\t{:.3}",
+            rec.epoch, rec.rmse, rec.mae, rec.train_secs
+        );
+    }
+    println!(
+        "final: rmse={:.6} mae={:.6} total_train_secs={:.3}",
+        report.final_rmse(),
+        report.final_mae(),
+        report.total_train_secs()
+    );
+    if let Some(path) = &cfg.checkpoint {
+        fasttucker::model::checkpoint::save(&model, std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_path = args
+        .positional()
+        .first()
+        .context("usage: fasttucker eval MODEL.ftck --dataset NAME")?;
+    let dataset_name = args.get("dataset").context("--dataset required")?;
+    let scale = args.get_f64("scale")?.unwrap_or(1.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+
+    let model = fasttucker::model::checkpoint::load(std::path::Path::new(model_path))?;
+    let mut rng = Rng::new(seed);
+    let tensor = Dataset::by_name(dataset_name, scale)?.build(&mut rng)?;
+    if tensor.order() != model.order() {
+        bail!(
+            "model order {} != dataset order {}",
+            model.order(),
+            tensor.order()
+        );
+    }
+    let (rmse, mae) = fasttucker::coordinator::eval::rmse_mae_parallel(&model, &tensor, 4);
+    println!("rmse={rmse:.6} mae={mae:.6} over {} nonzeros", tensor.nnz());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let name = args.get("dataset").context("--dataset required")?;
+    let out = args.get("out").context("--out required")?;
+    let scale = args.get_f64("scale")?.unwrap_or(1.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let mut rng = Rng::new(seed);
+    let tensor = Dataset::by_name(name, scale)?.build(&mut rng)?;
+    fasttucker::data::io::save_tns(&tensor, std::path::Path::new(out))?;
+    println!(
+        "wrote {out}: order={} dims={:?} nnz={}",
+        tensor.order(),
+        tensor.dims(),
+        tensor.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_partition_plan(args: &Args) -> Result<()> {
+    let m = args.get_usize("workers")?.unwrap_or(2);
+    let order = args.get_usize("order")?.unwrap_or(3);
+    let s = LatinSchedule::new(m, order);
+    println!("workers={m} order={order} rounds={}", s.rounds());
+    for round in 0..s.rounds() {
+        let assigns = s.round_assignments(round);
+        let desc: Vec<String> = assigns
+            .iter()
+            .enumerate()
+            .map(|(g, a)| format!("w{g}->{a:?}"))
+            .collect();
+        println!("round {round}: {}", desc.join("  "));
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    println!("fasttucker {} (offline build)", env!("CARGO_PKG_VERSION"));
+    let path = std::path::Path::new(dir);
+    match fasttucker::runtime::Manifest::load(path) {
+        Ok(m) => {
+            println!("artifacts in {dir}:");
+            for e in m.entries() {
+                println!(
+                    "  {} J={} R={} B={} outputs={} ({})",
+                    e.name,
+                    e.j,
+                    e.r_core,
+                    e.batch,
+                    e.n_outputs,
+                    e.file.display()
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded from {dir}: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("registered datasets:");
+    for name in Dataset::names() {
+        println!("  {name}");
+    }
+    Ok(())
+}

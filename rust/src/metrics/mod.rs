@@ -1,0 +1,186 @@
+//! Metrics: timers, counters, and simple streaming statistics used by the
+//! trainer, the multi-device scheduler (communication volume), and the
+//! bench harnesses.
+
+use std::time::{Duration, Instant};
+
+/// A resumable stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accumulated: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { started: None, accumulated: Duration::ZERO }
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.accumulated += t.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        let running = self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        self.accumulated + running
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.started = None;
+        self.accumulated = Duration::ZERO;
+    }
+}
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Communication-volume ledger for the multi-device simulation: counts the
+/// bytes the paper's parameter-exchange step would move over NVLink/PCIe.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    /// Bytes of factor-chunk exchanges between workers at round boundaries.
+    pub factor_bytes: u64,
+    /// Bytes of core-gradient all-reduce traffic.
+    pub core_bytes: u64,
+    /// Number of exchange events.
+    pub events: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_factor_exchange(&mut self, bytes: u64) {
+        self.factor_bytes += bytes;
+        self.events += 1;
+    }
+
+    pub fn record_core_allreduce(&mut self, bytes: u64) {
+        self.core_bytes += bytes;
+        self.events += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.factor_bytes + self.core_bytes
+    }
+
+    pub fn merge(&mut self, other: &CommLedger) {
+        self.factor_bytes += other.factor_bytes;
+        self.core_bytes += other.core_bytes;
+        self.events += other.events;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let first = sw.elapsed();
+        assert!(first >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > first);
+        sw.reset();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn ledger_merges() {
+        let mut a = CommLedger::new();
+        a.record_factor_exchange(100);
+        let mut b = CommLedger::new();
+        b.record_core_allreduce(50);
+        a.merge(&b);
+        assert_eq!(a.total_bytes(), 150);
+        assert_eq!(a.events, 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Binary checkpoints for [`TuckerModel`] (own format; offline build has
+//! no serde). Layout, all little-endian:
+//!
+//! ```text
+//! magic "FTCK" | version u32 | order u32 | rank u32
+//! | core_tag u32 (0 = kruskal, 1 = dense) | r_core u32 (kruskal) or 0
+//! | dims: order × u64
+//! | factor data: per mode, rows*cols f32
+//! | core data: kruskal => order × (r_core*J) f32 ; dense => ∏J f32
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kruskal::{DenseCore, KruskalCore};
+use crate::model::factors::{FactorMatrices, Matrix};
+use crate::model::{CoreRepr, TuckerModel};
+
+const MAGIC: &[u8; 4] = b"FTCK";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a model.
+pub fn save(model: &TuckerModel, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, model.order() as u32)?;
+    write_u32(&mut w, model.rank() as u32)?;
+    match &model.core {
+        CoreRepr::Kruskal(k) => {
+            write_u32(&mut w, 0)?;
+            write_u32(&mut w, k.rank() as u32)?;
+        }
+        CoreRepr::Dense(_) => {
+            write_u32(&mut w, 1)?;
+            write_u32(&mut w, 0)?;
+        }
+    }
+    for d in model.factors.dims() {
+        write_u64(&mut w, d as u64)?;
+    }
+    for m in model.factors.mats() {
+        write_f32s(&mut w, m.data())?;
+    }
+    match &model.core {
+        CoreRepr::Kruskal(k) => {
+            for n in 0..k.order() {
+                write_f32s(&mut w, k.factor(n).data())?;
+            }
+        }
+        CoreRepr::Dense(d) => write_f32s(&mut w, d.data())?,
+    }
+    Ok(())
+}
+
+/// Load a model.
+pub fn load(path: &Path) -> Result<TuckerModel> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a fasttucker checkpoint: bad magic");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let order = read_u32(&mut r)? as usize;
+    let rank = read_u32(&mut r)? as usize;
+    let core_tag = read_u32(&mut r)?;
+    let r_core = read_u32(&mut r)? as usize;
+    let mut dims = Vec::with_capacity(order);
+    for _ in 0..order {
+        dims.push(read_u64(&mut r)? as usize);
+    }
+    let mut mats = Vec::with_capacity(order);
+    for &d in &dims {
+        let data = read_f32s(&mut r, d * rank)?;
+        mats.push(Matrix::from_data(d, rank, data));
+    }
+    let factors = FactorMatrices::from_mats(mats);
+    let core = match core_tag {
+        0 => {
+            let mut bs = Vec::with_capacity(order);
+            for _ in 0..order {
+                let data = read_f32s(&mut r, r_core * rank)?;
+                bs.push(Matrix::from_data(r_core, rank, data));
+            }
+            CoreRepr::Kruskal(KruskalCore::from_factors(bs))
+        }
+        1 => {
+            let len = rank.pow(order as u32);
+            let data = read_f32s(&mut r, len)?;
+            CoreRepr::Dense(DenseCore::from_data(vec![rank; order], data))
+        }
+        t => bail!("unknown core tag {t}"),
+    };
+    Ok(TuckerModel { factors, core })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fasttucker_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn kruskal_roundtrip() {
+        let mut rng = Rng::new(10);
+        let m = TuckerModel::init_kruskal(&mut rng, &[10, 11, 12], 4, 3);
+        let path = tmp("kruskal.ftck");
+        save(&m, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.order(), 3);
+        assert_eq!(loaded.rank(), 4);
+        for coords in [[0u32, 0, 0], [9, 10, 11]] {
+            assert!((loaded.predict(&coords) - m.predict(&coords)).abs() < 1e-6);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(11);
+        let m = TuckerModel::init_dense(&mut rng, &[8, 9], 3);
+        let path = tmp("dense.ftck");
+        save(&m, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        for coords in [[0u32, 0], [7, 8]] {
+            assert!((loaded.predict(&coords) - m.predict(&coords)).abs() < 1e-5);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.ftck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

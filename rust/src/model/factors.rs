@@ -1,0 +1,192 @@
+//! Dense row-major matrices and the per-mode factor matrix collection.
+//!
+//! `A^(n) ∈ R^{I_n × J}` is stored row-major so a factor row (the SGD unit
+//! of work) is one contiguous cache-line-friendly slice — the CPU analogue
+//! of the paper's memory-coalesced layout.
+
+use crate::util::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Self {
+        let data = (0..rows * cols).map(|_| scale * rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    }
+}
+
+/// The N per-mode factor matrices, all with the same rank J (as in the
+/// paper's experiments; per-mode J_n differs only in notation).
+#[derive(Clone, Debug)]
+pub struct FactorMatrices {
+    mats: Vec<Matrix>,
+    rank: usize,
+}
+
+impl FactorMatrices {
+    pub fn random(rng: &mut Rng, dims: &[usize], rank: usize, scale: f32) -> Self {
+        let mats = dims
+            .iter()
+            .map(|&d| Matrix::random(rng, d, rank, scale))
+            .collect();
+        FactorMatrices { mats, rank }
+    }
+
+    pub fn zeros(dims: &[usize], rank: usize) -> Self {
+        let mats = dims.iter().map(|&d| Matrix::zeros(d, rank)).collect();
+        FactorMatrices { mats, rank }
+    }
+
+    pub fn from_mats(mats: Vec<Matrix>) -> Self {
+        let rank = mats.first().map(|m| m.cols()).unwrap_or(0);
+        assert!(mats.iter().all(|m| m.cols() == rank));
+        FactorMatrices { mats, rank }
+    }
+
+    pub fn order(&self) -> usize {
+        self.mats.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.mats.iter().map(|m| m.rows()).collect()
+    }
+
+    pub fn mats(&self) -> &[Matrix] {
+        &self.mats
+    }
+
+    pub fn mat(&self, n: usize) -> &Matrix {
+        &self.mats[n]
+    }
+
+    pub fn mat_mut(&mut self, n: usize) -> &mut Matrix {
+        &mut self.mats[n]
+    }
+
+    #[inline]
+    pub fn row(&self, n: usize, i: usize) -> &[f32] {
+        self.mats[n].row(i)
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, n: usize, i: usize) -> &mut [f32] {
+        self.mats[n].row_mut(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_row_access() {
+        let m = Matrix::from_data(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::random(&mut rng, 5, 7, 1.0);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn factor_matrices_shapes() {
+        let mut rng = Rng::new(5);
+        let f = FactorMatrices::random(&mut rng, &[10, 20, 30], 4, 0.5);
+        assert_eq!(f.order(), 3);
+        assert_eq!(f.rank(), 4);
+        assert_eq!(f.dims(), vec![10, 20, 30]);
+        assert_eq!(f.row(2, 29).len(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_ranks_panic() {
+        FactorMatrices::from_mats(vec![Matrix::zeros(2, 3), Matrix::zeros(2, 4)]);
+    }
+
+    #[test]
+    fn row_mut_writes() {
+        let mut f = FactorMatrices::zeros(&[3, 3], 2);
+        f.row_mut(0, 1).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(f.row(0, 1), &[1.0, 2.0]);
+        assert_eq!(f.row(0, 0), &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Model state: the factor matrices `A^(n)` and the core representation,
+//! plus initialization and binary checkpointing.
+
+pub mod factors;
+pub mod checkpoint;
+
+pub use factors::{FactorMatrices, Matrix};
+
+use crate::kruskal::{DenseCore, KruskalCore};
+use crate::util::Rng;
+
+/// Which core representation a model carries.
+#[derive(Clone, Debug)]
+pub enum CoreRepr {
+    /// cuFastTucker: Kruskal-factored core (B^(n) matrices).
+    Kruskal(KruskalCore),
+    /// cuTucker / SGD_Tucker / P-Tucker / Vest: explicit dense core G.
+    Dense(DenseCore),
+}
+
+/// A full Tucker model: N factor matrices plus a core.
+#[derive(Clone, Debug)]
+pub struct TuckerModel {
+    pub factors: FactorMatrices,
+    pub core: CoreRepr,
+}
+
+impl TuckerModel {
+    /// Random init with the paper's scheme: factors ~ N(0, 1/J) entries,
+    /// Kruskal core factors ~ N(0, 1/R) so the initial prediction variance
+    /// is O(1).
+    pub fn init_kruskal(rng: &mut Rng, dims: &[usize], j: usize, r_core: usize) -> Self {
+        let factors = FactorMatrices::random(rng, dims, j, (1.0 / j as f32).sqrt());
+        let core = KruskalCore::random(rng, dims.len(), j, r_core, (1.0 / r_core as f32).sqrt());
+        TuckerModel { factors, core: CoreRepr::Kruskal(core) }
+    }
+
+    /// Random init with an explicit dense core (baseline algorithms).
+    pub fn init_dense(rng: &mut Rng, dims: &[usize], j: usize) -> Self {
+        let factors = FactorMatrices::random(rng, dims, j, (1.0 / j as f32).sqrt());
+        let core = DenseCore::random(rng, dims.len(), j, (1.0 / j as f32).powi(2));
+        TuckerModel { factors, core: CoreRepr::Dense(core) }
+    }
+
+    pub fn order(&self) -> usize {
+        self.factors.order()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.factors.rank()
+    }
+
+    /// Predict one entry through whichever core representation is held.
+    pub fn predict(&self, coords: &[u32]) -> f32 {
+        match &self.core {
+            CoreRepr::Kruskal(core) => {
+                crate::data::synth::predict_planted(&self.factors, core, coords)
+            }
+            CoreRepr::Dense(core) => core.predict(&self.factors, coords),
+        }
+    }
+
+    /// Parameter count (the paper's space-overhead comparison).
+    pub fn param_count(&self) -> usize {
+        let f: usize = self
+            .factors
+            .mats()
+            .iter()
+            .map(|m| m.rows() * m.cols())
+            .sum();
+        let c = match &self.core {
+            CoreRepr::Kruskal(core) => core.param_count(),
+            CoreRepr::Dense(core) => core.len(),
+        };
+        f + c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let mut rng = Rng::new(1);
+        let m = TuckerModel::init_kruskal(&mut rng, &[10, 12, 14], 4, 3);
+        assert_eq!(m.order(), 3);
+        assert_eq!(m.rank(), 4);
+        assert_eq!(m.param_count(), (10 + 12 + 14) * 4 + 3 * 4 * 3);
+    }
+
+    #[test]
+    fn dense_init_param_count() {
+        let mut rng = Rng::new(2);
+        let m = TuckerModel::init_dense(&mut rng, &[10, 12], 4);
+        assert_eq!(m.param_count(), (10 + 12) * 4 + 16);
+    }
+
+    #[test]
+    fn kruskal_vs_dense_predictions_match_after_densify() {
+        let mut rng = Rng::new(3);
+        let m = TuckerModel::init_kruskal(&mut rng, &[8, 9, 10], 4, 4);
+        let kr = match &m.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let dense = kr.to_dense();
+        let md = TuckerModel { factors: m.factors.clone(), core: CoreRepr::Dense(dense) };
+        for coords in [[0u32, 0, 0], [7, 8, 9], [3, 4, 5]] {
+            let a = m.predict(&coords);
+            let b = md.predict(&coords);
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! The `M^N` block partition of a sparse tensor (paper Fig. 2).
+//!
+//! Each mode `n` is cut into `M` contiguous chunks of near-equal size;
+//! block `(b_1..b_N)` holds the nonzeros whose mode-`n` index falls in
+//! chunk `b_n` for every `n`.
+
+use crate::tensor::SparseTensor;
+
+/// Partition of a tensor's nonzeros into `M^order` blocks.
+#[derive(Clone, Debug)]
+pub struct BlockPartition {
+    m: usize,
+    order: usize,
+    dims: Vec<usize>,
+    /// Nonzero ids per block, block index little-endian in mode order.
+    blocks: Vec<Vec<u32>>,
+}
+
+impl BlockPartition {
+    /// Chunk id of row `i` in a mode of size `dim` cut into `m` chunks.
+    /// Chunks are `ceil(dim/m)`-sized, last chunk possibly short.
+    #[inline]
+    pub fn chunk_of(i: usize, dim: usize, m: usize) -> usize {
+        let chunk = dim.div_ceil(m);
+        (i / chunk).min(m - 1)
+    }
+
+    /// Row range `[start, end)` of chunk `c`.
+    #[inline]
+    pub fn chunk_range(c: usize, dim: usize, m: usize) -> (usize, usize) {
+        let chunk = dim.div_ceil(m);
+        let start = (c * chunk).min(dim);
+        let end = ((c + 1) * chunk).min(dim);
+        (start, end)
+    }
+
+    /// Linear block id of per-mode chunk coordinates.
+    #[inline]
+    pub fn block_id(coords: &[usize], m: usize) -> usize {
+        let mut id = 0usize;
+        for &c in coords.iter().rev() {
+            id = id * m + c;
+        }
+        id
+    }
+
+    /// Build the partition — one O(nnz) pass.
+    pub fn build(t: &SparseTensor, m: usize) -> Self {
+        assert!(m >= 1);
+        let order = t.order();
+        let n_blocks = m.pow(order as u32);
+        let mut blocks = vec![Vec::new(); n_blocks];
+        let dims = t.dims().to_vec();
+        let mut coords = vec![0usize; order];
+        for k in 0..t.nnz() {
+            let ix = t.index(k);
+            for n in 0..order {
+                coords[n] = Self::chunk_of(ix[n] as usize, dims[n], m);
+            }
+            blocks[Self::block_id(&coords, m)].push(k as u32);
+        }
+        BlockPartition { m, order, dims, blocks }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Nonzero ids of block `(b_1..b_N)`.
+    pub fn block(&self, coords: &[usize]) -> &[u32] {
+        &self.blocks[Self::block_id(coords, self.m)]
+    }
+
+    pub fn block_by_id(&self, id: usize) -> &[u32] {
+        &self.blocks[id]
+    }
+
+    /// Load-imbalance factor: max block size / mean block size. The paper's
+    /// near-linear scaling requires this to stay close to 1 on uniform data.
+    pub fn imbalance(&self) -> f64 {
+        let total: usize = self.blocks.iter().map(|b| b.len()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.blocks.len() as f64;
+        let max = self.blocks.iter().map(|b| b.len()).max().unwrap_or(0);
+        max as f64 / mean
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn chunk_math() {
+        // dim 10, m 3 -> chunks of 4: [0,4) [4,8) [8,10).
+        assert_eq!(BlockPartition::chunk_of(0, 10, 3), 0);
+        assert_eq!(BlockPartition::chunk_of(3, 10, 3), 0);
+        assert_eq!(BlockPartition::chunk_of(4, 10, 3), 1);
+        assert_eq!(BlockPartition::chunk_of(9, 10, 3), 2);
+        assert_eq!(BlockPartition::chunk_range(2, 10, 3), (8, 10));
+    }
+
+    #[test]
+    fn chunk_of_never_exceeds_m() {
+        // dim < m: everything lands in low chunks but < m.
+        for i in 0..3 {
+            assert!(BlockPartition::chunk_of(i, 3, 5) < 5);
+        }
+    }
+
+    #[test]
+    fn block_id_is_positional() {
+        assert_eq!(BlockPartition::block_id(&[1, 0, 0], 2), 1);
+        assert_eq!(BlockPartition::block_id(&[0, 1, 0], 2), 2);
+        assert_eq!(BlockPartition::block_id(&[0, 0, 1], 2), 4);
+        assert_eq!(BlockPartition::block_id(&[1, 1, 1], 2), 7);
+    }
+
+    #[test]
+    fn partition_covers_all_nonzeros_exactly_once() {
+        forall("block partition is exact", 24, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let m = 1 + rng.gen_range(4);
+            let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(20)).collect();
+            let t = synth::random_uniform(rng, &dims, 300, 1.0, 5.0);
+            let p = BlockPartition::build(&t, m);
+            assert_eq!(p.n_blocks(), m.pow(order as u32));
+            let mut seen = vec![false; t.nnz()];
+            for b in 0..p.n_blocks() {
+                for &k in p.block_by_id(b) {
+                    assert!(!seen[k as usize]);
+                    seen[k as usize] = true;
+                    // Membership is consistent with chunk_of.
+                    let ix = t.index(k as usize);
+                    let mut coords = vec![0usize; order];
+                    for n in 0..order {
+                        coords[n] =
+                            BlockPartition::chunk_of(ix[n] as usize, dims[n], m);
+                    }
+                    assert_eq!(BlockPartition::block_id(&coords, m), b);
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        });
+    }
+
+    #[test]
+    fn imbalance_near_one_on_uniform_data() {
+        let mut rng = Rng::new(1);
+        let t = synth::random_uniform(&mut rng, &[100, 100, 100], 200_000, 1.0, 5.0);
+        let p = BlockPartition::build(&t, 2);
+        assert!(p.imbalance() < 1.1, "imbalance {}", p.imbalance());
+    }
+}

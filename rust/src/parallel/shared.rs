@@ -1,0 +1,110 @@
+//! Unsafe-but-proven shared factor storage for the multi-device engine.
+//!
+//! Within one scheduling round, [`LatinSchedule`](super::LatinSchedule)
+//! guarantees the workers' blocks are pairwise disjoint in every mode's
+//! chunk index, so the factor rows any two workers touch never overlap.
+//! [`SharedFactors`] exposes raw row access under exactly that invariant
+//! (which `parallel::schedule::tests::prop_conflict_free_and_covering`
+//! pins); it is the CPU analogue of multiple GPUs updating disjoint slices
+//! of the same logically-global factor matrices.
+
+use crate::model::factors::FactorMatrices;
+
+/// A `Sync` view over factor matrices allowing per-row mutable access from
+/// multiple threads, provided callers honor the disjointness contract.
+pub struct SharedFactors {
+    ptrs: Vec<*mut f32>,
+    rows: Vec<usize>,
+    cols: usize,
+}
+
+// SAFETY: all mutation goes through `row_mut_unchecked`, whose contract
+// (disjoint rows across threads within a round) is enforced by the Latin
+// schedule; reads of rows owned by other workers do not occur within a
+// round because every mode chunk a worker reads is also one it owns.
+unsafe impl Sync for SharedFactors {}
+unsafe impl Send for SharedFactors {}
+
+impl SharedFactors {
+    /// Wrap `factors`; the borrow is held for `'_`'s scope by the caller
+    /// (the parallel engine keeps the `&mut FactorMatrices` alive across
+    /// the thread scope).
+    pub fn new(factors: &mut FactorMatrices) -> Self {
+        let cols = factors.rank();
+        let rows = factors.dims();
+        let ptrs = (0..factors.order())
+            .map(|n| factors.mat_mut(n).data_mut().as_mut_ptr())
+            .collect();
+        SharedFactors { ptrs, rows, cols }
+    }
+
+    pub fn order(&self) -> usize {
+        self.ptrs.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read row `i` of mode `n`.
+    ///
+    /// # Safety
+    /// No other thread may be writing row `(n, i)` concurrently — holds
+    /// whenever `(n, i)` lies inside the calling worker's round assignment.
+    #[inline]
+    pub unsafe fn row(&self, n: usize, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows[n]);
+        std::slice::from_raw_parts(self.ptrs[n].add(i * self.cols), self.cols)
+    }
+
+    /// Mutable row access; same contract as [`Self::row`] plus exclusivity.
+    ///
+    /// # Safety
+    /// The calling worker must be the unique owner of row `(n, i)` in the
+    /// current round.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, n: usize, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows[n]);
+        std::slice::from_raw_parts_mut(self.ptrs[n].add(i * self.cols), self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn disjoint_parallel_writes_are_visible() {
+        let mut rng = Rng::new(1);
+        let mut factors = FactorMatrices::random(&mut rng, &[64, 64], 4, 1.0);
+        let shared = SharedFactors::new(&mut factors);
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let shared = &shared;
+                scope.spawn(move || {
+                    // Worker w owns rows [w*16, (w+1)*16) of both modes.
+                    for n in 0..2 {
+                        for i in w * 16..(w + 1) * 16 {
+                            let row = unsafe { shared.row_mut(n, i) };
+                            for v in row {
+                                *v = (n * 1000 + w) as f32;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        for n in 0..2 {
+            for w in 0..4 {
+                for i in w * 16..(w + 1) * 16 {
+                    assert!(factors
+                        .row(n, i)
+                        .iter()
+                        .all(|&v| v == (n * 1000 + w) as f32));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! The multi-device FastTucker engine: M worker threads ("GPUs") execute
+//! the Latin-square schedule over the `M^N` block partition, each updating
+//! only the factor chunks it owns in the current round (paper Section 5.3).
+//!
+//! Per epoch:
+//! 1. Build (or reuse) the block partition of the training nonzeros.
+//! 2. For each of the `M^{N-1}` rounds, run M scoped threads; worker `g`
+//!    SGD-steps the nonzeros of its assigned block through the same
+//!    Theorem-1/2 math as the serial engine (`algo::fasttucker`), writing
+//!    factor rows through [`SharedFactors`] (disjointness guaranteed by
+//!    the schedule) and accumulating core gradients worker-locally.
+//! 3. Ledger the parameter exchange the paper's GPUs would perform at each
+//!    round boundary, all-reduce the core gradients, apply the core update.
+
+use std::time::Instant;
+
+use crate::algo::fasttucker::{
+    accumulate_core_grad, apply_core_grad, build_strided, contract_staged, CoreLayout,
+    Workspace,
+};
+use crate::algo::{EpochStats, SgdHyper};
+use crate::metrics::CommLedger;
+use crate::model::{CoreRepr, TuckerModel};
+use crate::parallel::shared::SharedFactors;
+use crate::parallel::{BlockPartition, LatinSchedule};
+use crate::tensor::SparseTensor;
+use crate::util::linalg::scale_axpy;
+use crate::util::Rng;
+
+/// How the M workers execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Execution {
+    /// Real OS threads — wall-clock speedup on multi-core hosts.
+    Threads,
+    /// Discrete-event simulation: workers run sequentially, each timed;
+    /// a round costs `max` over its workers (what M real devices would
+    /// take) and the ledger/figures use that simulated time. This is the
+    /// honest mode on single-core testbeds (see DESIGN.md
+    /// §Hardware-Adaptation) and is fully deterministic.
+    Simulated,
+}
+
+impl Execution {
+    /// Threads when the host has >1 core, else Simulated.
+    pub fn auto() -> Execution {
+        match std::thread::available_parallelism() {
+            Ok(n) if n.get() > 1 => Execution::Threads,
+            _ => Execution::Simulated,
+        }
+    }
+}
+
+/// Options for the multi-device engine.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelOptions {
+    /// Number of simulated devices M.
+    pub workers: usize,
+    pub hyper: SgdHyper,
+    pub layout: CoreLayout,
+    pub execution: Execution,
+}
+
+impl Default for ParallelOptions {
+    fn default() -> Self {
+        ParallelOptions {
+            workers: 2,
+            hyper: SgdHyper::default(),
+            layout: CoreLayout::Packed,
+            execution: Execution::auto(),
+        }
+    }
+}
+
+/// Multi-device FastTucker trainer.
+pub struct ParallelFastTucker {
+    pub opts: ParallelOptions,
+    partition: Option<BlockPartition>,
+    partition_for: Option<(usize, usize, usize)>, // (nnz, order, m)
+    workspaces: Vec<Workspace>,
+    /// Communication ledger accumulated across epochs.
+    pub ledger: CommLedger,
+}
+
+impl ParallelFastTucker {
+    pub fn new(opts: ParallelOptions) -> Self {
+        assert!(opts.workers >= 1);
+        ParallelFastTucker {
+            opts,
+            partition: None,
+            partition_for: None,
+            workspaces: Vec::new(),
+            ledger: CommLedger::new(),
+        }
+    }
+
+    fn ensure_state(&mut self, train: &SparseTensor, order: usize, r_core: usize, j: usize) {
+        let fp = (train.nnz(), train.order(), self.opts.workers);
+        if self.partition_for != Some(fp) {
+            self.partition = Some(BlockPartition::build(train, self.opts.workers));
+            self.partition_for = Some(fp);
+        }
+        let stale = self.workspaces.len() != self.opts.workers
+            || self
+                .workspaces
+                .first()
+                .map(|w| (w.order, w.r_core, w.j) != (order, r_core, j))
+                .unwrap_or(true);
+        if stale {
+            self.workspaces = (0..self.opts.workers)
+                .map(|_| Workspace::new(order, r_core, j))
+                .collect();
+        }
+    }
+
+    /// One multi-device epoch. Returns stats; communication volume goes to
+    /// `self.ledger`.
+    pub fn train_epoch(
+        &mut self,
+        model: &mut TuckerModel,
+        train: &SparseTensor,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> EpochStats {
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            CoreRepr::Dense(_) => panic!("ParallelFastTucker requires a Kruskal core"),
+        };
+        let (order, r_core, j) = (core.order(), core.rank(), core.j(0));
+        self.ensure_state(train, order, r_core, j);
+        let m = self.opts.workers;
+        let h = self.opts.hyper;
+        let layout = self.opts.layout;
+        let lr_f = h.lr_factor.at(epoch);
+        let lr_c = h.lr_core.at(epoch);
+        let strided = if layout == CoreLayout::Strided {
+            build_strided(&core)
+        } else {
+            Vec::new()
+        };
+
+        let schedule = LatinSchedule::new(m, order);
+        let partition = self.partition.as_ref().unwrap();
+        let dims = model.factors.dims();
+
+        // Per-worker RNG streams, forked deterministically.
+        let mut worker_rngs: Vec<Rng> = (0..m).map(|_| rng.fork()).collect();
+
+        let execution = self.opts.execution;
+        let t0 = Instant::now();
+        let mut samples = 0usize;
+        let mut simulated_secs = 0.0f64;
+        {
+            let shared = SharedFactors::new(&mut model.factors);
+            for round in 0..schedule.rounds() {
+                let assignments = schedule.round_assignments(round);
+                // Ledger the factor chunks changing owners at this boundary.
+                for g in 0..m {
+                    for (mode, chunk) in schedule.incoming_chunks(round, g) {
+                        let (s, e) = BlockPartition::chunk_range(chunk, dims[mode], m);
+                        self.ledger
+                            .record_factor_exchange(((e - s) * j * 4) as u64);
+                    }
+                }
+                let (count, round_secs) = match execution {
+                    Execution::Threads => run_round_threads(
+                        &shared,
+                        &core,
+                        &strided,
+                        layout,
+                        train,
+                        partition,
+                        &assignments,
+                        &mut self.workspaces,
+                        &mut worker_rngs,
+                        lr_f,
+                        h,
+                    ),
+                    Execution::Simulated => run_round_simulated(
+                        &shared,
+                        &core,
+                        &strided,
+                        layout,
+                        train,
+                        partition,
+                        &assignments,
+                        &mut self.workspaces,
+                        &mut worker_rngs,
+                        lr_f,
+                        h,
+                    ),
+                };
+                samples += count;
+                simulated_secs += round_secs;
+            }
+        }
+        // Threads mode reports wall time; Simulated mode reports the
+        // discrete-event parallel time (sum over rounds of the slowest
+        // worker).
+        let factor_secs = match execution {
+            Execution::Threads => t0.elapsed().as_secs_f64(),
+            Execution::Simulated => simulated_secs,
+        };
+
+        // Core all-reduce + update.
+        let t1 = Instant::now();
+        let mut core_secs = 0.0;
+        if h.update_core {
+            // Merge worker-local gradients into workspace 0.
+            let (first, rest) = self.workspaces.split_at_mut(1);
+            for ws in rest.iter_mut() {
+                for (a, b) in first[0].core_grad.iter_mut().zip(ws.core_grad.iter()) {
+                    *a += *b;
+                }
+                first[0].core_grad_count += ws.core_grad_count;
+                ws.core_grad.fill(0.0);
+                ws.core_grad_count = 0;
+            }
+            self.ledger
+                .record_core_allreduce((m * order * r_core * j * 4) as u64);
+            let core_mut = match &mut model.core {
+                CoreRepr::Kruskal(k) => k,
+                _ => unreachable!(),
+            };
+            apply_core_grad(&mut first[0], core_mut, lr_c, h.lambda_core);
+            core_secs = t1.elapsed().as_secs_f64();
+        }
+
+        EpochStats { samples, factor_secs, core_secs }
+    }
+}
+
+/// Execute one scheduling round on real threads; returns (samples, wall
+/// secs of the round).
+#[allow(clippy::too_many_arguments)]
+fn run_round_threads(
+    shared: &SharedFactors,
+    core: &crate::kruskal::KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    train: &SparseTensor,
+    partition: &BlockPartition,
+    assignments: &[Vec<usize>],
+    workspaces: &mut [Workspace],
+    rngs: &mut [Rng],
+    lr_f: f32,
+    h: SgdHyper,
+) -> (usize, f64) {
+    let t0 = Instant::now();
+    let mut counts = vec![0usize; assignments.len()];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for ((g, ws), wrng) in (0..assignments.len())
+            .zip(workspaces.iter_mut())
+            .zip(rngs.iter_mut())
+        {
+            let block = partition.block(&assignments[g]);
+            let handle = scope.spawn(move || {
+                worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h)
+            });
+            handles.push(handle);
+        }
+        for (g, hdl) in handles.into_iter().enumerate() {
+            counts[g] = hdl.join().expect("worker panicked");
+        }
+    });
+    (counts.iter().sum(), t0.elapsed().as_secs_f64())
+}
+
+/// Execute one round as a discrete-event simulation: workers run
+/// sequentially, each timed; the round "takes" the slowest worker's time,
+/// exactly what M synchronized devices would observe.
+#[allow(clippy::too_many_arguments)]
+fn run_round_simulated(
+    shared: &SharedFactors,
+    core: &crate::kruskal::KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    train: &SparseTensor,
+    partition: &BlockPartition,
+    assignments: &[Vec<usize>],
+    workspaces: &mut [Workspace],
+    rngs: &mut [Rng],
+    lr_f: f32,
+    h: SgdHyper,
+) -> (usize, f64) {
+    let mut samples = 0usize;
+    let mut slowest = 0.0f64;
+    for ((g, ws), wrng) in (0..assignments.len())
+        .zip(workspaces.iter_mut())
+        .zip(rngs.iter_mut())
+    {
+        let block = partition.block(&assignments[g]);
+        let t0 = Instant::now();
+        samples += worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h);
+        slowest = slowest.max(t0.elapsed().as_secs_f64());
+    }
+    (samples, slowest)
+}
+
+/// One worker's pass over its block: SGD on every (or a sampled fraction
+/// of) nonzero, exactly the serial per-sample math.
+#[allow(clippy::too_many_arguments)]
+fn worker_pass(
+    shared: &SharedFactors,
+    core: &crate::kruskal::KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    train: &SparseTensor,
+    block: &[u32],
+    ws: &mut Workspace,
+    rng: &mut Rng,
+    lr_f: f32,
+    h: SgdHyper,
+) -> usize {
+    if block.is_empty() {
+        return 0;
+    }
+    let order = ws.order;
+    let j = ws.j;
+    let n_samples = if h.sample_frac >= 1.0 {
+        block.len()
+    } else {
+        (((block.len() as f64) * h.sample_frac).round() as usize).max(1)
+    };
+    for s in 0..n_samples {
+        let k = if h.sample_frac >= 1.0 {
+            block[s] as usize
+        } else {
+            block[rng.gen_range(block.len())] as usize
+        };
+        let coords = train.index(k);
+        let x = train.value(k);
+        for n in 0..order {
+            // SAFETY: coords lie inside this worker's block; the schedule
+            // gives it exclusive ownership of every chunk the block spans.
+            let row = unsafe { shared.row(n, coords[n] as usize) };
+            ws.stage_row(n, row);
+        }
+        let e = contract_staged(ws, core, strided, layout, x);
+        if h.update_core {
+            accumulate_core_grad(ws, e);
+        }
+        for n in 0..order {
+            let gs_n = &ws.gs[n * j..(n + 1) * j];
+            // SAFETY: exclusive ownership per the schedule (see above).
+            let row = unsafe { shared.row_mut(n, coords[n] as usize) };
+            scale_axpy(1.0 - lr_f * h.lambda_factor, -lr_f * e, gs_n, row);
+        }
+    }
+    n_samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::kruskal::reconstruct::rmse;
+
+    fn planted(seed: u64) -> (crate::data::synth::Planted, PlantedSpec) {
+        let spec = PlantedSpec {
+            dims: vec![40, 40, 40],
+            nnz: 8000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(seed);
+        (planted_tucker(&mut rng, &spec), spec)
+    }
+
+    #[test]
+    fn parallel_converges_like_serial() {
+        let (p, spec) = planted(1);
+        for execution in [Execution::Threads, Execution::Simulated] {
+            for workers in [1usize, 2, 4] {
+                let mut rng = Rng::new(2);
+                let mut model =
+                    TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+                let mut opts = ParallelOptions::default();
+                opts.workers = workers;
+                opts.execution = execution;
+                opts.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+                opts.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+                let mut engine = ParallelFastTucker::new(opts);
+                let before = rmse(&model, &p.tensor);
+                for epoch in 0..15 {
+                    engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+                }
+                let after = rmse(&model, &p.tensor);
+                assert!(
+                    after < 0.6 * before,
+                    "workers={workers} {execution:?}: rmse {before} -> {after}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulated_and_threaded_produce_identical_models() {
+        // Same worker RNG streams + conflict-free schedule => the two
+        // execution modes compute bit-identical factor updates.
+        let (p, spec) = planted(21);
+        let run = |execution| {
+            let mut rng = Rng::new(22);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 3;
+            opts.execution = execution;
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(23);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2);
+            }
+            model
+        };
+        let a = run(Execution::Threads);
+        let b = run(Execution::Simulated);
+        for n in 0..3 {
+            assert_eq!(
+                a.factors.mat(n).data(),
+                b.factors.mat(n).data(),
+                "mode {n} diverged between execution modes"
+            );
+        }
+    }
+
+    #[test]
+    fn visits_every_nonzero_once_per_epoch() {
+        let (p, spec) = planted(3);
+        let mut rng = Rng::new(4);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 3;
+        let mut engine = ParallelFastTucker::new(opts);
+        let stats = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        assert_eq!(stats.samples, p.tensor.nnz());
+    }
+
+    #[test]
+    fn ledger_accumulates_exchanges() {
+        let (p, spec) = planted(5);
+        let mut rng = Rng::new(6);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        // M=2, N=3: 4 rounds, rounds 1..3 each exchange >= 1 chunk per
+        // worker, plus one core all-reduce.
+        assert!(engine.ledger.factor_bytes > 0);
+        assert!(engine.ledger.core_bytes > 0);
+    }
+
+    #[test]
+    fn single_worker_matches_partition_order_serial_run() {
+        // With M=1 the engine degenerates to a serial full pass (block
+        // order); RMSE after an epoch must match a serial FastTucker run
+        // over the same sample order. We check convergence consistency
+        // rather than bitwise equality (sample orders differ).
+        let (p, spec) = planted(7);
+        let mut rng = Rng::new(8);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 1;
+        let mut engine = ParallelFastTucker::new(opts);
+        let before = rmse(&model, &p.tensor);
+        for epoch in 0..10 {
+            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+        }
+        assert!(rmse(&model, &p.tensor) < before);
+    }
+}

@@ -1,0 +1,144 @@
+//! The artifact manifest: `artifacts/manifest.tsv` written by aot.py,
+//! mapping entry points to HLO files and their compile-time shapes.
+//!
+//! Format (tab-separated): `name  file  J  R  B  n_outputs`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub j: usize,
+    pub r_core: usize,
+    pub batch: usize,
+    pub n_outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 6 {
+                bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, f.len());
+            }
+            entries.push(ArtifactEntry {
+                name: f[0].to_string(),
+                file: dir.join(f[1]),
+                j: f[2].parse().context("bad J")?,
+                r_core: f[3].parse().context("bad R")?,
+                batch: f[4].parse().context("bad B")?,
+                n_outputs: f[5].parse().context("bad n_outputs")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("empty manifest");
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Find an entry by name and shape. When several batch variants are
+    /// compiled, prefer the largest batch (amortizes per-execute overhead;
+    /// perf pass iteration 5, EXPERIMENTS.md §Perf).
+    pub fn find(&self, name: &str, j: usize, r_core: usize) -> Option<&ArtifactEntry> {
+        self.find_capped(name, j, r_core, usize::MAX)
+    }
+
+    /// [`Self::find`] restricted to batch ≤ `cap`.
+    pub fn find_capped(
+        &self,
+        name: &str,
+        j: usize,
+        r_core: usize,
+        cap: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name && e.j == j && e.r_core == r_core && e.batch <= cap)
+            .max_by_key(|e| e.batch)
+    }
+
+    /// Shape variants available for `name`.
+    pub fn variants(&self, name: &str) -> Vec<(usize, usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| (e.j, e.r_core, e.batch))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str =
+        "train_step\ttrain_step_j8_r8_b256.hlo.txt\t8\t8\t256\t7\n\
+         predict\tpredict_j8_r8_b256.hlo.txt\t8\t8\t256\t1\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.find("train_step", 8, 8).unwrap();
+        assert_eq!(e.batch, 256);
+        assert_eq!(e.n_outputs, 7);
+        assert!(e.file.ends_with("train_step_j8_r8_b256.hlo.txt"));
+        assert!(m.find("train_step", 16, 16).is_none());
+    }
+
+    #[test]
+    fn variants_listed() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variants("predict"), vec![(8, 8, 256)]);
+        assert!(m.variants("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("bad line", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Runs only when `make artifacts` has produced the files.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("train_step", 8, 8).is_some());
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the only bridge between the Rust coordinator
+//! and the JAX/Pallas compute path — python never runs here.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use pjrt::{PjrtRuntime, StepExecutable};

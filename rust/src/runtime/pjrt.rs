@@ -1,0 +1,211 @@
+//! The PJRT executor: HLO text → `HloModuleProto` → compile on the CPU
+//! PJRT client → execute with `Literal` buffers.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+
+/// A compiled step function plus its shape metadata.
+pub struct StepExecutable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StepExecutable {
+    /// Execute with raw f32 buffers. `inputs` are (data, shape) pairs in
+    /// the artifact's argument order; outputs come back as flat vecs.
+    pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let expected: i64 = shape.iter().product();
+            if expected != data.len() as i64 {
+                return Err(anyhow!(
+                    "shape {:?} does not match buffer length {}",
+                    shape,
+                    data.len()
+                ));
+            }
+            let lit = if shape.len() == 1 && shape[0] == data.len() as i64 {
+                lit
+            } else {
+                lit.reshape(shape).map_err(|e| anyhow!("reshape: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack n_outputs elements.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != self.entry.n_outputs {
+            return Err(anyhow!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.entry.name,
+                parts.len(),
+                self.entry.n_outputs
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client plus a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, StepExecutable>,
+    /// Only consider artifacts with batch ≤ this when resolving variants.
+    batch_cap: usize,
+}
+
+impl PjrtRuntime {
+    /// Create from an artifacts directory (expects `manifest.tsv`).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: HashMap::new(), batch_cap: usize::MAX })
+    }
+
+    /// Restrict variant resolution to artifacts with batch ≤ `cap`.
+    pub fn set_batch_cap(&mut self, cap: usize) {
+        self.batch_cap = cap;
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `(name, j, r)`.
+    pub fn load(&mut self, name: &str, j: usize, r_core: usize) -> Result<&StepExecutable> {
+        let key = format!("{name}_j{j}_r{r_core}");
+        if !self.cache.contains_key(&key) {
+            let entry = self
+                .manifest
+                .find_capped(name, j, r_core, self.batch_cap)
+                .with_context(|| {
+                    format!(
+                        "no artifact for {name} (J={j}, R={r_core}); available: {:?} — \
+                         rebuild with `make artifacts` or pass --variants to aot.py",
+                        self.manifest.variants(name)
+                    )
+                })?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+            self.cache.insert(key.clone(), StepExecutable { entry, exe });
+        }
+        Ok(&self.cache[&key])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn predict_executes_and_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+        let (j, r) = (8usize, 8usize);
+        let exe = rt.load("predict", j, r).unwrap();
+        let b = exe.entry.batch;
+
+        // Random staged rows; compare against the native Thm-1/2 path.
+        let mut rng = crate::util::Rng::new(1);
+        let mk = |rng: &mut crate::util::Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal()).collect()
+        };
+        let a1 = mk(&mut rng, b * j);
+        let a2 = mk(&mut rng, b * j);
+        let a3 = mk(&mut rng, b * j);
+        let b1 = mk(&mut rng, r * j);
+        let b2 = mk(&mut rng, r * j);
+        let b3 = mk(&mut rng, r * j);
+        let row = [b as i64, j as i64];
+        let bshape = [r as i64, j as i64];
+        let outs = exe
+            .run(&[
+                (&a1, &row),
+                (&a2, &row),
+                (&a3, &row),
+                (&b1, &bshape),
+                (&b2, &bshape),
+                (&b3, &bshape),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let xhat = &outs[0];
+        assert_eq!(xhat.len(), b);
+
+        // Native check on a few samples.
+        for s in [0usize, 17, b - 1] {
+            let mut want = 0.0f32;
+            for rr in 0..r {
+                let mut prod = 1.0f32;
+                for (a, bf) in [(&a1, &b1), (&a2, &b2), (&a3, &b3)] {
+                    let mut d = 0.0f32;
+                    for jj in 0..j {
+                        d += a[s * j + jj] * bf[rr * j + jj];
+                    }
+                    prod *= d;
+                }
+                want += prod;
+            }
+            assert!(
+                (xhat[s] - want).abs() < 1e-3,
+                "sample {s}: {} vs {want}",
+                xhat[s]
+            );
+        }
+    }
+
+    #[test]
+    fn missing_variant_gives_useful_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+        let err = match rt.load("predict", 3, 3) {
+            Ok(_) => panic!("expected missing-variant error"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("no artifact"), "{err}");
+    }
+}

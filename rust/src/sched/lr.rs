@@ -1,0 +1,97 @@
+//! The NOMAD-style dynamic learning rate the paper adopts (Section 6.1):
+//! `γ_t = α / (1 + β · t^{1.5})`, with separate (α, β, λ) triples for the
+//! factor matrices and the core factors (paper Tables 6–7).
+
+/// One learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    /// Initial learning rate α.
+    pub alpha: f32,
+    /// Decay coefficient β.
+    pub beta: f32,
+}
+
+impl LrSchedule {
+    pub fn new(alpha: f32, beta: f32) -> Self {
+        // alpha == 0 is allowed: it freezes the corresponding update
+        // (used by ablations that train only factors or only the core).
+        assert!(alpha >= 0.0 && beta >= 0.0);
+        LrSchedule { alpha, beta }
+    }
+
+    /// Fixed rate (β = 0).
+    pub fn constant(alpha: f32) -> Self {
+        Self::new(alpha, 0.0)
+    }
+
+    /// Rate at iteration `t` (0-based; the paper's t counts epochs).
+    #[inline]
+    pub fn at(&self, t: usize) -> f32 {
+        self.alpha / (1.0 + self.beta * (t as f32).powf(1.5))
+    }
+
+    /// Paper Table 7 defaults for cuFastTucker factor updates at rank J.
+    pub fn paper_factor_default(j: usize) -> Self {
+        let alpha = match j {
+            0..=4 => 0.009,
+            5..=8 => 0.006,
+            9..=16 => 0.0036,
+            _ => 0.002,
+        };
+        LrSchedule::new(alpha, 0.05)
+    }
+
+    /// Paper Table 7 defaults for cuFastTucker core updates at rank J.
+    pub fn paper_core_default(j: usize) -> Self {
+        let alpha = match j {
+            0..=8 => 0.0045,
+            9..=16 => 0.0035,
+            _ => 0.0025,
+        };
+        LrSchedule::new(alpha, 0.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decays_monotonically() {
+        let s = LrSchedule::new(0.01, 0.1);
+        let mut prev = f32::INFINITY;
+        for t in 0..50 {
+            let lr = s.at(t);
+            assert!(lr > 0.0 && lr <= prev);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn t0_is_alpha() {
+        let s = LrSchedule::new(0.02, 0.3);
+        assert!((s.at(0) - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_never_decays() {
+        let s = LrSchedule::constant(0.01);
+        assert_eq!(s.at(0), s.at(1000));
+    }
+
+    #[test]
+    fn matches_paper_formula() {
+        let s = LrSchedule::new(0.0045, 0.1);
+        let t = 9usize;
+        let want = 0.0045 / (1.0 + 0.1 * (9.0f32).powf(1.5));
+        assert!((s.at(t) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_defaults_positive() {
+        for j in [4, 8, 16, 32] {
+            assert!(LrSchedule::paper_factor_default(j).at(0) > 0.0);
+            assert!(LrSchedule::paper_core_default(j).at(0) > 0.0);
+        }
+    }
+}

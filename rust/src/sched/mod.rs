@@ -1,0 +1,8 @@
+//! SGD machinery: the dynamic learning-rate schedule and the one-step
+//! sampling of the paper's stochastic strategy.
+
+pub mod lr;
+pub mod sampler;
+
+pub use lr::LrSchedule;
+pub use sampler::Sampler;

@@ -1,0 +1,96 @@
+//! The paper's one-step sampling set Ψ: each SGD round draws a subset of
+//! nonzero ids whose gradient approximates the full-Ω gradient.
+//!
+//! Two modes:
+//! * [`Sampler::epoch_shuffle`] — a shuffled pass over all nonzeros split
+//!   into batches (classic epoch semantics; what the convergence figures
+//!   use so "epoch" matches the paper's x-axis).
+//! * [`Sampler::one_step`] — draw |Ψ| ids with replacement per round (the
+//!   paper's Definition 6 stochastic strategy; cheapest).
+
+use crate::util::Rng;
+
+/// Stateless sampling helpers over `0..nnz`.
+pub struct Sampler {
+    nnz: usize,
+}
+
+impl Sampler {
+    pub fn new(nnz: usize) -> Self {
+        assert!(nnz > 0, "cannot sample from an empty tensor");
+        Sampler { nnz }
+    }
+
+    /// Draw a one-step sampling set Ψ of size `m` (with replacement, as
+    /// SGD theory assumes; duplicates are legal and rare when m ≪ nnz).
+    pub fn one_step(&self, rng: &mut Rng, m: usize) -> Vec<usize> {
+        (0..m).map(|_| rng.gen_range(self.nnz)).collect()
+    }
+
+    /// A full shuffled epoch, yielded as contiguous batches of `batch`
+    /// (last batch may be short).
+    pub fn epoch_shuffle(&self, rng: &mut Rng, batch: usize) -> Vec<Vec<usize>> {
+        assert!(batch > 0);
+        let mut ids: Vec<usize> = (0..self.nnz).collect();
+        rng.shuffle(&mut ids);
+        ids.chunks(batch).map(|c| c.to_vec()).collect()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn one_step_in_range() {
+        let s = Sampler::new(100);
+        let mut rng = Rng::new(1);
+        let psi = s.one_step(&mut rng, 1000);
+        assert_eq!(psi.len(), 1000);
+        assert!(psi.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn one_step_covers_support() {
+        // With m >> nnz, essentially every id should appear.
+        let s = Sampler::new(20);
+        let mut rng = Rng::new(2);
+        let psi = s.one_step(&mut rng, 2000);
+        let seen: std::collections::HashSet<_> = psi.into_iter().collect();
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn epoch_shuffle_is_permutation() {
+        forall("epoch shuffle partitions ids", 16, |rng| {
+            let nnz = 1 + rng.gen_range(500);
+            let batch = 1 + rng.gen_range(64);
+            let s = Sampler::new(nnz);
+            let batches = s.epoch_shuffle(rng, batch);
+            let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..nnz).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn epoch_batch_sizes() {
+        let s = Sampler::new(10);
+        let mut rng = Rng::new(3);
+        let batches = s.epoch_shuffle(&mut rng, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 4);
+        assert_eq!(batches[2].len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_tensor_panics() {
+        Sampler::new(0);
+    }
+}

@@ -1,0 +1,223 @@
+//! COO sparse tensor: the HOHDST container every algorithm consumes.
+//!
+//! Indices are stored as one flat `Vec<u32>` of length `nnz * order` in
+//! sample-major layout (all `N` coordinates of nonzero `k` are contiguous),
+//! which is the coalesced layout the paper uses for the nonzero stream on
+//! GPU: one memory request fetches a whole sample's coordinates.
+
+use anyhow::{bail, Result};
+
+/// An order-N sparse tensor in coordinate format.
+#[derive(Clone, Debug)]
+pub struct SparseTensor {
+    dims: Vec<usize>,
+    /// Flat `nnz * order` coordinate array, sample-major.
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SparseTensor {
+    /// Build from parts, validating bounds.
+    pub fn new(dims: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Result<Self> {
+        let order = dims.len();
+        if order == 0 {
+            bail!("tensor order must be >= 1");
+        }
+        if indices.len() != values.len() * order {
+            bail!(
+                "index/value length mismatch: {} indices, {} values, order {}",
+                indices.len(),
+                values.len(),
+                order
+            );
+        }
+        for d in &dims {
+            if *d == 0 {
+                bail!("zero-sized mode");
+            }
+            if *d > u32::MAX as usize {
+                bail!("mode size {} exceeds u32 index range", d);
+            }
+        }
+        for (k, chunk) in indices.chunks_exact(order).enumerate() {
+            for (n, (&i, &d)) in chunk.iter().zip(dims.iter()).enumerate() {
+                if i as usize >= d {
+                    bail!("nonzero {k}: index {i} out of bounds for mode {n} (dim {d})");
+                }
+            }
+        }
+        Ok(SparseTensor { dims, indices, values })
+    }
+
+    /// Build without bounds checks (generators that construct indices by
+    /// `gen_range(dim)` are safe by construction; skips an O(nnz·N) pass).
+    pub fn new_unchecked(dims: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        debug_assert_eq!(indices.len(), values.len() * dims.len());
+        SparseTensor { dims, indices, values }
+    }
+
+    /// An empty tensor with the given mode sizes.
+    pub fn empty(dims: Vec<usize>) -> Self {
+        SparseTensor { dims, indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn indices_flat(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Coordinates of nonzero `k`.
+    #[inline]
+    pub fn index(&self, k: usize) -> &[u32] {
+        let n = self.order();
+        &self.indices[k * n..(k + 1) * n]
+    }
+
+    /// Value of nonzero `k`.
+    #[inline]
+    pub fn value(&self, k: usize) -> f32 {
+        self.values[k]
+    }
+
+    /// Iterate `(coords, value)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&[u32], f32)> + '_ {
+        let n = self.order();
+        self.indices
+            .chunks_exact(n)
+            .zip(self.values.iter().copied())
+    }
+
+    /// Density |Ω| / ∏ I_n (useful for logging; HOHDST data is ~1e-6).
+    pub fn density(&self) -> f64 {
+        let total: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / total
+    }
+
+    /// Mean of the stored values.
+    pub fn mean_value(&self) -> f32 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        (self.values.iter().map(|&v| v as f64).sum::<f64>() / self.nnz() as f64) as f32
+    }
+
+    /// Take a subset of nonzeros by id (used by the block partitioner and
+    /// train/test splitting).
+    pub fn gather(&self, ids: &[usize]) -> SparseTensor {
+        let n = self.order();
+        let mut indices = Vec::with_capacity(ids.len() * n);
+        let mut values = Vec::with_capacity(ids.len());
+        for &k in ids {
+            indices.extend_from_slice(self.index(k));
+            values.push(self.values[k]);
+        }
+        SparseTensor { dims: self.dims.clone(), indices, values }
+    }
+
+    /// A copy with `delta` added to every value (mean-centering for
+    /// ratings data: train on `x - mean`, predict `x̂ + mean`).
+    pub fn with_shifted_values(&self, delta: f32) -> SparseTensor {
+        SparseTensor {
+            dims: self.dims.clone(),
+            indices: self.indices.clone(),
+            values: self.values.iter().map(|&v| v + delta).collect(),
+        }
+    }
+
+    /// Memory footprint of the container in bytes (for the paper's
+    /// space-overhead comparisons).
+    pub fn footprint_bytes(&self) -> usize {
+        self.indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SparseTensor {
+        // 3x4x5 with 3 nonzeros.
+        SparseTensor::new(
+            vec![3, 4, 5],
+            vec![0, 0, 0, 1, 2, 3, 2, 3, 4],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = tiny();
+        assert_eq!(t.order(), 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.dims(), &[3, 4, 5]);
+        assert_eq!(t.index(1), &[1, 2, 3]);
+        assert_eq!(t.value(2), 3.0);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let r = SparseTensor::new(vec![2, 2], vec![0, 2], vec![1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let r = SparseTensor::new(vec![2, 2], vec![0, 1, 1], vec![1.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_zero_dim() {
+        let r = SparseTensor::new(vec![2, 0], vec![], vec![]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn iter_yields_all() {
+        let t = tiny();
+        let collected: Vec<_> = t.iter().map(|(ix, v)| (ix.to_vec(), v)).collect();
+        assert_eq!(collected.len(), 3);
+        assert_eq!(collected[0], (vec![0, 0, 0], 1.0));
+        assert_eq!(collected[2], (vec![2, 3, 4], 3.0));
+    }
+
+    #[test]
+    fn gather_subsets() {
+        let t = tiny();
+        let g = t.gather(&[2, 0]);
+        assert_eq!(g.nnz(), 2);
+        assert_eq!(g.index(0), &[2, 3, 4]);
+        assert_eq!(g.value(1), 1.0);
+        assert_eq!(g.dims(), t.dims());
+    }
+
+    #[test]
+    fn density_and_mean() {
+        let t = tiny();
+        assert!((t.density() - 3.0 / 60.0).abs() < 1e-12);
+        assert!((t.mean_value() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn footprint_counts_indices_and_values() {
+        let t = tiny();
+        assert_eq!(t.footprint_bytes(), 9 * 4 + 3 * 4);
+    }
+}

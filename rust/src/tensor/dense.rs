@@ -1,0 +1,97 @@
+//! Small dense tensor, row-major generalized layout (last mode fastest is
+//! NOT used — we use mode-0 fastest to match `indexing::dense_index`).
+//! Used for: the dense Tucker core `G` of the baselines, and tiny oracle
+//! reconstructions in tests.
+
+use crate::tensor::indexing;
+
+/// Dense order-N tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl DenseTensor {
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let len = dims.iter().product();
+        DenseTensor { dims, data: vec![0.0; len] }
+    }
+
+    pub fn from_data(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        DenseTensor { dims, data }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, coords: &[u32]) -> f32 {
+        self.data[indexing::dense_index(coords, &self.dims)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, coords: &[u32], v: f32) {
+        self.data[indexing::dense_index(coords, &self.dims)] = v;
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut t = DenseTensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        t.set(&[1, 2, 3], 7.5);
+        assert_eq!(t.get(&[1, 2, 3]), 7.5);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn from_data_checks_len() {
+        let t = DenseTensor::from_data(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.get(&[1, 0]), 2.0); // mode-0 fastest layout
+        assert_eq!(t.get(&[0, 1]), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_data_wrong_len_panics() {
+        DenseTensor::from_data(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn frob_norm() {
+        let t = DenseTensor::from_data(vec![2], vec![3.0, 4.0]);
+        assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,174 @@
+//! Matricization / vectorization index algebra (paper Table 1).
+//!
+//! For an order-N tensor with dims `I_1..I_N`, the `n`-mode matricization
+//! `X^(n)` maps entry `(i_1..i_N)` to row `i_n` and column
+//! `j = 1 + Σ_{k≠n} (i_k - 1) · Π_{m<k, m≠n} I_m` (paper's 1-based form);
+//! we use the equivalent 0-based `j = Σ_{k≠n} i_k · stride_k`.
+//! The `n`-mode vectorization linearizes `(i, j) -> j · I_n + i`.
+//!
+//! These bijections are what the multi-GPU partitioner and the dense-core
+//! baselines navigate by; property tests pin them against each other.
+
+/// Column strides of the `n`-mode matricization for `dims`.
+///
+/// `strides[k]` is the contribution multiplier of coordinate `i_k` to the
+/// column index (0 for `k == n`, which indexes the row instead).
+pub fn unfold_strides(dims: &[usize], n: usize) -> Vec<usize> {
+    let mut strides = vec![0usize; dims.len()];
+    let mut acc = 1usize;
+    for k in 0..dims.len() {
+        if k == n {
+            continue;
+        }
+        strides[k] = acc;
+        acc *= dims[k];
+    }
+    strides
+}
+
+/// Column index of `coords` in the `n`-mode matricization.
+#[inline]
+pub fn unfold_col(coords: &[u32], strides: &[usize], n: usize) -> usize {
+    let mut j = 0usize;
+    for k in 0..coords.len() {
+        if k != n {
+            j += coords[k] as usize * strides[k];
+        }
+    }
+    j
+}
+
+/// Number of columns of the `n`-mode matricization: `Π_{k≠n} I_k`.
+pub fn unfold_ncols(dims: &[usize], n: usize) -> usize {
+    dims.iter()
+        .enumerate()
+        .filter(|(k, _)| *k != n)
+        .map(|(_, &d)| d)
+        .product()
+}
+
+/// `n`-mode vectorization linear index of `(row i_n, col j)`: `j·I_n + i_n`.
+#[inline]
+pub fn vec_index(row: usize, col: usize, i_n: usize) -> usize {
+    col * i_n + row
+}
+
+/// Invert [`unfold_col`]: recover all coordinates except mode `n` from a
+/// column index. `coords[n]` is left untouched.
+pub fn col_to_coords(mut j: usize, dims: &[usize], n: usize, coords: &mut [u32]) {
+    for k in 0..dims.len() {
+        if k == n {
+            continue;
+        }
+        coords[k] = (j % dims[k]) as u32;
+        j /= dims[k];
+    }
+    debug_assert_eq!(j, 0);
+}
+
+/// Row-major linear index into a dense tensor of shape `dims`.
+#[inline]
+pub fn dense_index(coords: &[u32], dims: &[usize]) -> usize {
+    let mut idx = 0usize;
+    for k in (0..dims.len()).rev() {
+        idx = idx * dims[k] + coords[k] as usize;
+    }
+    idx
+}
+
+/// Invert [`dense_index`].
+pub fn dense_coords(mut idx: usize, dims: &[usize], coords: &mut [u32]) {
+    for k in 0..dims.len() {
+        coords[k] = (idx % dims[k]) as u32;
+        idx /= dims[k];
+    }
+    debug_assert_eq!(idx, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn strides_skip_mode() {
+        // dims [3,4,5], mode 1: strides over modes {0,2} = [1, 0, 3].
+        assert_eq!(unfold_strides(&[3, 4, 5], 1), vec![1, 0, 3]);
+        assert_eq!(unfold_strides(&[3, 4, 5], 0), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn ncols_excludes_mode() {
+        assert_eq!(unfold_ncols(&[3, 4, 5], 0), 20);
+        assert_eq!(unfold_ncols(&[3, 4, 5], 1), 15);
+        assert_eq!(unfold_ncols(&[3, 4, 5], 2), 12);
+    }
+
+    #[test]
+    fn col_roundtrip_small() {
+        let dims = [3usize, 4, 5];
+        for n in 0..3 {
+            let strides = unfold_strides(&dims, n);
+            let mut seen = std::collections::HashSet::new();
+            let mut coords = [0u32; 3];
+            for i0 in 0..3u32 {
+                for i1 in 0..4u32 {
+                    for i2 in 0..5u32 {
+                        let c = [i0, i1, i2];
+                        let j = unfold_col(&c, &strides, n);
+                        assert!(j < unfold_ncols(&dims, n));
+                        col_to_coords(j, &dims, n, &mut coords);
+                        for k in 0..3 {
+                            if k != n {
+                                assert_eq!(coords[k], c[k]);
+                            }
+                        }
+                        seen.insert((c[n], j));
+                    }
+                }
+            }
+            // (row, col) pairs are unique: the matricization is a bijection.
+            assert_eq!(seen.len(), 60);
+        }
+    }
+
+    #[test]
+    fn prop_unfold_col_bijective() {
+        forall("unfold col bijective", 64, |rng| {
+            let order = 2 + rng.gen_range(4); // 2..=5
+            let dims: Vec<usize> = (0..order).map(|_| 1 + rng.gen_range(6)).collect();
+            let n = rng.gen_range(order);
+            let strides = unfold_strides(&dims, n);
+            let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+            let j = unfold_col(&coords, &strides, n);
+            let mut rec = vec![0u32; order];
+            col_to_coords(j, &dims, n, &mut rec);
+            for k in 0..order {
+                if k != n {
+                    assert_eq!(rec[k], coords[k], "mode {k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_dense_index_roundtrip() {
+        forall("dense index roundtrip", 64, |rng| {
+            let order = 1 + rng.gen_range(5);
+            let dims: Vec<usize> = (0..order).map(|_| 1 + rng.gen_range(7)).collect();
+            let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+            let idx = dense_index(&coords, &dims);
+            assert!(idx < dims.iter().product::<usize>());
+            let mut rec = vec![0u32; order];
+            dense_coords(idx, &dims, &mut rec);
+            assert_eq!(rec, coords);
+        });
+    }
+
+    #[test]
+    fn vec_index_matches_paper_definition() {
+        // k = (j-1)I_n + i in 1-based == j*I_n + i in 0-based.
+        assert_eq!(vec_index(2, 3, 10), 32);
+        assert_eq!(vec_index(0, 0, 10), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Sparse tensor storage and the matricization/vectorization index algebra
+//! of the paper's Table 1.
+//!
+//! * [`coo`] — the canonical COO container for HOHDST data (order-N,
+//!   u32 indices, f32 values).
+//! * [`csf`] — per-mode CSR-like slice grouping (the access pattern the
+//!   paper's CSF citation provides): for a fixed mode `n`, all nonzeros
+//!   sharing a row index `i_n`, used by the ALS/CCD baselines.
+//! * [`indexing`] — the bijections between tensor multi-indices and the
+//!   `n`-mode matricization/vectorization linear indices.
+//! * [`dense`] — a small dense tensor, used for oracles in tests and the
+//!   dense-core baselines.
+
+pub mod coo;
+pub mod csf;
+pub mod indexing;
+pub mod dense;
+
+pub use coo::SparseTensor;
+pub use csf::ModeSlices;
+pub use dense::DenseTensor;

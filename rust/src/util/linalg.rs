@@ -1,0 +1,245 @@
+//! Small dense linear algebra used by the algorithms: dot/axpy kernels for
+//! the SGD hot path and a Cholesky solver for P-Tucker's J×J normal
+//! equations. Everything operates on flat `&[f32]` slices to keep the hot
+//! loops allocation-free.
+
+/// Dot product. Written over `zip` so the optimizer sees equal trip counts
+/// and elides bounds checks; 4-lane partial sums give LLVM an associative
+/// reduction to vectorize without `-ffast-math` (perf pass iteration 1,
+/// see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let mut chunks_a = a.chunks_exact(4);
+    let mut chunks_b = b.chunks_exact(4);
+    for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = beta*y + alpha*x` (general update used by SGD with regularization:
+/// `a <- a - lr*(e*gs + lam*a)` is `scale_axpy(1.0 - lr*lam, -lr*e, gs, a)`).
+#[inline]
+pub fn scale_axpy(beta: f32, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi = beta * *yi + alpha * xi;
+    }
+}
+
+/// Row-major matrix–vector product `out = M x` (`M` is `rows × cols`),
+/// register-blocked 4 rows at a time so each loaded `x` element feeds four
+/// accumulators (perf pass iteration 2 — the Thm-1/2 `c = B^(n) a` step).
+#[inline]
+pub fn matvec_rowmajor(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    let mut r = 0;
+    while r + 4 <= rows {
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let r0 = &m[r * cols..(r + 1) * cols];
+        let r1 = &m[(r + 1) * cols..(r + 2) * cols];
+        let r2 = &m[(r + 2) * cols..(r + 3) * cols];
+        let r3 = &m[(r + 3) * cols..(r + 4) * cols];
+        for j in 0..cols {
+            let xj = x[j];
+            a0 += r0[j] * xj;
+            a1 += r1[j] * xj;
+            a2 += r2[j] * xj;
+            a3 += r3[j] * xj;
+        }
+        out[r] = a0;
+        out[r + 1] = a1;
+        out[r + 2] = a2;
+        out[r + 3] = a3;
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot(&m[r * cols..(r + 1) * cols], x);
+        r += 1;
+    }
+}
+
+/// Weighted row sum `out = Σ_r w[r] · M[r, :]` (`M` row-major
+/// `rows × cols`), blocked 4 rows per pass over `out` (perf pass
+/// iteration 3 — the Thm-1/2 `GS^(n) = Σ_r w_r b_r^(n)` step).
+#[inline]
+pub fn weighted_rowsum(m: &[f32], rows: usize, cols: usize, w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(w.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    let mut r = 0;
+    while r + 4 <= rows {
+        let (w0, w1, w2, w3) = (w[r], w[r + 1], w[r + 2], w[r + 3]);
+        let r0 = &m[r * cols..(r + 1) * cols];
+        let r1 = &m[(r + 1) * cols..(r + 2) * cols];
+        let r2 = &m[(r + 2) * cols..(r + 3) * cols];
+        let r3 = &m[(r + 3) * cols..(r + 4) * cols];
+        for j in 0..cols {
+            out[j] += w0 * r0[j] + w1 * r1[j] + w2 * r2[j] + w3 * r3[j];
+        }
+        r += 4;
+    }
+    while r < rows {
+        axpy(w[r], &m[r * cols..(r + 1) * cols], out);
+        r += 1;
+    }
+}
+
+/// Dense symmetric positive-definite solve via Cholesky: `A x = b`,
+/// `A` row-major `n×n` (only the lower triangle is read). Returns `None`
+/// if the matrix is not (numerically) positive definite.
+///
+/// Used by the P-Tucker baseline: `(H^T H + λI) a = H^T x` with `n = J`
+/// (a few tens), so an unblocked Cholesky is the right tool.
+pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // Factor: L lower-triangular with A = L L^T.
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // Forward solve L y = b.
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Back solve L^T x = y.
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Some(x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Rank-1 symmetric update `A += alpha * v v^T` (row-major, full matrix).
+#[inline]
+pub fn syr(alpha: f32, v: &[f32], a: &mut [f32]) {
+    let n = v.len();
+    debug_assert_eq!(a.len(), n * n);
+    for i in 0..n {
+        let avi = alpha * v[i];
+        let row = &mut a[i * n..(i + 1) * n];
+        for j in 0..n {
+            row[j] += avi * v[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn scale_axpy_matches_sgd_form() {
+        // a <- a - lr*(e*gs + lam*a) == (1-lr*lam)*a - lr*e * gs
+        let (lr, lam, e) = (0.1f32, 0.01f32, 0.5f32);
+        let gs = [1.0f32, -2.0];
+        let mut a = [2.0f32, 3.0];
+        let manual: Vec<f32> = a
+            .iter()
+            .zip(gs.iter())
+            .map(|(&ai, &gi)| ai - lr * (e * gi + lam * ai))
+            .collect();
+        scale_axpy(1.0 - lr * lam, -lr * e, &gs, &mut a);
+        assert!((a[0] - manual[0]).abs() < 1e-6);
+        assert!((a[1] - manual[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        // Build SPD A = M M^T + I, random x, b = A x; check recovery.
+        let m: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let x_true: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; n];
+        for i in 0..n {
+            b[i] = dot(&a[i * n..(i + 1) * n], &x_true);
+        }
+        let x = cholesky_solve(&a, &b, n).unwrap();
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "{} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // [[0, 1], [1, 0]] is indefinite.
+        let a = vec![0.0, 1.0, 1.0, 0.0];
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn syr_accumulates_outer_product() {
+        let mut a = vec![0.0f32; 4];
+        syr(2.0, &[1.0, 3.0], &mut a);
+        assert_eq!(a, vec![2.0, 6.0, 6.0, 18.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: PRNG, logging, dense linear algebra,
+//! and a miniature property-testing harness.
+//!
+//! These exist because the build is fully offline: the only external crates
+//! available are `xla` and `anyhow`, so the usual `rand`/`log`/`proptest`
+//! stack is replaced by focused in-tree implementations.
+
+pub mod rng;
+pub mod logger;
+pub mod linalg;
+pub mod propcheck;
+
+pub use rng::Rng;

@@ -1,0 +1,214 @@
+//! Cross-module property tests (the crate-level invariants; module-local
+//! properties live next to their modules).
+
+use fasttucker::algo::fasttucker::{build_strided, contract_staged, CoreLayout, Workspace};
+use fasttucker::data::synth;
+use fasttucker::kruskal::KruskalCore;
+use fasttucker::model::factors::FactorMatrices;
+use fasttucker::model::{CoreRepr, TuckerModel};
+use fasttucker::parallel::{BlockPartition, LatinSchedule};
+use fasttucker::util::propcheck::forall;
+
+#[test]
+fn prop_thm12_linear_equals_exponential_prediction() {
+    // Theorem 1/2 at the whole-model level, arbitrary order and ranks:
+    // the linear-cost Kruskal prediction equals the dense-core prediction.
+    forall("Thm 1/2 model-level identity", 32, |rng| {
+        let order = 2 + rng.gen_range(4); // 2..=5
+        let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(8)).collect();
+        let j = 1 + rng.gen_range(5);
+        let r = 1 + rng.gen_range(5);
+        let model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let kcore = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let dense = kcore.to_dense();
+        for _ in 0..5 {
+            let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+            let lin = model.predict(&coords);
+            let exp = dense.predict(&model.factors, &coords);
+            let tol = 1e-3 * (1.0 + exp.abs());
+            assert!((lin - exp).abs() < tol, "{lin} vs {exp} (order {order})");
+        }
+    });
+}
+
+#[test]
+fn prop_contract_staged_layouts_agree() {
+    // Packed and Strided layouts compute identical contractions for any
+    // shape (order 2..5).
+    forall("layouts agree", 32, |rng| {
+        let order = 2 + rng.gen_range(4);
+        let j = 1 + rng.gen_range(12);
+        let r = 1 + rng.gen_range(12);
+        let core = KruskalCore::random(rng, order, j, r, 0.7);
+        let strided = build_strided(&core);
+        let mut ws_p = Workspace::new(order, r, j);
+        let mut ws_s = Workspace::new(order, r, j);
+        for n in 0..order {
+            let row: Vec<f32> = (0..j).map(|_| rng.normal()).collect();
+            ws_p.stage_row(n, &row);
+            ws_s.stage_row(n, &row);
+        }
+        let x = rng.normal();
+        let ep = contract_staged(&mut ws_p, &core, &[], CoreLayout::Packed, x);
+        let es = contract_staged(&mut ws_s, &core, &strided, CoreLayout::Strided, x);
+        assert!(
+            (ep - es).abs() < 1e-4 * (1.0 + ep.abs()),
+            "packed {ep} vs strided {es}"
+        );
+        for n in 0..order {
+            for (a, b) in ws_p.gs_row(n).iter().zip(ws_s.gs_row(n).iter()) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_partition_and_schedule_compose() {
+    // Over a full schedule cycle, the blocks processed by all workers
+    // cover every nonzero exactly once, and within every round no two
+    // workers' blocks share a factor row in any mode.
+    forall("partition x schedule composition", 16, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let m = 1 + rng.gen_range(4);
+        let dims: Vec<usize> = (0..order).map(|_| m + rng.gen_range(20)).collect();
+        let t = synth::random_uniform(rng, &dims, 400, 1.0, 5.0);
+        let part = BlockPartition::build(&t, m);
+        let sched = LatinSchedule::new(m, order);
+
+        let mut seen = vec![false; t.nnz()];
+        for round in 0..sched.rounds() {
+            let assigns = sched.round_assignments(round);
+            // Per-mode row ownership must be disjoint across workers.
+            for n in 0..order {
+                let mut ranges: Vec<(usize, usize)> = assigns
+                    .iter()
+                    .map(|a| BlockPartition::chunk_range(a[n], dims[n], m))
+                    .collect();
+                ranges.sort_unstable();
+                for w in ranges.windows(2) {
+                    assert!(w[0].1 <= w[1].0, "overlapping chunks in mode {n}");
+                }
+            }
+            for a in &assigns {
+                for &k in part.block(a) {
+                    assert!(!seen[k as usize], "nonzero visited twice");
+                    seen[k as usize] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "nonzero never visited");
+    });
+}
+
+#[test]
+fn prop_planted_rmse_zero_at_truth() {
+    // The generator and the model's predictor are mutually consistent for
+    // any shape: evaluating the truth model on noiseless data gives ~0.
+    forall("planted truth has zero error", 16, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let dims: Vec<usize> = (0..order).map(|_| 5 + rng.gen_range(15)).collect();
+        let spec = synth::PlantedSpec {
+            dims: dims.clone(),
+            nnz: 100,
+            j: 1 + rng.gen_range(4),
+            r_core: 1 + rng.gen_range(4),
+            noise: 0.0,
+            clamp: None,
+        };
+        let p = synth::planted_tucker(rng, &spec);
+        let model = TuckerModel {
+            factors: p.truth_factors.clone(),
+            core: CoreRepr::Kruskal(p.truth_core.clone()),
+        };
+        let r = fasttucker::kruskal::reconstruct::rmse(&model, &p.tensor);
+        assert!(r < 1e-3, "rmse {r}");
+    });
+}
+
+#[test]
+fn prop_factor_gradient_descends_loss() {
+    // One FastTucker step on a single sample strictly decreases that
+    // sample's squared error (for small enough lr and no regularizer) —
+    // the definition of a correct gradient.
+    forall("per-sample step descends", 32, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let dims: Vec<usize> = (0..order).map(|_| 4 + rng.gen_range(8)).collect();
+        let j = 1 + rng.gen_range(6);
+        let r = 1 + rng.gen_range(4);
+        let mut model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+        let x = rng.normal() * 2.0;
+
+        let e_before = model.predict(&coords) - x;
+        if e_before.abs() < 1e-4 {
+            return; // already at optimum; nothing to check
+        }
+        // One manual SGD step via the shared contraction.
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let mut ws = Workspace::new(order, r, j);
+        for n in 0..order {
+            ws.stage_row(n, model.factors.row(n, coords[n] as usize));
+        }
+        let e = contract_staged(&mut ws, &core, &[], CoreLayout::Packed, x);
+        let lr = 1e-3;
+        for n in 0..order {
+            let gs: Vec<f32> = ws.gs_row(n).to_vec();
+            let row = model.factors.row_mut(n, coords[n] as usize);
+            for (rv, gv) in row.iter_mut().zip(gs.iter()) {
+                *rv -= lr * e * gv;
+            }
+        }
+        let e_after = model.predict(&coords) - x;
+        assert!(
+            e_after.abs() <= e_before.abs() + 1e-5,
+            "error grew: {} -> {}",
+            e_before.abs(),
+            e_after.abs()
+        );
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_any_shape() {
+    forall("checkpoint roundtrip", 12, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let dims: Vec<usize> = (0..order).map(|_| 2 + rng.gen_range(10)).collect();
+        let j = 1 + rng.gen_range(6);
+        let r_core = 1 + rng.gen_range(4);
+        let model = if rng.gen_range(2) == 0 {
+            TuckerModel::init_kruskal(rng, &dims, j, r_core)
+        } else {
+            TuckerModel::init_dense(rng, &dims, j)
+        };
+        let dir = std::env::temp_dir().join("fasttucker_prop_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("m{}.ftck", rng.next_u64()));
+        fasttucker::model::checkpoint::save(&model, &path).unwrap();
+        let loaded = fasttucker::model::checkpoint::load(&path).unwrap();
+        let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+        assert!((model.predict(&coords) - loaded.predict(&coords)).abs() < 1e-6);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_factor_matrices_shapes_consistent() {
+    forall("factor matrices shapes", 16, |rng| {
+        let order = 1 + rng.gen_range(6);
+        let dims: Vec<usize> = (0..order).map(|_| 1 + rng.gen_range(30)).collect();
+        let rank = 1 + rng.gen_range(16);
+        let f = FactorMatrices::random(rng, &dims, rank, 1.0);
+        assert_eq!(f.order(), order);
+        assert_eq!(f.dims(), dims);
+        for n in 0..order {
+            assert_eq!(f.row(n, dims[n] - 1).len(), rank);
+        }
+    });
+}
