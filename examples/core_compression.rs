@@ -7,7 +7,7 @@
 //! cargo run --release --example core_compression
 //! ```
 
-use anyhow::Result;
+use fasttucker::util::error::Result;
 
 use fasttucker::algo::{CuTucker, Decomposer, FastTucker};
 use fasttucker::data::split::train_test_split;
@@ -58,8 +58,8 @@ fn main() -> Result<()> {
     dalgo.hyper.lambda_core = 1e-3;
 
     for epoch in 0..15 {
-        kalgo.train_epoch(&mut kmodel, &train, epoch, &mut rng);
-        dalgo.train_epoch(&mut dmodel, &train, epoch, &mut rng);
+        kalgo.train_epoch(&mut kmodel, &train, epoch, &mut rng).unwrap();
+        dalgo.train_epoch(&mut dmodel, &train, epoch, &mut rng).unwrap();
     }
     let (krmse, kmae) = rmse_mae(&kmodel, &test);
     let (drmse, dmae) = rmse_mae(&dmodel, &test);

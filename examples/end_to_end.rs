@@ -17,7 +17,7 @@
 //!
 //! The run recorded in EXPERIMENTS.md §End-to-end used the default scale.
 
-use anyhow::Result;
+use fasttucker::util::error::Result;
 
 use fasttucker::algo::SgdHyper;
 use fasttucker::config::{AlgoKind, EngineKind, TrainConfig};

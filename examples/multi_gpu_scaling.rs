@@ -6,7 +6,7 @@
 //! cargo run --release --example multi_gpu_scaling
 //! ```
 
-use anyhow::Result;
+use fasttucker::util::error::Result;
 
 use fasttucker::data::synth::{planted_tucker, PlantedSpec};
 use fasttucker::kruskal::reconstruct::rmse;
@@ -51,7 +51,7 @@ fn main() -> Result<()> {
         let mut engine = ParallelFastTucker::new(opts);
         let mut secs = 0.0;
         for epoch in 0..3 {
-            let st = engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            let st = engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
             secs += st.total_secs();
         }
         let secs = secs / 3.0;

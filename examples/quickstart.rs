@@ -4,7 +4,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use anyhow::Result;
+use fasttucker::util::error::Result;
 
 use fasttucker::config::{AlgoKind, TrainConfig};
 use fasttucker::coordinator::Trainer;

@@ -6,7 +6,7 @@
 //! cargo run --release --example recommender
 //! ```
 
-use anyhow::Result;
+use fasttucker::util::error::Result;
 
 use fasttucker::algo::{Decomposer, FastTucker};
 use fasttucker::data::split::train_test_split;
@@ -41,7 +41,7 @@ fn main() -> Result<()> {
     algo.config.hyper.lr_factor = fasttucker::sched::LrSchedule::new(0.02, 0.05);
     algo.config.hyper.lr_core = fasttucker::sched::LrSchedule::new(0.01, 0.1);
     for epoch in 0..20 {
-        algo.train_epoch(&mut model, &train, epoch, &mut rng);
+        algo.train_epoch(&mut model, &train, epoch, &mut rng).unwrap();
     }
     let (train_rmse, _) = rmse_mae(&model, &train);
     let (test_rmse, test_mae) = rmse_mae(&model, &test);

@@ -1,0 +1,71 @@
+"""Offline stand-in for the small slice of `hypothesis` the tests use.
+
+The CI image is fully offline; when the real `hypothesis` package is
+available it is used unchanged, otherwise this module provides a
+deterministic mini-implementation of `given` / `settings` /
+`strategies.{integers,sampled_from}` that sweeps a fixed number of seeded
+pseudo-random examples. Shrinking and the database are out of scope — a
+failing case prints its drawn arguments so it can be replayed by hand.
+"""
+
+import random
+
+try:  # pragma: no cover - prefer the real thing when present
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on the offline image
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 20
+    _BASE_SEED = 0xFA57_7C4E
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+    st = strategies
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def wrap(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return wrap
+
+    def given(**strategy_kwargs):
+        def wrap(fn):
+            def runner(*args, **kwargs):
+                # `@settings` may sit above `@given`, so the attribute
+                # lands on the runner itself; read it there at call time.
+                n = getattr(runner, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for case in range(n):
+                    rng = random.Random(_BASE_SEED + case * 0x9E3779B9)
+                    drawn = {
+                        name: strat.example(rng)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(*args, **{**kwargs, **drawn})
+                    except BaseException:
+                        print(f"falsifying example (case {case}): {drawn}")
+                        raise
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return wrap

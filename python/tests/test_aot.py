@@ -61,7 +61,13 @@ def test_hlo_text_roundtrips_numerics():
     mlir_mod = lowered.compiler_ir("stablehlo")
 
     backend = jax.devices("cpu")[0].client
-    exe = backend.compile_and_load(str(mlir_mod), [jax.devices("cpu")[0]])
+    # jaxlib renamed Client.compile to compile_and_load in newer releases;
+    # accept either so the test tracks the installed runtime.
+    compile_fn = getattr(backend, "compile_and_load", None)
+    if compile_fn is not None:
+        exe = compile_fn(str(mlir_mod), [jax.devices("cpu")[0]])
+    else:
+        exe = backend.compile(str(mlir_mod))
     bufs = [backend.buffer_from_pyval(x) for x in a + b]
     (out,) = exe.execute(bufs)
     got = np.asarray(out[0] if isinstance(out, (list, tuple)) else out)

@@ -9,7 +9,7 @@ theorems claim).
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from compile.kernels import fasttucker as ker
 from compile.kernels import ref

@@ -4,7 +4,7 @@ kernel-vs-ref sweep in test_kernel.py)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from compile import model
 from compile.kernels import fasttucker as ker

@@ -47,7 +47,7 @@ fn curve_fasttucker(
     algo.config.hyper.update_core = update_core;
     let mut out = Vec::new();
     for epoch in 0..EPOCHS {
-        algo.train_epoch(&mut model, train, epoch, &mut rng);
+        algo.train_epoch(&mut model, train, epoch, &mut rng).unwrap();
         out.push(rmse_mae(&model, test));
     }
     out
@@ -65,7 +65,7 @@ fn curve_cutucker(
     algo.hyper.update_core = update_core;
     let mut out = Vec::new();
     for epoch in 0..EPOCHS {
-        algo.train_epoch(&mut model, train, epoch, &mut rng);
+        algo.train_epoch(&mut model, train, epoch, &mut rng).unwrap();
         out.push(rmse_mae(&model, test));
     }
     out

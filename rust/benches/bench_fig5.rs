@@ -63,7 +63,7 @@ fn main() {
                 let mut e = 0;
                 Box::new(move |i| {
                     let mut rr = Rng::new(10 + i as u64);
-                    algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                    algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                     e += 1;
                 })
             },
@@ -85,7 +85,7 @@ fn main() {
                     let mut e = 0;
                     Box::new(move |i| {
                         let mut rr = Rng::new(10 + i as u64);
-                        algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                        algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                         e += 1;
                     })
                 },
@@ -121,7 +121,7 @@ fn main() {
                 let mut e = 0;
                 Box::new(move |i| {
                     let mut rr = Rng::new(20 + i as u64);
-                    algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                    algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                     e += 1;
                 })
             },

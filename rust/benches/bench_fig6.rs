@@ -28,7 +28,7 @@ fn run(
     println!("# {name}");
     println!("epoch\tcum_secs\trmse\tmae");
     for epoch in 0..epochs {
-        let st = algo.train_epoch(&mut model, train, epoch, &mut rng);
+        let st = algo.train_epoch(&mut model, train, epoch, &mut rng).unwrap();
         cum += st.total_secs();
         let (rmse, mae) = rmse_mae(&model, test);
         println!("{}\t{cum:.4}\t{rmse:.5}\t{mae:.5}", epoch + 1);

@@ -33,7 +33,7 @@ fn scalability(scale: f64) {
         let mut e = 0;
         let r = bench("ft", 1, 2, |i| {
             let mut rr = Rng::new(40 + i as u64);
-            algo.train_epoch(&mut model, &tensor, e, &mut rr);
+            algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
             e += 1;
         });
 
@@ -45,7 +45,7 @@ fn scalability(scale: f64) {
             let mut e = 0;
             let r = bench("cu", 0, 1, |i| {
                 let mut rr = Rng::new(40 + i as u64);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             format!("{:.4}", r.mean_secs)
@@ -86,7 +86,7 @@ fn speedup(scale: f64) {
             let mut e = 0;
             bench("par", 1, 3, |i| {
                 let mut rr = Rng::new(50 + i as u64);
-                let st = engine.train_epoch(&mut model, &tensor, e, &mut rr);
+                let st = engine.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 if i >= 1 {
                     secs += st.total_secs();
                 }

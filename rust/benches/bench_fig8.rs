@@ -38,7 +38,7 @@ fn main() {
             let mut e = 0;
             bench("par", 1, 3, |i| {
                 let mut rr = Rng::new(60 + i as u64);
-                let st = engine.train_epoch(&mut model, &tensor, e, &mut rr);
+                let st = engine.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 if i >= 1 {
                     secs += st.total_secs();
                 }

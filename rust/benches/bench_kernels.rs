@@ -1,6 +1,10 @@
 //! Kernel microbenches (perf-pass instrumentation, EXPERIMENTS.md §Perf):
 //! * the Thm-1/2 contraction throughput (samples/sec) vs (J, R_core),
 //!   Packed vs Strided;
+//! * **batched vs scalar kernel** — one full pass over a tall synthetic
+//!   tensor through `kernel::batched` (fiber-grouped panels) vs
+//!   `kernel::scalar` over the identical sample order; the acceptance bar
+//!   is ≥ 1.3× at batch ≥ 64;
 //! * PJRT `train_step` batch execution vs the native batch loop;
 //! * evaluation throughput.
 
@@ -8,11 +12,12 @@ use std::time::Instant;
 
 use fasttucker::algo::fasttucker::{build_strided, contract_staged, CoreLayout, Workspace};
 use fasttucker::algo::SgdHyper;
-use fasttucker::bench_support::Table;
+use fasttucker::bench_support::{bench_scale, Table};
 use fasttucker::coordinator::PjrtEngine;
-use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+use fasttucker::data::synth::{self, planted_tucker, PlantedSpec};
+use fasttucker::kernel::{batched, scalar, BatchPlan, BatchWorkspace};
 use fasttucker::kruskal::KruskalCore;
-use fasttucker::model::TuckerModel;
+use fasttucker::model::{CoreRepr, TuckerModel};
 use fasttucker::util::Rng;
 
 fn contraction_bench() {
@@ -48,6 +53,86 @@ fn contraction_bench() {
     table.print();
 }
 
+fn batched_vs_scalar() {
+    println!("\n== batched vs scalar kernel (full pass, J=R=16, order 3) ==");
+    // Tall trailing modes (recommender shape): long mode-0 fibers with few
+    // intra-group collisions, so the planner can actually form big groups.
+    let scale = bench_scale();
+    let dims = vec![256usize, 60_000, 60_000];
+    let nnz = ((1_500_000.0 * scale) as usize).max(10_000);
+    let (j, r) = (16usize, 16usize);
+    let mut rng = Rng::new(7);
+    let tensor = synth::random_uniform(&mut rng, &dims, nnz, 1.0, 5.0);
+    let model = TuckerModel::init_kruskal(&mut rng, &dims, j, r);
+    let core = match &model.core {
+        CoreRepr::Kruskal(k) => k.clone(),
+        _ => unreachable!(),
+    };
+    let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+    let (lr, lam) = (0.005f32, 0.001f32);
+    let reps = 3usize;
+
+    // Scalar baseline over the grouped order of the largest plan (same
+    // memory-access order for both paths — the comparison isolates the
+    // kernel structure, not the sample permutation).
+    let big_plan = BatchPlan::build(&tensor, &ids, 256);
+    let mut table = Table::new(&[
+        "path",
+        "batch cap",
+        "mean group",
+        "secs/pass",
+        "Msamples/sec",
+        "speedup vs scalar",
+    ]);
+    let scalar_secs = {
+        let mut factors = model.factors.clone();
+        let mut ws = Workspace::new(3, r, j);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let st = scalar::run_ids(
+                &mut ws, &tensor, big_plan.ids(), &core, &[], CoreLayout::Packed,
+                &mut factors, lr, lam, true, None,
+            );
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(st.sse);
+        }
+        table.row(&[
+            "scalar".into(),
+            "-".into(),
+            "1.0".into(),
+            format!("{best:.4}"),
+            format!("{:.2}", nnz as f64 / best / 1e6),
+            "1.00x".into(),
+        ]);
+        best
+    };
+    for cap in [8usize, 64, 256] {
+        let plan = BatchPlan::build(&tensor, &ids, cap);
+        let mut factors = model.factors.clone();
+        let mut bws = BatchWorkspace::new(3, r, j, cap);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let st = batched::run_plan(
+                &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed,
+                &mut factors, lr, lam, true, None,
+            );
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(st.sse);
+        }
+        table.row(&[
+            "batched".into(),
+            cap.to_string(),
+            format!("{:.1}", plan.mean_group_len()),
+            format!("{best:.4}"),
+            format!("{:.2}", nnz as f64 / best / 1e6),
+            format!("{:.2}x", scalar_secs / best),
+        ]);
+    }
+    table.print();
+}
+
 fn pjrt_vs_native() {
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("manifest.tsv").exists() {
@@ -73,9 +158,9 @@ fn pjrt_vs_native() {
         let mut algo = fasttucker::algo::FastTucker::with_defaults();
         use fasttucker::algo::Decomposer;
         let mut rr = Rng::new(3);
-        algo.train_epoch(&mut model, &p.tensor, 0, &mut rr); // warmup
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rr).unwrap(); // warmup
         let t0 = Instant::now();
-        let st = algo.train_epoch(&mut model, &p.tensor, 1, &mut rr);
+        let st = algo.train_epoch(&mut model, &p.tensor, 1, &mut rr).unwrap();
         let secs = t0.elapsed().as_secs_f64();
         table.row(&[
             "native".into(),
@@ -131,6 +216,7 @@ fn eval_bench() {
 
 fn main() {
     contraction_bench();
+    batched_vs_scalar();
     pjrt_vs_native();
     eval_bench();
 }

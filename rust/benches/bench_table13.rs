@@ -43,7 +43,7 @@ fn main() {
             let mut e = 0;
             let r = bench("fasttucker", 1, 3, |i| {
                 let mut rr = Rng::new(100 + i as u64);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             results.push(("cuFastTucker".into(), r.mean_secs));
@@ -55,7 +55,7 @@ fn main() {
             let mut e = 0;
             let r = bench("cutucker", 1, 3, |i| {
                 let mut rr = Rng::new(100 + i as u64);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             results.push(("cuTucker".into(), r.mean_secs));
@@ -67,7 +67,7 @@ fn main() {
             let mut e = 0;
             let r = bench("sgd_tucker", 0, 2, |i| {
                 let mut rr = Rng::new(100 + i as u64);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             results.push(("SGD_Tucker".into(), r.mean_secs));
@@ -79,7 +79,7 @@ fn main() {
             let mut e = 0;
             let r = bench("ptucker", 0, 2, |_| {
                 let mut rr = Rng::new(100);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             results.push(("P-Tucker".into(), r.mean_secs));
@@ -91,7 +91,7 @@ fn main() {
             let mut e = 0;
             let r = bench("vest", 0, 2, |_| {
                 let mut rr = Rng::new(100);
-                algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                 e += 1;
             });
             results.push(("Vest".into(), r.mean_secs));

@@ -51,7 +51,7 @@ fn main() {
                     let mut e = 0;
                     bench("layout", 1, 3, |i| {
                         let mut rr = Rng::new(30 + i as u64);
-                        algo.train_epoch(&mut model, &tensor, e, &mut rr);
+                        algo.train_epoch(&mut model, &tensor, e, &mut rr).unwrap();
                         e += 1;
                     })
                     .mean_secs

@@ -12,7 +12,9 @@
 
 use std::time::Instant;
 
-use crate::algo::{Decomposer, EpochStats, SgdHyper};
+use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
+use crate::kruskal::DenseCore;
+use crate::model::factors::FactorMatrices;
 use crate::model::{CoreRepr, TuckerModel};
 use crate::sched::Sampler;
 use crate::tensor::{indexing, SparseTensor};
@@ -83,10 +85,13 @@ impl CuTucker {
         }
     }
 
-    /// One SGD sample through the dense core; returns the residual.
+    /// One SGD sample through the dense core; returns the residual. The
+    /// core-representation check happens once per epoch in `train_epoch`
+    /// (typed [`AlgoError`]), not per sample.
     fn step_sample(
         ws: &mut DenseWs,
-        model: &mut TuckerModel,
+        core: &DenseCore,
+        factors: &mut FactorMatrices,
         coords: &[u32],
         x: f32,
         lr_f: f32,
@@ -95,17 +100,14 @@ impl CuTucker {
     ) -> f32 {
         let order = ws.order;
         let j = ws.j;
-        let core_data = match &model.core {
-            CoreRepr::Dense(c) => c.data(),
-            CoreRepr::Kruskal(_) => panic!("CuTucker requires a dense core"),
-        };
+        let core_data = core.data();
 
         // Gather the factor-row values for this sample's coordinates so the
         // core sweep reads from a compact `order × J` staging buffer.
         // (On the GPU these rows sit in shared memory.)
         for n in 0..order {
             ws.a_stage[n * j..(n + 1) * j]
-                .copy_from_slice(model.factors.row(n, coords[n] as usize));
+                .copy_from_slice(factors.row(n, coords[n] as usize));
         }
         let a_stage = &ws.a_stage;
 
@@ -151,27 +153,10 @@ impl CuTucker {
         // Factor SGD (identical rule to FastTucker's Eq. 13).
         for n in 0..order {
             let d_n = &ws.d[n * j..(n + 1) * j];
-            let row = model.factors.row_mut(n, coords[n] as usize);
+            let row = factors.row_mut(n, coords[n] as usize);
             scale_axpy(1.0 - lr_f * lam_f, -lr_f * e, d_n, row);
         }
         e
-    }
-
-    fn apply_core_update(&mut self, model: &mut TuckerModel, lr_c: f32, lam_c: f32) {
-        let ws = self.ws.as_mut().expect("workspace");
-        if ws.core_grad_count == 0 {
-            return;
-        }
-        let m = ws.core_grad_count as f32;
-        let core = match &mut model.core {
-            CoreRepr::Dense(c) => c,
-            CoreRepr::Kruskal(_) => unreachable!(),
-        };
-        for (gv, &grad) in core.data_mut().iter_mut().zip(ws.core_grad.iter()) {
-            *gv = (1.0 - lr_c * lam_c) * *gv - lr_c * grad / m;
-        }
-        ws.core_grad.fill(0.0);
-        ws.core_grad_count = 0;
     }
 }
 
@@ -186,7 +171,10 @@ impl Decomposer for CuTucker {
         train: &SparseTensor,
         epoch: usize,
         rng: &mut Rng,
-    ) -> EpochStats {
+    ) -> AlgoResult<EpochStats> {
+        if matches!(&model.core, CoreRepr::Kruskal(_)) {
+            return Err(AlgoError::core_mismatch("cutucker", "dense", "Kruskal"));
+        }
         let (order, j) = (model.order(), model.rank());
         self.ensure_ws(order, j);
         let h = self.hyper;
@@ -205,25 +193,41 @@ impl Decomposer for CuTucker {
 
         let ws = self.ws.as_mut().unwrap();
         let t0 = Instant::now();
-        for &k in &psi {
-            Self::step_sample(
-                ws,
-                model,
-                train.index(k),
-                train.value(k),
-                lr_f,
-                h.lambda_factor,
-                h.update_core,
-            );
+        {
+            let core = match &model.core {
+                CoreRepr::Dense(c) => c,
+                CoreRepr::Kruskal(_) => unreachable!(),
+            };
+            for &k in &psi {
+                Self::step_sample(
+                    ws,
+                    core,
+                    &mut model.factors,
+                    train.index(k),
+                    train.value(k),
+                    lr_f,
+                    h.lambda_factor,
+                    h.update_core,
+                );
+            }
         }
         let factor_secs = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        if h.update_core {
-            self.apply_core_update(model, lr_c, h.lambda_core);
+        if h.update_core && ws.core_grad_count > 0 {
+            let mcount = ws.core_grad_count as f32;
+            let core = match &mut model.core {
+                CoreRepr::Dense(c) => c,
+                CoreRepr::Kruskal(_) => unreachable!(),
+            };
+            for (gv, &grad) in core.data_mut().iter_mut().zip(ws.core_grad.iter()) {
+                *gv = (1.0 - lr_c * h.lambda_core) * *gv - lr_c * grad / mcount;
+            }
+            ws.core_grad.fill(0.0);
+            ws.core_grad_count = 0;
         }
         let core_secs = t1.elapsed().as_secs_f64();
-        EpochStats { samples: psi.len(), factor_secs, core_secs }
+        Ok(EpochStats { samples: psi.len(), factor_secs, core_secs })
     }
 
     fn updates_core(&self) -> bool {
@@ -255,10 +259,30 @@ mod tests {
         algo.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
         let before = rmse(&model, &p.tensor);
         for epoch in 0..30 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         let after = rmse(&model, &p.tensor);
         assert!(after < 0.6 * before, "rmse {before} -> {after}");
+    }
+
+    #[test]
+    fn kruskal_core_reports_typed_error() {
+        let mut rng = Rng::new(9);
+        let p = planted_tucker(
+            &mut rng,
+            &PlantedSpec {
+                dims: vec![8, 8, 8],
+                nnz: 100,
+                j: 2,
+                r_core: 2,
+                noise: 0.1,
+                clamp: None,
+            },
+        );
+        let mut model = TuckerModel::init_kruskal(&mut rng, &[8, 8, 8], 2, 2);
+        let mut algo = CuTucker::with_defaults();
+        let err = algo.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("cutucker"), "{err}");
     }
 
     #[test]
@@ -276,7 +300,7 @@ mod tests {
         let mut ws = DenseWs::new(3, 3);
         let mut m2 = model.clone();
         // Run with lr 0 so factors are unchanged; inspect ws.d.
-        CuTucker::step_sample(&mut ws, &mut m2, &coords, 0.0, 0.0, 0.0, false);
+        CuTucker::step_sample(&mut ws, &core, &mut m2.factors, &coords, 0.0, 0.0, 0.0, false);
         for n in 0..3 {
             let mut want = vec![0.0f32; 3];
             core.mode_coeff(&model.factors, &coords, n, &mut want);
@@ -322,7 +346,7 @@ mod tests {
         algo.hyper.lambda_core = 1e-6;
         let before = rmse(&model, &p.tensor);
         for epoch in 0..40 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         let after = rmse(&model, &p.tensor);
         assert!(after < 0.5 * before, "rmse {before} -> {after}");

@@ -52,19 +52,71 @@ impl EpochStats {
     }
 }
 
+/// Typed errors the decomposition algorithms report instead of aborting —
+/// a misconfigured run (e.g. a TOML file pairing `algo = "vest"` with a
+/// Kruskal-core model) surfaces as a usable message through
+/// [`Decomposer::train_epoch`] and the trainer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AlgoError {
+    /// The model's core representation does not match the algorithm's
+    /// requirement (FastTucker needs Kruskal; the dense baselines need
+    /// dense).
+    CoreMismatch {
+        algo: &'static str,
+        expected: &'static str,
+        found: &'static str,
+    },
+}
+
+impl AlgoError {
+    pub(crate) fn core_mismatch(
+        algo: &'static str,
+        expected: &'static str,
+        found: &'static str,
+    ) -> Self {
+        AlgoError::CoreMismatch { algo, expected, found }
+    }
+}
+
+impl std::fmt::Display for AlgoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AlgoError::CoreMismatch { algo, expected, found } => write!(
+                f,
+                "algorithm {algo} requires a {expected} core but the model holds a \
+                 {found} core; initialize the model to match (see TuckerModel::init_*) \
+                 or pick a matching `algo` in the run config"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AlgoError {}
+
+impl From<AlgoError> for crate::util::error::Error {
+    fn from(e: AlgoError) -> Self {
+        crate::util::error::Error::msg(e)
+    }
+}
+
+/// Result type of the per-epoch training entry points.
+pub type AlgoResult<T> = std::result::Result<T, AlgoError>;
+
 /// A sparse-Tucker training algorithm.
 pub trait Decomposer {
     /// Short identifier used in logs and bench tables.
     fn name(&self) -> &'static str;
 
-    /// Run one epoch over `train`, mutating `model` in place.
+    /// Run one epoch over `train`, mutating `model` in place. Returns
+    /// [`AlgoError::CoreMismatch`] when the model's core representation
+    /// does not fit the algorithm.
     fn train_epoch(
         &mut self,
         model: &mut TuckerModel,
         train: &SparseTensor,
         epoch: usize,
         rng: &mut Rng,
-    ) -> EpochStats;
+    ) -> AlgoResult<EpochStats>;
 
     /// Whether this method updates the core tensor (P-Tucker/Vest do not,
     /// matching the paper: "Some algorithms lack the update of the core

@@ -13,7 +13,7 @@
 
 use std::time::Instant;
 
-use crate::algo::{Decomposer, EpochStats};
+use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats};
 use crate::model::{CoreRepr, TuckerModel};
 use crate::tensor::{ModeSlices, SparseTensor};
 use crate::util::linalg::{cholesky_solve, syr};
@@ -57,16 +57,17 @@ impl Decomposer for PTucker {
         train: &SparseTensor,
         _epoch: usize,
         _rng: &mut Rng,
-    ) -> EpochStats {
+    ) -> AlgoResult<EpochStats> {
+        let core = match &model.core {
+            CoreRepr::Dense(c) => c.clone(),
+            CoreRepr::Kruskal(_) => {
+                return Err(AlgoError::core_mismatch("ptucker", "dense", "Kruskal"))
+            }
+        };
         self.ensure_slices(train);
         let order = model.order();
         let j = model.rank();
         let t0 = Instant::now();
-
-        let core = match &model.core {
-            CoreRepr::Dense(c) => c.clone(),
-            CoreRepr::Kruskal(_) => panic!("PTucker requires a dense core"),
-        };
 
         let mut ata = vec![0.0f32; j * j];
         let mut atb = vec![0.0f32; j];
@@ -100,11 +101,11 @@ impl Decomposer for PTucker {
             }
         }
 
-        EpochStats {
+        Ok(EpochStats {
             samples: visited,
             factor_secs: t0.elapsed().as_secs_f64(),
             core_secs: 0.0,
-        }
+        })
     }
 
     fn updates_core(&self) -> bool {
@@ -144,7 +145,7 @@ mod tests {
         let mut algo = PTucker::with_defaults();
         let before = rmse(&model, &p.tensor);
         for epoch in 0..5 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         let after = rmse(&model, &p.tensor);
         assert!(after < 0.2 * before, "rmse {before} -> {after}");
@@ -175,7 +176,7 @@ mod tests {
             }
         }
         let mut algo = PTucker::new(1e-6);
-        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         let after = rmse(&model, &p.tensor);
         assert!(after < 1e-2, "rmse {after}");
     }
@@ -198,7 +199,7 @@ mod tests {
             _ => unreachable!(),
         };
         let mut algo = PTucker::with_defaults();
-        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         let core_after = match &model.core {
             CoreRepr::Dense(c) => c.data().to_vec(),
             _ => unreachable!(),

@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use crate::algo::{Decomposer, EpochStats, SgdHyper};
+use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
 use crate::model::{CoreRepr, TuckerModel};
 use crate::sched::Sampler;
 use crate::tensor::{indexing, SparseTensor};
@@ -123,7 +123,10 @@ impl Decomposer for SgdTucker {
         train: &SparseTensor,
         epoch: usize,
         rng: &mut Rng,
-    ) -> EpochStats {
+    ) -> AlgoResult<EpochStats> {
+        if matches!(&model.core, CoreRepr::Kruskal(_)) {
+            return Err(AlgoError::core_mismatch("sgd_tucker", "dense", "Kruskal"));
+        }
         let (order, j) = (model.order(), model.rank());
         self.ensure_ws(order, j);
         let h = self.hyper;
@@ -146,42 +149,47 @@ impl Decomposer for SgdTucker {
         for &k in &psi {
             let coords = train.index(k);
             let x = train.value(k);
-            let core_data = match &model.core {
-                CoreRepr::Dense(c) => c.data().to_vec(),
-                CoreRepr::Kruskal(_) => panic!("SgdTucker requires a dense core"),
-            };
+            let e;
+            {
+                // Scoped immutable borrow of the (epoch-validated) dense
+                // core: no per-sample clone of the core data.
+                let core_data = match &model.core {
+                    CoreRepr::Dense(c) => c.data(),
+                    CoreRepr::Kruskal(_) => unreachable!(),
+                };
 
-            // Materialize every mode's Kronecker row and contract it
-            // against the matricized core — all from the *pre-update*
-            // factor rows (same linearization point as cuTucker /
-            // FastTucker). Mode 0's s is materialized last so it is the
-            // one left in `ws.s` for the core-gradient pass below.
-            for n in (0..order).rev() {
-                let len = ws.materialize_kron(model, coords, n);
-                debug_assert_eq!(len, ncols);
-                let tbl = &ws.tables[n];
-                for jn in 0..j {
-                    let mut acc = 0.0f32;
-                    for col in 0..ncols {
-                        acc += core_data[tbl[jn * ncols + col] as usize] * ws.s[col];
-                    }
-                    ws.d[n * j + jn] = acc;
-                }
-            }
-            let e = dot(model.factors.row(0, coords[0] as usize), &ws.d[0..j]) - x;
-
-            // Core gradient via mode-0's materialized row:
-            // grad G^(n=0)[jn, col] += e * a0[jn] * s[col].
-            if h.update_core {
-                let a0: Vec<f32> = model.factors.row(0, coords[0] as usize).to_vec();
-                let tbl = &ws.tables[0];
-                for jn in 0..j {
-                    let coef = e * a0[jn];
-                    for col in 0..ncols {
-                        ws.core_grad[tbl[jn * ncols + col] as usize] += coef * ws.s[col];
+                // Materialize every mode's Kronecker row and contract it
+                // against the matricized core — all from the *pre-update*
+                // factor rows (same linearization point as cuTucker /
+                // FastTucker). Mode 0's s is materialized last so it is the
+                // one left in `ws.s` for the core-gradient pass below.
+                for n in (0..order).rev() {
+                    let len = ws.materialize_kron(model, coords, n);
+                    debug_assert_eq!(len, ncols);
+                    let tbl = &ws.tables[n];
+                    for jn in 0..j {
+                        let mut acc = 0.0f32;
+                        for col in 0..ncols {
+                            acc += core_data[tbl[jn * ncols + col] as usize] * ws.s[col];
+                        }
+                        ws.d[n * j + jn] = acc;
                     }
                 }
-                ws.core_grad_count += 1;
+                e = dot(model.factors.row(0, coords[0] as usize), &ws.d[0..j]) - x;
+
+                // Core gradient via mode-0's materialized row:
+                // grad G^(n=0)[jn, col] += e * a0[jn] * s[col].
+                if h.update_core {
+                    let a0 = model.factors.row(0, coords[0] as usize);
+                    let tbl = &ws.tables[0];
+                    for jn in 0..j {
+                        let coef = e * a0[jn];
+                        for col in 0..ncols {
+                            ws.core_grad[tbl[jn * ncols + col] as usize] += coef * ws.s[col];
+                        }
+                    }
+                    ws.core_grad_count += 1;
+                }
             }
 
             // Factor SGD updates (Eq. 13 with the dense-core D vectors).
@@ -208,7 +216,7 @@ impl Decomposer for SgdTucker {
         }
         let core_secs = t1.elapsed().as_secs_f64();
 
-        EpochStats { samples: psi.len(), factor_secs, core_secs }
+        Ok(EpochStats { samples: psi.len(), factor_secs, core_secs })
     }
 
     fn updates_core(&self) -> bool {
@@ -283,7 +291,7 @@ mod tests {
         algo.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
         let before = rmse(&model, &p.tensor);
         for epoch in 0..25 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         let after = rmse(&model, &p.tensor);
         assert!(after < 0.6 * before, "rmse {before} -> {after}");
@@ -309,12 +317,12 @@ mod tests {
         let mut m1 = init.clone();
         let mut a1 = SgdTucker::with_defaults();
         let mut r1 = Rng::new(42);
-        a1.train_epoch(&mut m1, &p.tensor, 0, &mut r1);
+        a1.train_epoch(&mut m1, &p.tensor, 0, &mut r1).unwrap();
 
         let mut m2 = init.clone();
         let mut a2 = crate::algo::CuTucker::with_defaults();
         let mut r2 = Rng::new(42);
-        a2.train_epoch(&mut m2, &p.tensor, 0, &mut r2);
+        a2.train_epoch(&mut m2, &p.tensor, 0, &mut r2).unwrap();
 
         for n in 0..3 {
             let d1 = m1.factors.mat(n).data();

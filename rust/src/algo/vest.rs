@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use crate::algo::{Decomposer, EpochStats};
+use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats};
 use crate::model::{CoreRepr, TuckerModel};
 use crate::tensor::{ModeSlices, SparseTensor};
 use crate::util::linalg::dot;
@@ -65,16 +65,17 @@ impl Decomposer for Vest {
         train: &SparseTensor,
         _epoch: usize,
         _rng: &mut Rng,
-    ) -> EpochStats {
+    ) -> AlgoResult<EpochStats> {
+        let core = match &model.core {
+            CoreRepr::Dense(c) => c.clone(),
+            CoreRepr::Kruskal(_) => {
+                return Err(AlgoError::core_mismatch("vest", "dense", "Kruskal"))
+            }
+        };
         self.ensure_slices(train);
         let order = model.order();
         let j = model.rank();
         let t0 = Instant::now();
-
-        let core = match &model.core {
-            CoreRepr::Dense(c) => c.clone(),
-            CoreRepr::Kruskal(_) => panic!("Vest requires a dense core"),
-        };
 
         let mut visited = 0usize;
         for n in 0..order {
@@ -120,11 +121,11 @@ impl Decomposer for Vest {
             }
         }
 
-        EpochStats {
+        Ok(EpochStats {
             samples: visited,
             factor_secs: t0.elapsed().as_secs_f64(),
             core_secs: 0.0,
-        }
+        })
     }
 
     fn updates_core(&self) -> bool {
@@ -162,7 +163,7 @@ mod tests {
         let mut algo = Vest::with_defaults();
         let before = rmse(&model, &p.tensor);
         for epoch in 0..8 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         let after = rmse(&model, &p.tensor);
         assert!(after < 0.4 * before, "rmse {before} -> {after}");
@@ -187,7 +188,7 @@ mod tests {
         let mut algo = Vest::new(1e-9);
         let mut prev = f64::INFINITY;
         for epoch in 0..4 {
-            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
             let cur = rmse(&model, &p.tensor);
             assert!(
                 cur <= prev * 1.001 + 1e-9,
@@ -215,7 +216,7 @@ mod tests {
             _ => unreachable!(),
         };
         let mut algo = Vest::with_defaults();
-        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        algo.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         let core_after = match &model.core {
             CoreRepr::Dense(c) => c.data().to_vec(),
             _ => unreachable!(),

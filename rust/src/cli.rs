@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -51,13 +51,13 @@ impl Args {
 
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.get(key)
-            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .map(|v| v.parse().map_err(|e| anyhow!("--{key}: {e}")))
             .transpose()
     }
 
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.get(key)
-            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .map(|v| v.parse().map_err(|e| anyhow!("--{key}: {e}")))
             .transpose()
     }
 

@@ -5,7 +5,7 @@ pub mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::algo::SgdHyper;
 use crate::sched::LrSchedule;

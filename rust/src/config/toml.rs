@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// A parsed value.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,7 +78,7 @@ impl TomlDoc {
                 bail!("line {}: empty key or value", lineno + 1);
             }
             let value = parse_value(val)
-                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
             entries.insert((section.clone(), key), value);
         }
         Ok(TomlDoc { entries })

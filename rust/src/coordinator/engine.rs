@@ -2,11 +2,13 @@
 //!
 //! * [`Engine::Native`] — any [`Decomposer`] on the pure-Rust order-N path.
 //! * [`Engine::Parallel`] — the multi-device FastTucker simulation.
-//! * [`Engine::Pjrt`] — the three-layer path: gather factor rows in Rust,
-//!   execute the AOT JAX/Pallas `train_step` artifact via PJRT, scatter
-//!   the updated rows back. Order-3, shapes fixed at artifact build time.
+//! * [`Engine::Pjrt`] — the artifact path: gather factor rows in Rust,
+//!   execute the `train_step` artifact through the step runtime (the AOT
+//!   JAX/Pallas graph on PJRT builds; the in-crate batched kernel on this
+//!   offline build — same math, same buffers), scatter the updated rows
+//!   back. Order-3, shapes fixed at artifact build time.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::algo::{Decomposer, EpochStats, SgdHyper};
 use crate::model::{CoreRepr, TuckerModel};
@@ -39,8 +41,8 @@ impl Engine {
         rng: &mut Rng,
     ) -> Result<EpochStats> {
         Ok(match self {
-            Engine::Native(d) => d.train_epoch(model, train, epoch, rng),
-            Engine::Parallel(p) => p.train_epoch(model, train, epoch, rng),
+            Engine::Native(d) => d.train_epoch(model, train, epoch, rng)?,
+            Engine::Parallel(p) => p.train_epoch(model, train, epoch, rng)?,
             Engine::Pjrt(p) => p.train_epoch(model, train, epoch, rng)?,
         })
     }
@@ -259,36 +261,38 @@ impl PjrtEngine {
         ids: &[usize],
         lr_f: f32,
     ) {
-        use crate::algo::fasttucker::{accumulate_core_grad, contract_staged, CoreLayout};
-        use crate::util::linalg::scale_axpy;
-        for &k in ids {
-            let coords = train.index(k);
-            for n in 0..3 {
-                self.tail_ws
-                    .stage_row(n, model.factors.row(n, coords[n] as usize));
-            }
+        use crate::algo::fasttucker::CoreLayout;
+        // The ragged tail goes through the shared scalar kernel — the
+        // identical update rule the full batches encode.
+        let ids32: Vec<u32> = ids.iter().map(|&k| k as u32).collect();
+        {
             let core = match &model.core {
                 CoreRepr::Kruskal(c) => c,
                 CoreRepr::Dense(_) => unreachable!(),
             };
-            let e = contract_staged(&mut self.tail_ws, core, &[], CoreLayout::Packed, train.value(k));
-            if self.hyper.update_core {
-                accumulate_core_grad(&mut self.tail_ws, e);
-            }
-            for n in 0..3 {
-                let gs_n = self.tail_ws.gs_row(n).to_vec();
-                let row = model.factors.row_mut(n, coords[n] as usize);
-                scale_axpy(1.0 - lr_f * self.hyper.lambda_factor, -lr_f * e, &gs_n, row);
-            }
+            crate::kernel::scalar::run_ids(
+                &mut self.tail_ws,
+                train,
+                &ids32,
+                core,
+                &[],
+                CoreLayout::Packed,
+                &mut model.factors,
+                lr_f,
+                self.hyper.lambda_factor,
+                self.hyper.update_core,
+                None,
+            );
         }
         // Fold the tail workspace's core grads into the engine accumulator.
         if self.hyper.update_core {
-            for (slot, &g) in self.core_grad.iter_mut().zip(self.tail_ws.core_grad.iter()) {
+            let (grad, count) = self.tail_ws.core_grad_mut();
+            for (slot, &g) in self.core_grad.iter_mut().zip(grad.iter()) {
                 *slot += g;
             }
-            self.core_grad_count += self.tail_ws.core_grad_count;
-            self.tail_ws.core_grad.fill(0.0);
-            self.tail_ws.core_grad_count = 0;
+            self.core_grad_count += *count;
+            grad.fill(0.0);
+            *count = 0;
         }
     }
 

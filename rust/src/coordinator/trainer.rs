@@ -2,7 +2,7 @@
 //! runs the epoch loop with periodic evaluation, collects the history the
 //! experiment drivers plot, and writes checkpoints.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use crate::algo::{CuTucker, Decomposer, EpochStats, FastTucker, FastTuckerConfig, PTucker, SgdTucker, Vest};
 use crate::config::{AlgoKind, EngineKind, TrainConfig};
@@ -80,8 +80,7 @@ impl Trainer {
             EngineKind::Native => {
                 let decomposer: Box<dyn Decomposer + Send> = match cfg.algo {
                     AlgoKind::FastTucker => {
-                        let mut fc = FastTuckerConfig::default();
-                        fc.hyper = cfg.hyper;
+                        let fc = FastTuckerConfig { hyper: cfg.hyper, ..Default::default() };
                         Box::new(FastTucker::new(fc))
                     }
                     AlgoKind::CuTucker => Box::new(CuTucker::new(cfg.hyper)),
@@ -95,9 +94,11 @@ impl Trainer {
                 if cfg.algo != AlgoKind::FastTucker {
                     bail!("parallel engine requires algo = fasttucker");
                 }
-                let mut po = ParallelOptions::default();
-                po.workers = cfg.workers;
-                po.hyper = cfg.hyper;
+                let po = ParallelOptions {
+                    workers: cfg.workers,
+                    hyper: cfg.hyper,
+                    ..Default::default()
+                };
                 Engine::Parallel(ParallelFastTucker::new(po))
             }
             EngineKind::Pjrt => {

@@ -8,7 +8,7 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::tensor::SparseTensor;
 

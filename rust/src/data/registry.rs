@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 use crate::data::synth::{self, PlantedSpec};
 use crate::tensor::SparseTensor;
@@ -83,7 +83,7 @@ impl Dataset {
                     let order: usize = parts
                         .next()
                         .and_then(|p| p.parse().ok())
-                        .ok_or_else(|| anyhow::anyhow!("bad synth name {other}"))?;
+                        .ok_or_else(|| anyhow!("bad synth name {other}"))?;
                     if !(3..=10).contains(&order) {
                         bail!("synth order must be 3..=10, got {order}");
                     }

@@ -5,6 +5,11 @@ use crate::util::Rng;
 
 /// Split nonzeros uniformly at random: `test_frac` of them become the test
 /// set Γ, the rest the training set Ω.
+///
+/// The test count is clamped so the training side keeps at least one
+/// nonzero whenever the input has any: `test_frac` close to 1 used to
+/// round `n_test` up to `nnz`, and the resulting empty Ω blew up later in
+/// `Sampler::new(0)` deep inside the first epoch instead of here.
 pub fn train_test_split(
     t: &SparseTensor,
     test_frac: f64,
@@ -12,7 +17,7 @@ pub fn train_test_split(
 ) -> (SparseTensor, SparseTensor) {
     assert!((0.0..1.0).contains(&test_frac));
     let nnz = t.nnz();
-    let n_test = ((nnz as f64) * test_frac).round() as usize;
+    let n_test = (((nnz as f64) * test_frac).round() as usize).min(nnz.saturating_sub(1));
     let mut ids: Vec<usize> = (0..nnz).collect();
     rng.shuffle(&mut ids);
     let (test_ids, train_ids) = ids.split_at(n_test);
@@ -68,5 +73,29 @@ mod tests {
         let (train, test) = train_test_split(&t, 0.0, &mut rng);
         assert_eq!(train.nnz(), 50);
         assert_eq!(test.nnz(), 0);
+    }
+
+    #[test]
+    fn high_frac_keeps_at_least_one_train_nonzero() {
+        // Regression: test_frac 0.95 on 5 nonzeros rounds to n_test = 5,
+        // which used to leave an empty train set that later panicked in
+        // Sampler::new(0).
+        let mut rng = Rng::new(9);
+        let t = synth::random_uniform(&mut rng, &[10, 10], 5, 1.0, 2.0);
+        let (train, test) = train_test_split(&t, 0.95, &mut rng);
+        assert_eq!(train.nnz(), 1);
+        assert_eq!(test.nnz(), 4);
+    }
+
+    #[test]
+    fn prop_train_is_never_empty() {
+        forall("train side never empty for nonempty input", 32, |rng| {
+            let nnz = 1 + rng.gen_range(30);
+            let t = synth::random_uniform(rng, &[8, 8], nnz, 0.0, 1.0);
+            let frac = 0.999f64.min(rng.uniform() as f64);
+            let (train, test) = train_test_split(&t, frac, rng);
+            assert!(train.nnz() >= 1, "nnz={nnz} frac={frac}");
+            assert_eq!(train.nnz() + test.nnz(), nnz);
+        });
     }
 }

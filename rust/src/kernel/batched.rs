@@ -1,0 +1,682 @@
+//! The batched kernel: cuFasterTucker-style fiber batching
+//! (arXiv:2210.06014) on top of the Theorem-1/2 contraction.
+//!
+//! [`run_plan`] executes a [`BatchPlan`] group by group:
+//!
+//! * the group's shared **mode-0 factor row is staged once** and kept hot
+//!   in a local buffer, its SGD updates applied there sample by sample and
+//!   written back once at group end;
+//! * the rows of every other mode are gathered into contiguous
+//!   `batch × J` panels up front (the plan guarantees they are pairwise
+//!   distinct within the group, so deferred reads/writes are exact);
+//! * step 1 of the contraction (`c = B^(n) a`) for modes ≥ 1 runs over the
+//!   panels with the Kruskal rows register-blocked **across samples** —
+//!   each loaded `b_r^(n)` row feeds four samples' accumulators — and
+//!   step 3 (`GS = Σ_r w_r b_r`) is deferred and batched the same way;
+//! * only the short mode-0 chain (`c^(0)`, prefix/suffix, `GS^(0)`, the
+//!   residual, and the hot-row update) remains sequential, because each
+//!   sample must observe the previous sample's update to the shared row.
+//!
+//! Every floating-point reduction keeps the exact association of the
+//! scalar path's primitives (`matvec_rowmajor` / `dot` /
+//! `weighted_rowsum`), so the result is **bitwise identical** to
+//! [`scalar::run_ids`](crate::kernel::scalar::run_ids) over the same plan
+//! order — pinned by `tests/properties.rs` and enforced as this module's
+//! contract.
+//!
+//! [`minibatch_train_step`] / [`minibatch_predict`] are the deferred-read
+//! panel variants with *mini-batch* semantics (every sample reads the
+//! pre-batch state, duplicate-row deltas sum): the semantics of the AOT
+//! JAX `train_step` graph, used by the PJRT runtime's native executor.
+
+use crate::kernel::contract::{
+    prefix_suffix_w, strided_matvec, strided_weighted_sum, CoreLayout,
+};
+use crate::kernel::plan::PlanScratch;
+use crate::kernel::{BatchPlan, FactorAccess, KernelStats};
+use crate::kruskal::KruskalCore;
+use crate::tensor::SparseTensor;
+use crate::util::linalg::{axpy, dot, matvec_rowmajor, scale_axpy, weighted_rowsum};
+
+/// Preallocated panels for batched execution (the GPU kernel's shared
+/// memory, sized once for a maximum group length `cap`).
+pub struct BatchWorkspace {
+    pub(crate) order: usize,
+    pub(crate) r_core: usize,
+    pub(crate) j: usize,
+    pub(crate) cap: usize,
+    /// Hot copy of the group's shared mode-0 row.
+    a0: Vec<f32>,
+    /// Staged rows, `[s][n][j]`; slot `[s][0]` holds the per-sample
+    /// snapshot of the hot row (the Eq. 17 linearization point).
+    a_panel: Vec<f32>,
+    /// `c[s][n][r]`.
+    c_panel: Vec<f32>,
+    /// Per-sample prefix/suffix scratch, `(order+1)*r`.
+    pre: Vec<f32>,
+    suf: Vec<f32>,
+    /// `w[s][n][r]`.
+    w_panel: Vec<f32>,
+    /// `GS[s][n][j]`.
+    gs_panel: Vec<f32>,
+    /// Residuals of the current group.
+    e: Vec<f32>,
+    /// Core gradient accumulator, `[n][r][j]` flattened (same layout as
+    /// [`Workspace::core_grad`](crate::kernel::contract::Workspace)).
+    pub(crate) core_grad: Vec<f32>,
+    pub(crate) core_grad_count: usize,
+    /// Reusable planning scratch (per-worker; see [`PlanScratch`]).
+    pub(crate) plan_scratch: PlanScratch,
+}
+
+impl BatchWorkspace {
+    pub fn new(order: usize, r_core: usize, j: usize, cap: usize) -> Self {
+        assert!(cap >= 1);
+        BatchWorkspace {
+            order,
+            r_core,
+            j,
+            cap,
+            a0: vec![0.0; j],
+            a_panel: vec![0.0; cap * order * j],
+            c_panel: vec![0.0; cap * order * r_core],
+            pre: vec![0.0; (order + 1) * r_core],
+            suf: vec![0.0; (order + 1) * r_core],
+            w_panel: vec![0.0; cap * order * r_core],
+            gs_panel: vec![0.0; cap * order * j],
+            e: vec![0.0; cap],
+            core_grad: vec![0.0; order * r_core * j],
+            core_grad_count: 0,
+            plan_scratch: PlanScratch::new(),
+        }
+    }
+
+    /// The reusable plan scratch paired with this workspace.
+    pub fn plan_scratch_mut(&mut self) -> &mut PlanScratch {
+        &mut self.plan_scratch
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.order, self.r_core, self.j, self.cap)
+    }
+
+    /// Core-gradient accumulator and sample count — exposed so the
+    /// multi-device engine can all-reduce worker-local gradients.
+    pub fn core_grad_mut(&mut self) -> (&mut Vec<f32>, &mut usize) {
+        (&mut self.core_grad, &mut self.core_grad_count)
+    }
+}
+
+/// Execute `plan` with batched group semantics. Bitwise identical to the
+/// scalar kernel over `plan.ids()` (see module docs). `strided` as in
+/// [`crate::kernel::scalar::run_ids`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan<F: FactorAccess>(
+    ws: &mut BatchWorkspace,
+    tensor: &SparseTensor,
+    plan: &BatchPlan,
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    factors: &mut F,
+    lr_f: f32,
+    lam_f: f32,
+    update_core: bool,
+    mut residual_log: Option<&mut Vec<f32>>,
+) -> KernelStats {
+    let order = ws.order;
+    let r = ws.r_core;
+    let j = ws.j;
+    assert!(plan.max_batch() <= ws.cap, "plan exceeds workspace capacity");
+    let beta = 1.0 - lr_f * lam_f;
+    let mut sse = 0.0f64;
+    let mut samples = 0usize;
+
+    for g in 0..plan.n_groups() {
+        let ids = plan.group(g);
+        let b = ids.len();
+        samples += b;
+        let i0 = tensor.index(ids[0] as usize)[0] as usize;
+
+        // Stage the shared mode-0 row once per group.
+        factors.stage(0, i0, &mut ws.a0);
+
+        // Gather modes >= 1 into the panel (rows distinct by plan).
+        for (s, &k) in ids.iter().enumerate() {
+            let coords = tensor.index(k as usize);
+            for n in 1..order {
+                let base = (s * order + n) * j;
+                factors.stage(n, coords[n] as usize, &mut ws.a_panel[base..base + j]);
+            }
+        }
+
+        // Batched step 1 for modes >= 1: c[s][n] = B^(n) a[s][n].
+        for n in 1..order {
+            match layout {
+                CoreLayout::Packed => batch_c_packed(
+                    core.factor(n).data(),
+                    r,
+                    j,
+                    order,
+                    n,
+                    b,
+                    &ws.a_panel,
+                    &mut ws.c_panel,
+                ),
+                CoreLayout::Strided => batch_c_strided(
+                    &strided[n],
+                    r,
+                    j,
+                    order,
+                    n,
+                    b,
+                    &ws.a_panel,
+                    &mut ws.c_panel,
+                ),
+            }
+        }
+
+        // Sequential mode-0 chain: each sample observes the previous
+        // sample's update to the shared row.
+        for (s, &k) in ids.iter().enumerate() {
+            let x = tensor.value(k as usize);
+            let abase = s * order * j;
+            let cbase = s * order * r;
+            // Snapshot the hot row (pre-update linearization point).
+            ws.a_panel[abase..abase + j].copy_from_slice(&ws.a0);
+            match layout {
+                CoreLayout::Packed => {
+                    matvec_rowmajor(
+                        core.factor(0).data(),
+                        r,
+                        j,
+                        &ws.a_panel[abase..abase + j],
+                        &mut ws.c_panel[cbase..cbase + r],
+                    );
+                }
+                CoreLayout::Strided => {
+                    strided_matvec(
+                        &strided[0],
+                        r,
+                        &ws.a_panel[abase..abase + j],
+                        &mut ws.c_panel[cbase..cbase + r],
+                    );
+                }
+            }
+            prefix_suffix_w(
+                &ws.c_panel[cbase..cbase + order * r],
+                order,
+                r,
+                &mut ws.pre,
+                &mut ws.suf,
+                &mut ws.w_panel[s * order * r..(s + 1) * order * r],
+            );
+            let gbase = s * order * j;
+            match layout {
+                CoreLayout::Packed => {
+                    weighted_rowsum(
+                        core.factor(0).data(),
+                        r,
+                        j,
+                        &ws.w_panel[cbase..cbase + r],
+                        &mut ws.gs_panel[gbase..gbase + j],
+                    );
+                }
+                CoreLayout::Strided => {
+                    strided_weighted_sum(
+                        &strided[0],
+                        r,
+                        j,
+                        &ws.w_panel[cbase..cbase + r],
+                        &mut ws.gs_panel[gbase..gbase + j],
+                    );
+                }
+            }
+            let xhat = dot(&ws.a_panel[abase..abase + j], &ws.gs_panel[gbase..gbase + j]);
+            let e = xhat - x;
+            ws.e[s] = e;
+            sse += (e as f64) * (e as f64);
+            if let Some(log) = residual_log.as_mut() {
+                log.push(e);
+            }
+            // Update the hot shared row (Eq. 13 on the group fiber).
+            scale_axpy(beta, -lr_f * e, &ws.gs_panel[gbase..gbase + j], &mut ws.a0);
+        }
+
+        // Write the shared row back once.
+        factors.store(0, i0, &ws.a0);
+
+        // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r.
+        for n in 1..order {
+            match layout {
+                CoreLayout::Packed => batch_gs_packed(
+                    core.factor(n).data(),
+                    r,
+                    j,
+                    order,
+                    n,
+                    b,
+                    &ws.w_panel,
+                    &mut ws.gs_panel,
+                ),
+                CoreLayout::Strided => batch_gs_strided(
+                    &strided[n],
+                    r,
+                    j,
+                    order,
+                    n,
+                    b,
+                    &ws.w_panel,
+                    &mut ws.gs_panel,
+                ),
+            }
+        }
+
+        // Deferred factor SGD for modes >= 1 (rows distinct in the group,
+        // so the write order cannot change any operand).
+        for (s, &k) in ids.iter().enumerate() {
+            let coords = tensor.index(k as usize);
+            let e = ws.e[s];
+            for n in 1..order {
+                let gbase = (s * order + n) * j;
+                factors.update(
+                    n,
+                    coords[n] as usize,
+                    beta,
+                    -lr_f * e,
+                    &ws.gs_panel[gbase..gbase + j],
+                );
+            }
+        }
+
+        // Eq. 17 core-gradient accumulation from the staged (pre-update)
+        // rows, in sample order — the same element-wise accumulation
+        // sequence as the scalar path.
+        if update_core {
+            for s in 0..b {
+                let e = ws.e[s];
+                for n in 0..order {
+                    let a_row = &ws.a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+                    for rr in 0..r {
+                        let coef = e * ws.w_panel[(s * order + n) * r + rr];
+                        let base = (n * r + rr) * j;
+                        axpy(coef, a_row, &mut ws.core_grad[base..base + j]);
+                    }
+                }
+                ws.core_grad_count += 1;
+            }
+        }
+    }
+
+    KernelStats { samples, sse }
+}
+
+/// Batched `c[s][n] = B a[s][n]` (Packed): rows of `B` blocked by 4 and
+/// reused across all samples of the group; per-(sample, row) accumulation
+/// order is identical to [`matvec_rowmajor`] (blocked rows sum
+/// sequentially over `j`; tail rows go through [`dot`]).
+#[allow(clippy::too_many_arguments)]
+fn batch_c_packed(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+) {
+    let mut rr = 0;
+    while rr + 4 <= r {
+        let r0 = &bm[rr * j..(rr + 1) * j];
+        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
+        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
+        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
+        for s in 0..b {
+            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for jj in 0..j {
+                let xj = a[jj];
+                a0 += r0[jj] * xj;
+                a1 += r1[jj] * xj;
+                a2 += r2[jj] * xj;
+                a3 += r3[jj] * xj;
+            }
+            let cbase = (s * order + n) * r + rr;
+            c_panel[cbase] = a0;
+            c_panel[cbase + 1] = a1;
+            c_panel[cbase + 2] = a2;
+            c_panel[cbase + 3] = a3;
+        }
+        rr += 4;
+    }
+    while rr < r {
+        let brow = &bm[rr * j..(rr + 1) * j];
+        for s in 0..b {
+            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            c_panel[(s * order + n) * r + rr] = dot(brow, a);
+        }
+        rr += 1;
+    }
+}
+
+/// Batched `c` under the Strided layout (column-major core mirror):
+/// per-sample calls of the shared [`strided_matvec`] — bitwise identical
+/// to the scalar path by construction.
+#[allow(clippy::too_many_arguments)]
+fn batch_c_strided(
+    col: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+) {
+    for s in 0..b {
+        strided_matvec(
+            col,
+            r,
+            &a_panel[(s * order + n) * j..(s * order + n + 1) * j],
+            &mut c_panel[(s * order + n) * r..(s * order + n + 1) * r],
+        );
+    }
+}
+
+/// Batched `GS[s][n] = Σ_r w[s][n][r] b_r` (Packed): same 4-row blocking
+/// and per-(sample, j) association as [`weighted_rowsum`], with the `B`
+/// rows reused across samples.
+#[allow(clippy::too_many_arguments)]
+fn batch_gs_packed(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    w_panel: &[f32],
+    gs_panel: &mut [f32],
+) {
+    for s in 0..b {
+        gs_panel[(s * order + n) * j..(s * order + n + 1) * j].fill(0.0);
+    }
+    let mut rr = 0;
+    while rr + 4 <= r {
+        let r0 = &bm[rr * j..(rr + 1) * j];
+        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
+        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
+        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
+        for s in 0..b {
+            let wbase = (s * order + n) * r + rr;
+            let (w0, w1, w2, w3) = (
+                w_panel[wbase],
+                w_panel[wbase + 1],
+                w_panel[wbase + 2],
+                w_panel[wbase + 3],
+            );
+            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            for jj in 0..j {
+                out[jj] += w0 * r0[jj] + w1 * r1[jj] + w2 * r2[jj] + w3 * r3[jj];
+            }
+        }
+        rr += 4;
+    }
+    while rr < r {
+        let brow = &bm[rr * j..(rr + 1) * j];
+        for s in 0..b {
+            let w = w_panel[(s * order + n) * r + rr];
+            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            axpy(w, brow, out);
+        }
+        rr += 1;
+    }
+}
+
+/// Batched `GS` under the Strided layout: per-sample calls of the shared
+/// [`strided_weighted_sum`] — bitwise identical to the scalar path by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+fn batch_gs_strided(
+    col: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    w_panel: &[f32],
+    gs_panel: &mut [f32],
+) {
+    for s in 0..b {
+        strided_weighted_sum(
+            col,
+            r,
+            j,
+            &w_panel[(s * order + n) * r..(s * order + n + 1) * r],
+            &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j],
+        );
+    }
+}
+
+/// Pure mini-batch panel train step (deferred reads, duplicate deltas sum
+/// at scatter): the semantics of the AOT JAX `train_step` graph, executed
+/// natively by the PJRT runtime. `a_panels[n]` is `b × j` sample-major,
+/// `b_mats[n]` is the `r × j` Kruskal factor. Writes updated rows,
+/// accumulates `core_grads[n]` (`r × j`, zeroed here), and fills
+/// `residuals`.
+#[allow(clippy::too_many_arguments)]
+pub fn minibatch_train_step(
+    order: usize,
+    b: usize,
+    r_core: usize,
+    j: usize,
+    a_panels: &[&[f32]],
+    b_mats: &[&[f32]],
+    vals: &[f32],
+    lr: f32,
+    lam: f32,
+    new_rows: &mut [Vec<f32>],
+    core_grads: &mut [Vec<f32>],
+    residuals: &mut [f32],
+) {
+    debug_assert_eq!(a_panels.len(), order);
+    debug_assert_eq!(b_mats.len(), order);
+    let beta = 1.0 - lr * lam;
+    let mut c = vec![0.0f32; order * r_core];
+    let mut pre = vec![0.0f32; (order + 1) * r_core];
+    let mut suf = vec![0.0f32; (order + 1) * r_core];
+    let mut w = vec![0.0f32; order * r_core];
+    let mut gs = vec![0.0f32; j];
+    for g in core_grads.iter_mut() {
+        g.fill(0.0);
+    }
+    for s in 0..b {
+        for n in 0..order {
+            matvec_rowmajor(
+                b_mats[n],
+                r_core,
+                j,
+                &a_panels[n][s * j..(s + 1) * j],
+                &mut c[n * r_core..(n + 1) * r_core],
+            );
+        }
+        prefix_suffix_w(&c, order, r_core, &mut pre, &mut suf, &mut w);
+        let mut e = -vals[s];
+        // x̂ via mode 0 (mode-invariant).
+        weighted_rowsum(b_mats[0], r_core, j, &w[0..r_core], &mut gs);
+        e += dot(&a_panels[0][s * j..(s + 1) * j], &gs);
+        residuals[s] = e;
+        for n in 0..order {
+            if n > 0 {
+                weighted_rowsum(
+                    b_mats[n],
+                    r_core,
+                    j,
+                    &w[n * r_core..(n + 1) * r_core],
+                    &mut gs,
+                );
+            }
+            let a = &a_panels[n][s * j..(s + 1) * j];
+            let out = &mut new_rows[n][s * j..(s + 1) * j];
+            for jj in 0..j {
+                out[jj] = beta * a[jj] - lr * e * gs[jj];
+            }
+            for rr in 0..r_core {
+                let coef = e * w[n * r_core + rr];
+                axpy(coef, a, &mut core_grads[n][rr * j..(rr + 1) * j]);
+            }
+        }
+    }
+}
+
+/// Mini-batch panel prediction: `x̂[s] = Σ_r Π_n (b_r^(n) · a^(n)[s])`.
+pub fn minibatch_predict(
+    order: usize,
+    b: usize,
+    r_core: usize,
+    j: usize,
+    a_panels: &[&[f32]],
+    b_mats: &[&[f32]],
+    out: &mut [f32],
+) {
+    let mut c = vec![0.0f32; order * r_core];
+    for s in 0..b {
+        for n in 0..order {
+            matvec_rowmajor(
+                b_mats[n],
+                r_core,
+                j,
+                &a_panels[n][s * j..(s + 1) * j],
+                &mut c[n * r_core..(n + 1) * r_core],
+            );
+        }
+        let mut acc = 0.0f32;
+        for rr in 0..r_core {
+            let mut prod = 1.0f32;
+            for n in 0..order {
+                prod *= c[n * r_core + rr];
+            }
+            acc += prod;
+        }
+        out[s] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::kernel::scalar;
+    use crate::kernel::Workspace;
+    use crate::model::{CoreRepr, TuckerModel};
+    use crate::util::Rng;
+
+    fn setup(seed: u64) -> (crate::data::synth::Planted, TuckerModel, KruskalCore) {
+        let spec = PlantedSpec {
+            dims: vec![15, 40, 35],
+            nnz: 3000,
+            j: 6, // deliberately not a multiple of 4: exercises dot tails
+            r_core: 5,
+            noise: 0.05,
+            clamp: None,
+        };
+        let mut rng = Rng::new(seed);
+        let p = planted_tucker(&mut rng, &spec);
+        let model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        (p, model, core)
+    }
+
+    #[test]
+    fn batched_matches_scalar_bitwise_packed() {
+        let (p, model, core) = setup(1);
+        let ids: Vec<u32> = (0..p.tensor.nnz() as u32).collect();
+        let plan = BatchPlan::build(&p.tensor, &ids, 64);
+
+        let mut f_scalar = model.factors.clone();
+        let mut ws = Workspace::new(3, 5, 6);
+        let mut log_s = Vec::new();
+        let st_s = scalar::run_ids(
+            &mut ws, &p.tensor, plan.ids(), &core, &[], CoreLayout::Packed,
+            &mut f_scalar, 0.01, 0.001, true, Some(&mut log_s),
+        );
+
+        let mut f_batch = model.factors.clone();
+        let mut bws = BatchWorkspace::new(3, 5, 6, 64);
+        let mut log_b = Vec::new();
+        let st_b = run_plan(
+            &mut bws, &p.tensor, &plan, &core, &[], CoreLayout::Packed,
+            &mut f_batch, 0.01, 0.001, true, Some(&mut log_b),
+        );
+
+        assert_eq!(st_s.samples, st_b.samples);
+        assert_eq!(st_s.sse.to_bits(), st_b.sse.to_bits());
+        assert_eq!(log_s.len(), log_b.len());
+        for (a, b) in log_s.iter().zip(log_b.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for n in 0..3 {
+            for (a, b) in f_scalar
+                .mat(n)
+                .data()
+                .iter()
+                .zip(f_batch.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} factors diverged");
+            }
+        }
+        let (gs, cs) = ws.core_grad_mut();
+        let (gb, cb) = bws.core_grad_mut();
+        assert_eq!(*cs, *cb);
+        for (a, b) in gs.iter().zip(gb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged");
+        }
+    }
+
+    #[test]
+    fn minibatch_train_step_matches_per_sample_math() {
+        // On a batch with all-distinct rows and frozen inputs, the
+        // mini-batch panel step equals the staged scalar contraction.
+        let (_p, _model, core) = setup(3);
+        let (order, r, j, b) = (3usize, 5usize, 6usize, 8usize);
+        let mut rng = Rng::new(4);
+        let mut a_data: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..order {
+            a_data.push((0..b * j).map(|_| rng.normal()).collect());
+        }
+        let a_panels: Vec<&[f32]> = a_data.iter().map(|v| v.as_slice()).collect();
+        let b_data: Vec<&[f32]> = (0..order).map(|n| core.factor(n).data()).collect();
+        let vals: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let mut new_rows: Vec<Vec<f32>> = (0..order).map(|_| vec![0.0; b * j]).collect();
+        let mut grads: Vec<Vec<f32>> = (0..order).map(|_| vec![0.0; r * j]).collect();
+        let mut resid = vec![0.0f32; b];
+        let (lr, lam) = (0.02f32, 0.01f32);
+        minibatch_train_step(
+            order, b, r, j, &a_panels, &b_data, &vals, lr, lam,
+            &mut new_rows, &mut grads, &mut resid,
+        );
+
+        let mut ws = Workspace::new(order, r, j);
+        for s in 0..b {
+            for n in 0..order {
+                ws.stage_row(n, &a_data[n][s * j..(s + 1) * j]);
+            }
+            let e = crate::kernel::contract_staged(
+                &mut ws, &core, &[], CoreLayout::Packed, vals[s],
+            );
+            assert!((e - resid[s]).abs() < 1e-5, "sample {s}: {e} vs {}", resid[s]);
+            for n in 0..order {
+                let gs = ws.gs_row(n);
+                for jj in 0..j {
+                    let want =
+                        (1.0 - lr * lam) * a_data[n][s * j + jj] - lr * e * gs[jj];
+                    let got = new_rows[n][s * j + jj];
+                    assert!((want - got).abs() < 1e-5, "mode {n} s {s} j {jj}");
+                }
+            }
+        }
+    }
+}

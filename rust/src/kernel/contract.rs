@@ -1,0 +1,399 @@
+//! The Theorem-1/2 contraction primitives: staged-row workspace, the
+//! per-sample contraction, and the Eq. 17 core-gradient accumulate/apply
+//! pair. Moved here from `algo::fasttucker` so the serial, multi-device,
+//! and PJRT engines share one implementation (re-exported there for
+//! compatibility).
+//!
+//! Per sampled nonzero `(i_1..i_N, x)` the update costs `O(N·R_core·J)`:
+//!
+//! 1. `c[n][r] = b_r^(n) · a_{i_n}^(n)` — N·R dot products of length J
+//!    (the warp-shuffle step of the CUDA kernel).
+//! 2. `w[n][r] = Π_{m≠n} c[m][r]` via prefix/suffix products — O(N·R)
+//!    total, an improvement over Algorithm 1's per-mode recomputation
+//!    (O(N²·R)); numerically identical — see
+//!    `tests::prefix_suffix_identity`.
+//! 3. `GS^(n) = Σ_r w[n][r] · b_r^(n)` — the factor-update coefficient
+//!    (paper Fig. 1 left).
+//! 4. `x̂ = a^(1) · GS^(1)`, `e = x̂ - x`; factor row SGD (Eq. 13).
+//! 5. Core gradients `∂/∂b_r^(n) = e · w[n][r] · a^(n)` (Eq. 17, where
+//!    `w·a` is the paper's `Q^(n),r` vector, Fig. 1 right), accumulated
+//!    over the epoch and applied with `M = |Ψ|` (Algorithm 1).
+//!
+//! The [`CoreLayout`] switch reproduces the paper's shared-vs-global-memory
+//! ablation (Tables 8–12): `Packed` walks `b_r^(n)` as contiguous rows
+//! (shared-memory analogue), `Strided` reads a column-major copy with
+//! stride `R_core` (global-memory analogue).
+
+use crate::kruskal::KruskalCore;
+use crate::util::linalg::{axpy, dot};
+
+/// Memory layout of the hot Kruskal factors (Tables 8–12 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreLayout {
+    /// Contiguous `b_r^(n)` rows (paper: core factors in shared memory).
+    Packed,
+    /// Column-major copy, stride `R_core` between elements of one `b_r^(n)`
+    /// (paper: core factors in global memory, uncoalesced).
+    Strided,
+}
+
+/// Reusable scratch for the per-sample update — everything the CUDA kernel
+/// would keep in registers/shared memory, preallocated so the hot loop
+/// never allocates.
+pub struct Workspace {
+    pub(crate) order: usize,
+    pub(crate) r_core: usize,
+    pub(crate) j: usize,
+    /// Staged factor rows for the current sample, `[n][j]`.
+    pub(crate) a_stage: Vec<f32>,
+    /// `c[n*R + r]`.
+    c: Vec<f32>,
+    /// Prefix products `pre[n*R + r] = Π_{m<n} c[m][r]`.
+    pre: Vec<f32>,
+    /// Suffix products.
+    suf: Vec<f32>,
+    /// `w[n*R + r] = Π_{m≠n} c[m][r]`.
+    pub(crate) w: Vec<f32>,
+    /// `gs[n*J .. (n+1)*J]`.
+    pub(crate) gs: Vec<f32>,
+    /// Core gradient accumulator, `[n][r][j]` flattened.
+    pub(crate) core_grad: Vec<f32>,
+    /// Number of samples accumulated into `core_grad`.
+    pub(crate) core_grad_count: usize,
+}
+
+impl Workspace {
+    pub fn new(order: usize, r_core: usize, j: usize) -> Self {
+        Workspace {
+            order,
+            r_core,
+            j,
+            a_stage: vec![0.0; order * j],
+            c: vec![0.0; order * r_core],
+            pre: vec![0.0; (order + 1) * r_core],
+            suf: vec![0.0; (order + 1) * r_core],
+            w: vec![0.0; order * r_core],
+            gs: vec![0.0; order * j],
+            core_grad: vec![0.0; order * r_core * j],
+            core_grad_count: 0,
+        }
+    }
+
+    /// `GS^(n)` of the last contraction.
+    #[inline]
+    pub fn gs_row(&self, n: usize) -> &[f32] {
+        &self.gs[n * self.j..(n + 1) * self.j]
+    }
+
+    /// Staged row for mode `n`.
+    #[inline]
+    pub fn staged_row(&self, n: usize) -> &[f32] {
+        &self.a_stage[n * self.j..(n + 1) * self.j]
+    }
+
+    /// Stage one mode's factor row.
+    #[inline]
+    pub fn stage_row(&mut self, n: usize, row: &[f32]) {
+        self.a_stage[n * self.j..(n + 1) * self.j].copy_from_slice(row);
+    }
+
+    /// Core-gradient accumulator (`[n][r][j]` flattened) and sample count —
+    /// exposed so engines can all-reduce worker-local gradients.
+    pub fn core_grad_mut(&mut self) -> (&mut Vec<f32>, &mut usize) {
+        (&mut self.core_grad, &mut self.core_grad_count)
+    }
+}
+
+/// The Thm-1/2 contraction for one staged sample. Reads `ws.a_stage`,
+/// fills `ws.{c, w, gs}`, returns the residual `e = x̂ - x`.
+///
+/// `strided` is only consulted under [`CoreLayout::Strided`] and must hold
+/// the column-major mirror of `core` (see [`build_strided`]).
+pub fn contract_staged(
+    ws: &mut Workspace,
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    x: f32,
+) -> f32 {
+    let order = ws.order;
+    let r_core = ws.r_core;
+    let j = ws.j;
+
+    // Step 1: c[n][r] = b_r^(n) · a_{i_n} — a register-blocked matvec
+    // against the contiguous B^(n) under the Packed layout.
+    for n in 0..order {
+        let a_row = &ws.a_stage[n * j..(n + 1) * j];
+        match layout {
+            CoreLayout::Packed => {
+                crate::util::linalg::matvec_rowmajor(
+                    core.factor(n).data(),
+                    r_core,
+                    j,
+                    a_row,
+                    &mut ws.c[n * r_core..(n + 1) * r_core],
+                );
+            }
+            CoreLayout::Strided => {
+                strided_matvec(
+                    &strided[n],
+                    r_core,
+                    a_row,
+                    &mut ws.c[n * r_core..(n + 1) * r_core],
+                );
+            }
+        }
+    }
+
+    // Step 2: prefix/suffix products -> w[n][r].
+    prefix_suffix_w(&ws.c, order, r_core, &mut ws.pre, &mut ws.suf, &mut ws.w);
+
+    // Step 3: GS^(n) = Σ_r w[n][r] b_r^(n) — 4-row blocked weighted sum
+    // under the Packed layout.
+    ws.gs.fill(0.0);
+    for n in 0..order {
+        match layout {
+            CoreLayout::Packed => {
+                crate::util::linalg::weighted_rowsum(
+                    core.factor(n).data(),
+                    r_core,
+                    j,
+                    &ws.w[n * r_core..(n + 1) * r_core],
+                    &mut ws.gs[n * j..(n + 1) * j],
+                );
+            }
+            CoreLayout::Strided => {
+                strided_weighted_sum(
+                    &strided[n],
+                    r_core,
+                    j,
+                    &ws.w[n * r_core..(n + 1) * r_core],
+                    &mut ws.gs[n * j..(n + 1) * j],
+                );
+            }
+        }
+    }
+
+    // Step 4: prediction and residual (mode-invariant; use mode 0).
+    let xhat = dot(&ws.a_stage[0..j], &ws.gs[0..j]);
+    xhat - x
+}
+
+/// Strided-layout (column-major mirror) step 1: `out[r] = Σ_j col[j][r]·a[j]`.
+/// The single definition of this reduction — the scalar and batched paths
+/// both call it, which is what keeps their float-op association (and hence
+/// the bitwise-equivalence property) pinned in one place.
+#[inline]
+pub(crate) fn strided_matvec(col: &[f32], r_core: usize, a_row: &[f32], out: &mut [f32]) {
+    for r in 0..r_core {
+        let mut acc = 0.0f32;
+        for (jj, &av) in a_row.iter().enumerate() {
+            acc += col[jj * r_core + r] * av;
+        }
+        out[r] = acc;
+    }
+}
+
+/// Strided-layout step 3: `out[j] = Σ_r w[r]·col[j][r]` (see
+/// [`strided_matvec`] for why this lives here).
+#[inline]
+pub(crate) fn strided_weighted_sum(
+    col: &[f32],
+    r_core: usize,
+    j: usize,
+    w: &[f32],
+    out: &mut [f32],
+) {
+    for jj in 0..j {
+        let mut acc = 0.0f32;
+        for r in 0..r_core {
+            acc += w[r] * col[jj * r_core + r];
+        }
+        out[jj] = acc;
+    }
+}
+
+/// Step 2 shared by the scalar and batched paths: prefix/suffix products
+/// of `c` over modes, yielding `w[n][r] = Π_{m≠n} c[m][r]`. `pre`/`suf`
+/// are `(order+1)*r_core` scratch; `c` and `w` are `order*r_core`.
+#[inline]
+pub(crate) fn prefix_suffix_w(
+    c: &[f32],
+    order: usize,
+    r_core: usize,
+    pre: &mut [f32],
+    suf: &mut [f32],
+    w: &mut [f32],
+) {
+    for r in 0..r_core {
+        pre[r] = 1.0;
+    }
+    for n in 0..order {
+        for r in 0..r_core {
+            pre[(n + 1) * r_core + r] = pre[n * r_core + r] * c[n * r_core + r];
+        }
+    }
+    for r in 0..r_core {
+        suf[order * r_core + r] = 1.0;
+    }
+    for n in (0..order).rev() {
+        for r in 0..r_core {
+            suf[n * r_core + r] = suf[(n + 1) * r_core + r] * c[n * r_core + r];
+        }
+    }
+    for n in 0..order {
+        for r in 0..r_core {
+            w[n * r_core + r] = pre[n * r_core + r] * suf[(n + 1) * r_core + r];
+        }
+    }
+}
+
+/// Accumulate the Eq. 17 core gradient for the last contraction into
+/// `ws.core_grad` (uses the staged *pre-update* rows).
+#[inline]
+pub fn accumulate_core_grad(ws: &mut Workspace, e: f32) {
+    let (order, r_core, j) = (ws.order, ws.r_core, ws.j);
+    for n in 0..order {
+        let a_row = &ws.a_stage[n * j..(n + 1) * j];
+        for r in 0..r_core {
+            let coef = e * ws.w[n * r_core + r];
+            let base = (n * r_core + r) * j;
+            axpy(coef, a_row, &mut ws.core_grad[base..base + j]);
+        }
+    }
+    ws.core_grad_count += 1;
+}
+
+/// Apply an accumulated core gradient (Algorithm 1's batched core update
+/// with `M = |Ψ|`): `b <- (1-lr·λ)b - lr·Σe·w·a / M`. Clears the
+/// accumulator. Shared by every engine (serial workspace, batched
+/// workspace, worker all-reduce).
+pub fn apply_core_grad_raw(
+    grad: &mut [f32],
+    count: &mut usize,
+    core: &mut KruskalCore,
+    lr_c: f32,
+    lam_c: f32,
+) {
+    if *count == 0 {
+        return;
+    }
+    let m = *count as f32;
+    let (order, r_core) = (core.order(), core.rank());
+    for n in 0..order {
+        let j = core.j(n);
+        for r in 0..r_core {
+            let g = &grad[(n * r_core + r) * j..(n * r_core + r + 1) * j];
+            let row = core.row_mut(n, r);
+            for (bi, &gi) in row.iter_mut().zip(g.iter()) {
+                *bi = (1.0 - lr_c * lam_c) * *bi - lr_c * gi / m;
+            }
+        }
+    }
+    grad.fill(0.0);
+    *count = 0;
+}
+
+/// [`apply_core_grad_raw`] over a [`Workspace`].
+pub fn apply_core_grad(ws: &mut Workspace, core: &mut KruskalCore, lr_c: f32, lam_c: f32) {
+    apply_core_grad_raw(&mut ws.core_grad, &mut ws.core_grad_count, core, lr_c, lam_c);
+}
+
+/// Build the column-major mirror used by [`CoreLayout::Strided`]:
+/// `out[n][j*R + r] = b^(n)[r][j]`.
+pub fn build_strided(core: &KruskalCore) -> Vec<Vec<f32>> {
+    let order = core.order();
+    let r_core = core.rank();
+    (0..order)
+        .map(|n| {
+            let j = core.j(n);
+            let mut buf = vec![0.0f32; j * r_core];
+            for r in 0..r_core {
+                for (jj, &v) in core.row(n, r).iter().enumerate() {
+                    buf[jj * r_core + r] = v;
+                }
+            }
+            buf
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CoreRepr, TuckerModel};
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn prefix_suffix_identity() {
+        // w[n][r] computed by prefix/suffix equals the direct product
+        // over m != n (what Algorithm 1 recomputes per mode).
+        forall("prefix/suffix == direct leave-one-out product", 64, |rng| {
+            let order = 2 + rng.gen_range(5);
+            let r_core = 1 + rng.gen_range(6);
+            let c: Vec<f32> = (0..order * r_core).map(|_| 0.2 + rng.uniform()).collect();
+            let mut direct = vec![0.0f32; order * r_core];
+            for n in 0..order {
+                for r in 0..r_core {
+                    let mut prod = 1.0f32;
+                    for m in 0..order {
+                        if m != n {
+                            prod *= c[m * r_core + r];
+                        }
+                    }
+                    direct[n * r_core + r] = prod;
+                }
+            }
+            let mut pre = vec![1.0f32; (order + 1) * r_core];
+            let mut suf = vec![1.0f32; (order + 1) * r_core];
+            let mut w = vec![0.0f32; order * r_core];
+            prefix_suffix_w(&c, order, r_core, &mut pre, &mut suf, &mut w);
+            for n in 0..order {
+                for r in 0..r_core {
+                    let rel = (w[n * r_core + r] - direct[n * r_core + r]).abs()
+                        / direct[n * r_core + r].abs().max(1e-6);
+                    assert!(rel < 1e-4, "n={n} r={r}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn contract_staged_prediction_matches_dense_core() {
+        // Thm 1/2 identity at the Rust layer: linear-path x̂ equals the
+        // exponential dense-core prediction.
+        let mut rng = Rng::new(20);
+        let model = TuckerModel::init_kruskal(&mut rng, &[10, 11, 12], 4, 3);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let dense = core.to_dense();
+        let mut ws = Workspace::new(3, 3, 4);
+        for coords in [[0u32, 0, 0], [9, 10, 11], [5, 6, 7]] {
+            for n in 0..3 {
+                ws.stage_row(n, model.factors.row(n, coords[n] as usize));
+            }
+            let e = contract_staged(&mut ws, &core, &[], CoreLayout::Packed, 0.0);
+            let want = dense.predict(&model.factors, &coords);
+            assert!((e - want).abs() < 1e-4, "{e} vs {want}");
+        }
+    }
+
+    #[test]
+    fn apply_core_grad_raw_clears_accumulator() {
+        let mut rng = Rng::new(21);
+        let mut core = KruskalCore::random(&mut rng, 3, 4, 2, 1.0);
+        let before = core.factor(0).data().to_vec();
+        let mut grad = vec![1.0f32; 3 * 2 * 4];
+        let mut count = 4usize;
+        apply_core_grad_raw(&mut grad, &mut count, &mut core, 0.1, 0.0);
+        assert_eq!(count, 0);
+        assert!(grad.iter().all(|&g| g == 0.0));
+        // b' = b - 0.1 * 1.0 / 4.
+        for (a, b) in before.iter().zip(core.factor(0).data().iter()) {
+            assert!((b - (a - 0.025)).abs() < 1e-6);
+        }
+    }
+}

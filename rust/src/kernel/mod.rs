@@ -1,0 +1,91 @@
+//! The shared FastTucker kernel layer: one implementation of the
+//! per-sample Theorem-1/2 update, consumed by every engine (serial,
+//! multi-device, PJRT).
+//!
+//! Mapping to the paper (Fig. 1 / Algorithm 1), per sampled nonzero
+//! `(i_1..i_N, x)`:
+//!
+//! | Stage                | Paper step                                | Here |
+//! |----------------------|-------------------------------------------|------|
+//! | **stage**            | gather `a_{i_n}^(n)` into shared memory   | [`FactorAccess::stage`] into `a` panels |
+//! | **contract (c)**     | `c_r^(n) = b_r^(n) · a_{i_n}^(n)` (warp-shuffle dots) | [`contract::contract_staged`] step 1 / [`batched`] c-panels |
+//! | **contract (w)**     | `w_r^(n) = Π_{m≠n} c_r^(m)` (Thm 1/2 reduction) | prefix/suffix products |
+//! | **factor SGD**       | Eq. 13: `a ← a - γ(e·GS + λa)` with `GS^(n) = Σ_r w_r b_r^(n)` | [`FactorAccess::update`] |
+//! | **core-grad accumulate** | Eq. 17: `∂/∂b_r^(n) = e·w_r^(n)·a^(n)`, applied with `M = |Ψ|` | `core_grad` accumulators + [`contract::apply_core_grad_raw`] |
+//!
+//! Two execution strategies share that math bit-for-bit:
+//!
+//! * [`scalar`] — one nonzero at a time, in stream order. This is the
+//!   reference semantics (what `FastTucker::train_epoch` historically did
+//!   inline).
+//! * [`batched`] — the cuFasterTucker-style batching (arXiv:2210.06014):
+//!   nonzeros are grouped by their mode-1 fiber ([`plan::BatchPlan`]), the
+//!   shared mode-1 factor row is staged **once per group**, and the
+//!   contraction runs over contiguous `batch × R_core` panels so the inner
+//!   loops are flat, allocation-free, and auto-vectorizable. The group
+//!   construction guarantees the batched path is **bitwise identical** to
+//!   [`scalar`] run over the same (grouped) sample order — see
+//!   `tests/properties.rs::prop_batched_kernel_bitwise_matches_scalar`.
+//!
+//! The [`contract::CoreLayout`] parameter (Packed vs Strided walk of the
+//! Kruskal factors) threads through both strategies, keeping the paper's
+//! Tables 8–12 shared-vs-global-memory ablation runnable on either path.
+
+pub mod contract;
+pub mod plan;
+pub mod scalar;
+pub mod batched;
+
+pub use batched::BatchWorkspace;
+pub use contract::{
+    accumulate_core_grad, apply_core_grad, apply_core_grad_raw, build_strided,
+    contract_staged, CoreLayout, Workspace,
+};
+pub use plan::{BatchPlan, PlanScratch};
+
+use crate::model::factors::FactorMatrices;
+use crate::util::linalg::scale_axpy;
+
+/// Aggregate result of one kernel invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelStats {
+    /// Nonzeros processed.
+    pub samples: usize,
+    /// Sum of squared residuals over the processed samples, accumulated in
+    /// sample order (an f64 so the scalar/batched paths agree bitwise when
+    /// their residual streams do).
+    pub sse: f64,
+}
+
+/// Row-level access to the factor matrices — the seam that lets the same
+/// kernel run against plain [`FactorMatrices`] (serial/PJRT engines) and
+/// the multi-device [`SharedFactors`](crate::parallel::shared::SharedFactors)
+/// view (Latin-schedule workers).
+pub trait FactorAccess {
+    /// Copy row `(n, i)` into `out` (`out.len()` = J).
+    fn stage(&self, n: usize, i: usize, out: &mut [f32]);
+
+    /// `row ← beta·row + alpha·x` — the Eq. 13 SGD write-back.
+    fn update(&mut self, n: usize, i: usize, beta: f32, alpha: f32, x: &[f32]);
+
+    /// Overwrite row `(n, i)` with `src` (group write-back of the staged
+    /// shared row).
+    fn store(&mut self, n: usize, i: usize, src: &[f32]);
+}
+
+impl FactorAccess for FactorMatrices {
+    #[inline]
+    fn stage(&self, n: usize, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(n, i));
+    }
+
+    #[inline]
+    fn update(&mut self, n: usize, i: usize, beta: f32, alpha: f32, x: &[f32]) {
+        scale_axpy(beta, alpha, x, self.row_mut(n, i));
+    }
+
+    #[inline]
+    fn store(&mut self, n: usize, i: usize, src: &[f32]) {
+        self.row_mut(n, i).copy_from_slice(src);
+    }
+}

@@ -1,0 +1,236 @@
+//! Batch planning: group a stream of sampled nonzero ids by their mode-1
+//! fiber (paper's 1-based mode 1 = our mode 0), CSF-style, so the batched
+//! kernel can stage each shared factor row once per group.
+//!
+//! A group satisfies three invariants that together make the batched
+//! execution **bitwise identical** to scalar execution over the plan's
+//! sample order:
+//!
+//! 1. every sample in the group shares the same mode-0 coordinate (the
+//!    fiber whose factor row is staged once and kept hot);
+//! 2. within the group, the coordinates of every other mode are pairwise
+//!    distinct — so deferred panel reads/writes of those rows cannot
+//!    observe or clobber an intra-group update;
+//! 3. the group is at most `max_batch` long (panel capacity).
+//!
+//! Relative sample order is preserved inside each fiber (the grouping sort
+//! is a stable counting sort, the same pass
+//! [`ModeSlices`](crate::tensor::ModeSlices) does over a whole tensor).
+
+use crate::tensor::SparseTensor;
+
+/// An execution plan: grouped nonzero ids plus group boundaries.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    ids: Vec<u32>,
+    /// `offsets[g]..offsets[g+1]` delimit group `g` in `ids`.
+    offsets: Vec<usize>,
+    max_batch: usize,
+}
+
+/// Reusable scratch for [`BatchPlan::build_with_scratch`]: the per-mode
+/// stamp arrays are O(Σ dims) and the sort keys O(ids), so hot callers
+/// (one plan per Latin-schedule worker pass) keep one of these per worker
+/// instead of reallocating per call. Stamps stay valid across builds via
+/// a monotone group serial.
+#[derive(Default)]
+pub struct PlanScratch {
+    /// `(coord0, original position)` sort keys.
+    keys: Vec<(u32, u32)>,
+    /// Last-group serial per coordinate, per mode ≥ 1.
+    stamps: Vec<Vec<u32>>,
+    /// Dims fingerprint the stamps were sized for.
+    dims: Vec<usize>,
+    /// Monotone group serial (stale stamps compare unequal).
+    serial: u32,
+}
+
+impl PlanScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, dims: &[usize], upcoming_groups: usize) {
+        let refresh = self.dims != dims
+            || self.serial > u32::MAX - (upcoming_groups as u32).saturating_add(2);
+        if refresh {
+            self.stamps = dims[1..].iter().map(|&d| vec![u32::MAX; d]).collect();
+            self.dims = dims.to_vec();
+            self.serial = 0;
+        }
+    }
+}
+
+impl BatchPlan {
+    /// Build a plan over `ids` (nonzero ids into `tensor`). Groups are
+    /// capped at `max_batch` (≥ 1). Allocates fresh scratch — use
+    /// [`Self::build_with_scratch`] on hot paths.
+    pub fn build(tensor: &SparseTensor, ids: &[u32], max_batch: usize) -> BatchPlan {
+        let mut scratch = PlanScratch::new();
+        Self::build_with_scratch(tensor, ids, max_batch, &mut scratch)
+    }
+
+    /// [`Self::build`] with caller-owned [`PlanScratch`].
+    pub fn build_with_scratch(
+        tensor: &SparseTensor,
+        ids: &[u32],
+        max_batch: usize,
+        scratch: &mut PlanScratch,
+    ) -> BatchPlan {
+        assert!(max_batch >= 1);
+        let order = tensor.order();
+        scratch.ensure(tensor.dims(), ids.len());
+
+        // Stable sort by mode-0 coordinate: the composite key
+        // `(coord0, stream position)` makes the in-place unstable sort
+        // order-preserving within each fiber.
+        scratch.keys.clear();
+        scratch
+            .keys
+            .extend(ids.iter().enumerate().map(|(pos, &k)| {
+                (tensor.index(k as usize)[0], pos as u32)
+            }));
+        scratch.keys.sort_unstable();
+        let sorted: Vec<u32> = scratch.keys.iter().map(|&(_, pos)| ids[pos as usize]).collect();
+
+        // Split fibers into groups: cap length and keep modes >= 1
+        // coordinates distinct within a group. `stamps[n-1][coord]` holds
+        // the serial of the last group that saw that coordinate.
+        let mut offsets = vec![0usize];
+        let mut serial: u32 = scratch.serial + 1;
+        let mut group_len = 0usize;
+        let mut group_coord0 = 0u32;
+        for (pos, &k) in sorted.iter().enumerate() {
+            let coords = tensor.index(k as usize);
+            let must_split = group_len == 0
+                || coords[0] != group_coord0
+                || group_len == max_batch
+                || (1..order).any(|n| scratch.stamps[n - 1][coords[n] as usize] == serial);
+            if must_split && group_len > 0 {
+                offsets.push(pos);
+                serial += 1;
+                group_len = 0;
+            }
+            group_coord0 = coords[0];
+            for n in 1..order {
+                scratch.stamps[n - 1][coords[n] as usize] = serial;
+            }
+            group_len += 1;
+        }
+        if group_len > 0 {
+            offsets.push(sorted.len());
+        }
+        scratch.serial = serial;
+        BatchPlan { ids: sorted, offsets, max_batch }
+    }
+
+    /// All ids in execution order (the scalar reference must iterate this
+    /// order for bitwise comparison).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Ids of group `g`.
+    #[inline]
+    pub fn group(&self, g: usize) -> &[u32] {
+        &self.ids[self.offsets[g]..self.offsets[g + 1]]
+    }
+
+    /// The group-size cap the plan was built with.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Mean group size (batching effectiveness diagnostic).
+    pub fn mean_group_len(&self) -> f64 {
+        if self.n_groups() == 0 {
+            return 0.0;
+        }
+        self.ids.len() as f64 / self.n_groups() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn prop_plan_invariants() {
+        forall("batch plan: permutation + fiber + distinctness", 24, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(30)).collect();
+            let nnz = 1 + rng.gen_range(400);
+            let t = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+            let n_ids = 1 + rng.gen_range(nnz);
+            let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+            let max_batch = 1 + rng.gen_range(16);
+            let plan = BatchPlan::build(&t, &ids, max_batch);
+
+            // Permutation of the input multiset.
+            let mut a = ids.clone();
+            let mut b = plan.ids().to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+
+            // Group invariants.
+            let mut total = 0usize;
+            for g in 0..plan.n_groups() {
+                let grp = plan.group(g);
+                assert!(!grp.is_empty() && grp.len() <= max_batch);
+                total += grp.len();
+                let i0 = t.index(grp[0] as usize)[0];
+                for n in 1..order {
+                    let mut seen = std::collections::HashSet::new();
+                    for &k in grp {
+                        let coords = t.index(k as usize);
+                        assert_eq!(coords[0], i0, "group shares mode-0 fiber");
+                        assert!(
+                            seen.insert(coords[n]),
+                            "mode {n} coordinate repeated within a group"
+                        );
+                    }
+                }
+            }
+            assert_eq!(total, plan.len());
+        });
+    }
+
+    #[test]
+    fn fiber_order_is_stable() {
+        // Within one fiber, ids keep their stream order.
+        let t = synth::random_uniform(&mut crate::util::Rng::new(1), &[4, 50, 50], 200, 1.0, 2.0);
+        let ids: Vec<u32> = (0..200).collect();
+        let plan = BatchPlan::build(&t, &ids, 64);
+        let mut last_pos: Vec<Option<u32>> = vec![None; 4];
+        for &k in plan.ids() {
+            let f = t.index(k as usize)[0] as usize;
+            if let Some(prev) = last_pos[f] {
+                assert!(k > prev, "fiber {f}: {k} after {prev}");
+            }
+            last_pos[f] = Some(k);
+        }
+    }
+
+    #[test]
+    fn empty_ids_give_empty_plan() {
+        let t = synth::random_uniform(&mut crate::util::Rng::new(2), &[3, 3], 10, 1.0, 2.0);
+        let plan = BatchPlan::build(&t, &[], 8);
+        assert_eq!(plan.n_groups(), 0);
+        assert!(plan.is_empty());
+    }
+}

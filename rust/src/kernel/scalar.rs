@@ -1,0 +1,101 @@
+//! The scalar kernel: one nonzero at a time in stream order — the
+//! reference semantics every other execution strategy must reproduce
+//! bit-for-bit. This is the per-sample update extracted from the old
+//! `FastTucker::train_epoch` inline loop (stage → contract → core-grad
+//! accumulate → factor SGD write-back).
+
+use crate::kernel::contract::{
+    accumulate_core_grad, contract_staged, CoreLayout, Workspace,
+};
+use crate::kernel::{FactorAccess, KernelStats};
+use crate::kruskal::KruskalCore;
+use crate::tensor::SparseTensor;
+
+/// Run the per-sample update over `ids` in order.
+///
+/// `strided` must hold the column-major core mirror when `layout` is
+/// [`CoreLayout::Strided`] (see [`crate::kernel::build_strided`]); pass
+/// `&[]` under `Packed`. When `residual_log` is given, each sample's
+/// residual `e` is appended (the loss trajectory the equivalence property
+/// tests compare bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn run_ids<F: FactorAccess>(
+    ws: &mut Workspace,
+    tensor: &SparseTensor,
+    ids: &[u32],
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    factors: &mut F,
+    lr_f: f32,
+    lam_f: f32,
+    update_core: bool,
+    mut residual_log: Option<&mut Vec<f32>>,
+) -> KernelStats {
+    let order = ws.order;
+    let j = ws.j;
+    let beta = 1.0 - lr_f * lam_f;
+    let mut sse = 0.0f64;
+    for &k in ids {
+        let k = k as usize;
+        let coords = tensor.index(k);
+        for n in 0..order {
+            factors.stage(n, coords[n] as usize, &mut ws.a_stage[n * j..(n + 1) * j]);
+        }
+        let e = contract_staged(ws, core, strided, layout, tensor.value(k));
+        if update_core {
+            accumulate_core_grad(ws, e);
+        }
+        for n in 0..order {
+            let gs_n = &ws.gs[n * j..(n + 1) * j];
+            factors.update(n, coords[n] as usize, beta, -lr_f * e, gs_n);
+        }
+        sse += (e as f64) * (e as f64);
+        if let Some(log) = residual_log.as_mut() {
+            log.push(e);
+        }
+    }
+    KernelStats { samples: ids.len(), sse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{planted_tucker, PlantedSpec};
+    use crate::model::{CoreRepr, TuckerModel};
+    use crate::util::Rng;
+
+    #[test]
+    fn scalar_kernel_descends_sse() {
+        let spec = PlantedSpec {
+            dims: vec![20, 25, 30],
+            nnz: 2000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(1);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, 4, 4);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..p.tensor.nnz() as u32).collect();
+        let mut ws = Workspace::new(3, 4, 4);
+        let first = run_ids(
+            &mut ws, &p.tensor, &ids, &core, &[], CoreLayout::Packed,
+            &mut model.factors, 0.02, 0.0, false, None,
+        );
+        let mut last = first;
+        for _ in 0..5 {
+            last = run_ids(
+                &mut ws, &p.tensor, &ids, &core, &[], CoreLayout::Packed,
+                &mut model.factors, 0.02, 0.0, false, None,
+            );
+        }
+        assert_eq!(first.samples, p.tensor.nnz());
+        assert!(last.sse < first.sse, "{} -> {}", first.sse, last.sse);
+    }
+}

@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the coordinator: datasets, sampling, the
 //!   order-N reference engine, four baseline algorithms, the multi-device
-//!   partition scheduler, metrics, and the PJRT runtime that executes the
-//!   AOT-compiled JAX step functions.
+//!   partition scheduler, metrics, the shared scalar/batched kernel layer
+//!   ([`kernel`]), and the step runtime that executes the AOT-compiled
+//!   JAX step functions (natively lowered to [`kernel`] on this offline
+//!   build).
 //! * **L2** (`python/compile/model.py`) — the order-3 SGD step as a JAX
 //!   graph, lowered once to HLO text in `artifacts/`.
 //! * **L1** (`python/compile/kernels/fasttucker.py`) — the Thm-1/2
@@ -24,6 +26,7 @@ pub mod tensor;
 pub mod data;
 pub mod kruskal;
 pub mod model;
+pub mod kernel;
 pub mod algo;
 pub mod sched;
 pub mod parallel;

@@ -12,7 +12,7 @@
 //! fasttucker datasets
 //! ```
 
-use anyhow::{bail, Context, Result};
+use fasttucker::util::error::{anyhow, bail, Context, Result};
 
 use fasttucker::cli::Args;
 use fasttucker::config::{AlgoKind, EngineKind, TrainConfig};
@@ -40,7 +40,7 @@ fn main() {
             print!("{}", HELP);
             Ok(())
         }
-        other => Err(anyhow::anyhow!("unknown subcommand {other:?}; see `fasttucker help`")),
+        other => Err(anyhow!("unknown subcommand {other:?}; see `fasttucker help`")),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");

@@ -12,7 +12,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::kruskal::{DenseCore, KruskalCore};
 use crate::model::factors::{FactorMatrices, Matrix};

@@ -70,6 +70,50 @@ impl SharedFactors {
     }
 }
 
+/// [`FactorAccess`](crate::kernel::FactorAccess) view over
+/// [`SharedFactors`], letting a Latin-schedule worker drive the shared
+/// kernel ([`crate::kernel::batched`] / [`crate::kernel::scalar`])
+/// directly against the logically-global factor matrices.
+pub struct SharedRowAccess<'a> {
+    shared: &'a SharedFactors,
+}
+
+impl<'a> SharedRowAccess<'a> {
+    /// Wrap a shared view for one worker.
+    ///
+    /// # Safety
+    /// Every row `(n, i)` subsequently staged/updated/stored through the
+    /// returned accessor must be exclusively owned by the calling worker
+    /// for the duration of the current scheduling round (the
+    /// [`LatinSchedule`](super::LatinSchedule) invariant): no other thread
+    /// may read or write those rows concurrently.
+    pub unsafe fn new(shared: &'a SharedFactors) -> Self {
+        SharedRowAccess { shared }
+    }
+}
+
+impl crate::kernel::FactorAccess for SharedRowAccess<'_> {
+    #[inline]
+    fn stage(&self, n: usize, i: usize, out: &mut [f32]) {
+        // SAFETY: ownership per the constructor's contract.
+        out.copy_from_slice(unsafe { self.shared.row(n, i) });
+    }
+
+    #[inline]
+    fn update(&mut self, n: usize, i: usize, beta: f32, alpha: f32, x: &[f32]) {
+        // SAFETY: exclusive ownership per the constructor's contract.
+        crate::util::linalg::scale_axpy(beta, alpha, x, unsafe {
+            self.shared.row_mut(n, i)
+        });
+    }
+
+    #[inline]
+    fn store(&mut self, n: usize, i: usize, src: &[f32]) {
+        // SAFETY: exclusive ownership per the constructor's contract.
+        unsafe { self.shared.row_mut(n, i) }.copy_from_slice(src);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

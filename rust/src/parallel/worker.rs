@@ -5,26 +5,25 @@
 //! Per epoch:
 //! 1. Build (or reuse) the block partition of the training nonzeros.
 //! 2. For each of the `M^{N-1}` rounds, run M scoped threads; worker `g`
-//!    SGD-steps the nonzeros of its assigned block through the same
-//!    Theorem-1/2 math as the serial engine (`algo::fasttucker`), writing
-//!    factor rows through [`SharedFactors`] (disjointness guaranteed by
-//!    the schedule) and accumulating core gradients worker-locally.
+//!    runs **one batched kernel call** over its block-local nonzeros
+//!    (fiber-grouped by [`BatchPlan`], the same Theorem-1/2 math as the
+//!    serial engine via [`crate::kernel::batched`]), writing factor rows
+//!    through [`SharedFactors`] (disjointness guaranteed by the schedule)
+//!    and accumulating core gradients worker-locally.
 //! 3. Ledger the parameter exchange the paper's GPUs would perform at each
 //!    round boundary, all-reduce the core gradients, apply the core update.
 
 use std::time::Instant;
 
-use crate::algo::fasttucker::{
-    accumulate_core_grad, apply_core_grad, build_strided, contract_staged, CoreLayout,
-    Workspace,
+use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
+use crate::kernel::{
+    apply_core_grad_raw, batched, build_strided, BatchPlan, BatchWorkspace, CoreLayout,
 };
-use crate::algo::{EpochStats, SgdHyper};
 use crate::metrics::CommLedger;
 use crate::model::{CoreRepr, TuckerModel};
-use crate::parallel::shared::SharedFactors;
+use crate::parallel::shared::{SharedFactors, SharedRowAccess};
 use crate::parallel::{BlockPartition, LatinSchedule};
 use crate::tensor::SparseTensor;
-use crate::util::linalg::scale_axpy;
 use crate::util::Rng;
 
 /// How the M workers execute.
@@ -58,6 +57,9 @@ pub struct ParallelOptions {
     pub hyper: SgdHyper,
     pub layout: CoreLayout,
     pub execution: Execution,
+    /// Batch-group cap for the per-block batched kernel call (≥ 1; 1
+    /// degenerates to scalar-sized groups).
+    pub batch: usize,
 }
 
 impl Default for ParallelOptions {
@@ -67,6 +69,7 @@ impl Default for ParallelOptions {
             hyper: SgdHyper::default(),
             layout: CoreLayout::Packed,
             execution: Execution::auto(),
+            batch: 64,
         }
     }
 }
@@ -76,7 +79,7 @@ pub struct ParallelFastTucker {
     pub opts: ParallelOptions,
     partition: Option<BlockPartition>,
     partition_for: Option<(usize, usize, usize)>, // (nnz, order, m)
-    workspaces: Vec<Workspace>,
+    workspaces: Vec<BatchWorkspace>,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
 }
@@ -84,6 +87,7 @@ pub struct ParallelFastTucker {
 impl ParallelFastTucker {
     pub fn new(opts: ParallelOptions) -> Self {
         assert!(opts.workers >= 1);
+        assert!(opts.batch >= 1);
         ParallelFastTucker {
             opts,
             partition: None,
@@ -99,15 +103,16 @@ impl ParallelFastTucker {
             self.partition = Some(BlockPartition::build(train, self.opts.workers));
             self.partition_for = Some(fp);
         }
+        let cap = self.opts.batch;
         let stale = self.workspaces.len() != self.opts.workers
             || self
                 .workspaces
                 .first()
-                .map(|w| (w.order, w.r_core, w.j) != (order, r_core, j))
+                .map(|w| w.shape() != (order, r_core, j, cap))
                 .unwrap_or(true);
         if stale {
             self.workspaces = (0..self.opts.workers)
-                .map(|_| Workspace::new(order, r_core, j))
+                .map(|_| BatchWorkspace::new(order, r_core, j, cap))
                 .collect();
         }
     }
@@ -120,10 +125,12 @@ impl ParallelFastTucker {
         train: &SparseTensor,
         epoch: usize,
         rng: &mut Rng,
-    ) -> EpochStats {
+    ) -> AlgoResult<EpochStats> {
         let core = match &model.core {
             CoreRepr::Kruskal(k) => k.clone(),
-            CoreRepr::Dense(_) => panic!("ParallelFastTucker requires a Kruskal core"),
+            CoreRepr::Dense(_) => {
+                return Err(AlgoError::core_mismatch("parallel/fasttucker", "Kruskal", "dense"))
+            }
         };
         let (order, r_core, j) = (core.order(), core.rank(), core.j(0));
         self.ensure_state(train, order, r_core, j);
@@ -207,13 +214,15 @@ impl ParallelFastTucker {
         if h.update_core {
             // Merge worker-local gradients into workspace 0.
             let (first, rest) = self.workspaces.split_at_mut(1);
+            let (grad0, count0) = first[0].core_grad_mut();
             for ws in rest.iter_mut() {
-                for (a, b) in first[0].core_grad.iter_mut().zip(ws.core_grad.iter()) {
+                let (grad, count) = ws.core_grad_mut();
+                for (a, b) in grad0.iter_mut().zip(grad.iter()) {
                     *a += *b;
                 }
-                first[0].core_grad_count += ws.core_grad_count;
-                ws.core_grad.fill(0.0);
-                ws.core_grad_count = 0;
+                *count0 += *count;
+                grad.fill(0.0);
+                *count = 0;
             }
             self.ledger
                 .record_core_allreduce((m * order * r_core * j * 4) as u64);
@@ -221,11 +230,11 @@ impl ParallelFastTucker {
                 CoreRepr::Kruskal(k) => k,
                 _ => unreachable!(),
             };
-            apply_core_grad(&mut first[0], core_mut, lr_c, h.lambda_core);
+            apply_core_grad_raw(grad0, count0, core_mut, lr_c, h.lambda_core);
             core_secs = t1.elapsed().as_secs_f64();
         }
 
-        EpochStats { samples, factor_secs, core_secs }
+        Ok(EpochStats { samples, factor_secs, core_secs })
     }
 }
 
@@ -240,7 +249,7 @@ fn run_round_threads(
     train: &SparseTensor,
     partition: &BlockPartition,
     assignments: &[Vec<usize>],
-    workspaces: &mut [Workspace],
+    workspaces: &mut [BatchWorkspace],
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
@@ -278,7 +287,7 @@ fn run_round_simulated(
     train: &SparseTensor,
     partition: &BlockPartition,
     assignments: &[Vec<usize>],
-    workspaces: &mut [Workspace],
+    workspaces: &mut [BatchWorkspace],
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
@@ -297,8 +306,10 @@ fn run_round_simulated(
     (samples, slowest)
 }
 
-/// One worker's pass over its block: SGD on every (or a sampled fraction
-/// of) nonzero, exactly the serial per-sample math.
+/// One worker's pass over its block: the sampled (or full) block-local
+/// nonzeros are fiber-grouped and dispatched as **one batched kernel
+/// call** — the same Theorem-1/2 math as the serial engine, with the
+/// shared mode-0 row of each group staged once.
 #[allow(clippy::too_many_arguments)]
 fn worker_pass(
     shared: &SharedFactors,
@@ -307,7 +318,7 @@ fn worker_pass(
     layout: CoreLayout,
     train: &SparseTensor,
     block: &[u32],
-    ws: &mut Workspace,
+    ws: &mut BatchWorkspace,
     rng: &mut Rng,
     lr_f: f32,
     h: SgdHyper,
@@ -315,39 +326,38 @@ fn worker_pass(
     if block.is_empty() {
         return 0;
     }
-    let order = ws.order;
-    let j = ws.j;
-    let n_samples = if h.sample_frac >= 1.0 {
-        block.len()
+    // Draw the worker's sample ids up front (same RNG stream as the
+    // historical per-sample draws), then group them by mode-0 fiber. The
+    // full-pass case plans straight over the block slice; planning scratch
+    // is reused across rounds via the worker's workspace.
+    let (_, _, _, cap) = ws.shape();
+    let plan = if h.sample_frac >= 1.0 {
+        BatchPlan::build_with_scratch(train, block, cap, ws.plan_scratch_mut())
     } else {
-        (((block.len() as f64) * h.sample_frac).round() as usize).max(1)
+        let n_samples = (((block.len() as f64) * h.sample_frac).round() as usize).max(1);
+        let ids: Vec<u32> = (0..n_samples)
+            .map(|_| block[rng.gen_range(block.len())])
+            .collect();
+        BatchPlan::build_with_scratch(train, &ids, cap, ws.plan_scratch_mut())
     };
-    for s in 0..n_samples {
-        let k = if h.sample_frac >= 1.0 {
-            block[s] as usize
-        } else {
-            block[rng.gen_range(block.len())] as usize
-        };
-        let coords = train.index(k);
-        let x = train.value(k);
-        for n in 0..order {
-            // SAFETY: coords lie inside this worker's block; the schedule
-            // gives it exclusive ownership of every chunk the block spans.
-            let row = unsafe { shared.row(n, coords[n] as usize) };
-            ws.stage_row(n, row);
-        }
-        let e = contract_staged(ws, core, strided, layout, x);
-        if h.update_core {
-            accumulate_core_grad(ws, e);
-        }
-        for n in 0..order {
-            let gs_n = &ws.gs[n * j..(n + 1) * j];
-            // SAFETY: exclusive ownership per the schedule (see above).
-            let row = unsafe { shared.row_mut(n, coords[n] as usize) };
-            scale_axpy(1.0 - lr_f * h.lambda_factor, -lr_f * e, gs_n, row);
-        }
-    }
-    n_samples
+    // SAFETY: every id in `ids` lies inside this worker's block; the Latin
+    // schedule gives the worker exclusive ownership of every factor chunk
+    // the block spans for the duration of this round.
+    let mut access = unsafe { SharedRowAccess::new(shared) };
+    let stats = batched::run_plan(
+        ws,
+        train,
+        &plan,
+        core,
+        strided,
+        layout,
+        &mut access,
+        lr_f,
+        h.lambda_factor,
+        h.update_core,
+        None,
+    );
+    stats.samples
 }
 
 #[cfg(test)]
@@ -385,7 +395,7 @@ mod tests {
                 let mut engine = ParallelFastTucker::new(opts);
                 let before = rmse(&model, &p.tensor);
                 for epoch in 0..15 {
-                    engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+                    engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
                 }
                 let after = rmse(&model, &p.tensor);
                 assert!(
@@ -411,7 +421,7 @@ mod tests {
             let mut engine = ParallelFastTucker::new(opts);
             let mut rng2 = Rng::new(23);
             for epoch in 0..2 {
-                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2);
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
             }
             model
         };
@@ -434,7 +444,7 @@ mod tests {
         let mut opts = ParallelOptions::default();
         opts.workers = 3;
         let mut engine = ParallelFastTucker::new(opts);
-        let stats = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        let stats = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         assert_eq!(stats.samples, p.tensor.nnz());
     }
 
@@ -446,7 +456,7 @@ mod tests {
         let mut opts = ParallelOptions::default();
         opts.workers = 2;
         let mut engine = ParallelFastTucker::new(opts);
-        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         // M=2, N=3: 4 rounds, rounds 1..3 each exchange >= 1 chunk per
         // worker, plus one core all-reduce.
         assert!(engine.ledger.factor_bytes > 0);
@@ -467,7 +477,7 @@ mod tests {
         let mut engine = ParallelFastTucker::new(opts);
         let before = rmse(&model, &p.tensor);
         for epoch in 0..10 {
-            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng);
+            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
         }
         assert!(rmse(&model, &p.tensor) < before);
     }

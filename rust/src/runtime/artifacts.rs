@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// One AOT-compiled entry point.
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -1,7 +1,8 @@
-//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client via
-//! the `xla` crate. This is the only bridge between the Rust coordinator
-//! and the JAX/Pallas compute path — python never runs here.
+//! Step-executable runtime: resolves the AOT artifact manifest produced by
+//! `python/compile/aot.py` and executes the step functions. On builds with
+//! a PJRT client this executed the compiled HLO; this offline build lowers
+//! each artifact to the in-crate batched kernel ([`crate::kernel::batched`])
+//! with the same buffer interface — python never runs here either way.
 
 pub mod artifacts;
 pub mod pjrt;

@@ -1,73 +1,164 @@
-//! The PJRT executor: HLO text → `HloModuleProto` → compile on the CPU
-//! PJRT client → execute with `Literal` buffers.
+//! The step-executable runtime behind the PJRT engine.
 //!
-//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and
-//! python/compile/aot.py).
+//! Historically this module compiled the AOT HLO text artifacts
+//! (`python/compile/aot.py`) through the `xla` crate's PJRT CPU client.
+//! This build is fully offline with no `xla` crate available, so the
+//! runtime **lowers each artifact to the in-crate batched kernel**
+//! ([`crate::kernel::batched`]) instead: the artifact manifest still
+//! selects the entry point and its compile-time shapes `(J, R, B)`, and
+//! [`StepExecutable::run`] executes the same mini-batch math the JAX
+//! `train_step`/`predict` graphs encode (python/compile/model.py), with
+//! the same buffer interface — so the engine layer is agnostic to which
+//! backend actually ran.
+//!
+//! Native step conventions (mirroring aot.py's lowering):
+//!
+//! * `train_step`: inputs `a1 a2 a3 (B×J) | b1 b2 b3 (R×J) | x (B) |
+//!   lr () | lam ()`, outputs `a1' a2' a3' | gb1 gb2 gb3 (R×J) | e (B)`
+//!   (7 outputs).
+//! * `predict`: inputs `a1 a2 a3 | b1 b2 b3`, output `x̂ (B)` (1 output).
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
+use crate::kernel::batched::{minibatch_predict, minibatch_train_step};
 use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+
+/// Which native step an artifact lowers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NativeStep {
+    /// 9 inputs → 7 outputs (updated rows, core grads, residuals).
+    TrainStep,
+    /// 6 inputs → 1 output (predictions).
+    Predict,
+}
+
+impl NativeStep {
+    fn from_entry(entry: &ArtifactEntry) -> Result<NativeStep> {
+        let (step, n_outputs) = match entry.name.as_str() {
+            "train_step" => (NativeStep::TrainStep, 7),
+            "predict" => (NativeStep::Predict, 1),
+            // factor_step is lowered by aot.py but unused by the engine.
+            other => bail!("no native lowering for artifact {other:?}"),
+        };
+        if entry.n_outputs != n_outputs {
+            bail!(
+                "artifact {} declares {} outputs, native lowering produces {}",
+                entry.name,
+                entry.n_outputs,
+                n_outputs
+            );
+        }
+        Ok(step)
+    }
+}
 
 /// A compiled step function plus its shape metadata.
 pub struct StepExecutable {
     pub entry: ArtifactEntry,
-    exe: xla::PjRtLoadedExecutable,
+    step: NativeStep,
 }
 
 impl StepExecutable {
     /// Execute with raw f32 buffers. `inputs` are (data, shape) pairs in
     /// the artifact's argument order; outputs come back as flat vecs.
     pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let lit = xla::Literal::vec1(data);
+        for (idx, (data, shape)) in inputs.iter().enumerate() {
             let expected: i64 = shape.iter().product();
             if expected != data.len() as i64 {
                 return Err(anyhow!(
-                    "shape {:?} does not match buffer length {}",
+                    "input {idx}: shape {:?} does not match buffer length {}",
                     shape,
                     data.len()
                 ));
             }
-            let lit = if shape.len() == 1 && shape[0] == data.len() as i64 {
-                lit
-            } else {
-                lit.reshape(shape).map_err(|e| anyhow!("reshape: {e:?}"))?
-            };
-            literals.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unpack n_outputs elements.
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        if parts.len() != self.entry.n_outputs {
-            return Err(anyhow!(
-                "artifact {} returned {} outputs, manifest says {}",
-                self.entry.name,
-                parts.len(),
-                self.entry.n_outputs
-            ));
+        let (j, r, b) = (self.entry.j, self.entry.r_core, self.entry.batch);
+        let order = 3usize; // artifacts are order-3, fixed at build time
+        match self.step {
+            NativeStep::TrainStep => {
+                if inputs.len() != 9 {
+                    bail!(
+                        "train_step expects 9 inputs (a×3, b×3, x, lr, lam), got {}",
+                        inputs.len()
+                    );
+                }
+                let a_panels: Vec<&[f32]> = (0..order).map(|n| inputs[n].0).collect();
+                let b_mats: Vec<&[f32]> = (0..order).map(|n| inputs[3 + n].0).collect();
+                let vals = inputs[6].0;
+                let lr = *inputs[7]
+                    .0
+                    .first()
+                    .ok_or_else(|| anyhow!("empty lr buffer"))?;
+                let lam = *inputs[8]
+                    .0
+                    .first()
+                    .ok_or_else(|| anyhow!("empty lambda buffer"))?;
+                for (n, a) in a_panels.iter().enumerate() {
+                    if a.len() != b * j {
+                        bail!("a{} has {} elements, want {}", n + 1, a.len(), b * j);
+                    }
+                }
+                for (n, bm) in b_mats.iter().enumerate() {
+                    if bm.len() != r * j {
+                        bail!("b{} has {} elements, want {}", n + 1, bm.len(), r * j);
+                    }
+                }
+                if vals.len() != b {
+                    bail!("x has {} elements, want {}", vals.len(), b);
+                }
+                let mut new_rows: Vec<Vec<f32>> =
+                    (0..order).map(|_| vec![0.0f32; b * j]).collect();
+                let mut core_grads: Vec<Vec<f32>> =
+                    (0..order).map(|_| vec![0.0f32; r * j]).collect();
+                let mut residuals = vec![0.0f32; b];
+                minibatch_train_step(
+                    order,
+                    b,
+                    r,
+                    j,
+                    &a_panels,
+                    &b_mats,
+                    vals,
+                    lr,
+                    lam,
+                    &mut new_rows,
+                    &mut core_grads,
+                    &mut residuals,
+                );
+                let mut outs = new_rows;
+                outs.append(&mut core_grads);
+                outs.push(residuals);
+                Ok(outs)
+            }
+            NativeStep::Predict => {
+                if inputs.len() != 6 {
+                    bail!("predict expects 6 inputs (a×3, b×3), got {}", inputs.len());
+                }
+                let a_panels: Vec<&[f32]> = (0..order).map(|n| inputs[n].0).collect();
+                let b_mats: Vec<&[f32]> = (0..order).map(|n| inputs[3 + n].0).collect();
+                for (n, a) in a_panels.iter().enumerate() {
+                    if a.len() != b * j {
+                        bail!("a{} has {} elements, want {}", n + 1, a.len(), b * j);
+                    }
+                }
+                for (n, bm) in b_mats.iter().enumerate() {
+                    if bm.len() != r * j {
+                        bail!("b{} has {} elements, want {}", n + 1, bm.len(), r * j);
+                    }
+                }
+                let mut out = vec![0.0f32; b];
+                minibatch_predict(order, b, r, j, &a_panels, &b_mats, &mut out);
+                Ok(vec![out])
+            }
         }
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
     }
 }
 
-/// The runtime: one PJRT CPU client plus a cache of compiled executables.
+/// The runtime: the artifact manifest plus a cache of lowered executables.
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, StepExecutable>,
     /// Only consider artifacts with batch ≤ this when resolving variants.
@@ -78,9 +169,7 @@ impl PjrtRuntime {
     /// Create from an artifacts directory (expects `manifest.tsv`).
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(PjrtRuntime { client, manifest, cache: HashMap::new(), batch_cap: usize::MAX })
+        Ok(PjrtRuntime { manifest, cache: HashMap::new(), batch_cap: usize::MAX })
     }
 
     /// Restrict variant resolution to artifacts with batch ≤ `cap`.
@@ -93,10 +182,10 @@ impl PjrtRuntime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-batched-kernel".to_string()
     }
 
-    /// Compile (or fetch from cache) the executable for `(name, j, r)`.
+    /// Lower (or fetch from cache) the executable for `(name, j, r)`.
     pub fn load(&mut self, name: &str, j: usize, r_core: usize) -> Result<&StepExecutable> {
         let key = format!("{name}_j{j}_r{r_core}");
         if !self.cache.contains_key(&key) {
@@ -111,14 +200,8 @@ impl PjrtRuntime {
                     )
                 })?
                 .clone();
-            let proto = xla::HloModuleProto::from_text_file(&entry.file)
-                .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
-            self.cache.insert(key.clone(), StepExecutable { entry, exe });
+            let step = NativeStep::from_entry(&entry)?;
+            self.cache.insert(key.clone(), StepExecutable { entry, step });
         }
         Ok(&self.cache[&key])
     }
@@ -136,13 +219,21 @@ mod tests {
         artifacts_dir().join("manifest.tsv").exists()
     }
 
+    fn synthetic_runtime() -> PjrtRuntime {
+        // A runtime backed by a manifest literal — the native lowering
+        // never opens the HLO files, so tests need no artifacts on disk.
+        let manifest = Manifest::parse(
+            "train_step\ttrain_step_j8_r8_b64.hlo.txt\t8\t8\t64\t7\n\
+             predict\tpredict_j8_r8_b64.hlo.txt\t8\t8\t64\t1\n",
+            Path::new("/nonexistent"),
+        )
+        .unwrap();
+        PjrtRuntime { manifest, cache: HashMap::new(), batch_cap: usize::MAX }
+    }
+
     #[test]
     fn predict_executes_and_matches_native() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let mut rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+        let mut rt = synthetic_runtime();
         let (j, r) = (8usize, 8usize);
         let exe = rt.load("predict", j, r).unwrap();
         let b = exe.entry.batch;
@@ -197,15 +288,98 @@ mod tests {
     }
 
     #[test]
-    fn missing_variant_gives_useful_error() {
-        if !have_artifacts() {
-            return;
+    fn train_step_outputs_have_declared_shapes() {
+        let mut rt = synthetic_runtime();
+        let (j, r) = (8usize, 8usize);
+        let exe = rt.load("train_step", j, r).unwrap();
+        let b = exe.entry.batch;
+        let mut rng = crate::util::Rng::new(2);
+        let mk = |rng: &mut crate::util::Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal()).collect()
+        };
+        let a: Vec<Vec<f32>> = (0..3).map(|_| mk(&mut rng, b * j)).collect();
+        let bm: Vec<Vec<f32>> = (0..3).map(|_| mk(&mut rng, r * j)).collect();
+        let vals = mk(&mut rng, b);
+        let row = [b as i64, j as i64];
+        let bshape = [r as i64, j as i64];
+        let scalar: [i64; 1] = [1];
+        let lr = [0.01f32];
+        let lam = [0.001f32];
+        let outs = exe
+            .run(&[
+                (&a[0], &row),
+                (&a[1], &row),
+                (&a[2], &row),
+                (&bm[0], &bshape),
+                (&bm[1], &bshape),
+                (&bm[2], &bshape),
+                (&vals, &[b as i64]),
+                (&lr, &scalar),
+                (&lam, &scalar),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), exe.entry.n_outputs);
+        for n in 0..3 {
+            assert_eq!(outs[n].len(), b * j, "updated rows {n}");
+            assert_eq!(outs[3 + n].len(), r * j, "core grads {n}");
         }
-        let mut rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+        assert_eq!(outs[6].len(), b, "residuals");
+
+        // Oracle: per-sample Thm-1/2 contraction through the kernel layer
+        // must reproduce the residuals and the Eq. 13 row updates.
+        let core = crate::kruskal::KruskalCore::from_factors(
+            bm.iter()
+                .map(|d| crate::model::factors::Matrix::from_data(r, j, d.clone()))
+                .collect(),
+        );
+        let mut ws = crate::kernel::Workspace::new(3, r, j);
+        for s in [0usize, 31, b - 1] {
+            for n in 0..3 {
+                ws.stage_row(n, &a[n][s * j..(s + 1) * j]);
+            }
+            let e = crate::kernel::contract_staged(
+                &mut ws,
+                &core,
+                &[],
+                crate::kernel::CoreLayout::Packed,
+                vals[s],
+            );
+            assert!(
+                (outs[6][s] - e).abs() < 1e-4,
+                "residual {s}: {} vs {e}",
+                outs[6][s]
+            );
+            for n in 0..3 {
+                let gs = ws.gs_row(n);
+                for jj in 0..j {
+                    let want = (1.0 - lr[0] * lam[0]) * a[n][s * j + jj]
+                        - lr[0] * e * gs[jj];
+                    let got = outs[n][s * j + jj];
+                    assert!(
+                        (want - got).abs() < 1e-4,
+                        "row update mode {n} s {s} j {jj}: {want} vs {got}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn missing_variant_gives_useful_error() {
+        let mut rt = synthetic_runtime();
         let err = match rt.load("predict", 3, 3) {
             Ok(_) => panic!("expected missing-variant error"),
             Err(e) => e.to_string(),
         };
         assert!(err.contains("no artifact"), "{err}");
+    }
+
+    #[test]
+    fn on_disk_manifest_loads_if_built() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+        assert!(rt.load("predict", 8, 8).is_ok() || rt.load("predict", 16, 16).is_ok());
     }
 }

@@ -5,7 +5,7 @@
 //! which is the coalesced layout the paper uses for the nonzero stream on
 //! GPU: one memory request fetches a whole sample's coordinates.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// An order-N sparse tensor in coordinate format.
 #[derive(Clone, Debug)]

@@ -1,13 +1,15 @@
 //! Small self-contained utilities: PRNG, logging, dense linear algebra,
-//! and a miniature property-testing harness.
+//! error handling, and a miniature property-testing harness.
 //!
-//! These exist because the build is fully offline: the only external crates
-//! available are `xla` and `anyhow`, so the usual `rand`/`log`/`proptest`
-//! stack is replaced by focused in-tree implementations.
+//! These exist because the build is fully offline with **zero external
+//! crates**: the usual `rand`/`log`/`proptest`/`anyhow` stack is replaced
+//! by focused in-tree implementations.
 
+pub mod error;
 pub mod rng;
 pub mod logger;
 pub mod linalg;
 pub mod propcheck;
 
+pub use error::{Context, Error, Result};
 pub use rng::Rng;

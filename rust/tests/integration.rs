@@ -71,7 +71,7 @@ fn serial_and_parallel_fasttucker_reach_similar_accuracy() {
         algo.config.hyper.lr_factor = LrSchedule::constant(0.02);
         algo.config.hyper.lr_core = LrSchedule::constant(0.01);
         for e in 0..15 {
-            algo.train_epoch(&mut model, &tensor, e, &mut rng);
+            algo.train_epoch(&mut model, &tensor, e, &mut rng).unwrap();
         }
         rmse(&model, &tensor)
     };
@@ -84,7 +84,7 @@ fn serial_and_parallel_fasttucker_reach_similar_accuracy() {
         opts.hyper.lr_core = LrSchedule::constant(0.01);
         let mut engine = ParallelFastTucker::new(opts);
         for e in 0..15 {
-            engine.train_epoch(&mut model, &tensor, e, &mut rng);
+            engine.train_epoch(&mut model, &tensor, e, &mut rng).unwrap();
         }
         rmse(&model, &tensor)
     };
@@ -119,7 +119,7 @@ fn all_five_algorithms_agree_on_easy_problem() {
         a.config.hyper.lambda_factor = 1e-4;
         a.config.hyper.lambda_core = 1e-4;
         for e in 0..30 {
-            a.train_epoch(&mut model, &train, e, &mut rng);
+            a.train_epoch(&mut model, &train, e, &mut rng).unwrap();
         }
         results.push(("fasttucker", rmse_mae(&model, &test).0));
     }
@@ -133,7 +133,7 @@ fn all_five_algorithms_agree_on_easy_problem() {
         a.hyper.lambda_factor = 1e-4;
         a.hyper.lambda_core = 1e-4;
         for e in 0..30 {
-            a.train_epoch(&mut model, &train, e, &mut rng);
+            a.train_epoch(&mut model, &train, e, &mut rng).unwrap();
         }
         results.push(("cutucker", rmse_mae(&model, &test).0));
     }
@@ -146,7 +146,7 @@ fn all_five_algorithms_agree_on_easy_problem() {
         a.hyper.lambda_factor = 1e-4;
         a.hyper.lambda_core = 1e-4;
         for e in 0..30 {
-            a.train_epoch(&mut model, &train, e, &mut rng);
+            a.train_epoch(&mut model, &train, e, &mut rng).unwrap();
         }
         results.push(("sgd_tucker", rmse_mae(&model, &test).0));
     }
@@ -165,7 +165,7 @@ fn all_five_algorithms_agree_on_easy_problem() {
         };
         let mut a = PTucker::with_defaults();
         for e in 0..6 {
-            a.train_epoch(&mut model, &train, e, &mut rng);
+            a.train_epoch(&mut model, &train, e, &mut rng).unwrap();
         }
         results.push(("ptucker", rmse_mae(&model, &test).0));
 
@@ -177,7 +177,7 @@ fn all_five_algorithms_agree_on_easy_problem() {
         };
         let mut v = Vest::with_defaults();
         for e in 0..10 {
-            v.train_epoch(&mut model2, &train, e, &mut rng);
+            v.train_epoch(&mut model2, &train, e, &mut rng).unwrap();
         }
         results.push(("vest", rmse_mae(&model2, &test).0));
     }
@@ -309,7 +309,7 @@ fn threads_and_simulated_execution_identical() {
         let mut engine = ParallelFastTucker::new(opts);
         let mut rng2 = Rng::new(17);
         for e in 0..3 {
-            engine.train_epoch(&mut model, &tensor, e, &mut rng2);
+            engine.train_epoch(&mut model, &tensor, e, &mut rng2).unwrap();
         }
         rmse(&model, &tensor)
     };
