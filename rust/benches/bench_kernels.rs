@@ -1,12 +1,22 @@
 //! Kernel microbenches (perf-pass instrumentation, EXPERIMENTS.md §Perf):
 //! * the Thm-1/2 contraction throughput (samples/sec) vs (J, R_core),
 //!   Packed vs Strided;
-//! * **batched vs scalar kernel** — one full pass over a tall synthetic
-//!   tensor through `kernel::batched` (fiber-grouped panels) vs
-//!   `kernel::scalar` over the identical sample order; the acceptance bar
-//!   is ≥ 1.3× at batch ≥ 64;
+//! * **batched vs scalar kernel** — one full pass over a *tall* and a
+//!   *hollow* synthetic tensor through `kernel::batched`
+//!   (scalar / single-fiber / planner-tiled / relaxed-hogwild plans) vs
+//!   `kernel::scalar` over the identical sample order, with plan
+//!   observability (mean group length, fibers per group, occupancy); the
+//!   acceptance bar is the batched path beating scalar on BOTH shapes —
+//!   on hollow tensors only fiber tiling gets it there;
 //! * PJRT `train_step` batch execution vs the native batch loop;
 //! * evaluation throughput.
+//!
+//! Flags (after `--` with `cargo bench --bench bench_kernels`):
+//! * `--quick` — CI smoke mode: only the batched-vs-scalar sweep at a
+//!   reduced scale (unless `FASTTUCKER_BENCH_SCALE` overrides).
+//! * `--json PATH` — write the batched-vs-scalar sweep as a
+//!   `BENCH_kernels.json` throughput snapshot (the perf-trajectory
+//!   artifact CI uploads).
 
 use std::time::Instant;
 
@@ -15,7 +25,9 @@ use fasttucker::algo::SgdHyper;
 use fasttucker::bench_support::{bench_scale, Table};
 use fasttucker::coordinator::PjrtEngine;
 use fasttucker::data::synth::{self, planted_tucker, PlantedSpec};
-use fasttucker::kernel::{batched, scalar, BatchPlan, BatchWorkspace};
+use fasttucker::kernel::{
+    batched, planner, scalar, BatchPlan, BatchWorkspace, Exactness, FiberStats, PlanParams,
+};
 use fasttucker::kruskal::KruskalCore;
 use fasttucker::model::{CoreRepr, TuckerModel};
 use fasttucker::util::Rng;
@@ -53,14 +65,31 @@ fn contraction_bench() {
     table.print();
 }
 
-fn batched_vs_scalar() {
-    println!("\n== batched vs scalar kernel (full pass, J=R=16, order 3) ==");
-    // Tall trailing modes (recommender shape): long mode-0 fibers with few
-    // intra-group collisions, so the planner can actually form big groups.
-    let scale = bench_scale();
-    let dims = vec![256usize, 60_000, 60_000];
-    let nnz = ((1_500_000.0 * scale) as usize).max(10_000);
+/// One timed path of the batched-vs-scalar sweep.
+struct PathResult {
+    path: String,
+    cap: Option<usize>,
+    tile: Option<usize>,
+    mean_group_len: f64,
+    mean_fibers_per_group: f64,
+    occupancy: f64,
+    secs_per_pass: f64,
+    msamples_per_sec: f64,
+    speedup_vs_scalar: f64,
+}
+
+/// One workload of the sweep (what `--json` serializes).
+struct WorkloadResult {
+    name: String,
+    dims: Vec<usize>,
+    nnz: usize,
+    mean_fiber_len: f64,
+    paths: Vec<PathResult>,
+}
+
+fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> WorkloadResult {
     let (j, r) = (16usize, 16usize);
+    println!("\n== batched vs scalar kernel: {name} (full pass, J=R=16, dims {dims:?}, nnz {nnz}) ==");
     let mut rng = Rng::new(7);
     let tensor = synth::random_uniform(&mut rng, &dims, nnz, 1.0, 5.0);
     let model = TuckerModel::init_kruskal(&mut rng, &dims, j, r);
@@ -70,20 +99,41 @@ fn batched_vs_scalar() {
     };
     let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
     let (lr, lam) = (0.005f32, 0.001f32);
-    let reps = 3usize;
+    let fiber_stats = FiberStats::compute(&tensor, &ids);
+    let auto = planner::choose_params(&fiber_stats, 3, r, j, Exactness::Exact);
+    println!(
+        "fibers: n={} mean={:.2} p90={} max={}  planner: cap={} tile={}",
+        fiber_stats.n_fibers,
+        fiber_stats.mean_len,
+        fiber_stats.p90_len,
+        fiber_stats.max_len,
+        auto.max_batch,
+        auto.tile
+    );
 
-    // Scalar baseline over the grouped order of the largest plan (same
-    // memory-access order for both paths — the comparison isolates the
-    // kernel structure, not the sample permutation).
-    let big_plan = BatchPlan::build(&tensor, &ids, 256);
     let mut table = Table::new(&[
         "path",
-        "batch cap",
+        "cap",
+        "tile",
         "mean group",
+        "fibers/grp",
+        "occupancy",
         "secs/pass",
         "Msamples/sec",
-        "speedup vs scalar",
+        "speedup",
     ]);
+    let mut result = WorkloadResult {
+        name: name.to_string(),
+        dims,
+        nnz,
+        mean_fiber_len: fiber_stats.mean_len,
+        paths: Vec::new(),
+    };
+
+    // Scalar baseline over the grouped order of a reference plan (same
+    // memory-access order for both paths — the comparison isolates the
+    // kernel structure, not the sample permutation).
+    let ref_plan = BatchPlan::build_params(&tensor, &ids, auto);
     let scalar_secs = {
         let mut factors = model.factors.clone();
         let mut ws = Workspace::new(3, r, j);
@@ -91,7 +141,7 @@ fn batched_vs_scalar() {
         for _ in 0..reps {
             let t0 = Instant::now();
             let st = scalar::run_ids(
-                &mut ws, &tensor, big_plan.ids(), &core, &[], CoreLayout::Packed,
+                &mut ws, &tensor, ref_plan.ids(), &core, &[], CoreLayout::Packed,
                 &mut factors, lr, lam, true, None,
             );
             best = best.min(t0.elapsed().as_secs_f64());
@@ -100,17 +150,44 @@ fn batched_vs_scalar() {
         table.row(&[
             "scalar".into(),
             "-".into(),
+            "-".into(),
             "1.0".into(),
+            "-".into(),
+            "-".into(),
             format!("{best:.4}"),
             format!("{:.2}", nnz as f64 / best / 1e6),
             "1.00x".into(),
         ]);
+        result.paths.push(PathResult {
+            path: "scalar".into(),
+            cap: None,
+            tile: None,
+            mean_group_len: 1.0,
+            mean_fibers_per_group: 1.0,
+            occupancy: 1.0,
+            secs_per_pass: best,
+            msamples_per_sec: nnz as f64 / best / 1e6,
+            speedup_vs_scalar: 1.0,
+        });
         best
     };
-    for cap in [8usize, 64, 256] {
-        let plan = BatchPlan::build(&tensor, &ids, cap);
+
+    let cases: Vec<(String, PlanParams)> = vec![
+        ("single-fiber".into(), PlanParams::exact(64)),
+        ("single-fiber".into(), PlanParams::exact(auto.max_batch)),
+        ("tiled".into(), auto),
+        // Relaxed path gets the widest tile the cap can hold: with no
+        // distinctness splits, group length is limited only by cap/tile.
+        (
+            "relaxed".into(),
+            PlanParams::relaxed(auto.max_batch, planner::MAX_TILE.min(auto.max_batch)),
+        ),
+    ];
+    for (label, params) in cases {
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let stats = plan.stats();
         let mut factors = model.factors.clone();
-        let mut bws = BatchWorkspace::new(3, r, j, cap);
+        let mut bws = BatchWorkspace::new(3, r, j, params.max_batch);
         let mut best = f64::INFINITY;
         for _ in 0..reps {
             let t0 = Instant::now();
@@ -122,15 +199,91 @@ fn batched_vs_scalar() {
             std::hint::black_box(st.sse);
         }
         table.row(&[
-            "batched".into(),
-            cap.to_string(),
-            format!("{:.1}", plan.mean_group_len()),
+            label.clone(),
+            params.max_batch.to_string(),
+            params.tile.to_string(),
+            format!("{:.1}", stats.mean_group_len()),
+            format!("{:.2}", stats.mean_fibers_per_group()),
+            format!("{:.2}", stats.occupancy()),
             format!("{best:.4}"),
             format!("{:.2}", nnz as f64 / best / 1e6),
             format!("{:.2}x", scalar_secs / best),
         ]);
+        result.paths.push(PathResult {
+            path: label,
+            cap: Some(params.max_batch),
+            tile: Some(params.tile),
+            mean_group_len: stats.mean_group_len(),
+            mean_fibers_per_group: stats.mean_fibers_per_group(),
+            occupancy: stats.occupancy(),
+            secs_per_pass: best,
+            msamples_per_sec: nnz as f64 / best / 1e6,
+            speedup_vs_scalar: scalar_secs / best,
+        });
     }
     table.print();
+    result
+}
+
+fn batched_vs_scalar(quick: bool) -> Vec<WorkloadResult> {
+    let scale = if quick && std::env::var("FASTTUCKER_BENCH_SCALE").is_err() {
+        0.1
+    } else {
+        bench_scale()
+    };
+    let reps = if quick { 2 } else { 3 };
+    let nnz = ((1_500_000.0 * scale) as usize).max(10_000);
+    vec![
+        // Tall trailing modes (long mode-0 fibers): single-fiber groups
+        // already work; tiling must not regress it.
+        run_workload("tall", vec![256, 60_000, 60_000], nnz, reps),
+        // Hollow HOHDST shape (mean fiber length < 4, the common
+        // recommender shape): single-fiber plans degenerate to scalar —
+        // only fiber tiling batches it.
+        run_workload("hollow", vec![nnz / 2, 30_000, 30_000], nnz, reps),
+    ]
+}
+
+/// Hand-rolled JSON (offline build: no serde) — the `BENCH_kernels.json`
+/// throughput snapshot CI archives per commit.
+fn emit_json(path: &str, workloads: &[WorkloadResult]) {
+    fn opt(v: Option<usize>) -> String {
+        v.map(|x| x.to_string()).unwrap_or_else(|| "null".into())
+    }
+    let mut s = String::from("{\n  \"bench\": \"kernels\",\n  \"workloads\": [\n");
+    for (wi, w) in workloads.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"dims\": {:?}, \"nnz\": {}, \"mean_fiber_len\": {:.4}, \"paths\": [\n",
+            w.name, w.dims, w.nnz, w.mean_fiber_len
+        ));
+        for (pi, p) in w.paths.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"path\": \"{}\", \"cap\": {}, \"tile\": {}, \"mean_group_len\": {:.4}, \
+                 \"mean_fibers_per_group\": {:.4}, \"occupancy\": {:.4}, \"secs_per_pass\": {:.6}, \
+                 \"msamples_per_sec\": {:.4}, \"speedup_vs_scalar\": {:.4}}}{}\n",
+                p.path,
+                opt(p.cap),
+                opt(p.tile),
+                p.mean_group_len,
+                p.mean_fibers_per_group,
+                p.occupancy,
+                p.secs_per_pass,
+                p.msamples_per_sec,
+                p.speedup_vs_scalar,
+                if pi + 1 == w.paths.len() { "" } else { "," }
+            ));
+        }
+        s.push_str(&format!(
+            "    ]}}{}\n",
+            if wi + 1 == workloads.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("failed to write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote {path}");
 }
 
 fn pjrt_vs_native() {
@@ -215,8 +368,22 @@ fn eval_bench() {
 }
 
 fn main() {
-    contraction_bench();
-    batched_vs_scalar();
-    pjrt_vs_native();
-    eval_bench();
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    if !quick {
+        contraction_bench();
+    }
+    let workloads = batched_vs_scalar(quick);
+    if let Some(path) = json_path {
+        emit_json(&path, &workloads);
+    }
+    if !quick {
+        pjrt_vs_native();
+        eval_bench();
+    }
 }

@@ -9,11 +9,15 @@
 //! * the **scalar** kernel ([`crate::kernel::scalar`]) — one nonzero at a
 //!   time in Ψ order (the paper's Algorithm 1 semantics), or
 //! * the **batched** kernel ([`crate::kernel::batched`]) when
-//!   [`FastTuckerConfig::batch`] ≥ 2 — Ψ is grouped by mode-1 fiber
-//!   ([`crate::kernel::BatchPlan`]) and each group's shared factor row is
-//!   staged once, with the contraction running over `batch × R_core`
-//!   panels (cuFasterTucker's batching, arXiv:2210.06014). Bitwise
-//!   identical to the scalar path over the same grouped order.
+//!   [`FastTuckerConfig::batch`] is `Auto` or `Fixed(n ≥ 2)` — Ψ is
+//!   grouped into tiles of mode-1 fibers ([`crate::kernel::BatchPlan`],
+//!   cap and tile width from the planner under `Auto`), each fiber's
+//!   shared factor row staged once per sub-run, with the contraction
+//!   running over `batch × R_core` panels (cuFasterTucker's batching,
+//!   arXiv:2210.06014). Under [`FastTuckerConfig::exactness`]` = Exact`
+//!   (default) this is bitwise identical to the scalar path over the same
+//!   grouped order; `Relaxed` opts into the paper's hogwild semantics for
+//!   longer groups on hollow tensors.
 //!
 //! The [`CoreLayout`] switch reproduces the paper's shared-vs-global-memory
 //! ablation (Tables 8–12) on both paths.
@@ -21,7 +25,10 @@
 use std::time::Instant;
 
 use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
-use crate::kernel::{apply_core_grad_raw, batched, scalar, BatchPlan, BatchWorkspace};
+use crate::kernel::{
+    apply_core_grad_raw, batched, scalar, BatchPlan, BatchSizing, BatchWorkspace, Exactness,
+    PlanParams,
+};
 // Re-exported for compatibility: the contraction primitives historically
 // lived in this module and are widely imported from here.
 pub use crate::kernel::contract::{
@@ -29,6 +36,7 @@ pub use crate::kernel::contract::{
     Workspace,
 };
 
+use crate::metrics::PlanStats;
 use crate::model::{CoreRepr, TuckerModel};
 use crate::sched::Sampler;
 use crate::tensor::SparseTensor;
@@ -39,15 +47,26 @@ use crate::util::Rng;
 pub struct FastTuckerConfig {
     pub hyper: SgdHyper,
     pub layout: CoreLayout,
-    /// Maximum batch-group length for the batched kernel. `0` or `1`
-    /// selects the scalar kernel (Ψ processed in draw order, the legacy
-    /// semantics); ≥ 2 selects fiber-batched execution.
-    pub batch: usize,
+    /// Batch-group sizing. `Fixed(0)`/`Fixed(1)` select the scalar kernel
+    /// (Ψ processed in draw order, the legacy semantics); `Fixed(n ≥ 2)`
+    /// pins a single-fiber group cap; `Auto` lets the planner pick cap
+    /// and fiber-tile width from the dataset's fiber statistics
+    /// ([`crate::kernel::planner`]).
+    pub batch: BatchSizing,
+    /// Collision semantics of the batched plans: `Exact` (bitwise equal
+    /// to scalar over plan order, the default) or `Relaxed` (hogwild,
+    /// longer groups). Ignored on the scalar path.
+    pub exactness: Exactness,
 }
 
 impl Default for FastTuckerConfig {
     fn default() -> Self {
-        FastTuckerConfig { hyper: SgdHyper::default(), layout: CoreLayout::Packed, batch: 0 }
+        FastTuckerConfig {
+            hyper: SgdHyper::default(),
+            layout: CoreLayout::Packed,
+            batch: BatchSizing::Fixed(0),
+            exactness: Exactness::Exact,
+        }
     }
 }
 
@@ -57,25 +76,96 @@ pub struct FastTucker {
     ws: Option<Workspace>,
     bws: Option<BatchWorkspace>,
     strided: Vec<Vec<f32>>,
+    /// Planner decision cached per workload + model fingerprint
+    /// `(nnz, dims, sample count, order, r_core, j, exactness)` — every
+    /// input the cost model reads, so mutating `config` or switching
+    /// models invalidates it.
+    #[allow(clippy::type_complexity)]
+    auto_cache: Option<((usize, Vec<usize>, usize, usize, usize, usize, Exactness), PlanParams)>,
+    /// Plan of the most recent batched epoch (observability).
+    last_plan_stats: Option<PlanStats>,
 }
 
 impl FastTucker {
     pub fn new(config: FastTuckerConfig) -> Self {
-        FastTucker { config, ws: None, bws: None, strided: Vec::new() }
+        FastTucker {
+            config,
+            ws: None,
+            bws: None,
+            strided: Vec::new(),
+            auto_cache: None,
+            last_plan_stats: None,
+        }
     }
 
     pub fn with_defaults() -> Self {
         Self::new(FastTuckerConfig::default())
     }
 
-    /// Batched-kernel configuration with group cap `batch`.
+    /// Batched-kernel configuration with a pinned single-fiber group cap.
     pub fn with_batch(batch: usize) -> Self {
-        Self::new(FastTuckerConfig { batch, ..Default::default() })
+        Self::new(FastTuckerConfig { batch: BatchSizing::Fixed(batch), ..Default::default() })
     }
 
-    fn ensure_ws(&mut self, order: usize, r_core: usize, j: usize) {
-        if self.config.batch >= 2 {
-            let cap = self.config.batch;
+    /// Planner-driven batching (cap + fiber tile chosen per dataset).
+    pub fn with_auto_batch() -> Self {
+        Self::new(FastTuckerConfig { batch: BatchSizing::Auto, ..Default::default() })
+    }
+
+    /// Plan statistics of the last batched epoch (None before the first
+    /// epoch or on the scalar path).
+    pub fn last_plan_stats(&self) -> Option<PlanStats> {
+        self.last_plan_stats
+    }
+
+    /// Resolve this epoch's plan params (None = scalar kernel), caching
+    /// the planner decision per workload fingerprint.
+    fn resolve_params(
+        &mut self,
+        train: &SparseTensor,
+        m: usize,
+        order: usize,
+        r_core: usize,
+        j: usize,
+    ) -> Option<PlanParams> {
+        match self.config.batch {
+            BatchSizing::Fixed(_) => self.config.batch.resolve(
+                train,
+                m,
+                order,
+                r_core,
+                j,
+                self.config.exactness,
+            ),
+            BatchSizing::Auto => {
+                let key = (
+                    train.nnz(),
+                    train.dims().to_vec(),
+                    m,
+                    order,
+                    r_core,
+                    j,
+                    self.config.exactness,
+                );
+                if let Some((cached_key, params)) = &self.auto_cache {
+                    if *cached_key == key {
+                        return Some(*params);
+                    }
+                }
+                let params = self
+                    .config
+                    .batch
+                    .resolve(train, m, order, r_core, j, self.config.exactness)
+                    .expect("Auto sizing always resolves");
+                self.auto_cache = Some((key, params));
+                Some(params)
+            }
+        }
+    }
+
+    fn ensure_ws(&mut self, order: usize, r_core: usize, j: usize, params: Option<PlanParams>) {
+        if let Some(p) = params {
+            let cap = p.max_batch;
             let stale = match &self.bws {
                 Some(w) => w.shape() != (order, r_core, j, cap),
                 None => true,
@@ -113,7 +203,6 @@ impl Decomposer for FastTucker {
                 return Err(AlgoError::core_mismatch("fasttucker", "Kruskal", "dense"))
             }
         };
-        self.ensure_ws(order, r_core, j);
         if self.config.layout == CoreLayout::Strided {
             let core = match &model.core {
                 CoreRepr::Kruskal(k) => k,
@@ -127,6 +216,8 @@ impl Decomposer for FastTucker {
         let lr_c = h.lr_core.at(epoch);
         let sampler = Sampler::new(train.nnz());
         let m = ((train.nnz() as f64) * h.sample_frac).round().max(1.0) as usize;
+        let params = self.resolve_params(train, m, order, r_core, j);
+        self.ensure_ws(order, r_core, j, params);
         // The kernel consumes u32 ids; build them directly (same RNG draw
         // sequence as the historical usize path).
         let ids: Vec<u32> = if h.sample_frac >= 1.0 {
@@ -138,17 +229,18 @@ impl Decomposer for FastTucker {
         };
 
         let t0 = Instant::now();
-        let use_batched = self.config.batch >= 2;
+        let use_batched = params.is_some();
         let stats = {
             let core = match &model.core {
                 CoreRepr::Kruskal(k) => k,
                 _ => unreachable!(),
             };
-            if use_batched {
+            if let Some(p) = params {
                 let bws = self.bws.as_mut().unwrap();
                 let plan =
-                    BatchPlan::build_with_scratch(train, &ids, self.config.batch, bws.plan_scratch_mut());
-                batched::run_plan(
+                    BatchPlan::build_params_with_scratch(train, &ids, p, bws.plan_scratch_mut());
+                self.last_plan_stats = Some(plan.stats());
+                let st = batched::run_plan(
                     bws,
                     train,
                     &plan,
@@ -160,7 +252,9 @@ impl Decomposer for FastTucker {
                     h.lambda_factor,
                     h.update_core,
                     None,
-                )
+                );
+                bws.plan_scratch_mut().recycle(plan);
+                st
             } else {
                 scalar::run_ids(
                     self.ws.as_mut().unwrap(),
@@ -298,6 +392,113 @@ mod tests {
                 "batch {batch}: {batched_rmse} vs scalar {scalar_rmse}"
             );
         }
+    }
+
+    #[test]
+    fn auto_batch_tiles_hollow_tensors_and_converges() {
+        // A hollow planted workload (mean mode-0 fiber length < 4): the
+        // planner must pick tile > 1, the tiled plan must lift mean group
+        // length >= 4x over the single-fiber plan, and training quality
+        // must match the scalar path. Trailing modes are wide (500) so
+        // exact-mode collision splits don't mask the tiling lift; values
+        // are ratings-style (clamped) so SGD on 3-sample fibers stays
+        // stable at this lr.
+        let spec = PlantedSpec {
+            dims: vec![3000, 500, 500],
+            nnz: 9000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: Some((1.0, 5.0)),
+        };
+        let mut rng = Rng::new(30);
+        let p = planted_tucker(&mut rng, &spec);
+        let run = |batch: crate::kernel::BatchSizing| {
+            let mut rng = Rng::new(31);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut algo = FastTucker::new(FastTuckerConfig {
+                batch,
+                ..Default::default()
+            });
+            algo.config.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+            algo.config.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+            let mut rng2 = Rng::new(32);
+            for epoch in 0..20 {
+                algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (rmse(&model, &p.tensor), algo.last_plan_stats())
+        };
+        let (scalar_rmse, none_stats) = run(crate::kernel::BatchSizing::Fixed(0));
+        assert!(none_stats.is_none());
+        let (single_rmse, single_stats) = run(crate::kernel::BatchSizing::Fixed(64));
+        let single_stats = single_stats.unwrap();
+        assert!(
+            single_stats.mean_group_len() < 4.0,
+            "workload not hollow: {single_stats:?}"
+        );
+        let (auto_rmse, auto_stats) = run(crate::kernel::BatchSizing::Auto);
+        let auto_stats = auto_stats.unwrap();
+        assert!(auto_stats.tile > 1, "planner did not tile: {auto_stats:?}");
+        assert!(
+            auto_stats.mean_group_len() >= 4.0 * single_stats.mean_group_len(),
+            "tiling lifted groups only {:.2} -> {:.2}",
+            single_stats.mean_group_len(),
+            auto_stats.mean_group_len()
+        );
+        for (name, r) in [("single", single_rmse), ("auto", auto_rmse)] {
+            assert!(
+                (r - scalar_rmse).abs() < 0.3 * scalar_rmse.max(0.05),
+                "{name}: {r} vs scalar {scalar_rmse}"
+            );
+        }
+    }
+
+    #[test]
+    fn relaxed_reaches_exact_quality() {
+        // ISSUE 2 acceptance: hogwild plans must reach RMSE within 2% of
+        // the exact batched path on a synthetic workload. Hollow tensor
+        // with trailing modes tight enough (100) that relaxed groups
+        // actually contain collisions (otherwise the test is vacuous);
+        // ratings-style values keep the hollow-fiber SGD stable.
+        let spec = PlantedSpec {
+            dims: vec![2400, 100, 100],
+            nnz: 7200,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: Some((1.0, 5.0)),
+        };
+        let mut rng = Rng::new(40);
+        let p = planted_tucker(&mut rng, &spec);
+        let run = |exactness: crate::kernel::Exactness| {
+            let mut rng = Rng::new(41);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut algo = FastTucker::new(FastTuckerConfig {
+                batch: crate::kernel::BatchSizing::Auto,
+                exactness,
+                ..Default::default()
+            });
+            algo.config.hyper.lr_factor = crate::sched::LrSchedule::constant(0.01);
+            algo.config.hyper.lr_core = crate::sched::LrSchedule::constant(0.005);
+            let mut rng2 = Rng::new(42);
+            for epoch in 0..30 {
+                algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (rmse(&model, &p.tensor), algo.last_plan_stats().unwrap())
+        };
+        let (exact_rmse, exact_stats) = run(crate::kernel::Exactness::Exact);
+        let (relaxed_rmse, relaxed_stats) = run(crate::kernel::Exactness::Relaxed);
+        // Relaxed must actually have merged groups the exact mode split.
+        assert!(
+            relaxed_stats.mean_group_len() > exact_stats.mean_group_len(),
+            "relaxed plans no longer than exact: {relaxed_stats:?} vs {exact_stats:?}"
+        );
+        assert!(
+            relaxed_rmse <= exact_rmse * 1.02 + 1e-4,
+            "relaxed RMSE {relaxed_rmse} not within 2% of exact {exact_rmse}"
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub use toml::{TomlDoc, TomlValue};
 use crate::util::error::{bail, Context, Result};
 
 use crate::algo::SgdHyper;
+use crate::kernel::{BatchSizing, Exactness};
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -82,8 +83,17 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     pub checkpoint: Option<String>,
     pub eval_every: usize,
-    /// Cap on the PJRT artifact batch size (None = largest compiled).
+    /// Cap on the PJRT artifact batch size (None = planner-sized from
+    /// the training nnz when the launcher knows it, else the largest
+    /// compiled variant).
     pub pjrt_batch_cap: Option<usize>,
+    /// Batch sizing for the fasttucker engines: `Auto` (planner cost
+    /// model) or `Fixed(n)` (`0`/`1` = scalar kernel). TOML:
+    /// `batch = "auto"` or `batch = 64`.
+    pub batch: BatchSizing,
+    /// Batched-plan collision semantics. TOML: `exactness = "exact"` or
+    /// `"relaxed"` (hogwild).
+    pub exactness: Exactness,
 }
 
 impl Default for TrainConfig {
@@ -104,6 +114,8 @@ impl Default for TrainConfig {
             checkpoint: None,
             eval_every: 1,
             pjrt_batch_cap: None,
+            batch: BatchSizing::Auto,
+            exactness: Exactness::Exact,
         }
     }
 }
@@ -131,6 +143,8 @@ impl TrainConfig {
     /// eval_every = 1
     /// artifacts_dir = "artifacts"
     /// checkpoint = "model.ftck"
+    /// batch = "auto"        # or an integer group cap (0/1 = scalar kernel)
+    /// exactness = "exact"   # or "relaxed" (hogwild batched plans)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -187,6 +201,12 @@ impl TrainConfig {
         if let Some(v) = doc.get("", "pjrt_batch_cap") {
             cfg.pjrt_batch_cap = Some(v.as_usize()?);
         }
+        if let Some(v) = doc.get("", "batch") {
+            cfg.batch = parse_batch(v)?;
+        }
+        if let Some(v) = doc.get("", "exactness") {
+            cfg.exactness = parse_exactness(v.as_str()?)?;
+        }
 
         let mut h = SgdHyper::default();
         let g = |k: &str| doc.get("sgd", k);
@@ -224,6 +244,16 @@ impl TrainConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        if self.exactness == Exactness::Relaxed {
+            if let BatchSizing::Fixed(b) = self.batch {
+                if b < 2 {
+                    bail!(
+                        "exactness = \"relaxed\" needs a batched kernel: set batch = \"auto\" \
+                         or batch >= 2 (got {b})"
+                    );
+                }
+            }
+        }
         if self.j == 0 || self.r_core == 0 {
             bail!("j and r_core must be positive");
         }
@@ -243,6 +273,25 @@ impl TrainConfig {
     }
 }
 
+fn parse_batch(v: &TomlValue) -> Result<BatchSizing> {
+    match v {
+        TomlValue::Str(s) if s == "auto" => Ok(BatchSizing::Auto),
+        TomlValue::Int(i) if *i >= 0 => Ok(BatchSizing::Fixed(*i as usize)),
+        other => bail!(
+            "batch must be \"auto\" or a non-negative integer, got {} {other:?}",
+            other.type_name()
+        ),
+    }
+}
+
+fn parse_exactness(s: &str) -> Result<Exactness> {
+    Ok(match s {
+        "exact" => Exactness::Exact,
+        "relaxed" | "hogwild" => Exactness::Relaxed,
+        other => bail!("unknown exactness {other:?} (expected \"exact\" or \"relaxed\")"),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +299,26 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_batch_and_exactness() {
+        let cfg = TrainConfig::from_toml_str("batch = \"auto\"\nexactness = \"exact\"\n").unwrap();
+        assert_eq!(cfg.batch, BatchSizing::Auto);
+        assert_eq!(cfg.exactness, Exactness::Exact);
+        let cfg = TrainConfig::from_toml_str("batch = 64\nexactness = \"relaxed\"\n").unwrap();
+        assert_eq!(cfg.batch, BatchSizing::Fixed(64));
+        assert_eq!(cfg.exactness, Exactness::Relaxed);
+        // hogwild is an accepted alias for the paper's semantics.
+        let cfg = TrainConfig::from_toml_str("exactness = \"hogwild\"\n").unwrap();
+        assert_eq!(cfg.exactness, Exactness::Relaxed);
+
+        assert!(TrainConfig::from_toml_str("batch = true").is_err());
+        assert!(TrainConfig::from_toml_str("batch = \"always\"").is_err());
+        assert!(TrainConfig::from_toml_str("exactness = \"sloppy\"").is_err());
+        // Relaxed exactness on the scalar path is a config error.
+        assert!(TrainConfig::from_toml_str("batch = 0\nexactness = \"relaxed\"").is_err());
+        assert!(TrainConfig::from_toml_str("batch = 2\nexactness = \"relaxed\"").is_ok());
     }
 
     #[test]

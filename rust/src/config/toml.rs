@@ -17,6 +17,17 @@ pub enum TomlValue {
 }
 
 impl TomlValue {
+    /// Human-readable value kind for error messages of keys that accept
+    /// several types (e.g. `batch = "auto"` vs `batch = 64`).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            TomlValue::Str(_) => "string",
+            TomlValue::Bool(_) => "bool",
+            TomlValue::Int(_) => "integer",
+            TomlValue::Float(_) => "float",
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -177,5 +188,13 @@ mod tests {
         assert!(TomlValue::Int(5).as_usize().unwrap() == 5);
         assert!(TomlValue::Str("x".into()).as_bool().is_err());
         assert!(TomlValue::Bool(true).as_f64().is_err());
+    }
+
+    #[test]
+    fn type_names() {
+        assert_eq!(TomlValue::Str("x".into()).type_name(), "string");
+        assert_eq!(TomlValue::Bool(true).type_name(), "bool");
+        assert_eq!(TomlValue::Int(1).type_name(), "integer");
+        assert_eq!(TomlValue::Float(1.5).type_name(), "float");
     }
 }

@@ -75,6 +75,26 @@ impl PjrtEngine {
         Self::with_batch_cap(artifacts_dir, j, r_core, hyper, usize::MAX)
     }
 
+    /// Like [`Self::new`] but sizes the mini-batch cap from the training
+    /// workload through the planner cost model
+    /// ([`crate::kernel::planner::pjrt_batch_cap`]) — the launcher's
+    /// default when no explicit `pjrt_batch_cap` is configured.
+    pub fn auto(
+        artifacts_dir: &std::path::Path,
+        j: usize,
+        r_core: usize,
+        hyper: SgdHyper,
+        train_nnz: usize,
+    ) -> Result<Self> {
+        Self::with_batch_cap(
+            artifacts_dir,
+            j,
+            r_core,
+            hyper,
+            crate::kernel::planner::pjrt_batch_cap(train_nnz),
+        )
+    }
+
     /// Like [`Self::new`] but only considers artifacts with batch ≤ `cap`.
     pub fn with_batch_cap(
         artifacts_dir: &std::path::Path,

@@ -71,7 +71,22 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build engine + model from a full config (the launcher path).
+    /// Equivalent to [`Self::from_config_for`] without a workload hint:
+    /// planner-sized knobs that need the training nnz (the PJRT
+    /// mini-batch cap) fall back to their legacy behavior.
     pub fn from_config(cfg: &TrainConfig, dims: &[usize], rng: &mut Rng) -> Result<(Self, TuckerModel)> {
+        Self::from_config_for(cfg, dims, None, rng)
+    }
+
+    /// [`Self::from_config`] with the training workload size, letting the
+    /// planner size the PJRT mini-batch cap when the config leaves it
+    /// unset.
+    pub fn from_config_for(
+        cfg: &TrainConfig,
+        dims: &[usize],
+        train_nnz: Option<usize>,
+        rng: &mut Rng,
+    ) -> Result<(Self, TuckerModel)> {
         let model = match cfg.algo {
             AlgoKind::FastTucker => TuckerModel::init_kruskal(rng, dims, cfg.j, cfg.r_core),
             _ => TuckerModel::init_dense(rng, dims, cfg.j),
@@ -80,7 +95,12 @@ impl Trainer {
             EngineKind::Native => {
                 let decomposer: Box<dyn Decomposer + Send> = match cfg.algo {
                     AlgoKind::FastTucker => {
-                        let fc = FastTuckerConfig { hyper: cfg.hyper, ..Default::default() };
+                        let fc = FastTuckerConfig {
+                            hyper: cfg.hyper,
+                            batch: cfg.batch,
+                            exactness: cfg.exactness,
+                            ..Default::default()
+                        };
                         Box::new(FastTucker::new(fc))
                     }
                     AlgoKind::CuTucker => Box::new(CuTucker::new(cfg.hyper)),
@@ -97,6 +117,8 @@ impl Trainer {
                 let po = ParallelOptions {
                     workers: cfg.workers,
                     hyper: cfg.hyper,
+                    batch: cfg.batch,
+                    exactness: cfg.exactness,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))
@@ -105,13 +127,17 @@ impl Trainer {
                 if cfg.algo != AlgoKind::FastTucker {
                     bail!("pjrt engine requires algo = fasttucker");
                 }
-                Engine::Pjrt(PjrtEngine::with_batch_cap(
-                    std::path::Path::new(&cfg.artifacts_dir),
-                    cfg.j,
-                    cfg.r_core,
-                    cfg.hyper,
-                    cfg.pjrt_batch_cap.unwrap_or(usize::MAX),
-                )?)
+                let dir = std::path::Path::new(&cfg.artifacts_dir);
+                let engine = match (cfg.pjrt_batch_cap, train_nnz) {
+                    (Some(cap), _) => {
+                        PjrtEngine::with_batch_cap(dir, cfg.j, cfg.r_core, cfg.hyper, cap)?
+                    }
+                    (None, Some(nnz)) => PjrtEngine::auto(dir, cfg.j, cfg.r_core, cfg.hyper, nnz)?,
+                    (None, None) => {
+                        PjrtEngine::with_batch_cap(dir, cfg.j, cfg.r_core, cfg.hyper, usize::MAX)?
+                    }
+                };
+                Engine::Pjrt(engine)
             }
         };
         let opts = TrainOptions {

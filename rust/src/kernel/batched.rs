@@ -1,14 +1,18 @@
 //! The batched kernel: cuFasterTucker-style fiber batching
 //! (arXiv:2210.06014) on top of the Theorem-1/2 contraction.
 //!
-//! [`run_plan`] executes a [`BatchPlan`] group by group:
+//! [`run_plan`] executes a [`BatchPlan`] group by group, where a group is
+//! a **tile of mode-0 fibers** (each a contiguous sub-run):
 //!
-//! * the group's shared **mode-0 factor row is staged once** and kept hot
-//!   in a local buffer, its SGD updates applied there sample by sample and
-//!   written back once at group end;
+//! * each fiber's shared **mode-0 factor row is staged once per sub-run**
+//!   and kept hot in a local buffer, its SGD updates applied there sample
+//!   by sample and written back at sub-run end;
 //! * the rows of every other mode are gathered into contiguous
-//!   `batch × J` panels up front (the plan guarantees they are pairwise
-//!   distinct within the group, so deferred reads/writes are exact);
+//!   `batch × J` panels up front (exact plans guarantee they are pairwise
+//!   distinct across the whole tile, so deferred reads/writes are exact;
+//!   relaxed plans let duplicates through — those samples read the
+//!   pre-group row and their deferred updates compose at group end,
+//!   hogwild-style);
 //! * step 1 of the contraction (`c = B^(n) a`) for modes ≥ 1 runs over the
 //!   panels with the Kruskal rows register-blocked **across samples** —
 //!   each loaded `b_r^(n)` row feeds four samples' accumulators — and
@@ -19,10 +23,14 @@
 //!
 //! Every floating-point reduction keeps the exact association of the
 //! scalar path's primitives (`matvec_rowmajor` / `dot` /
-//! `weighted_rowsum`), so the result is **bitwise identical** to
+//! `weighted_rowsum`), so under an [`Exactness::Exact`] plan the result
+//! is **bitwise identical** to
 //! [`scalar::run_ids`](crate::kernel::scalar::run_ids) over the same plan
-//! order — pinned by `tests/properties.rs` and enforced as this module's
-//! contract.
+//! order — pinned by `tests/properties.rs` (single-fiber and tiled) and
+//! enforced as this module's contract. Relaxed plans trade that for
+//! longer groups; the mode-0 chain stays exact either way.
+//!
+//! [`Exactness::Exact`]: crate::kernel::plan::Exactness
 //!
 //! [`minibatch_train_step`] / [`minibatch_predict`] are the deferred-read
 //! panel variants with *mini-batch* semantics (every sample reads the
@@ -136,12 +144,9 @@ pub fn run_plan<F: FactorAccess>(
         let ids = plan.group(g);
         let b = ids.len();
         samples += b;
-        let i0 = tensor.index(ids[0] as usize)[0] as usize;
 
-        // Stage the shared mode-0 row once per group.
-        factors.stage(0, i0, &mut ws.a0);
-
-        // Gather modes >= 1 into the panel (rows distinct by plan).
+        // Gather modes >= 1 into the panel (rows distinct by plan in
+        // exact mode; pre-group mini-batch snapshots in relaxed mode).
         for (s, &k) in ids.iter().enumerate() {
             let coords = tensor.index(k as usize);
             for n in 1..order {
@@ -176,9 +181,23 @@ pub fn run_plan<F: FactorAccess>(
             }
         }
 
-        // Sequential mode-0 chain: each sample observes the previous
-        // sample's update to the shared row.
+        // Sequential mode-0 chain over the tile's fiber sub-runs: each
+        // sample observes the previous sample's update to its fiber's
+        // shared row. The row is staged at each sub-run start and written
+        // back at sub-run end — the sort guarantees a mode-0 coordinate
+        // appears in at most one sub-run per group, so this observes
+        // exactly the rows scalar execution would (even in relaxed mode).
+        let mut cur_i0 = usize::MAX;
         for (s, &k) in ids.iter().enumerate() {
+            let coords = tensor.index(k as usize);
+            let i0 = coords[0] as usize;
+            if i0 != cur_i0 {
+                if cur_i0 != usize::MAX {
+                    factors.store(0, cur_i0, &ws.a0);
+                }
+                factors.stage(0, i0, &mut ws.a0);
+                cur_i0 = i0;
+            }
             let x = tensor.value(k as usize);
             let abase = s * order * j;
             let cbase = s * order * r;
@@ -239,12 +258,14 @@ pub fn run_plan<F: FactorAccess>(
             if let Some(log) = residual_log.as_mut() {
                 log.push(e);
             }
-            // Update the hot shared row (Eq. 13 on the group fiber).
+            // Update the hot shared row (Eq. 13 on the current fiber).
             scale_axpy(beta, -lr_f * e, &ws.gs_panel[gbase..gbase + j], &mut ws.a0);
         }
 
-        // Write the shared row back once.
-        factors.store(0, i0, &ws.a0);
+        // Write the last fiber's shared row back.
+        if cur_i0 != usize::MAX {
+            factors.store(0, cur_i0, &ws.a0);
+        }
 
         // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r.
         for n in 1..order {
@@ -272,8 +293,11 @@ pub fn run_plan<F: FactorAccess>(
             }
         }
 
-        // Deferred factor SGD for modes >= 1 (rows distinct in the group,
-        // so the write order cannot change any operand).
+        // Deferred factor SGD for modes >= 1. Exact plans: rows distinct
+        // in the group, so the write order cannot change any operand.
+        // Relaxed plans: duplicated rows were all staged pre-group
+        // (stale/mini-batch reads) and their updates compose here in
+        // sample order — the hogwild semantics the plan opted into.
         for (s, &k) in ids.iter().enumerate() {
             let coords = tensor.index(k as usize);
             let e = ws.e[s];
@@ -633,6 +657,59 @@ mod tests {
         assert_eq!(*cs, *cb);
         for (a, b) in gs.iter().zip(gb.iter()) {
             assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged");
+        }
+    }
+
+    #[test]
+    fn tiled_plan_matches_scalar_bitwise() {
+        // The tentpole invariant at module level: a multi-fiber tile over
+        // a hollow tensor (short fibers, so tiling actually engages) is
+        // still bitwise-identical to scalar over plan order.
+        let mut rng = Rng::new(5);
+        let dims = vec![512usize, 60, 55];
+        let tensor = crate::data::synth::random_uniform(&mut rng, &dims, 2000, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 6, 5);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let plan = BatchPlan::build_params(
+            &tensor,
+            &ids,
+            crate::kernel::plan::PlanParams::tiled(64, 8),
+        );
+
+        let mut f_scalar = model.factors.clone();
+        let mut ws = Workspace::new(3, 5, 6);
+        let st_s = scalar::run_ids(
+            &mut ws, &tensor, plan.ids(), &core, &[], CoreLayout::Packed,
+            &mut f_scalar, 0.01, 0.001, true, None,
+        );
+
+        let mut f_batch = model.factors.clone();
+        let mut bws = BatchWorkspace::new(3, 5, 6, 64);
+        let st_b = run_plan(
+            &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed,
+            &mut f_batch, 0.01, 0.001, true, None,
+        );
+
+        assert!(
+            plan.stats().mean_fibers_per_group() > 1.0,
+            "tile degenerate: {:?}",
+            plan.stats()
+        );
+        assert_eq!(st_s.samples, st_b.samples);
+        assert_eq!(st_s.sse.to_bits(), st_b.sse.to_bits());
+        for n in 0..3 {
+            for (a, b) in f_scalar
+                .mat(n)
+                .data()
+                .iter()
+                .zip(f_batch.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} factors diverged");
+            }
         }
     }
 

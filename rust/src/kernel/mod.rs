@@ -13,19 +13,35 @@
 //! | **factor SGD**       | Eq. 13: `a ← a - γ(e·GS + λa)` with `GS^(n) = Σ_r w_r b_r^(n)` | [`FactorAccess::update`] |
 //! | **core-grad accumulate** | Eq. 17: `∂/∂b_r^(n) = e·w_r^(n)·a^(n)`, applied with `M = |Ψ|` | `core_grad` accumulators + [`contract::apply_core_grad_raw`] |
 //!
+//! Module map:
+//!
+//! | Module       | Role |
+//! |--------------|------|
+//! | [`contract`] | Thm-1/2 contraction primitives + core-grad accumulate/apply (the per-sample math) |
+//! | [`plan`]     | [`BatchPlan`]: tiles of mode-0 fibers per group, [`Exactness::Exact`] (bitwise) or [`Exactness::Relaxed`] (hogwild) |
+//! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile) from fiber-length stats; [`BatchSizing`] `Auto`/`Fixed` |
+//! | [`scalar`]   | Reference executor: one nonzero at a time in stream order |
+//! | [`batched`]  | Fiber-batched executor over a plan: per-fiber hot rows, flat `batch × R_core` panels |
+//!
 //! Two execution strategies share that math bit-for-bit:
 //!
 //! * [`scalar`] — one nonzero at a time, in stream order. This is the
 //!   reference semantics (what `FastTucker::train_epoch` historically did
 //!   inline).
 //! * [`batched`] — the cuFasterTucker-style batching (arXiv:2210.06014):
-//!   nonzeros are grouped by their mode-1 fiber ([`plan::BatchPlan`]), the
-//!   shared mode-1 factor row is staged **once per group**, and the
-//!   contraction runs over contiguous `batch × R_core` panels so the inner
-//!   loops are flat, allocation-free, and auto-vectorizable. The group
-//!   construction guarantees the batched path is **bitwise identical** to
-//!   [`scalar`] run over the same (grouped) sample order — see
-//!   `tests/properties.rs::prop_batched_kernel_bitwise_matches_scalar`.
+//!   nonzeros are grouped into **tiles of mode-1 fibers**
+//!   ([`plan::BatchPlan`]), each fiber's shared factor row is staged
+//!   **once per sub-run**, and the contraction runs over contiguous
+//!   `batch × R_core` panels so the inner loops are flat,
+//!   allocation-free, and auto-vectorizable. Under
+//!   [`Exactness::Exact`] plans the group construction guarantees the
+//!   batched path is **bitwise identical** to [`scalar`] run over the
+//!   same (grouped) sample order — see
+//!   `tests/properties.rs::prop_batched_kernel_bitwise_matches_scalar`
+//!   and `prop_tiled_batched_bitwise_matches_scalar`.
+//!   [`Exactness::Relaxed`] plans drop the intra-tile distinctness
+//!   constraint (the paper's hogwild GPU write semantics) for much longer
+//!   groups on hollow tensors.
 //!
 //! The [`contract::CoreLayout`] parameter (Packed vs Strided walk of the
 //! Kruskal factors) threads through both strategies, keeping the paper's
@@ -33,6 +49,7 @@
 
 pub mod contract;
 pub mod plan;
+pub mod planner;
 pub mod scalar;
 pub mod batched;
 
@@ -41,7 +58,8 @@ pub use contract::{
     accumulate_core_grad, apply_core_grad, apply_core_grad_raw, build_strided,
     contract_staged, CoreLayout, Workspace,
 };
-pub use plan::{BatchPlan, PlanScratch};
+pub use plan::{BatchPlan, Exactness, PlanParams, PlanScratch};
+pub use planner::{BatchSizing, FiberStats};
 
 use crate::model::factors::FactorMatrices;
 use crate::util::linalg::scale_axpy;

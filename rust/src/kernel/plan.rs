@@ -1,23 +1,81 @@
 //! Batch planning: group a stream of sampled nonzero ids by their mode-1
 //! fiber (paper's 1-based mode 1 = our mode 0), CSF-style, so the batched
-//! kernel can stage each shared factor row once per group.
+//! kernel can stage each shared factor row once per fiber and run the
+//! contraction over flat `batch × R_core` panels.
 //!
-//! A group satisfies three invariants that together make the batched
-//! execution **bitwise identical** to scalar execution over the plan's
-//! sample order:
+//! A group is a **tile of fibers** (cuFasterTucker packs several fibers
+//! per thread block, arXiv:2210.06014): up to [`PlanParams::tile`]
+//! distinct mode-0 fibers, each a contiguous sub-run inside the group
+//! (the grouping sort keeps equal mode-0 coordinates adjacent), totalling
+//! at most [`PlanParams::max_batch`] samples. Under
+//! [`Exactness::Exact`] (the default) a group additionally satisfies the
+//! distinctness invariant that makes batched execution **bitwise
+//! identical** to scalar execution over the plan's sample order:
 //!
-//! 1. every sample in the group shares the same mode-0 coordinate (the
-//!    fiber whose factor row is staged once and kept hot);
-//! 2. within the group, the coordinates of every other mode are pairwise
-//!    distinct — so deferred panel reads/writes of those rows cannot
-//!    observe or clobber an intra-group update;
-//! 3. the group is at most `max_batch` long (panel capacity).
+//! 1. within the group, the coordinates of every mode ≥ 1 are pairwise
+//!    distinct **across the whole tile** — so deferred panel reads/writes
+//!    of those rows cannot observe or clobber an intra-group update;
+//! 2. each fiber's shared mode-0 row is staged once at its sub-run and
+//!    updated sequentially there; the sort guarantees a mode-0 coordinate
+//!    appears in at most one sub-run per group, so per-fiber staging
+//!    observes exactly the rows scalar execution would.
+//!
+//! [`Exactness::Relaxed`] drops invariant 1 (the paper's hogwild-style
+//! GPU write semantics): groups are then just capped tiles of the sorted
+//! stream, much longer on hollow tensors. Panel reads become mini-batch
+//! (pre-group) reads for duplicated mode-≥1 rows and their deferred SGD
+//! write-backs compose at group end, so results are no longer bitwise
+//! scalar-equal — but the plan is still a permutation of the input
+//! multiset, the mode-0 chain stays exact, and accuracy stays within
+//! noise of the exact path (pinned by `tests/properties.rs`).
 //!
 //! Relative sample order is preserved inside each fiber (the grouping sort
-//! is a stable counting sort, the same pass
+//! is stable via composite `(coord0, position)` keys, the same pass
 //! [`ModeSlices`](crate::tensor::ModeSlices) does over a whole tensor).
 
+use crate::metrics::PlanStats;
 use crate::tensor::SparseTensor;
+
+/// Collision semantics of a plan (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Exactness {
+    /// Intra-group mode-≥1 rows pairwise distinct: batched execution is
+    /// bitwise identical to scalar over plan order. The property-test
+    /// oracle and the default.
+    #[default]
+    Exact,
+    /// Ignore intra-group collisions (hogwild, the paper's GPU
+    /// semantics): longer groups, stale panel reads under collision.
+    Relaxed,
+}
+
+/// Shape of the groups a plan may form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanParams {
+    /// Maximum samples per group (panel capacity, ≥ 1).
+    pub max_batch: usize,
+    /// Maximum distinct mode-0 fibers per group (≥ 1; 1 = the legacy
+    /// one-fiber-per-group plans).
+    pub tile: usize,
+    pub exactness: Exactness,
+}
+
+impl PlanParams {
+    /// Legacy single-fiber exact plan with group cap `max_batch`.
+    pub fn exact(max_batch: usize) -> PlanParams {
+        PlanParams { max_batch, tile: 1, exactness: Exactness::Exact }
+    }
+
+    /// Exact tiled plan: up to `tile` fibers per group.
+    pub fn tiled(max_batch: usize, tile: usize) -> PlanParams {
+        PlanParams { max_batch, tile, exactness: Exactness::Exact }
+    }
+
+    /// Relaxed (hogwild) tiled plan.
+    pub fn relaxed(max_batch: usize, tile: usize) -> PlanParams {
+        PlanParams { max_batch, tile, exactness: Exactness::Relaxed }
+    }
+}
 
 /// An execution plan: grouped nonzero ids plus group boundaries.
 #[derive(Clone, Debug)]
@@ -25,24 +83,33 @@ pub struct BatchPlan {
     ids: Vec<u32>,
     /// `offsets[g]..offsets[g+1]` delimit group `g` in `ids`.
     offsets: Vec<usize>,
-    max_batch: usize,
+    params: PlanParams,
+    /// Fiber sub-runs summed over groups (a fiber split across groups
+    /// counts once per group it appears in) — the tile-occupancy
+    /// numerator.
+    fiber_slots: usize,
 }
 
-/// Reusable scratch for [`BatchPlan::build_with_scratch`]: the per-mode
-/// stamp arrays are O(Σ dims) and the sort keys O(ids), so hot callers
-/// (one plan per Latin-schedule worker pass) keep one of these per worker
-/// instead of reallocating per call. Stamps stay valid across builds via
-/// a monotone group serial.
+/// Reusable scratch for [`BatchPlan::build_params_with_scratch`]: the
+/// per-mode stamp arrays are O(Σ dims), the sort keys O(ids), and the
+/// recycled id/offset buffers O(ids), so hot callers (one plan per
+/// Latin-schedule worker pass) keep one of these per worker and planning
+/// allocates nothing after warmup. Stamps stay valid across builds via a
+/// monotone group serial; finished plans donate their buffers back
+/// through [`PlanScratch::recycle`].
 #[derive(Default)]
 pub struct PlanScratch {
     /// `(coord0, original position)` sort keys.
     keys: Vec<(u32, u32)>,
-    /// Last-group serial per coordinate, per mode ≥ 1.
+    /// Last-group serial per coordinate, per mode ≥ 1 (exact plans only).
     stamps: Vec<Vec<u32>>,
     /// Dims fingerprint the stamps were sized for.
     dims: Vec<usize>,
     /// Monotone group serial (stale stamps compare unequal).
     serial: u32,
+    /// Recycled plan buffers (donated by [`Self::recycle`]).
+    ids_spare: Vec<u32>,
+    offsets_spare: Vec<usize>,
 }
 
 impl PlanScratch {
@@ -50,11 +117,30 @@ impl PlanScratch {
         Self::default()
     }
 
-    fn ensure(&mut self, dims: &[usize], upcoming_groups: usize) {
+    /// Donate a finished plan's buffers back for the next build — the
+    /// counterpart of [`BatchPlan::build_params_with_scratch`] that makes
+    /// per-pass planning allocation-free.
+    pub fn recycle(&mut self, plan: BatchPlan) {
+        // Keep the larger of old/new so capacity ratchets up once.
+        if plan.ids.capacity() > self.ids_spare.capacity() {
+            self.ids_spare = plan.ids;
+        }
+        if plan.offsets.capacity() > self.offsets_spare.capacity() {
+            self.offsets_spare = plan.offsets;
+        }
+    }
+
+    fn ensure(&mut self, dims: &[usize], upcoming_groups: usize, need_stamps: bool) {
+        let stamps_missing = need_stamps && self.stamps.len() != dims.len().saturating_sub(1);
         let refresh = self.dims != dims
+            || stamps_missing
             || self.serial > u32::MAX - (upcoming_groups as u32).saturating_add(2);
         if refresh {
-            self.stamps = dims[1..].iter().map(|&d| vec![u32::MAX; d]).collect();
+            self.stamps = if need_stamps {
+                dims[1..].iter().map(|&d| vec![u32::MAX; d]).collect()
+            } else {
+                Vec::new()
+            };
             self.dims = dims.to_vec();
             self.serial = 0;
         }
@@ -62,12 +148,18 @@ impl PlanScratch {
 }
 
 impl BatchPlan {
-    /// Build a plan over `ids` (nonzero ids into `tensor`). Groups are
-    /// capped at `max_batch` (≥ 1). Allocates fresh scratch — use
-    /// [`Self::build_with_scratch`] on hot paths.
+    /// Build a legacy single-fiber exact plan over `ids` (nonzero ids
+    /// into `tensor`), groups capped at `max_batch` (≥ 1). Allocates
+    /// fresh scratch — use the `_with_scratch` variants on hot paths.
     pub fn build(tensor: &SparseTensor, ids: &[u32], max_batch: usize) -> BatchPlan {
+        Self::build_params(tensor, ids, PlanParams::exact(max_batch))
+    }
+
+    /// [`Self::build`] with explicit [`PlanParams`] (tile width and
+    /// exactness).
+    pub fn build_params(tensor: &SparseTensor, ids: &[u32], params: PlanParams) -> BatchPlan {
         let mut scratch = PlanScratch::new();
-        Self::build_with_scratch(tensor, ids, max_batch, &mut scratch)
+        Self::build_params_with_scratch(tensor, ids, params, &mut scratch)
     }
 
     /// [`Self::build`] with caller-owned [`PlanScratch`].
@@ -77,9 +169,23 @@ impl BatchPlan {
         max_batch: usize,
         scratch: &mut PlanScratch,
     ) -> BatchPlan {
-        assert!(max_batch >= 1);
+        Self::build_params_with_scratch(tensor, ids, PlanParams::exact(max_batch), scratch)
+    }
+
+    /// The full builder: tile of fibers per group, exact or relaxed.
+    /// Allocation-free when `scratch` has recycled buffers (see
+    /// [`PlanScratch::recycle`]).
+    pub fn build_params_with_scratch(
+        tensor: &SparseTensor,
+        ids: &[u32],
+        params: PlanParams,
+        scratch: &mut PlanScratch,
+    ) -> BatchPlan {
+        assert!(params.max_batch >= 1);
+        assert!(params.tile >= 1);
         let order = tensor.order();
-        scratch.ensure(tensor.dims(), ids.len());
+        let exact = params.exactness == Exactness::Exact;
+        scratch.ensure(tensor.dims(), ids.len(), exact);
 
         // Stable sort by mode-0 coordinate: the composite key
         // `(coord0, stream position)` makes the in-place unstable sort
@@ -91,37 +197,56 @@ impl BatchPlan {
                 (tensor.index(k as usize)[0], pos as u32)
             }));
         scratch.keys.sort_unstable();
-        let sorted: Vec<u32> = scratch.keys.iter().map(|&(_, pos)| ids[pos as usize]).collect();
+        let mut sorted = std::mem::take(&mut scratch.ids_spare);
+        sorted.clear();
+        sorted.extend(scratch.keys.iter().map(|&(_, pos)| ids[pos as usize]));
 
-        // Split fibers into groups: cap length and keep modes >= 1
-        // coordinates distinct within a group. `stamps[n-1][coord]` holds
-        // the serial of the last group that saw that coordinate.
-        let mut offsets = vec![0usize];
+        // Split the sorted stream into groups: cap total length, cap the
+        // number of fiber sub-runs at the tile width, and (exact mode)
+        // keep mode-≥1 coordinates distinct across the whole tile.
+        // `stamps[n-1][coord]` holds the serial of the last group that
+        // saw that coordinate.
+        let mut offsets = std::mem::take(&mut scratch.offsets_spare);
+        offsets.clear();
+        offsets.push(0usize);
         let mut serial: u32 = scratch.serial + 1;
         let mut group_len = 0usize;
-        let mut group_coord0 = 0u32;
+        let mut group_fibers = 0usize;
+        let mut fiber_slots = 0usize;
+        let mut prev_coord0 = 0u32;
         for (pos, &k) in sorted.iter().enumerate() {
             let coords = tensor.index(k as usize);
-            let must_split = group_len == 0
-                || coords[0] != group_coord0
-                || group_len == max_batch
-                || (1..order).any(|n| scratch.stamps[n - 1][coords[n] as usize] == serial);
-            if must_split && group_len > 0 {
+            let mut new_fiber = group_len == 0 || coords[0] != prev_coord0;
+            let must_split = group_len > 0
+                && (group_len == params.max_batch
+                    || (new_fiber && group_fibers == params.tile)
+                    || (exact
+                        && (1..order)
+                            .any(|n| scratch.stamps[n - 1][coords[n] as usize] == serial)));
+            if must_split {
                 offsets.push(pos);
                 serial += 1;
                 group_len = 0;
+                group_fibers = 0;
+                new_fiber = true;
             }
-            group_coord0 = coords[0];
-            for n in 1..order {
-                scratch.stamps[n - 1][coords[n] as usize] = serial;
+            if exact {
+                for n in 1..order {
+                    scratch.stamps[n - 1][coords[n] as usize] = serial;
+                }
             }
+            if new_fiber {
+                group_fibers += 1;
+                fiber_slots += 1;
+            }
+            prev_coord0 = coords[0];
             group_len += 1;
         }
         if group_len > 0 {
             offsets.push(sorted.len());
         }
         scratch.serial = serial;
-        BatchPlan { ids: sorted, offsets, max_batch }
+        BatchPlan { ids: sorted, offsets, params, fiber_slots }
     }
 
     /// All ids in execution order (the scalar reference must iterate this
@@ -150,7 +275,25 @@ impl BatchPlan {
 
     /// The group-size cap the plan was built with.
     pub fn max_batch(&self) -> usize {
-        self.max_batch
+        self.params.max_batch
+    }
+
+    /// The fiber-tile width the plan was built with.
+    pub fn tile(&self) -> usize {
+        self.params.tile
+    }
+
+    pub fn exactness(&self) -> Exactness {
+        self.params.exactness
+    }
+
+    pub fn params(&self) -> PlanParams {
+        self.params
+    }
+
+    /// Fiber sub-runs summed over groups (see field docs).
+    pub fn fiber_slots(&self) -> usize {
+        self.fiber_slots
     }
 
     /// Mean group size (batching effectiveness diagnostic).
@@ -160,6 +303,17 @@ impl BatchPlan {
         }
         self.ids.len() as f64 / self.n_groups() as f64
     }
+
+    /// Observability snapshot for `metrics`/bench reporting.
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            samples: self.len(),
+            n_groups: self.n_groups(),
+            fiber_slots: self.fiber_slots,
+            cap: self.params.max_batch,
+            tile: self.params.tile,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +321,61 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::util::propcheck::forall;
+
+    fn check_tile_invariants(t: &SparseTensor, ids: &[u32], plan: &BatchPlan) {
+        let order = t.order();
+        let params = plan.params();
+
+        // Permutation of the input multiset (holds for exact AND relaxed).
+        let mut a = ids.to_vec();
+        let mut b = plan.ids().to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "plan is not a permutation of the sample multiset");
+
+        let mut total = 0usize;
+        let mut fiber_slots = 0usize;
+        for g in 0..plan.n_groups() {
+            let grp = plan.group(g);
+            assert!(!grp.is_empty() && grp.len() <= params.max_batch);
+            total += grp.len();
+
+            // Fibers form contiguous sub-runs; count them and check the
+            // tile cap and per-fiber slot integrity (a coord0 value never
+            // appears in two separate sub-runs of one group).
+            let mut fibers_seen: Vec<u32> = Vec::new();
+            let mut prev = None;
+            for &k in grp {
+                let c0 = t.index(k as usize)[0];
+                if prev != Some(c0) {
+                    assert!(
+                        !fibers_seen.contains(&c0),
+                        "fiber {c0} split into two sub-runs within a group"
+                    );
+                    fibers_seen.push(c0);
+                    prev = Some(c0);
+                }
+            }
+            assert!(fibers_seen.len() <= params.tile, "tile width exceeded");
+            fiber_slots += fibers_seen.len();
+
+            // Exact mode: modes >= 1 distinct across the whole tile.
+            if params.exactness == Exactness::Exact {
+                for n in 1..order {
+                    let mut seen = std::collections::HashSet::new();
+                    for &k in grp {
+                        let coords = t.index(k as usize);
+                        assert!(
+                            seen.insert(coords[n]),
+                            "mode {n} coordinate repeated within an exact group"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(total, plan.len());
+        assert_eq!(fiber_slots, plan.fiber_slots(), "fiber_slots miscounted");
+    }
 
     #[test]
     fn prop_plan_invariants() {
@@ -179,50 +388,106 @@ mod tests {
             let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
             let max_batch = 1 + rng.gen_range(16);
             let plan = BatchPlan::build(&t, &ids, max_batch);
-
-            // Permutation of the input multiset.
-            let mut a = ids.clone();
-            let mut b = plan.ids().to_vec();
-            a.sort_unstable();
-            b.sort_unstable();
-            assert_eq!(a, b);
-
-            // Group invariants.
-            let mut total = 0usize;
-            for g in 0..plan.n_groups() {
-                let grp = plan.group(g);
-                assert!(!grp.is_empty() && grp.len() <= max_batch);
-                total += grp.len();
-                let i0 = t.index(grp[0] as usize)[0];
-                for n in 1..order {
-                    let mut seen = std::collections::HashSet::new();
-                    for &k in grp {
-                        let coords = t.index(k as usize);
-                        assert_eq!(coords[0], i0, "group shares mode-0 fiber");
-                        assert!(
-                            seen.insert(coords[n]),
-                            "mode {n} coordinate repeated within a group"
-                        );
-                    }
-                }
-            }
-            assert_eq!(total, plan.len());
+            assert_eq!(plan.tile(), 1);
+            check_tile_invariants(&t, &ids, &plan);
         });
     }
 
     #[test]
+    fn prop_tiled_plan_invariants() {
+        // Tiled and relaxed plans over random shapes: permutation, caps,
+        // per-fiber slot integrity, and (exact) tile-wide distinctness.
+        forall("tiled/relaxed plan invariants", 24, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(30)).collect();
+            let nnz = 1 + rng.gen_range(400);
+            let t = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+            let n_ids = 1 + rng.gen_range(nnz);
+            let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+            let params = PlanParams {
+                max_batch: 1 + rng.gen_range(48),
+                tile: 1 + rng.gen_range(8),
+                exactness: if rng.gen_range(2) == 0 {
+                    Exactness::Exact
+                } else {
+                    Exactness::Relaxed
+                },
+            };
+            let plan = BatchPlan::build_params(&t, &ids, params);
+            check_tile_invariants(&t, &ids, &plan);
+        });
+    }
+
+    #[test]
+    fn prop_relaxed_is_permutation_and_not_shorter() {
+        // Relaxed plans: always a permutation of the multiset, and never
+        // more groups than the exact plan with identical caps (dropping a
+        // split condition can only merge groups).
+        forall("relaxed plan: permutation + fewer groups", 16, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(12)).collect();
+            let nnz = 50 + rng.gen_range(400);
+            let t = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+            let ids: Vec<u32> = (0..nnz as u32).collect();
+            let (cap, tile) = (2 + rng.gen_range(48), 1 + rng.gen_range(8));
+            let exact = BatchPlan::build_params(&t, &ids, PlanParams::tiled(cap, tile));
+            let relaxed = BatchPlan::build_params(&t, &ids, PlanParams::relaxed(cap, tile));
+            check_tile_invariants(&t, &ids, &relaxed);
+            assert!(
+                relaxed.n_groups() <= exact.n_groups(),
+                "relaxed formed more groups ({}) than exact ({})",
+                relaxed.n_groups(),
+                exact.n_groups()
+            );
+            assert_eq!(relaxed.ids().len(), ids.len());
+        });
+    }
+
+    #[test]
+    fn tiled_plans_lift_group_len_on_hollow_tensors() {
+        // The acceptance-criterion shape: hollow tensor (mean mode-0
+        // fiber length < 4); tiling must raise mean group length >= 4x
+        // over single-fiber plans. Trailing modes are wide enough (512)
+        // that exact-mode collision splits (~sqrt of the trailing dim)
+        // don't cap groups below the 4x bar.
+        let mut rng = crate::util::Rng::new(11);
+        let dims = vec![4096usize, 512, 512];
+        let t = synth::random_uniform(&mut rng, &dims, 8192, 1.0, 5.0);
+        let ids: Vec<u32> = (0..t.nnz() as u32).collect();
+        let single = BatchPlan::build_params(&t, &ids, PlanParams::exact(64));
+        assert!(
+            single.mean_group_len() < 4.0,
+            "workload not hollow: mean group {}",
+            single.mean_group_len()
+        );
+        let tiled = BatchPlan::build_params(&t, &ids, PlanParams::tiled(64, 32));
+        assert!(
+            tiled.mean_group_len() >= 4.0 * single.mean_group_len(),
+            "tiling lifted mean group only {}x ({} -> {})",
+            tiled.mean_group_len() / single.mean_group_len(),
+            single.mean_group_len(),
+            tiled.mean_group_len()
+        );
+        let relaxed = BatchPlan::build_params(&t, &ids, PlanParams::relaxed(64, 64));
+        assert!(relaxed.mean_group_len() >= tiled.mean_group_len());
+    }
+
+    #[test]
     fn fiber_order_is_stable() {
-        // Within one fiber, ids keep their stream order.
+        // Within one fiber, ids keep their stream order (tile > 1 too).
         let t = synth::random_uniform(&mut crate::util::Rng::new(1), &[4, 50, 50], 200, 1.0, 2.0);
         let ids: Vec<u32> = (0..200).collect();
-        let plan = BatchPlan::build(&t, &ids, 64);
-        let mut last_pos: Vec<Option<u32>> = vec![None; 4];
-        for &k in plan.ids() {
-            let f = t.index(k as usize)[0] as usize;
-            if let Some(prev) = last_pos[f] {
-                assert!(k > prev, "fiber {f}: {k} after {prev}");
+        for params in [PlanParams::exact(64), PlanParams::tiled(64, 4), PlanParams::relaxed(64, 4)]
+        {
+            let plan = BatchPlan::build_params(&t, &ids, params);
+            let mut last_pos: Vec<Option<u32>> = vec![None; 4];
+            for &k in plan.ids() {
+                let f = t.index(k as usize)[0] as usize;
+                if let Some(prev) = last_pos[f] {
+                    assert!(k > prev, "fiber {f}: {k} after {prev}");
+                }
+                last_pos[f] = Some(k);
             }
-            last_pos[f] = Some(k);
         }
     }
 
@@ -232,5 +497,48 @@ mod tests {
         let plan = BatchPlan::build(&t, &[], 8);
         assert_eq!(plan.n_groups(), 0);
         assert!(plan.is_empty());
+        assert_eq!(plan.fiber_slots(), 0);
+    }
+
+    #[test]
+    fn recycled_scratch_builds_identical_plans() {
+        // recycle() must not change planning results, and repeated builds
+        // through one scratch reuse the donated buffers.
+        let mut rng = crate::util::Rng::new(3);
+        let t = synth::random_uniform(&mut rng, &[32, 40, 40], 600, 1.0, 5.0);
+        let ids: Vec<u32> = (0..600).collect();
+        let params = PlanParams::tiled(32, 4);
+        let fresh = BatchPlan::build_params(&t, &ids, params);
+        let mut scratch = PlanScratch::new();
+        for _ in 0..3 {
+            let plan = BatchPlan::build_params_with_scratch(&t, &ids, params, &mut scratch);
+            assert_eq!(plan.ids(), fresh.ids());
+            assert_eq!(plan.n_groups(), fresh.n_groups());
+            assert_eq!(plan.fiber_slots(), fresh.fiber_slots());
+            scratch.recycle(plan);
+        }
+    }
+
+    #[test]
+    fn scratch_alternates_exact_and_relaxed() {
+        // A shared scratch must keep its stamps coherent when relaxed
+        // builds (which skip stamping) interleave with exact builds.
+        let mut rng = crate::util::Rng::new(4);
+        let t = synth::random_uniform(&mut rng, &[16, 20, 20], 300, 1.0, 5.0);
+        let ids: Vec<u32> = (0..300).collect();
+        let mut scratch = PlanScratch::new();
+        let e1 = BatchPlan::build_params_with_scratch(
+            &t, &ids, PlanParams::tiled(32, 4), &mut scratch,
+        );
+        let r = BatchPlan::build_params_with_scratch(
+            &t, &ids, PlanParams::relaxed(32, 4), &mut scratch,
+        );
+        let e2 = BatchPlan::build_params_with_scratch(
+            &t, &ids, PlanParams::tiled(32, 4), &mut scratch,
+        );
+        assert_eq!(e1.ids(), e2.ids());
+        assert_eq!(e1.n_groups(), e2.n_groups());
+        check_tile_invariants(&t, &ids, &e2);
+        check_tile_invariants(&t, &ids, &r);
     }
 }

@@ -1,0 +1,286 @@
+//! The batch planner: a small cost model that picks [`PlanParams`] (group
+//! cap and fiber-tile width) per dataset from mode-0 fiber-length
+//! statistics, replacing the fixed `batch: 64`-style constants the
+//! engines used to hard-code.
+//!
+//! The model has two inputs:
+//!
+//! * **Workspace footprint** — the batched kernel's panels cost
+//!   `order · 2·(J + R_core) · 4` bytes per sample slot
+//!   ([`BatchWorkspace`](crate::kernel::BatchWorkspace): `a`/`gs` panels
+//!   of J floats and `c`/`w` panels of R floats, per mode). The cap is
+//!   the largest power of two whose panels fit [`PANEL_BUDGET_BYTES`]
+//!   (an L2-resident working set, the CPU analogue of the paper's
+//!   shared-memory sizing), clamped to `[`[`MIN_CAP`]`, `[`MAX_CAP`]`]`
+//!   and to the workload size.
+//! * **Fiber-length statistics** ([`FiberStats`]) — on hollow HOHDST
+//!   tensors (short fibers, the common recommender shape) single-fiber
+//!   groups collapse toward scalar execution; the tile width is chosen
+//!   so the *expected* group length reaches the cap:
+//!   `tile ≈ cap / mean_fiber_len`, clamped to `[1, `[`MAX_TILE`]`]`.
+//!   Tall tensors (fibers longer than the cap) get `tile = 1` — extra
+//!   slots could never be filled.
+//!
+//! [`BatchSizing`] is the user-facing switch the engine configs carry:
+//! `Auto` routes through this planner, `Fixed(n)` pins the legacy
+//! single-fiber cap (0/1 = scalar execution).
+
+use crate::kernel::plan::{Exactness, PlanParams};
+use crate::tensor::SparseTensor;
+
+/// Panel working-set budget the cap is sized against (≈ L2-resident).
+pub const PANEL_BUDGET_BYTES: usize = 256 * 1024;
+/// Cap bounds (power of two inside these).
+pub const MIN_CAP: usize = 8;
+pub const MAX_CAP: usize = 512;
+/// Tile-width bound: staging cost per fiber is tiny (J floats), but very
+/// wide tiles stop paying once groups reach the cap.
+pub const MAX_TILE: usize = 64;
+
+/// How an engine sizes its batch groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSizing {
+    /// Let the planner pick cap and tile from the dataset's fiber stats.
+    Auto,
+    /// Pin the legacy single-fiber group cap; `0`/`1` select the scalar
+    /// kernel.
+    Fixed(usize),
+}
+
+impl BatchSizing {
+    /// Resolve to concrete [`PlanParams`] for a workload, or `None` when
+    /// this sizing selects the scalar kernel.
+    pub fn resolve(
+        self,
+        tensor: &SparseTensor,
+        ids_hint: usize,
+        order: usize,
+        r_core: usize,
+        j: usize,
+        exactness: Exactness,
+    ) -> Option<PlanParams> {
+        match self {
+            BatchSizing::Fixed(b) if b < 2 => None,
+            BatchSizing::Fixed(b) => Some(PlanParams { max_batch: b, tile: 1, exactness }),
+            BatchSizing::Auto => {
+                let stats = FiberStats::compute_full(tensor, ids_hint);
+                Some(choose_params(&stats, order, r_core, j, exactness))
+            }
+        }
+    }
+}
+
+/// Mode-0 fiber-length statistics of a workload (an id multiset over a
+/// tensor).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FiberStats {
+    /// Samples the stats cover.
+    pub n_ids: usize,
+    /// Distinct mode-0 fibers among them.
+    pub n_fibers: usize,
+    pub mean_len: f64,
+    /// 90th-percentile fiber length.
+    pub p90_len: usize,
+    pub max_len: usize,
+}
+
+impl FiberStats {
+    /// Count fiber lengths of an explicit id multiset. O(ids + dims[0]).
+    pub fn compute(tensor: &SparseTensor, ids: &[u32]) -> FiberStats {
+        let mut counts = vec![0u32; tensor.dims()[0]];
+        for &k in ids {
+            counts[tensor.index(k as usize)[0] as usize] += 1;
+        }
+        Self::from_counts(ids.len(), &mut counts)
+    }
+
+    /// Stats over the whole tensor, scaled down to a workload of
+    /// `ids_hint` samples (what a uniform sample of that size would see:
+    /// lengths shrink proportionally, the fiber support does not grow).
+    pub fn compute_full(tensor: &SparseTensor, ids_hint: usize) -> FiberStats {
+        let mut counts = vec![0u32; tensor.dims()[0]];
+        for k in 0..tensor.nnz() {
+            counts[tensor.index(k)[0] as usize] += 1;
+        }
+        let mut stats = Self::from_counts(tensor.nnz(), &mut counts);
+        if ids_hint < stats.n_ids && stats.n_ids > 0 {
+            let frac = ids_hint as f64 / stats.n_ids as f64;
+            stats.mean_len = (stats.mean_len * frac).max(1.0);
+            stats.p90_len = ((stats.p90_len as f64 * frac).round() as usize).max(1);
+            stats.max_len = ((stats.max_len as f64 * frac).round() as usize).max(1);
+            stats.n_ids = ids_hint;
+        }
+        stats
+    }
+
+    fn from_counts(n_ids: usize, counts: &mut [u32]) -> FiberStats {
+        // Sort the nonzero counts in place (counts buffer is scratch).
+        counts.sort_unstable();
+        let first_nonzero = counts.iter().position(|&c| c > 0).unwrap_or(counts.len());
+        let lens = &counts[first_nonzero..];
+        let n_fibers = lens.len();
+        if n_fibers == 0 {
+            return FiberStats::default();
+        }
+        let p90 = lens[((n_fibers * 9).div_ceil(10)).saturating_sub(1).min(n_fibers - 1)];
+        FiberStats {
+            n_ids,
+            n_fibers,
+            mean_len: n_ids as f64 / n_fibers as f64,
+            p90_len: p90 as usize,
+            max_len: lens[n_fibers - 1] as usize,
+        }
+    }
+}
+
+/// The cost model (see module docs): group cap from the panel footprint,
+/// tile width from the fiber-length statistics.
+pub fn choose_params(
+    stats: &FiberStats,
+    order: usize,
+    r_core: usize,
+    j: usize,
+    exactness: Exactness,
+) -> PlanParams {
+    let bytes_per_sample = order.max(1) * 2 * (j + r_core) * 4;
+    let mut cap = PANEL_BUDGET_BYTES / bytes_per_sample.max(1);
+    cap = cap.clamp(MIN_CAP, MAX_CAP);
+    // Never size workspaces far beyond the workload itself.
+    if stats.n_ids > 0 {
+        cap = cap.min(stats.n_ids.next_power_of_two().max(MIN_CAP));
+    }
+    cap = prev_power_of_two(cap);
+    let mean = stats.mean_len.max(1.0);
+    let tile = if mean >= cap as f64 {
+        1
+    } else {
+        ((cap as f64 / mean).ceil() as usize).clamp(1, MAX_TILE.min(cap))
+    };
+    PlanParams { max_batch: cap, tile, exactness }
+}
+
+/// Mini-batch cap for the PJRT (AOT artifact) path: its `train_step`
+/// applies a *sum-reduced* mini-batch gradient, so batches much larger
+/// than the workload average away per-epoch progress on small tensors.
+/// Aim for ≥ ~64 optimizer steps per epoch; the runtime picks the
+/// largest compiled artifact batch under this cap.
+pub fn pjrt_batch_cap(nnz: usize) -> usize {
+    (nnz / 64).max(1).next_power_of_two().clamp(64, 65_536)
+}
+
+fn prev_power_of_two(x: usize) -> usize {
+    debug_assert!(x >= 1);
+    1usize << (usize::BITS - 1 - x.leading_zeros())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::tensor::SparseTensor;
+    use crate::util::Rng;
+
+    /// Order-3 tensor with one nonzero per given mode-0 coordinate.
+    fn tensor_with_fibers(fiber_of_nnz: &[u32], dim0: usize) -> SparseTensor {
+        let mut indices = Vec::new();
+        let values = vec![1.0f32; fiber_of_nnz.len()];
+        for (i, &f) in fiber_of_nnz.iter().enumerate() {
+            indices.extend_from_slice(&[f, (i % 7) as u32, (i % 5) as u32]);
+        }
+        SparseTensor::new_unchecked(vec![dim0, 7, 5], indices, values)
+    }
+
+    #[test]
+    fn fiber_stats_on_degenerate_shapes() {
+        // All-singleton fibers: every nonzero its own fiber.
+        let t = tensor_with_fibers(&(0..100u32).collect::<Vec<_>>(), 100);
+        let ids: Vec<u32> = (0..100).collect();
+        let s = FiberStats::compute(&t, &ids);
+        assert_eq!(s.n_fibers, 100);
+        assert!((s.mean_len - 1.0).abs() < 1e-12);
+        assert_eq!(s.p90_len, 1);
+        assert_eq!(s.max_len, 1);
+
+        // One giant fiber.
+        let t = tensor_with_fibers(&vec![3u32; 100], 10);
+        let s = FiberStats::compute(&t, &ids);
+        assert_eq!(s.n_fibers, 1);
+        assert!((s.mean_len - 100.0).abs() < 1e-12);
+        assert_eq!(s.max_len, 100);
+        assert_eq!(s.p90_len, 100);
+    }
+
+    #[test]
+    fn planner_tiles_hollow_and_not_tall() {
+        // All-singleton fibers => widest useful tile.
+        let singleton = FiberStats { n_ids: 100_000, n_fibers: 100_000, mean_len: 1.0, p90_len: 1, max_len: 1 };
+        let p = choose_params(&singleton, 3, 16, 16, Exactness::Exact);
+        assert!(p.max_batch.is_power_of_two());
+        assert!((MIN_CAP..=MAX_CAP).contains(&p.max_batch));
+        assert_eq!(p.tile, MAX_TILE.min(p.max_batch), "singleton fibers want the max tile");
+
+        // One giant fiber => single-fiber groups suffice.
+        let giant = FiberStats { n_ids: 100_000, n_fibers: 1, mean_len: 100_000.0, p90_len: 100_000, max_len: 100_000 };
+        let p = choose_params(&giant, 3, 16, 16, Exactness::Relaxed);
+        assert_eq!(p.tile, 1);
+        assert_eq!(p.exactness, Exactness::Relaxed);
+    }
+
+    #[test]
+    fn planner_cap_respects_budget_and_workload() {
+        // Budget shrinks the cap as panels grow.
+        let s = FiberStats { n_ids: 1 << 20, n_fibers: 1 << 12, mean_len: 256.0, p90_len: 400, max_len: 800 };
+        let small = choose_params(&s, 3, 8, 8, Exactness::Exact).max_batch;
+        let big = choose_params(&s, 3, 64, 64, Exactness::Exact).max_batch;
+        assert!(big <= small, "bigger panels must not get a bigger cap");
+        assert!(big >= MIN_CAP);
+
+        // Tiny workloads don't get giant workspaces.
+        let tiny = FiberStats { n_ids: 20, n_fibers: 10, mean_len: 2.0, p90_len: 3, max_len: 4 };
+        let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact);
+        assert!(p.max_batch <= 32, "cap {} for a 20-sample workload", p.max_batch);
+    }
+
+    #[test]
+    fn batch_sizing_resolves() {
+        let mut rng = Rng::new(9);
+        let t = synth::random_uniform(&mut rng, &[128, 32, 32], 1000, 1.0, 5.0);
+        assert_eq!(
+            BatchSizing::Fixed(0).resolve(&t, 1000, 3, 4, 4, Exactness::Exact),
+            None
+        );
+        assert_eq!(
+            BatchSizing::Fixed(1).resolve(&t, 1000, 3, 4, 4, Exactness::Exact),
+            None
+        );
+        let fixed = BatchSizing::Fixed(48)
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Relaxed)
+            .unwrap();
+        assert_eq!(fixed.max_batch, 48);
+        assert_eq!(fixed.tile, 1);
+        assert_eq!(fixed.exactness, Exactness::Relaxed);
+        let auto = BatchSizing::Auto
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Exact)
+            .unwrap();
+        assert!(auto.max_batch >= MIN_CAP);
+        // mean fiber len ~ 1000/128 ≈ 7.8 — hollow, so the tile engages.
+        assert!(auto.tile > 1, "hollow tensor must tile: {auto:?}");
+    }
+
+    #[test]
+    fn pjrt_cap_scales_with_nnz() {
+        assert_eq!(pjrt_batch_cap(0), 64);
+        assert_eq!(pjrt_batch_cap(4_000), 64);
+        assert_eq!(pjrt_batch_cap(100_000), 2048);
+        assert_eq!(pjrt_batch_cap(usize::MAX / 2), 65_536);
+    }
+
+    #[test]
+    fn prev_power_of_two_bounds() {
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(2), 2);
+        assert_eq!(prev_power_of_two(3), 2);
+        assert_eq!(prev_power_of_two(511), 256);
+        assert_eq!(prev_power_of_two(512), 512);
+    }
+}

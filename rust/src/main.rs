@@ -56,6 +56,7 @@ USAGE:
                     [--engine native|parallel|pjrt] [--j N] [--r-core N]
                     [--epochs N] [--workers M] [--seed S] [--scale F]
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
+                    [--batch auto|N] [--exactness exact|relaxed]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -96,6 +97,22 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get_f64("sample-frac")? {
         cfg.hyper.sample_frac = v;
     }
+    if let Some(v) = args.get("batch") {
+        cfg.batch = if v == "auto" {
+            fasttucker::kernel::BatchSizing::Auto
+        } else {
+            fasttucker::kernel::BatchSizing::Fixed(
+                v.parse().map_err(|_| anyhow!("--batch expects \"auto\" or an integer"))?,
+            )
+        };
+    }
+    if let Some(v) = args.get("exactness") {
+        cfg.exactness = match v {
+            "exact" => fasttucker::kernel::Exactness::Exact,
+            "relaxed" | "hogwild" => fasttucker::kernel::Exactness::Relaxed,
+            other => bail!("unknown exactness {other:?} (expected exact|relaxed)"),
+        };
+    }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;
     }
@@ -130,7 +147,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("train nnz={} test nnz={}", train.nnz(), test.nnz());
 
     let dims = tensor.dims().to_vec();
-    let (mut trainer, mut model) = Trainer::from_config(&cfg, &dims, &mut rng)?;
+    let (mut trainer, mut model) =
+        Trainer::from_config_for(&cfg, &dims, Some(train.nnz()), &mut rng)?;
     println!(
         "algo={} engine={} J={} R_core={} params={}",
         cfg.algo.name(),

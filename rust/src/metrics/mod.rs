@@ -102,6 +102,115 @@ impl Stats {
     }
 }
 
+/// Observability snapshot of one [`BatchPlan`](crate::kernel::BatchPlan):
+/// how effectively the planner packed samples into groups (the batching
+/// diagnostics ISSUE 2 / the ROADMAP's cost-model follow-up ask for).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanStats {
+    /// Nonzeros the plan covers.
+    pub samples: usize,
+    /// Groups (batched kernel invocations' outer loop).
+    pub n_groups: usize,
+    /// Fiber sub-runs summed over groups (tile-occupancy numerator).
+    pub fiber_slots: usize,
+    /// Group-size cap the plan was built with.
+    pub cap: usize,
+    /// Fiber-tile width the plan was built with.
+    pub tile: usize,
+}
+
+impl PlanStats {
+    /// Mean samples per group — the quantity fiber tiling exists to lift
+    /// on hollow tensors.
+    pub fn mean_group_len(&self) -> f64 {
+        if self.n_groups == 0 {
+            0.0
+        } else {
+            self.samples as f64 / self.n_groups as f64
+        }
+    }
+
+    /// Mean fiber sub-runs per group (≤ tile).
+    pub fn mean_fibers_per_group(&self) -> f64 {
+        if self.n_groups == 0 {
+            0.0
+        } else {
+            self.fiber_slots as f64 / self.n_groups as f64
+        }
+    }
+
+    /// Fraction of the panel capacity the mean group fills.
+    pub fn occupancy(&self) -> f64 {
+        if self.n_groups == 0 || self.cap == 0 {
+            0.0
+        } else {
+            self.samples as f64 / (self.n_groups * self.cap) as f64
+        }
+    }
+}
+
+/// Accumulator over many [`PlanStats`] (e.g. every worker-pass plan of a
+/// multi-device epoch): totals plus the caps in effect.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanAccum {
+    pub builds: u64,
+    pub samples: u64,
+    pub groups: u64,
+    pub fiber_slots: u64,
+    /// Largest cap / tile observed (uniform in practice: one planner
+    /// decision per dataset).
+    pub cap: usize,
+    pub tile: usize,
+}
+
+impl PlanAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, s: &PlanStats) {
+        self.builds += 1;
+        self.samples += s.samples as u64;
+        self.groups += s.n_groups as u64;
+        self.fiber_slots += s.fiber_slots as u64;
+        self.cap = self.cap.max(s.cap);
+        self.tile = self.tile.max(s.tile);
+    }
+
+    pub fn merge(&mut self, other: &PlanAccum) {
+        self.builds += other.builds;
+        self.samples += other.samples;
+        self.groups += other.groups;
+        self.fiber_slots += other.fiber_slots;
+        self.cap = self.cap.max(other.cap);
+        self.tile = self.tile.max(other.tile);
+    }
+
+    pub fn mean_group_len(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.samples as f64 / self.groups as f64
+        }
+    }
+
+    pub fn mean_fibers_per_group(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.fiber_slots as f64 / self.groups as f64
+        }
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        if self.groups == 0 || self.cap == 0 {
+            0.0
+        } else {
+            self.samples as f64 / (self.groups as usize * self.cap) as f64
+        }
+    }
+}
+
 /// Communication-volume ledger for the multi-device simulation: counts the
 /// bytes the paper's parameter-exchange step would move over NVLink/PCIe.
 #[derive(Clone, Debug, Default)]
@@ -171,6 +280,28 @@ mod tests {
         assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn plan_stats_ratios() {
+        let s = PlanStats { samples: 120, n_groups: 10, fiber_slots: 40, cap: 24, tile: 8 };
+        assert!((s.mean_group_len() - 12.0).abs() < 1e-12);
+        assert!((s.mean_fibers_per_group() - 4.0).abs() < 1e-12);
+        assert!((s.occupancy() - 0.5).abs() < 1e-12);
+        let empty = PlanStats::default();
+        assert_eq!(empty.mean_group_len(), 0.0);
+        assert_eq!(empty.occupancy(), 0.0);
+
+        let mut acc = PlanAccum::new();
+        acc.record(&s);
+        acc.record(&s);
+        assert_eq!(acc.builds, 2);
+        assert!((acc.mean_group_len() - 12.0).abs() < 1e-12);
+        assert!((acc.mean_fibers_per_group() - 4.0).abs() < 1e-12);
+        assert!((acc.occupancy() - 0.5).abs() < 1e-12);
+        let mut acc2 = PlanAccum::new();
+        acc2.merge(&acc);
+        assert_eq!(acc2.samples, 240);
     }
 
     #[test]

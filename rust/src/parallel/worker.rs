@@ -17,9 +17,10 @@ use std::time::Instant;
 
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
 use crate::kernel::{
-    apply_core_grad_raw, batched, build_strided, BatchPlan, BatchWorkspace, CoreLayout,
+    apply_core_grad_raw, batched, build_strided, BatchPlan, BatchSizing, BatchWorkspace,
+    CoreLayout, Exactness, PlanParams,
 };
-use crate::metrics::CommLedger;
+use crate::metrics::{CommLedger, PlanAccum, PlanStats};
 use crate::model::{CoreRepr, TuckerModel};
 use crate::parallel::shared::{SharedFactors, SharedRowAccess};
 use crate::parallel::{BlockPartition, LatinSchedule};
@@ -57,9 +58,16 @@ pub struct ParallelOptions {
     pub hyper: SgdHyper,
     pub layout: CoreLayout,
     pub execution: Execution,
-    /// Batch-group cap for the per-block batched kernel call (≥ 1; 1
-    /// degenerates to scalar-sized groups).
-    pub batch: usize,
+    /// Batch sizing of the per-block batched kernel calls: `Auto` (the
+    /// default) routes through the planner cost model — the same policy
+    /// as the serial engine — so caps and fiber-tile widths follow the
+    /// dataset instead of a hard-coded constant; `Fixed(n)` pins a
+    /// single-fiber cap (`Fixed(0)`/`Fixed(1)` degenerate to scalar-sized
+    /// groups).
+    pub batch: BatchSizing,
+    /// Collision semantics of the blocks' plans (see
+    /// [`crate::kernel::plan::Exactness`]).
+    pub exactness: Exactness,
 }
 
 impl Default for ParallelOptions {
@@ -69,7 +77,8 @@ impl Default for ParallelOptions {
             hyper: SgdHyper::default(),
             layout: CoreLayout::Packed,
             execution: Execution::auto(),
-            batch: 64,
+            batch: BatchSizing::Auto,
+            exactness: Exactness::Exact,
         }
     }
 }
@@ -80,20 +89,34 @@ pub struct ParallelFastTucker {
     partition: Option<BlockPartition>,
     partition_for: Option<(usize, usize, usize)>, // (nnz, order, m)
     workspaces: Vec<BatchWorkspace>,
+    /// Planner decision for the current dataset (one policy shared by
+    /// every worker, resolved in `ensure_state`).
+    plan_params: PlanParams,
+    /// Fingerprint the decision was made for: `(nnz, sample count,
+    /// order, r_core, j, sizing, exactness)` — every input the cost
+    /// model reads, so the O(nnz) fiber-stats scan runs once per
+    /// dataset/config, not once per epoch.
+    #[allow(clippy::type_complexity)]
+    plan_params_for: Option<(usize, usize, usize, usize, usize, BatchSizing, Exactness)>,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
+    /// Plan observability accumulated across epochs (one record per
+    /// worker pass).
+    pub plan_accum: PlanAccum,
 }
 
 impl ParallelFastTucker {
     pub fn new(opts: ParallelOptions) -> Self {
         assert!(opts.workers >= 1);
-        assert!(opts.batch >= 1);
         ParallelFastTucker {
             opts,
             partition: None,
             partition_for: None,
             workspaces: Vec::new(),
+            plan_params: PlanParams::exact(1),
+            plan_params_for: None,
             ledger: CommLedger::new(),
+            plan_accum: PlanAccum::new(),
         }
     }
 
@@ -103,7 +126,29 @@ impl ParallelFastTucker {
             self.partition = Some(BlockPartition::build(train, self.opts.workers));
             self.partition_for = Some(fp);
         }
-        let cap = self.opts.batch;
+        // One planner decision per dataset, shared by all workers (the
+        // whole epoch visits every nonzero, so dataset-level fiber stats
+        // are the right input; per-block stats would only shrink the
+        // sample hint). Scalar-degenerate sizings map to cap 1. Cached on
+        // every cost-model input so the O(nnz) fiber scan runs once per
+        // dataset/config, not per epoch.
+        let m = ((train.nnz() as f64) * self.opts.hyper.sample_frac)
+            .round()
+            .max(1.0) as usize;
+        let params_fp = (train.nnz(), m, order, r_core, j, self.opts.batch, self.opts.exactness);
+        if self.plan_params_for != Some(params_fp) {
+            self.plan_params = self
+                .opts
+                .batch
+                .resolve(train, m, order, r_core, j, self.opts.exactness)
+                .unwrap_or(PlanParams {
+                    max_batch: 1,
+                    tile: 1,
+                    exactness: self.opts.exactness,
+                });
+            self.plan_params_for = Some(params_fp);
+        }
+        let cap = self.plan_params.max_batch;
         let stale = self.workspaces.len() != self.opts.workers
             || self
                 .workspaces
@@ -168,7 +213,7 @@ impl ParallelFastTucker {
                             .record_factor_exchange(((e - s) * j * 4) as u64);
                     }
                 }
-                let (count, round_secs) = match execution {
+                let (count, round_secs, round_plans) = match execution {
                     Execution::Threads => run_round_threads(
                         &shared,
                         &core,
@@ -181,6 +226,7 @@ impl ParallelFastTucker {
                         &mut worker_rngs,
                         lr_f,
                         h,
+                        self.plan_params,
                     ),
                     Execution::Simulated => run_round_simulated(
                         &shared,
@@ -194,10 +240,12 @@ impl ParallelFastTucker {
                         &mut worker_rngs,
                         lr_f,
                         h,
+                        self.plan_params,
                     ),
                 };
                 samples += count;
                 simulated_secs += round_secs;
+                self.plan_accum.merge(&round_plans);
             }
         }
         // Threads mode reports wall time; Simulated mode reports the
@@ -239,7 +287,7 @@ impl ParallelFastTucker {
 }
 
 /// Execute one scheduling round on real threads; returns (samples, wall
-/// secs of the round).
+/// secs of the round, merged plan stats).
 #[allow(clippy::too_many_arguments)]
 fn run_round_threads(
     shared: &SharedFactors,
@@ -253,9 +301,11 @@ fn run_round_threads(
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
-) -> (usize, f64) {
+    params: PlanParams,
+) -> (usize, f64, PlanAccum) {
     let t0 = Instant::now();
-    let mut counts = vec![0usize; assignments.len()];
+    let mut samples = 0usize;
+    let mut plans = PlanAccum::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for ((g, ws), wrng) in (0..assignments.len())
@@ -264,15 +314,21 @@ fn run_round_threads(
         {
             let block = partition.block(&assignments[g]);
             let handle = scope.spawn(move || {
-                worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h)
+                worker_pass(
+                    shared, core, strided, layout, train, block, ws, wrng, lr_f, h, params,
+                )
             });
             handles.push(handle);
         }
-        for (g, hdl) in handles.into_iter().enumerate() {
-            counts[g] = hdl.join().expect("worker panicked");
+        for hdl in handles {
+            let (count, stats) = hdl.join().expect("worker panicked");
+            samples += count;
+            if let Some(s) = stats {
+                plans.record(&s);
+            }
         }
     });
-    (counts.iter().sum(), t0.elapsed().as_secs_f64())
+    (samples, t0.elapsed().as_secs_f64(), plans)
 }
 
 /// Execute one round as a discrete-event simulation: workers run
@@ -291,25 +347,33 @@ fn run_round_simulated(
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
-) -> (usize, f64) {
+    params: PlanParams,
+) -> (usize, f64, PlanAccum) {
     let mut samples = 0usize;
     let mut slowest = 0.0f64;
+    let mut plans = PlanAccum::new();
     for ((g, ws), wrng) in (0..assignments.len())
         .zip(workspaces.iter_mut())
         .zip(rngs.iter_mut())
     {
         let block = partition.block(&assignments[g]);
         let t0 = Instant::now();
-        samples += worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h);
+        let (count, stats) =
+            worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h, params);
+        samples += count;
         slowest = slowest.max(t0.elapsed().as_secs_f64());
+        if let Some(s) = stats {
+            plans.record(&s);
+        }
     }
-    (samples, slowest)
+    (samples, slowest, plans)
 }
 
 /// One worker's pass over its block: the sampled (or full) block-local
-/// nonzeros are fiber-grouped and dispatched as **one batched kernel
-/// call** — the same Theorem-1/2 math as the serial engine, with the
-/// shared mode-0 row of each group staged once.
+/// nonzeros are grouped into fiber tiles by the engine's planner policy
+/// and dispatched as **one batched kernel call** — the same Theorem-1/2
+/// math as the serial engine, with each fiber's shared mode-0 row staged
+/// once per sub-run.
 #[allow(clippy::too_many_arguments)]
 fn worker_pass(
     shared: &SharedFactors,
@@ -322,23 +386,25 @@ fn worker_pass(
     rng: &mut Rng,
     lr_f: f32,
     h: SgdHyper,
-) -> usize {
+    params: PlanParams,
+) -> (usize, Option<PlanStats>) {
     if block.is_empty() {
-        return 0;
+        return (0, None);
     }
     // Draw the worker's sample ids up front (same RNG stream as the
     // historical per-sample draws), then group them by mode-0 fiber. The
-    // full-pass case plans straight over the block slice; planning scratch
-    // is reused across rounds via the worker's workspace.
-    let (_, _, _, cap) = ws.shape();
+    // full-pass case plans straight over the block slice; planning
+    // scratch and the plan's own buffers are reused across rounds via the
+    // worker's workspace (see `PlanScratch::recycle`), so per-pass
+    // planning allocates nothing after warmup.
     let plan = if h.sample_frac >= 1.0 {
-        BatchPlan::build_with_scratch(train, block, cap, ws.plan_scratch_mut())
+        BatchPlan::build_params_with_scratch(train, block, params, ws.plan_scratch_mut())
     } else {
         let n_samples = (((block.len() as f64) * h.sample_frac).round() as usize).max(1);
         let ids: Vec<u32> = (0..n_samples)
             .map(|_| block[rng.gen_range(block.len())])
             .collect();
-        BatchPlan::build_with_scratch(train, &ids, cap, ws.plan_scratch_mut())
+        BatchPlan::build_params_with_scratch(train, &ids, params, ws.plan_scratch_mut())
     };
     // SAFETY: every id in `ids` lies inside this worker's block; the Latin
     // schedule gives the worker exclusive ownership of every factor chunk
@@ -357,7 +423,9 @@ fn worker_pass(
         h.update_core,
         None,
     );
-    stats.samples
+    let plan_stats = plan.stats();
+    ws.plan_scratch_mut().recycle(plan);
+    (stats.samples, Some(plan_stats))
 }
 
 #[cfg(test)]
@@ -446,6 +514,52 @@ mod tests {
         let mut engine = ParallelFastTucker::new(opts);
         let stats = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
         assert_eq!(stats.samples, p.tensor.nnz());
+    }
+
+    #[test]
+    fn auto_batching_records_plan_stats_and_tiles_hollow_blocks() {
+        // The default (planner) policy: multi-device runs share the
+        // serial engine's batching decision — no hard-coded cap — and the
+        // engine exposes per-pass plan observability. Hollow tensor with
+        // wide trailing modes: tiling must engage.
+        let spec = PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut rng = Rng::new(31);
+        let p = planted_tucker(&mut rng, &spec);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        assert_eq!(opts.batch, BatchSizing::Auto);
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        let acc = engine.plan_accum;
+        assert!(acc.builds > 0, "no plan stats recorded");
+        assert_eq!(acc.samples as usize, p.tensor.nnz());
+        assert!(acc.tile > 1, "planner did not tile: {acc:?}");
+        assert!(
+            acc.mean_fibers_per_group() > 1.0,
+            "tiling never engaged: {acc:?}"
+        );
+
+        // Relaxed mode threads through and merges groups further.
+        let mut ropts = ParallelOptions::default();
+        ropts.workers = 2;
+        ropts.exactness = Exactness::Relaxed;
+        let mut rengine = ParallelFastTucker::new(ropts);
+        let mut model2 = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        rengine.train_epoch(&mut model2, &p.tensor, 0, &mut rng).unwrap();
+        assert!(
+            rengine.plan_accum.mean_group_len() >= acc.mean_group_len(),
+            "relaxed {:?} vs exact {:?}",
+            rengine.plan_accum,
+            acc
+        );
     }
 
     #[test]

@@ -177,6 +177,15 @@ impl PjrtRuntime {
         self.batch_cap = cap;
     }
 
+    /// Size the mini-batch cap from the workload via the planner cost
+    /// model ([`crate::kernel::planner::pjrt_batch_cap`]): the artifact
+    /// `train_step` applies a sum-reduced mini-batch gradient, so on
+    /// small tensors the largest compiled batch averages away per-epoch
+    /// progress. Call before the first [`Self::load`].
+    pub fn set_auto_batch_cap(&mut self, train_nnz: usize) {
+        self.batch_cap = crate::kernel::planner::pjrt_batch_cap(train_nnz);
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -362,6 +371,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn auto_batch_cap_follows_workload() {
+        let mut rt = synthetic_runtime();
+        // Small workload: planner cap 64 excludes the only (b=64) variant?
+        // No — 64 <= 64, still resolvable.
+        rt.set_auto_batch_cap(4_000);
+        assert_eq!(rt.batch_cap, 64);
+        assert!(rt.load("predict", 8, 8).is_ok());
+        // Large workload: cap grows, still bounded.
+        let mut rt = synthetic_runtime();
+        rt.set_auto_batch_cap(100_000);
+        assert_eq!(rt.batch_cap, 2048);
     }
 
     #[test]

@@ -269,6 +269,139 @@ fn prop_batched_kernel_bitwise_matches_scalar() {
 }
 
 #[test]
+fn prop_tiled_batched_bitwise_matches_scalar() {
+    // The tentpole invariant: multi-fiber tiles (any tile width, any
+    // layout, any hyperparameters) keep the batched kernel BITWISE
+    // identical to the scalar kernel over plan order — factors, core
+    // grads, and the residual stream.
+    forall("tiled batched == scalar, bitwise", 16, |rng| {
+        let order = 2 + rng.gen_range(3); // 2..=4
+        // Skew mode 0 large so fibers are short and tiles really form.
+        let mut dims: Vec<usize> = vec![40 + rng.gen_range(400)];
+        for _ in 1..order {
+            dims.push(8 + rng.gen_range(60));
+        }
+        let j = 1 + rng.gen_range(9);
+        let r = 1 + rng.gen_range(9);
+        let nnz = 200 + rng.gen_range(1500);
+        let tensor = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let layout = if rng.gen_range(2) == 0 {
+            CoreLayout::Packed
+        } else {
+            CoreLayout::Strided
+        };
+        let strided = build_strided(&core);
+        let n_ids = 1 + rng.gen_range(nnz);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+        let params = fasttucker::kernel::PlanParams::tiled(
+            2 + rng.gen_range(95),
+            1 + rng.gen_range(16),
+        );
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let (lr, lam) = (0.01f32, 0.003f32);
+        let update_core = rng.gen_range(2) == 0;
+
+        let mut f_s = model.factors.clone();
+        let mut ws = Workspace::new(order, r, j);
+        let mut log_s = Vec::new();
+        let st_s = scalar::run_ids(
+            &mut ws, &tensor, plan.ids(), &core, &strided, layout, &mut f_s, lr, lam,
+            update_core, Some(&mut log_s),
+        );
+
+        let mut f_b = model.factors.clone();
+        let mut bws = BatchWorkspace::new(order, r, j, params.max_batch);
+        let mut log_b = Vec::new();
+        let st_b = batched::run_plan(
+            &mut bws, &tensor, &plan, &core, &strided, layout, &mut f_b, lr, lam,
+            update_core, Some(&mut log_b),
+        );
+
+        assert_eq!(st_s.samples, st_b.samples);
+        assert_eq!(st_s.sse.to_bits(), st_b.sse.to_bits(), "sse diverged");
+        assert_eq!(log_s.len(), log_b.len());
+        for (i, (a, b)) in log_s.iter().zip(log_b.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "residual {i} diverged");
+        }
+        for n in 0..order {
+            for (a, b) in f_s.mat(n).data().iter().zip(f_b.mat(n).data().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} factors diverged");
+            }
+        }
+        let (gs, cs) = ws.core_grad_mut();
+        let (gb, cb) = bws.core_grad_mut();
+        assert_eq!(*cs, *cb);
+        for (a, b) in gs.iter().zip(gb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_relaxed_plan_execution_is_permutation_and_descends() {
+    // Relaxed (hogwild) plans: the executed sample multiset is exactly
+    // the input multiset (KernelStats::samples + the residual count), and
+    // repeated passes still descend the loss — collisions lose bitwise
+    // equality, not correctness.
+    forall("relaxed execution: permutation + descent", 8, |rng| {
+        let dims = vec![100 + rng.gen_range(400), 10 + rng.gen_range(30), 10 + rng.gen_range(30)];
+        let j = 2 + rng.gen_range(5);
+        let r = 2 + rng.gen_range(5);
+        let nnz = 1000;
+        let spec = synth::PlantedSpec {
+            dims: dims.clone(),
+            nnz,
+            j,
+            r_core: r,
+            noise: 0.01,
+            clamp: None,
+        };
+        let p = synth::planted_tucker(rng, &spec);
+        let mut model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..nnz as u32).collect();
+        let params = fasttucker::kernel::PlanParams::relaxed(64, 16);
+        let plan = BatchPlan::build_params(&p.tensor, &ids, params);
+        // Permutation of the multiset.
+        let mut a = ids.clone();
+        let mut b = plan.ids().to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+
+        let mut bws = BatchWorkspace::new(3, r, j, 64);
+        let mut first_sse = None;
+        let mut last_sse = 0.0;
+        for _ in 0..6 {
+            let mut log = Vec::new();
+            let st = batched::run_plan(
+                &mut bws, &p.tensor, &plan, &core, &[], CoreLayout::Packed,
+                &mut model.factors, 0.01, 0.0, false, Some(&mut log),
+            );
+            assert_eq!(st.samples, nnz);
+            assert_eq!(log.len(), nnz);
+            if first_sse.is_none() {
+                first_sse = Some(st.sse);
+            }
+            last_sse = st.sse;
+        }
+        assert!(
+            last_sse < first_sse.unwrap(),
+            "relaxed execution failed to descend: {} -> {last_sse}",
+            first_sse.unwrap()
+        );
+    });
+}
+
+#[test]
 fn prop_layouts_equivalent_through_batched_kernel() {
     // Tables 8–12 ablation invariant: Packed and Strided layouts produce
     // identical epoch statistics (samples exactly, accuracy numerically)
