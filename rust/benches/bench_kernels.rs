@@ -17,6 +17,12 @@
 //! * `--json PATH` — write the batched-vs-scalar sweep as a
 //!   `BENCH_kernels.json` throughput snapshot (the perf-trajectory
 //!   artifact CI uploads).
+//! * `--check PATH` — bench-regression gate: compare this run's
+//!   `speedup_vs_scalar` per pinned `(workload, path, cap)` against the
+//!   committed `BENCH_baseline.json`; exit 1 on a drop beyond
+//!   `FASTTUCKER_BENCH_TOLERANCE` (default 0.15). Refresh the baseline
+//!   with `--quick --json BENCH_baseline.json` when a change
+//!   intentionally moves throughput (see `bench_support::regression`).
 
 use std::time::Instant;
 
@@ -25,8 +31,10 @@ use fasttucker::algo::SgdHyper;
 use fasttucker::bench_support::{bench_scale, Table};
 use fasttucker::coordinator::PjrtEngine;
 use fasttucker::data::synth::{self, planted_tucker, PlantedSpec};
+use fasttucker::bench_support::regression;
 use fasttucker::kernel::{
-    batched, planner, scalar, BatchPlan, BatchWorkspace, Exactness, FiberStats, PlanParams,
+    batched, planner, scalar, BatchPlan, BatchWorkspace, Exactness, FiberStats, Lanes,
+    PlanParams,
 };
 use fasttucker::kruskal::KruskalCore;
 use fasttucker::model::{CoreRepr, TuckerModel};
@@ -100,15 +108,16 @@ fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> Worklo
     let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
     let (lr, lam) = (0.005f32, 0.001f32);
     let fiber_stats = FiberStats::compute(&tensor, &ids);
-    let auto = planner::choose_params(&fiber_stats, 3, r, j, Exactness::Exact);
+    let auto = planner::choose_params(&fiber_stats, 3, r, j, Exactness::Exact, Lanes::Auto, 1);
     println!(
-        "fibers: n={} mean={:.2} p90={} max={}  planner: cap={} tile={}",
+        "fibers: n={} mean={:.2} p90={} max={}  planner: cap={} tile={} lanes={:?}",
         fiber_stats.n_fibers,
         fiber_stats.mean_len,
         fiber_stats.p90_len,
         fiber_stats.max_len,
         auto.max_batch,
-        auto.tile
+        auto.tile,
+        auto.lanes
     );
 
     let mut table = Table::new(&[
@@ -176,6 +185,14 @@ fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> Worklo
         ("single-fiber".into(), PlanParams::exact(64)),
         ("single-fiber".into(), PlanParams::exact(auto.max_batch)),
         ("tiled".into(), auto),
+        // Lane ablation: the same plan forced to 4-wide panel blocks
+        // (auto picks 8 at R=16) — the gate pins that the wide kernels
+        // never lose to the narrow ones by more than tolerance.
+        ("tiled-w4".into(), auto.with_lanes(Lanes::W4)),
+        // Split-group refinement: sub-groups cut at fiber sub-run
+        // boundaries (bitwise-neutral in exact mode); pins the overhead
+        // of the finer dispatch granularity.
+        ("tiled-split".into(), auto.with_split(8)),
         // Relaxed path gets the widest tile the cap can hold: with no
         // distinctness splits, group length is limited only by cap/tile.
         (
@@ -245,8 +262,9 @@ fn batched_vs_scalar(quick: bool) -> Vec<WorkloadResult> {
 }
 
 /// Hand-rolled JSON (offline build: no serde) — the `BENCH_kernels.json`
-/// throughput snapshot CI archives per commit.
-fn emit_json(path: &str, workloads: &[WorkloadResult]) {
+/// throughput snapshot CI archives per commit and the regression gate
+/// compares against `BENCH_baseline.json`.
+fn render_json(workloads: &[WorkloadResult]) -> String {
     fn opt(v: Option<usize>) -> String {
         v.map(|x| x.to_string()).unwrap_or_else(|| "null".into())
     }
@@ -279,11 +297,68 @@ fn emit_json(path: &str, workloads: &[WorkloadResult]) {
         ));
     }
     s.push_str("  ]\n}\n");
-    if let Err(e) = std::fs::write(path, s) {
+    s
+}
+
+fn emit_json(path: &str, json: &str) {
+    if let Err(e) = std::fs::write(path, json) {
         eprintln!("failed to write {path}: {e}");
         std::process::exit(1);
     }
     println!("\nwrote {path}");
+}
+
+/// The bench-regression gate: compare this run's normalized throughput
+/// (`speedup_vs_scalar`) against the committed baseline; any pinned
+/// `(workload, path, cap)` dropping more than the tolerance (15% by
+/// default, `FASTTUCKER_BENCH_TOLERANCE` overrides) fails the process.
+/// Refresh the baseline with
+/// `cargo bench --bench bench_kernels -- --quick --json BENCH_baseline.json`.
+fn check_baseline(baseline_path: &str, json: &str) {
+    let baseline_text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("failed to read baseline {baseline_path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let baseline = regression::parse_entries(&baseline_text);
+    if baseline.is_empty() {
+        eprintln!("baseline {baseline_path} contains no gated entries");
+        std::process::exit(1);
+    }
+    let current = regression::parse_entries(json);
+    let tolerance = regression::tolerance_from_env();
+    let report = regression::check(&current, &baseline, tolerance);
+    println!(
+        "\n== bench-regression gate vs {baseline_path} (tolerance {:.0}%) ==",
+        tolerance * 100.0
+    );
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    if report.passed() {
+        println!(
+            "gate passed: {} of {} pinned entries compared",
+            report.matched,
+            baseline.len()
+        );
+    } else {
+        if report.matched == 0 {
+            eprintln!(
+                "gate compared NOTHING: no (workload, path, cap) key of the current run \
+                 matches the baseline — snapshot format drift or a total rename"
+            );
+        }
+        for r in &report.regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        eprintln!(
+            "bench-regression gate failed; if intentional, refresh the baseline:\n  \
+             cargo bench --bench bench_kernels -- --quick --json {baseline_path}"
+        );
+        std::process::exit(1);
+    }
 }
 
 fn pjrt_vs_native() {
@@ -375,15 +450,26 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let baseline_path = args
+        .iter()
+        .position(|a| a == "--check")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     if !quick {
         contraction_bench();
     }
     let workloads = batched_vs_scalar(quick);
+    let json = render_json(&workloads);
     if let Some(path) = json_path {
-        emit_json(&path, &workloads);
+        emit_json(&path, &json);
     }
     if !quick {
         pjrt_vs_native();
         eval_bench();
+    }
+    // The gate runs last so the snapshot is written (and uploaded by CI)
+    // even when the gate fails.
+    if let Some(path) = baseline_path {
+        check_baseline(&path, &json);
     }
 }

@@ -27,7 +27,7 @@ use std::time::Instant;
 use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
 use crate::kernel::{
     apply_core_grad_raw, batched, scalar, BatchPlan, BatchSizing, BatchWorkspace, Exactness,
-    PlanParams,
+    Lanes, PlanParams,
 };
 // Re-exported for compatibility: the contraction primitives historically
 // lived in this module and are widely imported from here.
@@ -57,6 +57,15 @@ pub struct FastTuckerConfig {
     /// to scalar over plan order, the default) or `Relaxed` (hogwild,
     /// longer groups). Ignored on the scalar path.
     pub exactness: Exactness,
+    /// Panel-microkernel lane width ([`crate::kernel::panel`]): `Auto`
+    /// (planner picks from `R_core`, the default) or an explicit 4/8.
+    /// Ignored on the scalar path; bitwise-neutral in exact mode.
+    pub lanes: Lanes,
+    /// Split-group factor (≥ 1, default 1 = off): long groups are cut at
+    /// fiber sub-run boundaries (exact; bitwise-neutral) or anywhere
+    /// (relaxed) into `split` sub-groups — the dispatch unit for
+    /// intra-group parallelism (see [`crate::kernel::plan::PlanParams`]).
+    pub split: usize,
 }
 
 impl Default for FastTuckerConfig {
@@ -66,6 +75,8 @@ impl Default for FastTuckerConfig {
             layout: CoreLayout::Packed,
             batch: BatchSizing::Fixed(0),
             exactness: Exactness::Exact,
+            lanes: Lanes::Auto,
+            split: 1,
         }
     }
 }
@@ -77,11 +88,14 @@ pub struct FastTucker {
     bws: Option<BatchWorkspace>,
     strided: Vec<Vec<f32>>,
     /// Planner decision cached per workload + model fingerprint
-    /// `(nnz, dims, sample count, order, r_core, j, exactness)` — every
-    /// input the cost model reads, so mutating `config` or switching
-    /// models invalidates it.
+    /// `(nnz, dims, sample count, order, r_core, j, exactness, lanes,
+    /// split)` — every input the cost model reads, so mutating `config`
+    /// or switching models invalidates it.
     #[allow(clippy::type_complexity)]
-    auto_cache: Option<((usize, Vec<usize>, usize, usize, usize, usize, Exactness), PlanParams)>,
+    auto_cache: Option<(
+        (usize, Vec<usize>, usize, usize, usize, usize, Exactness, Lanes, usize),
+        PlanParams,
+    )>,
     /// Plan of the most recent batched epoch (observability).
     last_plan_stats: Option<PlanStats>,
 }
@@ -136,6 +150,8 @@ impl FastTucker {
                 r_core,
                 j,
                 self.config.exactness,
+                self.config.lanes,
+                self.config.split,
             ),
             BatchSizing::Auto => {
                 let key = (
@@ -146,6 +162,8 @@ impl FastTucker {
                     r_core,
                     j,
                     self.config.exactness,
+                    self.config.lanes,
+                    self.config.split,
                 );
                 if let Some((cached_key, params)) = &self.auto_cache {
                     if *cached_key == key {
@@ -155,7 +173,16 @@ impl FastTucker {
                 let params = self
                     .config
                     .batch
-                    .resolve(train, m, order, r_core, j, self.config.exactness)
+                    .resolve(
+                        train,
+                        m,
+                        order,
+                        r_core,
+                        j,
+                        self.config.exactness,
+                        self.config.lanes,
+                        self.config.split,
+                    )
                     .expect("Auto sizing always resolves");
                 self.auto_cache = Some((key, params));
                 Some(params)
@@ -471,13 +498,14 @@ mod tests {
         };
         let mut rng = Rng::new(40);
         let p = planted_tucker(&mut rng, &spec);
-        let run = |exactness: crate::kernel::Exactness| {
+        let run = |exactness: crate::kernel::Exactness, split: usize| {
             let mut rng = Rng::new(41);
             let mut model =
                 TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
             let mut algo = FastTucker::new(FastTuckerConfig {
                 batch: crate::kernel::BatchSizing::Auto,
                 exactness,
+                split,
                 ..Default::default()
             });
             algo.config.hyper.lr_factor = crate::sched::LrSchedule::constant(0.01);
@@ -488,8 +516,8 @@ mod tests {
             }
             (rmse(&model, &p.tensor), algo.last_plan_stats().unwrap())
         };
-        let (exact_rmse, exact_stats) = run(crate::kernel::Exactness::Exact);
-        let (relaxed_rmse, relaxed_stats) = run(crate::kernel::Exactness::Relaxed);
+        let (exact_rmse, exact_stats) = run(crate::kernel::Exactness::Exact, 1);
+        let (relaxed_rmse, relaxed_stats) = run(crate::kernel::Exactness::Relaxed, 1);
         // Relaxed must actually have merged groups the exact mode split.
         assert!(
             relaxed_stats.mean_group_len() > exact_stats.mean_group_len(),
@@ -498,6 +526,19 @@ mod tests {
         assert!(
             relaxed_rmse <= exact_rmse * 1.02 + 1e-4,
             "relaxed RMSE {relaxed_rmse} not within 2% of exact {exact_rmse}"
+        );
+        // Relaxed + split-group refinement: sub-group cuts shorten the
+        // hogwild groups (fewer stale reads), so quality stays within
+        // the same 2% envelope of exact.
+        let (relaxed_split_rmse, rs_stats) = run(crate::kernel::Exactness::Relaxed, 8);
+        assert!(rs_stats.splits > 0, "split rule never engaged: {rs_stats:?}");
+        assert!(
+            rs_stats.mean_group_len() <= relaxed_stats.mean_group_len(),
+            "split did not shorten relaxed groups: {rs_stats:?}"
+        );
+        assert!(
+            relaxed_split_rmse <= exact_rmse * 1.02 + 1e-4,
+            "relaxed+split RMSE {relaxed_split_rmse} not within 2% of exact {exact_rmse}"
         );
     }
 

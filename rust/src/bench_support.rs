@@ -111,6 +111,146 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(1.0)
 }
 
+/// Bench-regression gate support: parse `BENCH_kernels.json`-format
+/// snapshots and compare throughput against a committed baseline
+/// (`BENCH_baseline.json`).
+///
+/// The gated metric is `speedup_vs_scalar` — throughput normalized by the
+/// same run's scalar-kernel pass on the same machine — so the committed
+/// baseline transfers across CI runners; a >`tolerance` relative drop on
+/// any pinned `(workload, path, cap)` fails the gate. Refreshing the
+/// baseline is one command (the documented override knob):
+///
+/// ```text
+/// cargo bench --bench bench_kernels -- --quick --json BENCH_baseline.json
+/// ```
+///
+/// and `FASTTUCKER_BENCH_TOLERANCE` (a fraction, default `0.15`)
+/// loosens/tightens the gate without touching the baseline.
+pub mod regression {
+    /// One gated measurement: `(workload, path, cap)` → speedup.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct Entry {
+        pub workload: String,
+        pub path: String,
+        /// Group cap of the path (`None` for the scalar baseline row).
+        pub cap: Option<usize>,
+        pub speedup_vs_scalar: f64,
+    }
+
+    impl Entry {
+        pub fn key(&self) -> String {
+            match self.cap {
+                Some(c) => format!("{}/{}@{}", self.workload, self.path, c),
+                None => format!("{}/{}", self.workload, self.path),
+            }
+        }
+    }
+
+    /// Extract the gated entries from a `BENCH_kernels.json` snapshot
+    /// (the hand-rolled format `bench_kernels --json` emits; no serde in
+    /// the offline build, so this is a line-oriented field scanner).
+    pub fn parse_entries(json: &str) -> Vec<Entry> {
+        fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+            let tag = format!("\"{key}\":");
+            let start = line.find(&tag)? + tag.len();
+            let rest = line[start..].trim_start();
+            let end = rest
+                .find([',', '}'])
+                .unwrap_or(rest.len());
+            Some(rest[..end].trim().trim_matches('"'))
+        }
+        let mut workload = String::new();
+        let mut out = Vec::new();
+        for line in json.lines() {
+            if let Some(name) = field(line, "name") {
+                workload = name.to_string();
+            }
+            if let Some(path) = field(line, "path") {
+                let cap = field(line, "cap").and_then(|v| v.parse::<usize>().ok());
+                let speedup = field(line, "speedup_vs_scalar")
+                    .and_then(|v| v.parse::<f64>().ok());
+                if let Some(speedup_vs_scalar) = speedup {
+                    out.push(Entry {
+                        workload: workload.clone(),
+                        path: path.to_string(),
+                        cap,
+                        speedup_vs_scalar,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Gate verdict: regressions (fail) and notes (baseline gaps, skipped
+    /// keys — reported but not fatal, so a planner-driven cap change
+    /// degrades the gate loudly instead of failing spuriously).
+    /// `matched` counts baseline entries actually compared: a gate run
+    /// with `matched == 0` compared nothing (format drift or a total key
+    /// rename) and MUST be treated as a failure by the caller — the
+    /// bench's `--check` does.
+    #[derive(Clone, Debug, Default)]
+    pub struct GateReport {
+        pub regressions: Vec<String>,
+        pub notes: Vec<String>,
+        /// Baseline entries that found a matching current entry.
+        pub matched: usize,
+    }
+
+    impl GateReport {
+        /// No regressions AND at least one entry was actually compared.
+        pub fn passed(&self) -> bool {
+            self.regressions.is_empty() && self.matched > 0
+        }
+    }
+
+    /// Compare a current snapshot against the committed baseline:
+    /// `current < baseline * (1 - tolerance)` on any shared key is a
+    /// regression.
+    pub fn check(current: &[Entry], baseline: &[Entry], tolerance: f64) -> GateReport {
+        let mut report = GateReport::default();
+        for base in baseline {
+            let key = base.key();
+            match current.iter().find(|e| e.key() == key) {
+                Some(cur) => {
+                    report.matched += 1;
+                    let floor = base.speedup_vs_scalar * (1.0 - tolerance);
+                    if cur.speedup_vs_scalar < floor {
+                        report.regressions.push(format!(
+                            "{key}: speedup {:.3}x < floor {:.3}x (baseline {:.3}x, tolerance {:.0}%)",
+                            cur.speedup_vs_scalar,
+                            floor,
+                            base.speedup_vs_scalar,
+                            tolerance * 100.0
+                        ));
+                    }
+                }
+                None => report.notes.push(format!(
+                    "{key}: in baseline but not in current run (cap/path renamed? refresh the baseline)"
+                )),
+            }
+        }
+        for cur in current {
+            if !baseline.iter().any(|b| b.key() == cur.key()) {
+                report
+                    .notes
+                    .push(format!("{}: not in baseline (ungated)", cur.key()));
+            }
+        }
+        report
+    }
+
+    /// Gate tolerance from `FASTTUCKER_BENCH_TOLERANCE` (default 0.15 =
+    /// the 15% throughput-drop bar).
+    pub fn tolerance_from_env() -> f64 {
+        std::env::var("FASTTUCKER_BENCH_TOLERANCE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.15)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +269,63 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print();
+    }
+
+    const SNAPSHOT: &str = r#"{
+  "bench": "kernels",
+  "workloads": [
+    {"name": "tall", "dims": [256, 60000, 60000], "nnz": 150000, "mean_fiber_len": 585.9375, "paths": [
+      {"path": "scalar", "cap": null, "tile": null, "mean_group_len": 1.0000, "mean_fibers_per_group": 1.0000, "occupancy": 1.0000, "secs_per_pass": 0.5, "msamples_per_sec": 0.3, "speedup_vs_scalar": 1.0000},
+      {"path": "tiled", "cap": 256, "tile": 1, "mean_group_len": 200.1, "mean_fibers_per_group": 1.0000, "occupancy": 0.8, "secs_per_pass": 0.3, "msamples_per_sec": 0.5, "speedup_vs_scalar": 1.6000}
+    ]},
+    {"name": "hollow", "dims": [75000, 30000, 30000], "nnz": 150000, "mean_fiber_len": 1.7, "paths": [
+      {"path": "tiled", "cap": 256, "tile": 64, "mean_group_len": 40.0, "mean_fibers_per_group": 24.0, "occupancy": 0.2, "secs_per_pass": 0.4, "msamples_per_sec": 0.4, "speedup_vs_scalar": 1.2000}
+    ]}
+  ]
+}
+"#;
+
+    #[test]
+    fn regression_parser_extracts_keys_and_speedups() {
+        let entries = regression::parse_entries(SNAPSHOT);
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].key(), "tall/scalar");
+        assert_eq!(entries[1].key(), "tall/tiled@256");
+        assert_eq!(entries[2].key(), "hollow/tiled@256");
+        assert!((entries[1].speedup_vs_scalar - 1.6).abs() < 1e-9);
+        assert!((entries[2].speedup_vs_scalar - 1.2).abs() < 1e-9);
+        assert_eq!(entries[0].cap, None);
+    }
+
+    #[test]
+    fn regression_gate_fails_on_drop_and_reports_gaps() {
+        let baseline = regression::parse_entries(SNAPSHOT);
+        // Identical snapshot: pass.
+        assert!(regression::check(&baseline, &baseline, 0.15).passed());
+
+        // 10% drop within a 15% tolerance: pass; 20% drop: fail.
+        let mut drop10 = baseline.clone();
+        drop10[1].speedup_vs_scalar *= 0.90;
+        assert!(regression::check(&drop10, &baseline, 0.15).passed());
+        let mut drop20 = baseline.clone();
+        drop20[1].speedup_vs_scalar *= 0.80;
+        let report = regression::check(&drop20, &baseline, 0.15);
+        assert!(!report.passed());
+        assert!(report.regressions[0].contains("tall/tiled@256"));
+
+        // A renamed key degrades to a note, not a failure.
+        let mut renamed = baseline.clone();
+        renamed[2].cap = Some(512);
+        let report = regression::check(&renamed, &baseline, 0.15);
+        assert!(report.passed());
+        assert_eq!(report.matched, 2);
+        assert_eq!(report.notes.len(), 2, "missing + ungated: {:?}", report.notes);
+
+        // A current run that shares NO keys with the baseline (format
+        // drift, empty parse) compared nothing — that is a failure, not
+        // a silent pass.
+        let report = regression::check(&[], &baseline, 0.15);
+        assert_eq!(report.matched, 0);
+        assert!(!report.passed(), "vacuous gate run must not pass");
     }
 }

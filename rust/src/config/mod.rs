@@ -5,10 +5,10 @@ pub mod toml;
 
 pub use toml::{TomlDoc, TomlValue};
 
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
-use crate::kernel::{BatchSizing, Exactness};
+use crate::kernel::{BatchSizing, Exactness, Lanes};
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -94,6 +94,13 @@ pub struct TrainConfig {
     /// Batched-plan collision semantics. TOML: `exactness = "exact"` or
     /// `"relaxed"` (hogwild).
     pub exactness: Exactness,
+    /// Panel-microkernel lane width. TOML: `lanes = "auto"` (planner
+    /// picks from `R_core`) or `lanes = 4` / `lanes = 8`.
+    pub lanes: Lanes,
+    /// Split-group factor (≥ 1). TOML: `split = 4`. Exact-mode splits
+    /// land on fiber sub-run boundaries and are bitwise-neutral;
+    /// relaxed-mode splits may land anywhere.
+    pub split: usize,
 }
 
 impl Default for TrainConfig {
@@ -116,6 +123,8 @@ impl Default for TrainConfig {
             pjrt_batch_cap: None,
             batch: BatchSizing::Auto,
             exactness: Exactness::Exact,
+            lanes: Lanes::Auto,
+            split: 1,
         }
     }
 }
@@ -145,6 +154,8 @@ impl TrainConfig {
     /// checkpoint = "model.ftck"
     /// batch = "auto"        # or an integer group cap (0/1 = scalar kernel)
     /// exactness = "exact"   # or "relaxed" (hogwild batched plans)
+    /// lanes = "auto"        # or 4 / 8 (panel-microkernel lane width)
+    /// split = 1             # split-group factor (>= 1)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -207,6 +218,12 @@ impl TrainConfig {
         if let Some(v) = doc.get("", "exactness") {
             cfg.exactness = parse_exactness(v.as_str()?)?;
         }
+        if let Some(v) = doc.get("", "lanes") {
+            cfg.lanes = parse_lanes(v)?;
+        }
+        if let Some(v) = doc.get("", "split") {
+            cfg.split = v.as_usize()?;
+        }
 
         let mut h = SgdHyper::default();
         let g = |k: &str| doc.get("sgd", k);
@@ -260,6 +277,19 @@ impl TrainConfig {
         if self.workers == 0 {
             bail!("workers must be >= 1");
         }
+        if self.split == 0 {
+            bail!("split must be >= 1 (1 = split-group execution off)");
+        }
+        if self.split > 1 {
+            if let BatchSizing::Fixed(b) = self.batch {
+                if b < 2 {
+                    bail!(
+                        "split = {} needs a batched kernel: set batch = \"auto\" or batch >= 2",
+                        self.split
+                    );
+                }
+            }
+        }
         if !(0.0..1.0).contains(&self.test_frac) {
             bail!("test_frac must be in [0, 1)");
         }
@@ -292,6 +322,19 @@ fn parse_exactness(s: &str) -> Result<Exactness> {
     })
 }
 
+fn parse_lanes(v: &TomlValue) -> Result<Lanes> {
+    let spelled = match v {
+        TomlValue::Str(s) => s.clone(),
+        TomlValue::Int(i) => i.to_string(),
+        other => bail!(
+            "lanes must be \"auto\", 4, or 8, got {} {other:?}",
+            other.type_name()
+        ),
+    };
+    Lanes::parse(&spelled)
+        .ok_or_else(|| anyhow!("unknown lanes {spelled:?} (expected \"auto\", 4, or 8)"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +362,24 @@ mod tests {
         // Relaxed exactness on the scalar path is a config error.
         assert!(TrainConfig::from_toml_str("batch = 0\nexactness = \"relaxed\"").is_err());
         assert!(TrainConfig::from_toml_str("batch = 2\nexactness = \"relaxed\"").is_ok());
+    }
+
+    #[test]
+    fn parses_lanes_and_split() {
+        let cfg = TrainConfig::from_toml_str("lanes = \"auto\"\nsplit = 4\n").unwrap();
+        assert_eq!(cfg.lanes, Lanes::Auto);
+        assert_eq!(cfg.split, 4);
+        let cfg = TrainConfig::from_toml_str("lanes = 8\n").unwrap();
+        assert_eq!(cfg.lanes, Lanes::W8);
+        let cfg = TrainConfig::from_toml_str("lanes = 4\n").unwrap();
+        assert_eq!(cfg.lanes, Lanes::W4);
+
+        assert!(TrainConfig::from_toml_str("lanes = 16").is_err());
+        assert!(TrainConfig::from_toml_str("lanes = \"wide\"").is_err());
+        assert!(TrainConfig::from_toml_str("split = 0").is_err());
+        // Split-group execution needs a batched kernel.
+        assert!(TrainConfig::from_toml_str("batch = 0\nsplit = 2").is_err());
+        assert!(TrainConfig::from_toml_str("batch = \"auto\"\nsplit = 2").is_ok());
     }
 
     #[test]

@@ -99,6 +99,8 @@ impl Trainer {
                             hyper: cfg.hyper,
                             batch: cfg.batch,
                             exactness: cfg.exactness,
+                            lanes: cfg.lanes,
+                            split: cfg.split,
                             ..Default::default()
                         };
                         Box::new(FastTucker::new(fc))
@@ -119,6 +121,8 @@ impl Trainer {
                     hyper: cfg.hyper,
                     batch: cfg.batch,
                     exactness: cfg.exactness,
+                    lanes: cfg.lanes,
+                    split: cfg.split,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))

@@ -14,9 +14,14 @@
 //!   pre-group row and their deferred updates compose at group end,
 //!   hogwild-style);
 //! * step 1 of the contraction (`c = B^(n) a`) for modes ≥ 1 runs over the
-//!   panels with the Kruskal rows register-blocked **across samples** —
-//!   each loaded `b_r^(n)` row feeds four samples' accumulators — and
-//!   step 3 (`GS = Σ_r w_r b_r`) is deferred and batched the same way;
+//!   panels through the **lane-blocked panel microkernels**
+//!   ([`crate::kernel::panel`]: 4- or 8-row register blocks over
+//!   `R_core`, scalar tails pinned to the scalar primitives' float
+//!   association, Kruskal rows reused across all samples of the group) —
+//!   and step 3 (`GS = Σ_r w_r b_r`) is deferred and batched the same
+//!   way; the lane width comes from
+//!   [`PlanParams::lanes`](crate::kernel::plan::PlanParams), planner-chosen
+//!   by default;
 //! * only the short mode-0 chain (`c^(0)`, prefix/suffix, `GS^(0)`, the
 //!   residual, and the hot-row update) remains sequential, because each
 //!   sample must observe the previous sample's update to the shared row.
@@ -40,6 +45,7 @@
 use crate::kernel::contract::{
     prefix_suffix_w, strided_matvec, strided_weighted_sum, CoreLayout,
 };
+use crate::kernel::panel;
 use crate::kernel::plan::PlanScratch;
 use crate::kernel::{BatchPlan, FactorAccess, KernelStats};
 use crate::kruskal::KruskalCore;
@@ -137,6 +143,8 @@ pub fn run_plan<F: FactorAccess>(
     let j = ws.j;
     assert!(plan.max_batch() <= ws.cap, "plan exceeds workspace capacity");
     let beta = 1.0 - lr_f * lam_f;
+    // Panel-microkernel lane width for this plan (see `kernel::panel`).
+    let lanes = plan.params().lanes.resolve(r);
     let mut sse = 0.0f64;
     let mut samples = 0usize;
 
@@ -155,10 +163,11 @@ pub fn run_plan<F: FactorAccess>(
             }
         }
 
-        // Batched step 1 for modes >= 1: c[s][n] = B^(n) a[s][n].
+        // Batched step 1 for modes >= 1: c[s][n] = B^(n) a[s][n], through
+        // the lane-blocked panel microkernels.
         for n in 1..order {
             match layout {
-                CoreLayout::Packed => batch_c_packed(
+                CoreLayout::Packed => panel::c_panel_packed(
                     core.factor(n).data(),
                     r,
                     j,
@@ -167,8 +176,9 @@ pub fn run_plan<F: FactorAccess>(
                     b,
                     &ws.a_panel,
                     &mut ws.c_panel,
+                    lanes,
                 ),
-                CoreLayout::Strided => batch_c_strided(
+                CoreLayout::Strided => panel::c_panel_strided(
                     &strided[n],
                     r,
                     j,
@@ -267,10 +277,11 @@ pub fn run_plan<F: FactorAccess>(
             factors.store(0, cur_i0, &ws.a0);
         }
 
-        // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r.
+        // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r,
+        // through the lane-blocked panel microkernels.
         for n in 1..order {
             match layout {
-                CoreLayout::Packed => batch_gs_packed(
+                CoreLayout::Packed => panel::gs_panel_packed(
                     core.factor(n).data(),
                     r,
                     j,
@@ -279,8 +290,9 @@ pub fn run_plan<F: FactorAccess>(
                     b,
                     &ws.w_panel,
                     &mut ws.gs_panel,
+                    lanes,
                 ),
-                CoreLayout::Strided => batch_gs_strided(
+                CoreLayout::Strided => panel::gs_panel_strided(
                     &strided[n],
                     r,
                     j,
@@ -333,153 +345,6 @@ pub fn run_plan<F: FactorAccess>(
     }
 
     KernelStats { samples, sse }
-}
-
-/// Batched `c[s][n] = B a[s][n]` (Packed): rows of `B` blocked by 4 and
-/// reused across all samples of the group; per-(sample, row) accumulation
-/// order is identical to [`matvec_rowmajor`] (blocked rows sum
-/// sequentially over `j`; tail rows go through [`dot`]).
-#[allow(clippy::too_many_arguments)]
-fn batch_c_packed(
-    bm: &[f32],
-    r: usize,
-    j: usize,
-    order: usize,
-    n: usize,
-    b: usize,
-    a_panel: &[f32],
-    c_panel: &mut [f32],
-) {
-    let mut rr = 0;
-    while rr + 4 <= r {
-        let r0 = &bm[rr * j..(rr + 1) * j];
-        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
-        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
-        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
-        for s in 0..b {
-            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
-            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for jj in 0..j {
-                let xj = a[jj];
-                a0 += r0[jj] * xj;
-                a1 += r1[jj] * xj;
-                a2 += r2[jj] * xj;
-                a3 += r3[jj] * xj;
-            }
-            let cbase = (s * order + n) * r + rr;
-            c_panel[cbase] = a0;
-            c_panel[cbase + 1] = a1;
-            c_panel[cbase + 2] = a2;
-            c_panel[cbase + 3] = a3;
-        }
-        rr += 4;
-    }
-    while rr < r {
-        let brow = &bm[rr * j..(rr + 1) * j];
-        for s in 0..b {
-            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
-            c_panel[(s * order + n) * r + rr] = dot(brow, a);
-        }
-        rr += 1;
-    }
-}
-
-/// Batched `c` under the Strided layout (column-major core mirror):
-/// per-sample calls of the shared [`strided_matvec`] — bitwise identical
-/// to the scalar path by construction.
-#[allow(clippy::too_many_arguments)]
-fn batch_c_strided(
-    col: &[f32],
-    r: usize,
-    j: usize,
-    order: usize,
-    n: usize,
-    b: usize,
-    a_panel: &[f32],
-    c_panel: &mut [f32],
-) {
-    for s in 0..b {
-        strided_matvec(
-            col,
-            r,
-            &a_panel[(s * order + n) * j..(s * order + n + 1) * j],
-            &mut c_panel[(s * order + n) * r..(s * order + n + 1) * r],
-        );
-    }
-}
-
-/// Batched `GS[s][n] = Σ_r w[s][n][r] b_r` (Packed): same 4-row blocking
-/// and per-(sample, j) association as [`weighted_rowsum`], with the `B`
-/// rows reused across samples.
-#[allow(clippy::too_many_arguments)]
-fn batch_gs_packed(
-    bm: &[f32],
-    r: usize,
-    j: usize,
-    order: usize,
-    n: usize,
-    b: usize,
-    w_panel: &[f32],
-    gs_panel: &mut [f32],
-) {
-    for s in 0..b {
-        gs_panel[(s * order + n) * j..(s * order + n + 1) * j].fill(0.0);
-    }
-    let mut rr = 0;
-    while rr + 4 <= r {
-        let r0 = &bm[rr * j..(rr + 1) * j];
-        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
-        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
-        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
-        for s in 0..b {
-            let wbase = (s * order + n) * r + rr;
-            let (w0, w1, w2, w3) = (
-                w_panel[wbase],
-                w_panel[wbase + 1],
-                w_panel[wbase + 2],
-                w_panel[wbase + 3],
-            );
-            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
-            for jj in 0..j {
-                out[jj] += w0 * r0[jj] + w1 * r1[jj] + w2 * r2[jj] + w3 * r3[jj];
-            }
-        }
-        rr += 4;
-    }
-    while rr < r {
-        let brow = &bm[rr * j..(rr + 1) * j];
-        for s in 0..b {
-            let w = w_panel[(s * order + n) * r + rr];
-            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
-            axpy(w, brow, out);
-        }
-        rr += 1;
-    }
-}
-
-/// Batched `GS` under the Strided layout: per-sample calls of the shared
-/// [`strided_weighted_sum`] — bitwise identical to the scalar path by
-/// construction.
-#[allow(clippy::too_many_arguments)]
-fn batch_gs_strided(
-    col: &[f32],
-    r: usize,
-    j: usize,
-    order: usize,
-    n: usize,
-    b: usize,
-    w_panel: &[f32],
-    gs_panel: &mut [f32],
-) {
-    for s in 0..b {
-        strided_weighted_sum(
-            col,
-            r,
-            j,
-            &w_panel[(s * order + n) * r..(s * order + n + 1) * r],
-            &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j],
-        );
-    }
 }
 
 /// Pure mini-batch panel train step (deferred reads, duplicate deltas sum
@@ -709,6 +574,73 @@ mod tests {
                 .zip(f_batch.mat(n).data().iter())
             {
                 assert_eq!(a.to_bits(), b.to_bits(), "mode {n} factors diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_widths_and_split_plans_match_scalar_bitwise() {
+        // Module-level pin of the PR-3 tentpole: forcing either lane
+        // width, and refining groups with the split-group rule, keeps
+        // exact batched execution bitwise identical to scalar over plan
+        // order. R=5 exercises the quad+tail boundary at both widths.
+        use crate::kernel::panel::Lanes;
+        let mut rng = Rng::new(8);
+        let dims = vec![512usize, 60, 55];
+        let tensor = crate::data::synth::random_uniform(&mut rng, &dims, 2000, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 6, 5);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        for lanes in [Lanes::Auto, Lanes::W4, Lanes::W8] {
+            // split 64 = budget 1, the finest refinement (every fiber
+            // sub-run its own group) — guaranteed to engage on a tiled
+            // hollow plan.
+            for split in [1usize, 64] {
+                let params = crate::kernel::plan::PlanParams::tiled(64, 8)
+                    .with_lanes(lanes)
+                    .with_split(split);
+                let plan = BatchPlan::build_params(&tensor, &ids, params);
+                if split > 1 {
+                    assert!(plan.splits() > 0, "split rule never engaged");
+                }
+
+                let mut f_scalar = model.factors.clone();
+                let mut ws = Workspace::new(3, 5, 6);
+                let st_s = scalar::run_ids(
+                    &mut ws, &tensor, plan.ids(), &core, &[], CoreLayout::Packed,
+                    &mut f_scalar, 0.01, 0.001, true, None,
+                );
+
+                let mut f_batch = model.factors.clone();
+                let mut bws = BatchWorkspace::new(3, 5, 6, 64);
+                let st_b = run_plan(
+                    &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed,
+                    &mut f_batch, 0.01, 0.001, true, None,
+                );
+
+                assert_eq!(st_s.samples, st_b.samples);
+                assert_eq!(
+                    st_s.sse.to_bits(),
+                    st_b.sse.to_bits(),
+                    "{lanes:?} split {split}: sse diverged"
+                );
+                for n in 0..3 {
+                    for (a, b) in f_scalar
+                        .mat(n)
+                        .data()
+                        .iter()
+                        .zip(f_batch.mat(n).data().iter())
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{lanes:?} split {split}: mode {n} factors diverged"
+                        );
+                    }
+                }
             }
         }
     }

@@ -18,10 +18,11 @@
 //! | Module       | Role |
 //! |--------------|------|
 //! | [`contract`] | Thm-1/2 contraction primitives + core-grad accumulate/apply (the per-sample math) |
-//! | [`plan`]     | [`BatchPlan`]: tiles of mode-0 fibers per group, [`Exactness::Exact`] (bitwise) or [`Exactness::Relaxed`] (hogwild) |
-//! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile) from fiber-length stats; [`BatchSizing`] `Auto`/`Fixed` |
+//! | [`plan`]     | [`BatchPlan`]: tiles of mode-0 fibers per group, [`Exactness::Exact`] (bitwise) or [`Exactness::Relaxed`] (hogwild), split-group refinement ([`PlanParams::split`]) |
+//! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile, lane width) from fiber-length stats and `R_core`; [`BatchSizing`] `Auto`/`Fixed` |
 //! | [`scalar`]   | Reference executor: one nonzero at a time in stream order |
 //! | [`batched`]  | Fiber-batched executor over a plan: per-fiber hot rows, flat `batch × R_core` panels |
+//! | [`panel`]    | SIMD-shaped panel microkernels ([`Lanes`] 4/8 row blocks over `R_core`, scalar tails) the batched executor's deferred c/GS steps run on |
 //!
 //! Two execution strategies share that math bit-for-bit:
 //!
@@ -48,6 +49,7 @@
 //! Tables 8–12 shared-vs-global-memory ablation runnable on either path.
 
 pub mod contract;
+pub mod panel;
 pub mod plan;
 pub mod planner;
 pub mod scalar;
@@ -58,6 +60,7 @@ pub use contract::{
     accumulate_core_grad, apply_core_grad, apply_core_grad_raw, build_strided,
     contract_staged, CoreLayout, Workspace,
 };
+pub use panel::Lanes;
 pub use plan::{BatchPlan, Exactness, PlanParams, PlanScratch};
 pub use planner::{BatchSizing, FiberStats};
 

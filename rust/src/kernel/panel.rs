@@ -1,0 +1,462 @@
+//! Panel microkernels: fixed-lane-width, SIMD-shaped inner loops over the
+//! batched executor's `batch × J` / `batch × R_core` panels.
+//!
+//! The batched executor ([`crate::kernel::batched`]) defers the mode-≥1
+//! contraction steps of a whole group and runs them panel-wide:
+//!
+//! * **c-panel** — `c[s][n][r] = b_r^(n) · a[s][n]` for every sample `s`
+//!   of the group (step 1 of Thm 1/2, the paper's warp-shuffle dot);
+//! * **gs-panel** — `GS[s][n] = Σ_r w[s][n][r] · b_r^(n)` (step 3, the
+//!   factor-update coefficient).
+//!
+//! This module owns those inner loops as **lane-blocked microkernels**:
+//! the `R_core` dimension is processed in fixed-width blocks of
+//! [`Lanes`] rows (4 or 8), each block keeping one scalar accumulator
+//! per row so LLVM sees straight-line, associativity-preserving code it
+//! can autovectorize today, and `std::simd` can replace verbatim once
+//! stable (each lane block is exactly one future `f32x4`/`f32x8`
+//! register group; cuFasterTucker's register blocking, arXiv:2210.06014,
+//! is the GPU analogue).
+//!
+//! **The bitwise contract.** Exact-mode batched execution must stay
+//! bit-identical to the scalar executor, so every microkernel reproduces
+//! the float association of the scalar path's primitives
+//! ([`matvec_rowmajor`] / [`weighted_rowsum`] / [`dot`] / [`axpy`]):
+//!
+//! * rows `0 .. R - R%4` (the scalar primitives' full-quad region) are
+//!   plain sequential sums over `j`, one accumulator per row — widening
+//!   the lane block from 4 to 8 changes *which rows share a pass*, never
+//!   the per-row reduction order;
+//! * tail rows `R - R%4 .. R` go through [`dot`] (c-panel) and [`axpy`]
+//!   (gs-panel), the exact tail association of the scalar primitives;
+//! * an 8-lane gs block adds its two 4-term partial sums to `out[j]`
+//!   **separately**, matching the two quad passes of
+//!   [`weighted_rowsum`] bit for bit.
+//!
+//! Pinned by this module's unit tests (every lane width × tail length)
+//! and end-to-end by
+//! `tests/properties.rs::prop_panel_microkernel_bitwise_matches_scalar`.
+//!
+//! Under [`CoreLayout::Strided`](crate::kernel::contract::CoreLayout) the
+//! panels walk the column-major core mirror per sample via the shared
+//! strided primitives — lane width does not apply there (the strided walk
+//! is the paper's uncoalesced global-memory ablation, kept structurally
+//! identical to the scalar path by construction).
+
+use crate::util::linalg::{axpy, dot, matvec_rowmajor, weighted_rowsum};
+
+/// Lane width of the panel microkernels: how many `R_core` rows one
+/// register block carries. [`Lanes::Auto`] is resolved per plan by the
+/// planner ([`crate::kernel::planner::choose_params`]) from `R_core`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lanes {
+    /// Let the planner pick from `R_core` (8 when a full 8-block exists,
+    /// else 4).
+    #[default]
+    Auto,
+    /// 4-row blocks (one future `f32x4` group; the legacy shape).
+    W4,
+    /// 8-row blocks (one future `f32x8` / AVX2 group).
+    W8,
+}
+
+impl Lanes {
+    /// Concrete width for a given `R_core`. `Auto` takes 8 only when at
+    /// least one full 8-block exists; tiny ranks stay at 4.
+    #[inline]
+    pub fn resolve(self, r_core: usize) -> usize {
+        match self {
+            Lanes::W4 => 4,
+            Lanes::W8 => 8,
+            Lanes::Auto => {
+                if r_core >= 8 {
+                    8
+                } else {
+                    4
+                }
+            }
+        }
+    }
+
+    /// Width as configured (0 = auto), for observability snapshots.
+    #[inline]
+    pub fn code(self) -> usize {
+        match self {
+            Lanes::Auto => 0,
+            Lanes::W4 => 4,
+            Lanes::W8 => 8,
+        }
+    }
+
+    /// Parse a config/CLI spelling (`"auto"`, `"4"`, `"8"`).
+    pub fn parse(s: &str) -> Option<Lanes> {
+        match s {
+            "auto" => Some(Lanes::Auto),
+            "4" => Some(Lanes::W4),
+            "8" => Some(Lanes::W8),
+            _ => None,
+        }
+    }
+}
+
+/// Batched c-panel (Packed layout): `c[s][n] = B^(n) a[s][n]` for samples
+/// `0..b`, `B` rows lane-blocked by `width` (4 or 8). Per-(sample, row)
+/// accumulation is bitwise identical to [`matvec_rowmajor`]: sequential
+/// sums for rows below `r - r % 4`, [`dot`] association for the tail.
+#[allow(clippy::too_many_arguments)]
+pub fn c_panel_packed(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+    width: usize,
+) {
+    debug_assert!(width == 4 || width == 8);
+    let mut rr = 0;
+    if width == 8 {
+        while rr + 8 <= r {
+            let rows: [&[f32]; 8] = [
+                &bm[rr * j..(rr + 1) * j],
+                &bm[(rr + 1) * j..(rr + 2) * j],
+                &bm[(rr + 2) * j..(rr + 3) * j],
+                &bm[(rr + 3) * j..(rr + 4) * j],
+                &bm[(rr + 4) * j..(rr + 5) * j],
+                &bm[(rr + 5) * j..(rr + 6) * j],
+                &bm[(rr + 6) * j..(rr + 7) * j],
+                &bm[(rr + 7) * j..(rr + 8) * j],
+            ];
+            for s in 0..b {
+                let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+                let mut acc = [0.0f32; 8];
+                for jj in 0..j {
+                    let xj = a[jj];
+                    acc[0] += rows[0][jj] * xj;
+                    acc[1] += rows[1][jj] * xj;
+                    acc[2] += rows[2][jj] * xj;
+                    acc[3] += rows[3][jj] * xj;
+                    acc[4] += rows[4][jj] * xj;
+                    acc[5] += rows[5][jj] * xj;
+                    acc[6] += rows[6][jj] * xj;
+                    acc[7] += rows[7][jj] * xj;
+                }
+                c_panel[(s * order + n) * r + rr..(s * order + n) * r + rr + 8]
+                    .copy_from_slice(&acc);
+            }
+            rr += 8;
+        }
+    }
+    while rr + 4 <= r {
+        let r0 = &bm[rr * j..(rr + 1) * j];
+        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
+        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
+        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
+        for s in 0..b {
+            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for jj in 0..j {
+                let xj = a[jj];
+                a0 += r0[jj] * xj;
+                a1 += r1[jj] * xj;
+                a2 += r2[jj] * xj;
+                a3 += r3[jj] * xj;
+            }
+            let cbase = (s * order + n) * r + rr;
+            c_panel[cbase] = a0;
+            c_panel[cbase + 1] = a1;
+            c_panel[cbase + 2] = a2;
+            c_panel[cbase + 3] = a3;
+        }
+        rr += 4;
+    }
+    while rr < r {
+        let brow = &bm[rr * j..(rr + 1) * j];
+        for s in 0..b {
+            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            c_panel[(s * order + n) * r + rr] = dot(brow, a);
+        }
+        rr += 1;
+    }
+}
+
+/// Batched gs-panel (Packed layout): `GS[s][n] = Σ_r w[s][n][r] b_r`,
+/// lane-blocked by `width`. Bitwise identical to [`weighted_rowsum`]: an
+/// 8-lane block contributes its two quad partial sums to `out[j]` as two
+/// separate adds (the two quad passes of the scalar primitive); tail rows
+/// go through [`axpy`].
+#[allow(clippy::too_many_arguments)]
+pub fn gs_panel_packed(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    w_panel: &[f32],
+    gs_panel: &mut [f32],
+    width: usize,
+) {
+    debug_assert!(width == 4 || width == 8);
+    for s in 0..b {
+        gs_panel[(s * order + n) * j..(s * order + n + 1) * j].fill(0.0);
+    }
+    let mut rr = 0;
+    if width == 8 {
+        while rr + 8 <= r {
+            let rows: [&[f32]; 8] = [
+                &bm[rr * j..(rr + 1) * j],
+                &bm[(rr + 1) * j..(rr + 2) * j],
+                &bm[(rr + 2) * j..(rr + 3) * j],
+                &bm[(rr + 3) * j..(rr + 4) * j],
+                &bm[(rr + 4) * j..(rr + 5) * j],
+                &bm[(rr + 5) * j..(rr + 6) * j],
+                &bm[(rr + 6) * j..(rr + 7) * j],
+                &bm[(rr + 7) * j..(rr + 8) * j],
+            ];
+            for s in 0..b {
+                let wbase = (s * order + n) * r + rr;
+                let w = &w_panel[wbase..wbase + 8];
+                let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
+                for jj in 0..j {
+                    // Two quad partial sums added separately: the exact
+                    // float sequence of two width-4 passes.
+                    let q0 =
+                        w[0] * rows[0][jj] + w[1] * rows[1][jj] + w[2] * rows[2][jj] + w[3] * rows[3][jj];
+                    let q1 =
+                        w[4] * rows[4][jj] + w[5] * rows[5][jj] + w[6] * rows[6][jj] + w[7] * rows[7][jj];
+                    out[jj] = (out[jj] + q0) + q1;
+                }
+            }
+            rr += 8;
+        }
+    }
+    while rr + 4 <= r {
+        let r0 = &bm[rr * j..(rr + 1) * j];
+        let r1 = &bm[(rr + 1) * j..(rr + 2) * j];
+        let r2 = &bm[(rr + 2) * j..(rr + 3) * j];
+        let r3 = &bm[(rr + 3) * j..(rr + 4) * j];
+        for s in 0..b {
+            let wbase = (s * order + n) * r + rr;
+            let (w0, w1, w2, w3) = (
+                w_panel[wbase],
+                w_panel[wbase + 1],
+                w_panel[wbase + 2],
+                w_panel[wbase + 3],
+            );
+            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            for jj in 0..j {
+                out[jj] += w0 * r0[jj] + w1 * r1[jj] + w2 * r2[jj] + w3 * r3[jj];
+            }
+        }
+        rr += 4;
+    }
+    while rr < r {
+        let brow = &bm[rr * j..(rr + 1) * j];
+        for s in 0..b {
+            let w = w_panel[(s * order + n) * r + rr];
+            let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            axpy(w, brow, out);
+        }
+        rr += 1;
+    }
+}
+
+/// Batched c-panel under the Strided layout: per-sample calls of the
+/// shared [`strided_matvec`](crate::kernel::contract::strided_matvec) —
+/// bitwise identical to the scalar path by construction (lane width does
+/// not apply to the strided walk).
+#[allow(clippy::too_many_arguments)]
+pub fn c_panel_strided(
+    col: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+) {
+    for s in 0..b {
+        crate::kernel::contract::strided_matvec(
+            col,
+            r,
+            &a_panel[(s * order + n) * j..(s * order + n + 1) * j],
+            &mut c_panel[(s * order + n) * r..(s * order + n) * r + r],
+        );
+    }
+}
+
+/// Batched gs-panel under the Strided layout: per-sample calls of the
+/// shared
+/// [`strided_weighted_sum`](crate::kernel::contract::strided_weighted_sum).
+#[allow(clippy::too_many_arguments)]
+pub fn gs_panel_strided(
+    col: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    w_panel: &[f32],
+    gs_panel: &mut [f32],
+) {
+    for s in 0..b {
+        crate::kernel::contract::strided_weighted_sum(
+            col,
+            r,
+            j,
+            &w_panel[(s * order + n) * r..(s * order + n) * r + r],
+            &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j],
+        );
+    }
+}
+
+/// Reference c-panel: the scalar primitive applied sample by sample (what
+/// the microkernels must reproduce bitwise). Test-support, also used by
+/// the bench harness to sanity-check a build.
+#[allow(clippy::too_many_arguments)]
+pub fn c_panel_reference(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+) {
+    for s in 0..b {
+        matvec_rowmajor(
+            bm,
+            r,
+            j,
+            &a_panel[(s * order + n) * j..(s * order + n + 1) * j],
+            &mut c_panel[(s * order + n) * r..(s * order + n) * r + r],
+        );
+    }
+}
+
+/// Reference gs-panel: [`weighted_rowsum`] sample by sample.
+#[allow(clippy::too_many_arguments)]
+pub fn gs_panel_reference(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    w_panel: &[f32],
+    gs_panel: &mut [f32],
+) {
+    for s in 0..b {
+        weighted_rowsum(
+            bm,
+            r,
+            j,
+            &w_panel[(s * order + n) * r..(s * order + n) * r + r],
+            &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn lanes_resolve_and_parse() {
+        assert_eq!(Lanes::Auto.resolve(16), 8);
+        assert_eq!(Lanes::Auto.resolve(8), 8);
+        assert_eq!(Lanes::Auto.resolve(7), 4);
+        assert_eq!(Lanes::Auto.resolve(1), 4);
+        assert_eq!(Lanes::W4.resolve(32), 4);
+        assert_eq!(Lanes::W8.resolve(2), 8);
+        assert_eq!(Lanes::parse("auto"), Some(Lanes::Auto));
+        assert_eq!(Lanes::parse("4"), Some(Lanes::W4));
+        assert_eq!(Lanes::parse("8"), Some(Lanes::W8));
+        assert_eq!(Lanes::parse("16"), None);
+        assert_eq!(Lanes::Auto.code(), 0);
+        assert_eq!(Lanes::W8.code(), 8);
+    }
+
+    /// Every lane width × every tail length (r mod 4 and r mod 8 both
+    /// sweep 0..) × odd j: the microkernels are bitwise equal to the
+    /// per-sample scalar primitives.
+    #[test]
+    fn microkernels_bitwise_match_reference_all_tails() {
+        let mut rng = Rng::new(7);
+        let (order, n, b) = (3usize, 1usize, 9usize);
+        for r in 1..=17 {
+            for j in [1usize, 3, 4, 6, 8, 11] {
+                let bm: Vec<f32> = (0..r * j).map(|_| rng.normal()).collect();
+                let a_panel: Vec<f32> = (0..b * order * j).map(|_| rng.normal()).collect();
+                let w_panel: Vec<f32> = (0..b * order * r).map(|_| rng.normal()).collect();
+
+                let mut c_ref = vec![0.0f32; b * order * r];
+                c_panel_reference(&bm, r, j, order, n, b, &a_panel, &mut c_ref);
+                let mut gs_ref = vec![0.0f32; b * order * j];
+                gs_panel_reference(&bm, r, j, order, n, b, &w_panel, &mut gs_ref);
+
+                for width in [4usize, 8] {
+                    let mut c = vec![0.0f32; b * order * r];
+                    c_panel_packed(&bm, r, j, order, n, b, &a_panel, &mut c, width);
+                    for (x, y) in c.iter().zip(c_ref.iter()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "c-panel diverged: r={r} j={j} width={width}"
+                        );
+                    }
+                    let mut gs = vec![0.0f32; b * order * j];
+                    gs_panel_packed(&bm, r, j, order, n, b, &w_panel, &mut gs, width);
+                    for (x, y) in gs.iter().zip(gs_ref.iter()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "gs-panel diverged: r={r} j={j} width={width}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_panels_match_strided_primitives() {
+        // The strided panels are per-sample calls of the shared strided
+        // primitives; pin the panel indexing (slot math), not the math.
+        let mut rng = Rng::new(9);
+        let (order, n, b, r, j) = (3usize, 2usize, 5usize, 6usize, 5usize);
+        let core = crate::kruskal::KruskalCore::random(&mut rng, order, j, r, 0.5);
+        let strided = crate::kernel::contract::build_strided(&core);
+        let a_panel: Vec<f32> = (0..b * order * j).map(|_| rng.normal()).collect();
+        let w_panel: Vec<f32> = (0..b * order * r).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; b * order * r];
+        c_panel_strided(&strided[n], r, j, order, n, b, &a_panel, &mut c);
+        let mut gs = vec![0.0f32; b * order * j];
+        gs_panel_strided(&strided[n], r, j, order, n, b, &w_panel, &mut gs);
+        for s in 0..b {
+            let mut c1 = vec![0.0f32; r];
+            crate::kernel::contract::strided_matvec(
+                &strided[n],
+                r,
+                &a_panel[(s * order + n) * j..(s * order + n + 1) * j],
+                &mut c1,
+            );
+            assert_eq!(&c[(s * order + n) * r..(s * order + n) * r + r], &c1[..]);
+            let mut g1 = vec![0.0f32; j];
+            crate::kernel::contract::strided_weighted_sum(
+                &strided[n],
+                r,
+                j,
+                &w_panel[(s * order + n) * r..(s * order + n) * r + r],
+                &mut g1,
+            );
+            assert_eq!(&gs[(s * order + n) * j..(s * order + n + 1) * j], &g1[..]);
+        }
+    }
+}

@@ -32,7 +32,17 @@
 //! Relative sample order is preserved inside each fiber (the grouping sort
 //! is stable via composite `(coord0, position)` keys, the same pass
 //! [`ModeSlices`](crate::tensor::ModeSlices) does over a whole tensor).
+//!
+//! **Split-group refinement** ([`PlanParams::split`] > 1): groups are
+//! additionally cut once they reach `ceil(max_batch / split)` samples —
+//! exact plans only at fiber **sub-run boundaries** (the mode-0 chain
+//! stays whole per fiber, so execution over the refined plan is bitwise
+//! identical to the unsplit plan over the same sample order; pinned by
+//! `tests/properties.rs::prop_split_group_execution_bitwise_matches_unsplit`),
+//! relaxed plans anywhere. Sub-groups are the independently dispatchable
+//! units split-group execution hands to workers.
 
+use crate::kernel::panel::Lanes;
 use crate::metrics::PlanStats;
 use crate::tensor::SparseTensor;
 
@@ -58,22 +68,64 @@ pub struct PlanParams {
     /// one-fiber-per-group plans).
     pub tile: usize,
     pub exactness: Exactness,
+    /// Lane width of the panel microkernels executing this plan (see
+    /// [`crate::kernel::panel`]); carried on the plan so the executor and
+    /// the planner agree per workload. Does not affect group formation.
+    pub lanes: Lanes,
+    /// Split-group factor (≥ 1): groups are additionally cut once they
+    /// reach `ceil(max_batch / split)` samples — in [`Exactness::Exact`]
+    /// mode only at fiber **sub-run boundaries** (so the per-fiber mode-0
+    /// chain stays whole and execution remains bitwise identical to the
+    /// unsplit plan over the same sample order), in
+    /// [`Exactness::Relaxed`] mode anywhere. The resulting sub-groups are
+    /// the independently dispatchable work units split-group execution
+    /// hands to workers ([`crate::parallel::worker`]).
+    pub split: usize,
+}
+
+impl Default for PlanParams {
+    fn default() -> Self {
+        PlanParams {
+            max_batch: 1,
+            tile: 1,
+            exactness: Exactness::Exact,
+            lanes: Lanes::Auto,
+            split: 1,
+        }
+    }
 }
 
 impl PlanParams {
     /// Legacy single-fiber exact plan with group cap `max_batch`.
     pub fn exact(max_batch: usize) -> PlanParams {
-        PlanParams { max_batch, tile: 1, exactness: Exactness::Exact }
+        PlanParams { max_batch, ..Default::default() }
     }
 
     /// Exact tiled plan: up to `tile` fibers per group.
     pub fn tiled(max_batch: usize, tile: usize) -> PlanParams {
-        PlanParams { max_batch, tile, exactness: Exactness::Exact }
+        PlanParams { max_batch, tile, ..Default::default() }
     }
 
     /// Relaxed (hogwild) tiled plan.
     pub fn relaxed(max_batch: usize, tile: usize) -> PlanParams {
-        PlanParams { max_batch, tile, exactness: Exactness::Relaxed }
+        PlanParams { max_batch, tile, exactness: Exactness::Relaxed, ..Default::default() }
+    }
+
+    /// Builder-style split-group factor.
+    pub fn with_split(mut self, split: usize) -> PlanParams {
+        self.split = split.max(1);
+        self
+    }
+
+    /// Builder-style lane width.
+    pub fn with_lanes(mut self, lanes: Lanes) -> PlanParams {
+        self.lanes = lanes;
+        self
+    }
+
+    /// Per-sub-group sample budget the split factor implies.
+    pub fn split_budget(&self) -> usize {
+        self.max_batch.div_ceil(self.split.max(1))
     }
 }
 
@@ -88,6 +140,9 @@ pub struct BatchPlan {
     /// counts once per group it appears in) — the tile-occupancy
     /// numerator.
     fiber_slots: usize,
+    /// Group boundaries introduced by the split-group rule (beyond the
+    /// cap/tile/distinctness splits an unsplit plan would make).
+    splits: usize,
 }
 
 /// Reusable scratch for [`BatchPlan::build_params_with_scratch`]: the
@@ -183,8 +238,14 @@ impl BatchPlan {
     ) -> BatchPlan {
         assert!(params.max_batch >= 1);
         assert!(params.tile >= 1);
+        assert!(params.split >= 1);
         let order = tensor.order();
         let exact = params.exactness == Exactness::Exact;
+        // Split-group budget: once a group holds this many samples it is
+        // cut at the next legal boundary (sub-run start in exact mode,
+        // anywhere in relaxed mode). `split == 1` disables the rule.
+        let split_budget = params.split_budget();
+        let split_active = split_budget < params.max_batch;
         scratch.ensure(tensor.dims(), ids.len(), exact);
 
         // Stable sort by mode-0 coordinate: the composite key
@@ -213,17 +274,29 @@ impl BatchPlan {
         let mut group_len = 0usize;
         let mut group_fibers = 0usize;
         let mut fiber_slots = 0usize;
+        let mut splits = 0usize;
         let mut prev_coord0 = 0u32;
         for (pos, &k) in sorted.iter().enumerate() {
             let coords = tensor.index(k as usize);
             let mut new_fiber = group_len == 0 || coords[0] != prev_coord0;
-            let must_split = group_len > 0
+            let base_split = group_len > 0
                 && (group_len == params.max_batch
                     || (new_fiber && group_fibers == params.tile)
                     || (exact
                         && (1..order)
                             .any(|n| scratch.stamps[n - 1][coords[n] as usize] == serial)));
+            // Split-group rule: exact plans only cut where a new fiber
+            // sub-run starts (the mode-0 chain stays whole per fiber, so
+            // execution over the refined groups is bitwise identical to
+            // the unsplit plan); relaxed plans cut anywhere.
+            let split_rule = split_active
+                && group_len >= split_budget
+                && (!exact || new_fiber);
+            let must_split = base_split || split_rule;
             if must_split {
+                if split_rule && !base_split {
+                    splits += 1;
+                }
                 offsets.push(pos);
                 serial += 1;
                 group_len = 0;
@@ -246,7 +319,7 @@ impl BatchPlan {
             offsets.push(sorted.len());
         }
         scratch.serial = serial;
-        BatchPlan { ids: sorted, offsets, params, fiber_slots }
+        BatchPlan { ids: sorted, offsets, params, fiber_slots, splits }
     }
 
     /// All ids in execution order (the scalar reference must iterate this
@@ -296,6 +369,13 @@ impl BatchPlan {
         self.fiber_slots
     }
 
+    /// Group boundaries the split-group rule introduced (0 when
+    /// `params.split == 1` or every cut coincided with a cap/tile/
+    /// distinctness split).
+    pub fn splits(&self) -> usize {
+        self.splits
+    }
+
     /// Mean group size (batching effectiveness diagnostic).
     pub fn mean_group_len(&self) -> f64 {
         if self.n_groups() == 0 {
@@ -312,6 +392,9 @@ impl BatchPlan {
             fiber_slots: self.fiber_slots,
             cap: self.params.max_batch,
             tile: self.params.tile,
+            lanes: self.params.lanes.code(),
+            split: self.params.split,
+            splits: self.splits,
         }
     }
 }
@@ -412,6 +495,8 @@ mod tests {
                 } else {
                     Exactness::Relaxed
                 },
+                split: 1 + rng.gen_range(4),
+                ..Default::default()
             };
             let plan = BatchPlan::build_params(&t, &ids, params);
             check_tile_invariants(&t, &ids, &plan);
@@ -470,6 +555,86 @@ mod tests {
         );
         let relaxed = BatchPlan::build_params(&t, &ids, PlanParams::relaxed(64, 64));
         assert!(relaxed.mean_group_len() >= tiled.mean_group_len());
+    }
+
+    #[test]
+    fn split_refines_groups_and_preserves_order_and_invariants() {
+        // Split-group plans over a hollow tensor with long tiled groups:
+        // the sample order is untouched (the sort is grouping-invariant),
+        // groups only get more numerous, relaxed sub-groups respect the
+        // split budget, and all tile invariants keep holding.
+        let mut rng = crate::util::Rng::new(21);
+        let dims = vec![2048usize, 400, 400];
+        let t = synth::random_uniform(&mut rng, &dims, 6000, 1.0, 5.0);
+        let ids: Vec<u32> = (0..t.nnz() as u32).collect();
+        for exactness in [Exactness::Exact, Exactness::Relaxed] {
+            let base = PlanParams { max_batch: 64, tile: 32, exactness, ..Default::default() };
+            let unsplit = BatchPlan::build_params(&t, &ids, base);
+            assert_eq!(unsplit.splits(), 0);
+            for split in [2usize, 4, 64] {
+                let params = base.with_split(split);
+                let plan = BatchPlan::build_params(&t, &ids, params);
+                check_tile_invariants(&t, &ids, &plan);
+                assert_eq!(
+                    plan.ids(),
+                    unsplit.ids(),
+                    "split changed the sample order ({exactness:?}, split {split})"
+                );
+                if exactness == Exactness::Relaxed {
+                    let budget = params.split_budget();
+                    for g in 0..plan.n_groups() {
+                        assert!(
+                            plan.group(g).len() <= budget,
+                            "relaxed sub-group exceeds split budget {budget}"
+                        );
+                    }
+                }
+            }
+            // At the finest split (budget 1) the rule must fire: every
+            // multi-fiber (exact) / multi-sample (relaxed) group gets cut.
+            let finest = BatchPlan::build_params(&t, &ids, base.with_split(64));
+            assert!(
+                finest.splits() > 0,
+                "split rule never fired at budget 1 ({exactness:?})"
+            );
+            assert!(finest.n_groups() > unsplit.n_groups());
+        }
+    }
+
+    #[test]
+    fn exact_split_cuts_only_at_subrun_boundaries() {
+        // Collision-free tensor (every mode-1/2 coordinate globally
+        // unique) with 63 fibers of 32 samples: the only cuts an exact
+        // split plan can make besides cap/tile are split-rule cuts, and
+        // those must all land where a new fiber starts.
+        let n = 63 * 32usize;
+        let mut indices = Vec::with_capacity(3 * n);
+        for i in 0..n {
+            indices.extend_from_slice(&[(i / 32) as u32, i as u32, i as u32]);
+        }
+        let t = SparseTensor::new_unchecked(
+            vec![63, n, n],
+            indices,
+            vec![1.0f32; n],
+        );
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let params = PlanParams { max_batch: 512, tile: 64, ..Default::default() }.with_split(8);
+        assert_eq!(params.split_budget(), 64);
+        let plan = BatchPlan::build_params(&t, &ids, params);
+        assert!(plan.splits() > 0, "split rule never fired");
+        for g in 1..plan.n_groups() {
+            let prev_last = *plan.group(g - 1).last().unwrap();
+            let first = plan.group(g)[0];
+            assert_ne!(
+                t.index(prev_last as usize)[0],
+                t.index(first as usize)[0],
+                "exact split-rule cut landed mid-fiber (group {g})"
+            );
+        }
+        // Budget 64 = two 32-sample fibers per sub-group.
+        for g in 0..plan.n_groups() {
+            assert!(plan.group(g).len() <= 64);
+        }
     }
 
     #[test]

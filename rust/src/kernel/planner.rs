@@ -25,6 +25,7 @@
 //! `Auto` routes through this planner, `Fixed(n)` pins the legacy
 //! single-fiber cap (0/1 = scalar execution).
 
+use crate::kernel::panel::Lanes;
 use crate::kernel::plan::{Exactness, PlanParams};
 use crate::tensor::SparseTensor;
 
@@ -49,7 +50,11 @@ pub enum BatchSizing {
 
 impl BatchSizing {
     /// Resolve to concrete [`PlanParams`] for a workload, or `None` when
-    /// this sizing selects the scalar kernel.
+    /// this sizing selects the scalar kernel. `lanes`/`split` are the
+    /// user's microkernel tuning ([`Lanes::Auto`] lets the planner pick
+    /// the lane width from `R_core`; `split` ≥ 1 is honored as given,
+    /// with 0 treated as 1).
+    #[allow(clippy::too_many_arguments)]
     pub fn resolve(
         self,
         tensor: &SparseTensor,
@@ -58,15 +63,37 @@ impl BatchSizing {
         r_core: usize,
         j: usize,
         exactness: Exactness,
+        lanes: Lanes,
+        split: usize,
     ) -> Option<PlanParams> {
         match self {
             BatchSizing::Fixed(b) if b < 2 => None,
-            BatchSizing::Fixed(b) => Some(PlanParams { max_batch: b, tile: 1, exactness }),
+            BatchSizing::Fixed(b) => Some(PlanParams {
+                max_batch: b,
+                tile: 1,
+                exactness,
+                lanes: resolve_lanes(lanes, r_core),
+                split: split.max(1),
+            }),
             BatchSizing::Auto => {
                 let stats = FiberStats::compute_full(tensor, ids_hint);
-                Some(choose_params(&stats, order, r_core, j, exactness))
+                Some(choose_params(&stats, order, r_core, j, exactness, lanes, split))
             }
         }
+    }
+}
+
+/// Planner lane-width policy: honor an explicit width; materialize
+/// [`Lanes::Auto`] through [`Lanes::resolve`] — the executor's runtime
+/// policy is the single source of truth, so a planner-built plan always
+/// reports the width the kernels actually run at.
+pub fn resolve_lanes(lanes: Lanes, r_core: usize) -> Lanes {
+    match lanes {
+        Lanes::Auto => match Lanes::Auto.resolve(r_core) {
+            8 => Lanes::W8,
+            _ => Lanes::W4,
+        },
+        explicit => explicit,
     }
 }
 
@@ -134,29 +161,48 @@ impl FiberStats {
 }
 
 /// The cost model (see module docs): group cap from the panel footprint,
-/// tile width from the fiber-length statistics.
+/// tile width from the fiber-length statistics, lane width from `R_core`
+/// (via [`resolve_lanes`] when `lanes` is `Auto`), split factor honored
+/// as configured.
+///
+/// Degenerate workloads (empty tensor / empty id set: zero means in
+/// `stats`) resolve to the minimum cap with a single-fiber tile — never a
+/// zero cap, zero tile, or a division by zero.
 pub fn choose_params(
     stats: &FiberStats,
     order: usize,
     r_core: usize,
     j: usize,
     exactness: Exactness,
+    lanes: Lanes,
+    split: usize,
 ) -> PlanParams {
+    let lanes = resolve_lanes(lanes, r_core);
+    let split = split.max(1);
+    if stats.n_ids == 0 || stats.n_fibers == 0 {
+        // Empty/degenerate workload: nothing to batch — minimum cap,
+        // single-fiber tile (regression: ISSUE 3 satellite).
+        return PlanParams { max_batch: MIN_CAP, tile: 1, exactness, lanes, split };
+    }
     let bytes_per_sample = order.max(1) * 2 * (j + r_core) * 4;
     let mut cap = PANEL_BUDGET_BYTES / bytes_per_sample.max(1);
     cap = cap.clamp(MIN_CAP, MAX_CAP);
     // Never size workspaces far beyond the workload itself.
-    if stats.n_ids > 0 {
-        cap = cap.min(stats.n_ids.next_power_of_two().max(MIN_CAP));
-    }
+    cap = cap.min(stats.n_ids.next_power_of_two().max(MIN_CAP));
     cap = prev_power_of_two(cap);
-    let mean = stats.mean_len.max(1.0);
+    // Zero/NaN-proof mean (a hand-built FiberStats can carry zeros even
+    // with n_ids > 0).
+    let mean = if stats.mean_len.is_finite() && stats.mean_len >= 1.0 {
+        stats.mean_len
+    } else {
+        1.0
+    };
     let tile = if mean >= cap as f64 {
         1
     } else {
         ((cap as f64 / mean).ceil() as usize).clamp(1, MAX_TILE.min(cap))
     };
-    PlanParams { max_batch: cap, tile, exactness }
+    PlanParams { max_batch: cap, tile, exactness, lanes, split }
 }
 
 /// Mini-batch cap for the PJRT (AOT artifact) path: its `train_step`
@@ -214,14 +260,14 @@ mod tests {
     fn planner_tiles_hollow_and_not_tall() {
         // All-singleton fibers => widest useful tile.
         let singleton = FiberStats { n_ids: 100_000, n_fibers: 100_000, mean_len: 1.0, p90_len: 1, max_len: 1 };
-        let p = choose_params(&singleton, 3, 16, 16, Exactness::Exact);
+        let p = choose_params(&singleton, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1);
         assert!(p.max_batch.is_power_of_two());
         assert!((MIN_CAP..=MAX_CAP).contains(&p.max_batch));
         assert_eq!(p.tile, MAX_TILE.min(p.max_batch), "singleton fibers want the max tile");
 
         // One giant fiber => single-fiber groups suffice.
         let giant = FiberStats { n_ids: 100_000, n_fibers: 1, mean_len: 100_000.0, p90_len: 100_000, max_len: 100_000 };
-        let p = choose_params(&giant, 3, 16, 16, Exactness::Relaxed);
+        let p = choose_params(&giant, 3, 16, 16, Exactness::Relaxed, Lanes::Auto, 1);
         assert_eq!(p.tile, 1);
         assert_eq!(p.exactness, Exactness::Relaxed);
     }
@@ -230,15 +276,79 @@ mod tests {
     fn planner_cap_respects_budget_and_workload() {
         // Budget shrinks the cap as panels grow.
         let s = FiberStats { n_ids: 1 << 20, n_fibers: 1 << 12, mean_len: 256.0, p90_len: 400, max_len: 800 };
-        let small = choose_params(&s, 3, 8, 8, Exactness::Exact).max_batch;
-        let big = choose_params(&s, 3, 64, 64, Exactness::Exact).max_batch;
+        let small = choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, 1).max_batch;
+        let big = choose_params(&s, 3, 64, 64, Exactness::Exact, Lanes::Auto, 1).max_batch;
         assert!(big <= small, "bigger panels must not get a bigger cap");
         assert!(big >= MIN_CAP);
 
         // Tiny workloads don't get giant workspaces.
         let tiny = FiberStats { n_ids: 20, n_fibers: 10, mean_len: 2.0, p90_len: 3, max_len: 4 };
-        let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact);
+        let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
         assert!(p.max_batch <= 32, "cap {} for a 20-sample workload", p.max_batch);
+    }
+
+    #[test]
+    fn planner_degenerate_inputs_return_minimum_params() {
+        // ISSUE 3 satellite: zero FiberStats means (empty workload) must
+        // not divide by zero or emit a zero cap/tile.
+        let empty = FiberStats::default();
+        assert_eq!(empty.n_ids, 0);
+        let p = choose_params(&empty, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1);
+        assert_eq!(p.max_batch, MIN_CAP);
+        assert_eq!(p.tile, 1);
+        assert!(p.split >= 1);
+
+        // Hand-built stats with n_ids > 0 but zeroed means must also be
+        // safe (tile ≥ 1, cap ≥ MIN_CAP).
+        let weird = FiberStats { n_ids: 5, n_fibers: 5, mean_len: 0.0, p90_len: 0, max_len: 0 };
+        let p = choose_params(&weird, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
+        assert!(p.max_batch >= MIN_CAP && p.tile >= 1);
+
+        // split = 0 is normalized to 1, not propagated.
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 0);
+        assert_eq!(p.split, 1);
+
+        // Empty tensor through the Auto path end to end.
+        let t = SparseTensor::new_unchecked(vec![4, 4, 4], Vec::new(), Vec::new());
+        let p = BatchSizing::Auto
+            .resolve(&t, 0, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
+            .unwrap();
+        assert_eq!(p.max_batch, MIN_CAP);
+        assert_eq!(p.tile, 1);
+
+        // One-nnz tensor: minimum cap, nonzero tile.
+        let one = SparseTensor::new_unchecked(vec![4, 4, 4], vec![1, 2, 3], vec![1.0]);
+        let p = BatchSizing::Auto
+            .resolve(&one, 1, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
+            .unwrap();
+        assert!(p.max_batch >= MIN_CAP && p.tile >= 1);
+    }
+
+    #[test]
+    fn planner_selects_lane_width_from_r_core() {
+        let s = FiberStats { n_ids: 1000, n_fibers: 100, mean_len: 10.0, p90_len: 15, max_len: 30 };
+        assert_eq!(
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1).lanes,
+            Lanes::W8
+        );
+        assert_eq!(
+            choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, 1).lanes,
+            Lanes::W8
+        );
+        assert_eq!(
+            choose_params(&s, 3, 7, 8, Exactness::Exact, Lanes::Auto, 1).lanes,
+            Lanes::W4
+        );
+        // Explicit widths are honored.
+        assert_eq!(
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::W4, 1).lanes,
+            Lanes::W4
+        );
+        // Split passes through.
+        assert_eq!(
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, 4).split,
+            4
+        );
     }
 
     #[test]
@@ -246,21 +356,23 @@ mod tests {
         let mut rng = Rng::new(9);
         let t = synth::random_uniform(&mut rng, &[128, 32, 32], 1000, 1.0, 5.0);
         assert_eq!(
-            BatchSizing::Fixed(0).resolve(&t, 1000, 3, 4, 4, Exactness::Exact),
+            BatchSizing::Fixed(0).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1),
             None
         );
         assert_eq!(
-            BatchSizing::Fixed(1).resolve(&t, 1000, 3, 4, 4, Exactness::Exact),
+            BatchSizing::Fixed(1).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1),
             None
         );
         let fixed = BatchSizing::Fixed(48)
-            .resolve(&t, 1000, 3, 4, 4, Exactness::Relaxed)
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 2)
             .unwrap();
         assert_eq!(fixed.max_batch, 48);
         assert_eq!(fixed.tile, 1);
         assert_eq!(fixed.exactness, Exactness::Relaxed);
+        assert_eq!(fixed.lanes, Lanes::W4, "r_core 4 resolves to 4-lane blocks");
+        assert_eq!(fixed.split, 2);
         let auto = BatchSizing::Auto
-            .resolve(&t, 1000, 3, 4, 4, Exactness::Exact)
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
             .unwrap();
         assert!(auto.max_batch >= MIN_CAP);
         // mean fiber len ~ 1000/128 ≈ 7.8 — hollow, so the tile engages.

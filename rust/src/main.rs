@@ -4,7 +4,8 @@
 //! fasttucker train  [--config exp.toml] [--dataset NAME] [--algo A]
 //!                   [--engine native|parallel|pjrt] [--j N] [--r-core N]
 //!                   [--epochs N] [--workers M] [--seed S] [--scale F]
-//!                   [--checkpoint OUT.ftck]
+//!                   [--batch auto|N] [--exactness exact|relaxed]
+//!                   [--lanes auto|4|8] [--split N] [--checkpoint OUT.ftck]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
 //! fasttucker partition-plan --workers M --order N
@@ -57,6 +58,7 @@ USAGE:
                     [--epochs N] [--workers M] [--seed S] [--scale F]
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
                     [--batch auto|N] [--exactness exact|relaxed]
+                    [--lanes auto|4|8] [--split N]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -112,6 +114,13 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
             "relaxed" | "hogwild" => fasttucker::kernel::Exactness::Relaxed,
             other => bail!("unknown exactness {other:?} (expected exact|relaxed)"),
         };
+    }
+    if let Some(v) = args.get("lanes") {
+        cfg.lanes = fasttucker::kernel::Lanes::parse(v)
+            .ok_or_else(|| anyhow!("--lanes expects auto|4|8, got {v:?}"))?;
+    }
+    if let Some(v) = args.get_usize("split")? {
+        cfg.split = v;
     }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;

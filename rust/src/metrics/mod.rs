@@ -117,6 +117,13 @@ pub struct PlanStats {
     pub cap: usize,
     /// Fiber-tile width the plan was built with.
     pub tile: usize,
+    /// Configured panel-microkernel lane width (0 = auto; see
+    /// [`Lanes::code`](crate::kernel::panel::Lanes::code)).
+    pub lanes: usize,
+    /// Split-group factor the plan was built with (1 = off).
+    pub split: usize,
+    /// Group boundaries the split-group rule introduced.
+    pub splits: usize,
 }
 
 impl PlanStats {
@@ -161,6 +168,11 @@ pub struct PlanAccum {
     /// decision per dataset).
     pub cap: usize,
     pub tile: usize,
+    /// Largest configured lane width (0 = auto) / split factor observed.
+    pub lanes: usize,
+    pub split: usize,
+    /// Split-rule group boundaries summed over plans.
+    pub splits: u64,
 }
 
 impl PlanAccum {
@@ -175,6 +187,9 @@ impl PlanAccum {
         self.fiber_slots += s.fiber_slots as u64;
         self.cap = self.cap.max(s.cap);
         self.tile = self.tile.max(s.tile);
+        self.lanes = self.lanes.max(s.lanes);
+        self.split = self.split.max(s.split);
+        self.splits += s.splits as u64;
     }
 
     pub fn merge(&mut self, other: &PlanAccum) {
@@ -184,6 +199,9 @@ impl PlanAccum {
         self.fiber_slots += other.fiber_slots;
         self.cap = self.cap.max(other.cap);
         self.tile = self.tile.max(other.tile);
+        self.lanes = self.lanes.max(other.lanes);
+        self.split = self.split.max(other.split);
+        self.splits += other.splits;
     }
 
     pub fn mean_group_len(&self) -> f64 {
@@ -284,7 +302,16 @@ mod tests {
 
     #[test]
     fn plan_stats_ratios() {
-        let s = PlanStats { samples: 120, n_groups: 10, fiber_slots: 40, cap: 24, tile: 8 };
+        let s = PlanStats {
+            samples: 120,
+            n_groups: 10,
+            fiber_slots: 40,
+            cap: 24,
+            tile: 8,
+            lanes: 8,
+            split: 2,
+            splits: 3,
+        };
         assert!((s.mean_group_len() - 12.0).abs() < 1e-12);
         assert!((s.mean_fibers_per_group() - 4.0).abs() < 1e-12);
         assert!((s.occupancy() - 0.5).abs() < 1e-12);
@@ -299,9 +326,13 @@ mod tests {
         assert!((acc.mean_group_len() - 12.0).abs() < 1e-12);
         assert!((acc.mean_fibers_per_group() - 4.0).abs() < 1e-12);
         assert!((acc.occupancy() - 0.5).abs() < 1e-12);
+        assert_eq!(acc.lanes, 8);
+        assert_eq!(acc.split, 2);
+        assert_eq!(acc.splits, 6);
         let mut acc2 = PlanAccum::new();
         acc2.merge(&acc);
         assert_eq!(acc2.samples, 240);
+        assert_eq!(acc2.splits, 6);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::time::Instant;
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
 use crate::kernel::{
     apply_core_grad_raw, batched, build_strided, BatchPlan, BatchSizing, BatchWorkspace,
-    CoreLayout, Exactness, PlanParams,
+    CoreLayout, Exactness, Lanes, PlanParams,
 };
 use crate::metrics::{CommLedger, PlanAccum, PlanStats};
 use crate::model::{CoreRepr, TuckerModel};
@@ -68,6 +68,20 @@ pub struct ParallelOptions {
     /// Collision semantics of the blocks' plans (see
     /// [`crate::kernel::plan::Exactness`]).
     pub exactness: Exactness,
+    /// Panel-microkernel lane width for the workers' batched kernel
+    /// calls (`Auto` = planner-chosen from `R_core`; bitwise-neutral in
+    /// exact mode).
+    pub lanes: Lanes,
+    /// Split-group factor (≥ 1, default 1): each worker's plan cuts long
+    /// tiled groups into sub-groups at fiber sub-run boundaries (exact
+    /// mode — bitwise identical to the unsplit plan, pinned by the
+    /// integration tests) or anywhere (relaxed). Sub-groups are the
+    /// independently dispatchable work units of split-group execution:
+    /// today each Latin worker drains its own sub-groups in order, and
+    /// because exact-mode splits are execution-order-neutral the same
+    /// plan can be fanned out across more workers (or an in-group thread
+    /// pool / the PJRT backend) without changing results.
+    pub split: usize,
 }
 
 impl Default for ParallelOptions {
@@ -79,6 +93,8 @@ impl Default for ParallelOptions {
             execution: Execution::auto(),
             batch: BatchSizing::Auto,
             exactness: Exactness::Exact,
+            lanes: Lanes::Auto,
+            split: 1,
         }
     }
 }
@@ -93,11 +109,21 @@ pub struct ParallelFastTucker {
     /// every worker, resolved in `ensure_state`).
     plan_params: PlanParams,
     /// Fingerprint the decision was made for: `(nnz, sample count,
-    /// order, r_core, j, sizing, exactness)` — every input the cost
-    /// model reads, so the O(nnz) fiber-stats scan runs once per
-    /// dataset/config, not once per epoch.
+    /// order, r_core, j, sizing, exactness, lanes, split)` — every input
+    /// the cost model reads, so the O(nnz) fiber-stats scan runs once
+    /// per dataset/config, not once per epoch.
     #[allow(clippy::type_complexity)]
-    plan_params_for: Option<(usize, usize, usize, usize, usize, BatchSizing, Exactness)>,
+    plan_params_for: Option<(
+        usize,
+        usize,
+        usize,
+        usize,
+        usize,
+        BatchSizing,
+        Exactness,
+        Lanes,
+        usize,
+    )>,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
     /// Plan observability accumulated across epochs (one record per
@@ -135,16 +161,35 @@ impl ParallelFastTucker {
         let m = ((train.nnz() as f64) * self.opts.hyper.sample_frac)
             .round()
             .max(1.0) as usize;
-        let params_fp = (train.nnz(), m, order, r_core, j, self.opts.batch, self.opts.exactness);
+        let params_fp = (
+            train.nnz(),
+            m,
+            order,
+            r_core,
+            j,
+            self.opts.batch,
+            self.opts.exactness,
+            self.opts.lanes,
+            self.opts.split,
+        );
         if self.plan_params_for != Some(params_fp) {
             self.plan_params = self
                 .opts
                 .batch
-                .resolve(train, m, order, r_core, j, self.opts.exactness)
+                .resolve(
+                    train,
+                    m,
+                    order,
+                    r_core,
+                    j,
+                    self.opts.exactness,
+                    self.opts.lanes,
+                    self.opts.split,
+                )
                 .unwrap_or(PlanParams {
                     max_batch: 1,
-                    tile: 1,
                     exactness: self.opts.exactness,
+                    ..Default::default()
                 });
             self.plan_params_for = Some(params_fp);
         }
@@ -560,6 +605,54 @@ mod tests {
             rengine.plan_accum,
             acc
         );
+    }
+
+    #[test]
+    fn split_group_execution_is_bitwise_neutral_in_exact_mode() {
+        // ISSUE 3 satellite: exact-mode split-group execution (sub-group
+        // cuts at fiber sub-run boundaries) must leave the trained model
+        // bitwise identical to the unsplit engine — the property that
+        // lets sub-groups be dispatched independently.
+        let spec = PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut prng = Rng::new(51);
+        let p = planted_tucker(&mut prng, &spec);
+        let run = |split: usize| {
+            let mut rng = Rng::new(52);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 2;
+            opts.split = split;
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(53);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, engine.plan_accum)
+        };
+        let (unsplit, acc1) = run(1);
+        let (split, acc64) = run(64);
+        assert_eq!(acc1.splits, 0);
+        assert!(acc64.splits > 0, "split rule never engaged: {acc64:?}");
+        assert!(acc64.groups > acc1.groups);
+        for n in 0..3 {
+            for (a, b) in unsplit
+                .factors
+                .mat(n)
+                .data()
+                .iter()
+                .zip(split.factors.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under split");
+            }
+        }
     }
 
     #[test]

@@ -289,6 +289,102 @@ fn pjrt_engine_matches_native_engine_numerically() {
 }
 
 #[test]
+fn split_group_training_trajectories_on_hollow_workload() {
+    // ISSUE 3 satellite: seeded end-to-end train on a hollow workload,
+    // comparing serial-exact, parallel-split-exact, and relaxed paths.
+    // The exact parallel paths (split vs unsplit) must be EQUAL — same
+    // per-epoch loss trajectory and bitwise-identical factors — because
+    // exact split-group cuts land on fiber sub-run boundaries; serial
+    // and relaxed agree within tolerance.
+    let spec = PlantedSpec {
+        dims: vec![2000, 300, 300],
+        nnz: 8000,
+        j: 4,
+        r_core: 4,
+        noise: 0.05,
+        clamp: Some((1.0, 5.0)),
+    };
+    let mut prng = Rng::new(61);
+    let tensor = planted_tucker(&mut prng, &spec).tensor;
+
+    let run_parallel = |exactness: fasttucker::kernel::Exactness, split: usize| {
+        let mut rng = Rng::new(62);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.exactness = exactness;
+        opts.split = split;
+        opts.hyper.lr_factor = LrSchedule::constant(0.01);
+        opts.hyper.lr_core = LrSchedule::constant(0.005);
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut rng2 = Rng::new(63);
+        let mut trajectory = Vec::new();
+        for epoch in 0..8 {
+            engine.train_epoch(&mut model, &tensor, epoch, &mut rng2).unwrap();
+            trajectory.push(rmse(&model, &tensor));
+        }
+        (model, trajectory, engine.plan_accum)
+    };
+
+    let (m_unsplit, traj_unsplit, acc_unsplit) =
+        run_parallel(fasttucker::kernel::Exactness::Exact, 1);
+    let (m_split, traj_split, acc_split) =
+        run_parallel(fasttucker::kernel::Exactness::Exact, 64);
+    assert_eq!(acc_unsplit.splits, 0);
+    assert!(acc_split.splits > 0, "split rule never engaged: {acc_split:?}");
+    for (e, (a, b)) in traj_unsplit.iter().zip(traj_split.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "epoch {e}: exact split trajectory diverged ({a} vs {b})"
+        );
+    }
+    for n in 0..3 {
+        for (a, b) in m_unsplit
+            .factors
+            .mat(n)
+            .data()
+            .iter()
+            .zip(m_split.factors.mat(n).data().iter())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "mode {n} factors diverged");
+        }
+    }
+
+    // Serial exact (planner-batched) on the same data: different sample
+    // order, same accuracy ballpark, and both must actually descend.
+    let serial_final = {
+        let mut rng = Rng::new(62);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut algo = FastTucker::with_auto_batch();
+        algo.config.hyper.lr_factor = LrSchedule::constant(0.01);
+        algo.config.hyper.lr_core = LrSchedule::constant(0.005);
+        let mut rng2 = Rng::new(63);
+        let before = rmse(&model, &tensor);
+        for epoch in 0..8 {
+            algo.train_epoch(&mut model, &tensor, epoch, &mut rng2).unwrap();
+        }
+        let after = rmse(&model, &tensor);
+        assert!(after < before, "serial path failed to descend");
+        after
+    };
+    let split_final = *traj_split.last().unwrap();
+    assert!(split_final < traj_split[0] * 1.0001, "parallel path failed to descend");
+    assert!(
+        (serial_final - split_final).abs() < 0.35 * serial_final.max(0.05),
+        "serial {serial_final} vs parallel-split {split_final}"
+    );
+
+    // Relaxed (hogwild) split path: within tolerance of the exact path.
+    let (_m_rel, traj_rel, _acc) = run_parallel(fasttucker::kernel::Exactness::Relaxed, 64);
+    let relaxed_final = *traj_rel.last().unwrap();
+    assert!(
+        (relaxed_final - split_final).abs() < 0.10 * split_final.max(0.05),
+        "relaxed {relaxed_final} vs exact {split_final}"
+    );
+}
+
+#[test]
 fn threads_and_simulated_execution_identical() {
     let spec = PlantedSpec {
         dims: vec![30, 30, 30],

@@ -343,6 +343,176 @@ fn prop_tiled_batched_bitwise_matches_scalar() {
 }
 
 #[test]
+fn prop_panel_microkernel_bitwise_matches_scalar() {
+    // ISSUE 3 tentpole invariant: every panel-microkernel lane width
+    // (Auto/4/8) × every R_core tail length × Packed/Strided layout ×
+    // split-group refinement keeps exact batched execution BITWISE
+    // identical to the scalar kernel over plan order — factors, core
+    // grads, sse, and the residual stream.
+    forall("panel microkernels == scalar, bitwise", 14, |rng| {
+        let order = 2 + rng.gen_range(3); // 2..=4
+        // Skew mode 0 large so fibers are short and tiles really form.
+        let mut dims: Vec<usize> = vec![40 + rng.gen_range(400)];
+        for _ in 1..order {
+            dims.push(8 + rng.gen_range(60));
+        }
+        let j = 1 + rng.gen_range(9);
+        // 1..=17 sweeps the lane-block tails: r % 4 and r % 8 both cycle,
+        // including r < width entirely-tail cases.
+        let r = 1 + rng.gen_range(17);
+        let nnz = 200 + rng.gen_range(1200);
+        let tensor = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let layout = if rng.gen_range(2) == 0 {
+            CoreLayout::Packed
+        } else {
+            CoreLayout::Strided
+        };
+        let strided = build_strided(&core);
+        let n_ids = 1 + rng.gen_range(nnz);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+        let lanes = match rng.gen_range(3) {
+            0 => fasttucker::kernel::Lanes::Auto,
+            1 => fasttucker::kernel::Lanes::W4,
+            _ => fasttucker::kernel::Lanes::W8,
+        };
+        let params = fasttucker::kernel::PlanParams::tiled(
+            2 + rng.gen_range(95),
+            1 + rng.gen_range(16),
+        )
+        .with_lanes(lanes)
+        .with_split(1 + rng.gen_range(6));
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let (lr, lam) = (0.01f32, 0.003f32);
+        let update_core = rng.gen_range(2) == 0;
+
+        let mut f_s = model.factors.clone();
+        let mut ws = Workspace::new(order, r, j);
+        let mut log_s = Vec::new();
+        let st_s = scalar::run_ids(
+            &mut ws, &tensor, plan.ids(), &core, &strided, layout, &mut f_s, lr, lam,
+            update_core, Some(&mut log_s),
+        );
+
+        let mut f_b = model.factors.clone();
+        let mut bws = BatchWorkspace::new(order, r, j, params.max_batch);
+        let mut log_b = Vec::new();
+        let st_b = batched::run_plan(
+            &mut bws, &tensor, &plan, &core, &strided, layout, &mut f_b, lr, lam,
+            update_core, Some(&mut log_b),
+        );
+
+        assert_eq!(st_s.samples, st_b.samples);
+        assert_eq!(
+            st_s.sse.to_bits(),
+            st_b.sse.to_bits(),
+            "sse diverged ({lanes:?}, split {})",
+            params.split
+        );
+        assert_eq!(log_s.len(), log_b.len());
+        for (i, (a, b)) in log_s.iter().zip(log_b.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "residual {i} diverged ({lanes:?})");
+        }
+        for n in 0..order {
+            for (a, b) in f_s.mat(n).data().iter().zip(f_b.mat(n).data().iter()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "mode {n} factors diverged ({lanes:?}, split {})",
+                    params.split
+                );
+            }
+        }
+        let (gs, cs) = ws.core_grad_mut();
+        let (gb, cb) = bws.core_grad_mut();
+        assert_eq!(*cs, *cb);
+        for (a, b) in gs.iter().zip(gb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged ({lanes:?})");
+        }
+    });
+}
+
+#[test]
+fn prop_split_group_execution_bitwise_matches_unsplit() {
+    // ISSUE 3 satellite: exact split-group execution (sub-group cuts at
+    // fiber sub-run boundaries) is bitwise equal to the unsplit plan —
+    // and a relaxed split plan stays a permutation of the sample
+    // multiset with every sample executed exactly once.
+    forall("split-group == unsplit, bitwise (exact)", 10, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let mut dims: Vec<usize> = vec![60 + rng.gen_range(400)];
+        for _ in 1..order {
+            dims.push(10 + rng.gen_range(60));
+        }
+        let j = 1 + rng.gen_range(7);
+        let r = 1 + rng.gen_range(9);
+        let nnz = 300 + rng.gen_range(1200);
+        let tensor = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let n_ids = 1 + rng.gen_range(nnz);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+        let cap = 2 + rng.gen_range(95);
+        let tile = 1 + rng.gen_range(16);
+        let split = 2 + rng.gen_range(cap);
+        let base = fasttucker::kernel::PlanParams::tiled(cap, tile);
+        let (lr, lam) = (0.01f32, 0.003f32);
+
+        let run = |params: fasttucker::kernel::PlanParams| {
+            let plan = BatchPlan::build_params(&tensor, &ids, params);
+            let mut f = model.factors.clone();
+            let mut bws = BatchWorkspace::new(order, r, j, cap);
+            let mut log = Vec::new();
+            let st = batched::run_plan(
+                &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed, &mut f, lr, lam,
+                false, Some(&mut log),
+            );
+            (plan, f, st, log)
+        };
+        let (plan_u, f_u, st_u, log_u) = run(base);
+        let (plan_s, f_s, st_s, log_s) = run(base.with_split(split));
+
+        // Same sample order (the grouping sort ignores the split rule),
+        // at least as many groups, identical execution bits.
+        assert_eq!(plan_u.ids(), plan_s.ids());
+        assert!(plan_s.n_groups() >= plan_u.n_groups());
+        assert_eq!(st_u.samples, st_s.samples);
+        assert_eq!(st_u.sse.to_bits(), st_s.sse.to_bits(), "sse diverged under split");
+        for (a, b) in log_u.iter().zip(log_s.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "residual stream diverged under split");
+        }
+        for n in 0..order {
+            for (a, b) in f_u.mat(n).data().iter().zip(f_s.mat(n).data().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under split");
+            }
+        }
+
+        // Relaxed split: permutation of the multiset, every sample
+        // executed once, sub-groups within the split budget.
+        let rparams = fasttucker::kernel::PlanParams::relaxed(cap, tile).with_split(split);
+        let (rplan, _f, rst, rlog) = run(rparams);
+        let mut a = ids.clone();
+        let mut b = rplan.ids().to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "relaxed split plan is not a permutation");
+        assert_eq!(rst.samples, ids.len());
+        assert_eq!(rlog.len(), ids.len());
+        let budget = rparams.split_budget();
+        for g in 0..rplan.n_groups() {
+            assert!(rplan.group(g).len() <= budget);
+        }
+    });
+}
+
+#[test]
 fn prop_relaxed_plan_execution_is_permutation_and_descends() {
     // Relaxed (hogwild) plans: the executed sample multiset is exactly
     // the input multiset (KernelStats::samples + the residual count), and
