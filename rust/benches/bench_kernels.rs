@@ -33,11 +33,12 @@ use fasttucker::coordinator::PjrtEngine;
 use fasttucker::data::synth::{self, planted_tucker, PlantedSpec};
 use fasttucker::bench_support::regression;
 use fasttucker::kernel::{
-    batched, planner, scalar, BatchPlan, BatchWorkspace, Exactness, FiberStats, Lanes,
-    PlanParams,
+    batched, planner, scalar, BatchPlan, BatchWorkspace, DispatchPool, Exactness, FiberStats,
+    Lanes, PlanParams,
 };
 use fasttucker::kruskal::KruskalCore;
 use fasttucker::model::{CoreRepr, TuckerModel};
+use fasttucker::parallel::shared::{SharedFactors, SharedRowAccess};
 use fasttucker::util::Rng;
 
 fn contraction_bench() {
@@ -84,6 +85,8 @@ struct PathResult {
     secs_per_pass: f64,
     msamples_per_sec: f64,
     speedup_vs_scalar: f64,
+    /// In-group pool threads (1 for the sequential paths).
+    threads: usize,
 }
 
 /// One workload of the sweep (what `--json` serializes).
@@ -177,6 +180,7 @@ fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> Worklo
             secs_per_pass: best,
             msamples_per_sec: nnz as f64 / best / 1e6,
             speedup_vs_scalar: 1.0,
+            threads: 1,
         });
         best
     };
@@ -236,6 +240,69 @@ fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> Worklo
             secs_per_pass: best,
             msamples_per_sec: nnz as f64 / best / 1e6,
             speedup_vs_scalar: scalar_secs / best,
+            threads: 1,
+        });
+    }
+
+    // In-group threaded path (ISSUE 4 tentpole): the tiled-split plan's
+    // sub-groups fanned across a DispatchPool as exact coloring waves —
+    // bitwise identical to the sequential tiled-split path, timed to pin
+    // the wave-dispatch overhead/speedup.
+    {
+        let mt_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(2, 8);
+        let params = auto.with_split(8);
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let coloring = plan.color_subgroups(&tensor);
+        let cstats = coloring.stats();
+        let stats = plan.stats();
+        let mut factors = model.factors.clone();
+        let mut pool = DispatchPool::new(mt_threads, 3, r, j, params.max_batch);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let shared = SharedFactors::new(&mut factors);
+            let t0 = Instant::now();
+            // SAFETY: exact coloring waves have pairwise-disjoint row
+            // footprints; nothing else touches the factors.
+            let st = pool.execute(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { SharedRowAccess::new(&shared) },
+                lr, lam, true, None,
+            );
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(st.sse);
+        }
+        println!(
+            "tiled-split-mt: {} threads, {} waves over {} sub-groups (mean wave {:.1})",
+            mt_threads,
+            cstats.n_waves,
+            cstats.n_groups,
+            cstats.parallelism()
+        );
+        table.row(&[
+            format!("tiled-split-mt(x{mt_threads})"),
+            params.max_batch.to_string(),
+            params.tile.to_string(),
+            format!("{:.1}", stats.mean_group_len()),
+            format!("{:.2}", stats.mean_fibers_per_group()),
+            format!("{:.2}", stats.occupancy()),
+            format!("{best:.4}"),
+            format!("{:.2}", nnz as f64 / best / 1e6),
+            format!("{:.2}x", scalar_secs / best),
+        ]);
+        result.paths.push(PathResult {
+            path: "tiled-split-mt".into(),
+            cap: Some(params.max_batch),
+            tile: Some(params.tile),
+            mean_group_len: stats.mean_group_len(),
+            mean_fibers_per_group: stats.mean_fibers_per_group(),
+            occupancy: stats.occupancy(),
+            secs_per_pass: best,
+            msamples_per_sec: nnz as f64 / best / 1e6,
+            speedup_vs_scalar: scalar_secs / best,
+            threads: mt_threads,
         });
     }
     table.print();
@@ -276,12 +343,14 @@ fn render_json(workloads: &[WorkloadResult]) -> String {
         ));
         for (pi, p) in w.paths.iter().enumerate() {
             s.push_str(&format!(
-                "      {{\"path\": \"{}\", \"cap\": {}, \"tile\": {}, \"mean_group_len\": {:.4}, \
+                "      {{\"path\": \"{}\", \"cap\": {}, \"tile\": {}, \"threads\": {}, \
+                 \"mean_group_len\": {:.4}, \
                  \"mean_fibers_per_group\": {:.4}, \"occupancy\": {:.4}, \"secs_per_pass\": {:.6}, \
                  \"msamples_per_sec\": {:.4}, \"speedup_vs_scalar\": {:.4}}}{}\n",
                 p.path,
                 opt(p.cap),
                 opt(p.tile),
+                p.threads,
                 p.mean_group_len,
                 p.mean_fibers_per_group,
                 p.occupancy,

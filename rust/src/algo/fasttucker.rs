@@ -26,9 +26,10 @@ use std::time::Instant;
 
 use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
 use crate::kernel::{
-    apply_core_grad_raw, batched, scalar, BatchPlan, BatchSizing, BatchWorkspace, Exactness,
-    Lanes, PlanParams,
+    apply_core_grad_raw, planner, scalar, BatchPlan, BatchSizing, DispatchPool, Exactness,
+    Lanes, PlanParams, ThreadCount,
 };
+use crate::parallel::shared::{dispatch_plan, SharedFactors};
 // Re-exported for compatibility: the contraction primitives historically
 // lived in this module and are widely imported from here.
 pub use crate::kernel::contract::{
@@ -66,6 +67,13 @@ pub struct FastTuckerConfig {
     /// (relaxed) into `split` sub-groups — the dispatch unit for
     /// intra-group parallelism (see [`crate::kernel::plan::PlanParams`]).
     pub split: usize,
+    /// In-group thread pool width (ISSUE 4 tentpole): the serial engine
+    /// fans each epoch plan's split sub-groups across this many threads
+    /// through a [`DispatchPool`] — exact mode via the sub-group coloring
+    /// waves (bitwise identical to sequential execution), relaxed mode as
+    /// one hogwild wave. `Auto` = `FASTTUCKER_POOL_THREADS` or
+    /// sequential. Ignored on the scalar path.
+    pub threads: ThreadCount,
 }
 
 impl Default for FastTuckerConfig {
@@ -77,6 +85,7 @@ impl Default for FastTuckerConfig {
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
             split: 1,
+            threads: ThreadCount::Auto,
         }
     }
 }
@@ -85,7 +94,9 @@ impl Default for FastTuckerConfig {
 pub struct FastTucker {
     pub config: FastTuckerConfig,
     ws: Option<Workspace>,
-    bws: Option<BatchWorkspace>,
+    /// Batched-path executor state: the in-group pool (T = 1 degenerates
+    /// to the plain per-epoch workspace of earlier PRs).
+    pool: Option<DispatchPool>,
     strided: Vec<Vec<f32>>,
     /// Planner decision cached per workload + model fingerprint
     /// `(nnz, dims, sample count, order, r_core, j, exactness, lanes,
@@ -105,7 +116,7 @@ impl FastTucker {
         FastTucker {
             config,
             ws: None,
-            bws: None,
+            pool: None,
             strided: Vec::new(),
             auto_cache: None,
             last_plan_stats: None,
@@ -193,12 +204,13 @@ impl FastTucker {
     fn ensure_ws(&mut self, order: usize, r_core: usize, j: usize, params: Option<PlanParams>) {
         if let Some(p) = params {
             let cap = p.max_batch;
-            let stale = match &self.bws {
-                Some(w) => w.shape() != (order, r_core, j, cap),
+            let threads = planner::resolve_threads(self.config.threads);
+            let stale = match &self.pool {
+                Some(w) => w.shape() != (order, r_core, j, cap) || w.threads() != threads,
                 None => true,
             };
             if stale {
-                self.bws = Some(BatchWorkspace::new(order, r_core, j, cap));
+                self.pool = Some(DispatchPool::new(threads, order, r_core, j, cap));
             }
         } else {
             let stale = match &self.ws {
@@ -263,24 +275,35 @@ impl Decomposer for FastTucker {
                 _ => unreachable!(),
             };
             if let Some(p) = params {
-                let bws = self.bws.as_mut().unwrap();
+                let pool = self.pool.as_mut().unwrap();
                 let plan =
-                    BatchPlan::build_params_with_scratch(train, &ids, p, bws.plan_scratch_mut());
-                self.last_plan_stats = Some(plan.stats());
-                let st = batched::run_plan(
-                    bws,
-                    train,
-                    &plan,
-                    core,
-                    &self.strided,
-                    self.config.layout,
-                    &mut model.factors,
-                    lr_f,
-                    h.lambda_factor,
-                    h.update_core,
-                    None,
-                );
-                bws.plan_scratch_mut().recycle(plan);
+                    BatchPlan::build_params_with_scratch(train, &ids, p, pool.plan_scratch_mut());
+                let mut plan_stats = plan.stats();
+                let shared = SharedFactors::new(&mut model.factors);
+                // SAFETY (level 1, see `SharedFactors`): this engine
+                // holds the only live reference to the factors for the
+                // duration of the call — the whole plan's row set is
+                // exclusively owned. Level 2 (intra-pool) is handled
+                // inside `dispatch_plan` (exact coloring waves / atomic
+                // hogwild access); the policy is the single shared
+                // implementation the Latin workers use too.
+                let st = unsafe {
+                    dispatch_plan(
+                        pool,
+                        train,
+                        &plan,
+                        core,
+                        &self.strided,
+                        self.config.layout,
+                        &shared,
+                        lr_f,
+                        h.lambda_factor,
+                        h.update_core,
+                        &mut plan_stats,
+                    )
+                };
+                self.last_plan_stats = Some(plan_stats);
+                pool.plan_scratch_mut().recycle(plan);
                 st
             } else {
                 scalar::run_ids(
@@ -307,7 +330,7 @@ impl Decomposer for FastTucker {
                 _ => unreachable!(),
             };
             if use_batched {
-                let (grad, count) = self.bws.as_mut().unwrap().core_grad_mut();
+                let (grad, count) = self.pool.as_mut().unwrap().core_grad_mut();
                 apply_core_grad_raw(grad, count, core, lr_c, h.lambda_core);
             } else {
                 let (grad, count) = self.ws.as_mut().unwrap().core_grad_mut();
@@ -540,6 +563,66 @@ mod tests {
             relaxed_split_rmse <= exact_rmse * 1.02 + 1e-4,
             "relaxed+split RMSE {relaxed_split_rmse} not within 2% of exact {exact_rmse}"
         );
+    }
+
+    #[test]
+    fn in_group_threading_is_bitwise_neutral_on_serial_engine() {
+        // ISSUE 4 tentpole, serial engine level: the intra-plan pool
+        // (exact coloring waves + plan-order tape replay) must leave the
+        // multi-epoch trained model — factors AND core — bitwise
+        // identical to sequential execution. Hollow workload so the
+        // planner tiles and the pays-off gate engages.
+        let spec = PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut prng = Rng::new(81);
+        let p = planted_tucker(&mut prng, &spec);
+        let run = |threads: usize| {
+            let mut rng = Rng::new(82);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut algo = FastTucker::new(FastTuckerConfig {
+                batch: crate::kernel::BatchSizing::Auto,
+                split: 8,
+                threads: crate::kernel::ThreadCount::Fixed(threads),
+                ..Default::default()
+            });
+            let mut rng2 = Rng::new(83);
+            for epoch in 0..3 {
+                algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, algo.last_plan_stats().unwrap())
+        };
+        let (seq, st1) = run(1);
+        let (pooled, st2) = run(2);
+        assert_eq!(st1.threads, 1);
+        assert_eq!(st2.threads, 2, "pool never engaged: {st2:?}");
+        assert!(st2.waves > 0 && st2.wave_occupancy() >= 2.0, "{st2:?}");
+        for n in 0..3 {
+            for (a, b) in seq
+                .factors
+                .mat(n)
+                .data()
+                .iter()
+                .zip(pooled.factors.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under pooling");
+            }
+        }
+        let (ck, cp) = match (&seq.core, &pooled.core) {
+            (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        for n in 0..3 {
+            for (a, b) in ck.factor(n).data().iter().zip(cp.factor(n).data().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "core mode {n} diverged (tape replay)");
+            }
+        }
     }
 
     #[test]

@@ -66,6 +66,14 @@ pub enum AlgoError {
         expected: &'static str,
         found: &'static str,
     },
+    /// The multi-device block/round geometry (`M^N` blocks, `M^{N-1}`
+    /// Latin rounds) overflows `usize` or exceeds the block
+    /// materialization budget
+    /// ([`BlockPartition::MAX_BLOCKS`](crate::parallel::BlockPartition::MAX_BLOCKS))
+    /// — previously a silent wrap in release builds (unchecked
+    /// `usize::pow`) or an allocation abort; now surfaced before any
+    /// allocation happens.
+    PartitionOverflow { workers: usize, order: usize },
 }
 
 impl AlgoError {
@@ -86,6 +94,14 @@ impl std::fmt::Display for AlgoError {
                 "algorithm {algo} requires a {expected} core but the model holds a \
                  {found} core; initialize the model to match (see TuckerModel::init_*) \
                  or pick a matching `algo` in the run config"
+            ),
+            AlgoError::PartitionOverflow { workers, order } => write!(
+                f,
+                "multi-device geometry is unrepresentable: {workers} workers over an \
+                 order-{order} tensor needs {workers}^{order} blocks \
+                 ({workers}^{} Latin rounds), which overflows usize or exceeds the \
+                 block budget; reduce `workers` or the tensor order",
+                order.saturating_sub(1)
             ),
         }
     }

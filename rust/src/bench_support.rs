@@ -103,12 +103,30 @@ pub fn bench_filter() -> Option<String> {
 }
 
 /// `FASTTUCKER_BENCH_SCALE` scales workload sizes (default 1.0); CI can set
-/// 0.1 for fast smoke runs.
+/// 0.1 for fast smoke runs. A malformed or non-positive value is a hard
+/// error (exit 2), not a silent fall-back to 1.0 — a typo'd scale would
+/// otherwise quietly run the full-size workloads (ISSUE 4 regression).
 pub fn bench_scale() -> f64 {
-    std::env::var("FASTTUCKER_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1.0)
+    match parse_scale(std::env::var("FASTTUCKER_BENCH_SCALE").ok().as_deref()) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("FASTTUCKER_BENCH_SCALE: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Pure validation behind [`bench_scale`] (unit-tested; `None` = unset).
+pub fn parse_scale(raw: Option<&str>) -> Result<f64, String> {
+    let Some(raw) = raw else { return Ok(1.0) };
+    let v: f64 = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("expected a number, got {raw:?}"))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!("scale must be finite and > 0, got {v}"));
+    }
+    Ok(v)
 }
 
 /// Bench-regression gate support: parse `BENCH_kernels.json`-format
@@ -242,12 +260,36 @@ pub mod regression {
     }
 
     /// Gate tolerance from `FASTTUCKER_BENCH_TOLERANCE` (default 0.15 =
-    /// the 15% throughput-drop bar).
+    /// the 15% throughput-drop bar). A malformed or out-of-range value
+    /// is a hard error (exit 2): the old `.ok()` chain silently fell
+    /// back to the default — and accepted negative tolerances, which
+    /// turn the gate into "any run slower than baseline fails" — so a
+    /// typo'd override would misgate without a trace (ISSUE 4
+    /// regression).
     pub fn tolerance_from_env() -> f64 {
-        std::env::var("FASTTUCKER_BENCH_TOLERANCE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0.15)
+        match parse_tolerance(std::env::var("FASTTUCKER_BENCH_TOLERANCE").ok().as_deref()) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("FASTTUCKER_BENCH_TOLERANCE: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Pure validation behind [`tolerance_from_env`] (unit-tested;
+    /// `None` = unset). A tolerance is a drop fraction: `[0, 1)`.
+    pub fn parse_tolerance(raw: Option<&str>) -> Result<f64, String> {
+        let Some(raw) = raw else { return Ok(0.15) };
+        let v: f64 = raw
+            .trim()
+            .parse()
+            .map_err(|_| format!("expected a fraction in [0, 1), got {raw:?}"))?;
+        if !v.is_finite() || !(0.0..1.0).contains(&v) {
+            return Err(format!(
+                "tolerance must be a drop fraction in [0, 1), got {v}"
+            ));
+        }
+        Ok(v)
     }
 }
 
@@ -327,5 +369,36 @@ mod tests {
         let report = regression::check(&[], &baseline, 0.15);
         assert_eq!(report.matched, 0);
         assert!(!report.passed(), "vacuous gate run must not pass");
+    }
+
+    #[test]
+    fn tolerance_env_values_are_validated_not_defaulted() {
+        // ISSUE 4 satellite: malformed/out-of-range overrides must be
+        // rejected instead of silently becoming the 0.15 default.
+        assert_eq!(regression::parse_tolerance(None), Ok(0.15));
+        assert_eq!(regression::parse_tolerance(Some("0.2")), Ok(0.2));
+        assert_eq!(regression::parse_tolerance(Some(" 0.05 ")), Ok(0.05));
+        assert_eq!(regression::parse_tolerance(Some("0")), Ok(0.0));
+        assert!(regression::parse_tolerance(Some("15%")).is_err());
+        assert!(regression::parse_tolerance(Some("abc")).is_err());
+        assert!(regression::parse_tolerance(Some("")).is_err());
+        // Negative tolerances were silently accepted before — they make
+        // the floor EXCEED the baseline, failing every honest run.
+        assert!(regression::parse_tolerance(Some("-0.1")).is_err());
+        assert!(regression::parse_tolerance(Some("1.0")).is_err());
+        assert!(regression::parse_tolerance(Some("NaN")).is_err());
+        assert!(regression::parse_tolerance(Some("inf")).is_err());
+    }
+
+    #[test]
+    fn scale_env_values_are_validated_not_defaulted() {
+        assert_eq!(parse_scale(None), Ok(1.0));
+        assert_eq!(parse_scale(Some("0.1")), Ok(0.1));
+        assert_eq!(parse_scale(Some("2")), Ok(2.0));
+        assert!(parse_scale(Some("fast")).is_err());
+        assert!(parse_scale(Some("0")).is_err());
+        assert!(parse_scale(Some("-1")).is_err());
+        assert!(parse_scale(Some("inf")).is_err());
+        assert!(parse_scale(Some("NaN")).is_err());
     }
 }

@@ -8,7 +8,7 @@ pub use toml::{TomlDoc, TomlValue};
 use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
-use crate::kernel::{BatchSizing, Exactness, Lanes};
+use crate::kernel::{BatchSizing, Exactness, Lanes, ThreadCount};
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -101,6 +101,12 @@ pub struct TrainConfig {
     /// land on fiber sub-run boundaries and are bitwise-neutral;
     /// relaxed-mode splits may land anywhere.
     pub split: usize,
+    /// In-group thread pool width. TOML: `threads = "auto"` (the
+    /// `FASTTUCKER_POOL_THREADS` env override, else sequential) or
+    /// `threads = N` (≥ 1). Exact-mode pooling executes the sub-group
+    /// coloring's waves and is bitwise-neutral; relaxed-mode pooling is
+    /// the hogwild opt-in. Needs a batched kernel when > 1.
+    pub threads: ThreadCount,
 }
 
 impl Default for TrainConfig {
@@ -125,6 +131,7 @@ impl Default for TrainConfig {
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
             split: 1,
+            threads: ThreadCount::Auto,
         }
     }
 }
@@ -156,6 +163,7 @@ impl TrainConfig {
     /// exactness = "exact"   # or "relaxed" (hogwild batched plans)
     /// lanes = "auto"        # or 4 / 8 (panel-microkernel lane width)
     /// split = 1             # split-group factor (>= 1)
+    /// threads = "auto"      # or N >= 1 (in-group thread pool width)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -224,6 +232,9 @@ impl TrainConfig {
         if let Some(v) = doc.get("", "split") {
             cfg.split = v.as_usize()?;
         }
+        if let Some(v) = doc.get("", "threads") {
+            cfg.threads = parse_threads(v)?;
+        }
 
         let mut h = SgdHyper::default();
         let g = |k: &str| doc.get("sgd", k);
@@ -290,6 +301,21 @@ impl TrainConfig {
                 }
             }
         }
+        if let ThreadCount::Fixed(t) = self.threads {
+            if t == 0 {
+                bail!("threads must be >= 1 or \"auto\" (1 = in-group pooling off)");
+            }
+            if t > 1 {
+                if let BatchSizing::Fixed(b) = self.batch {
+                    if b < 2 {
+                        bail!(
+                            "threads = {t} needs a batched kernel: set batch = \"auto\" or \
+                             batch >= 2"
+                        );
+                    }
+                }
+            }
+        }
         if !(0.0..1.0).contains(&self.test_frac) {
             bail!("test_frac must be in [0, 1)");
         }
@@ -319,6 +345,20 @@ fn parse_exactness(s: &str) -> Result<Exactness> {
         "exact" => Exactness::Exact,
         "relaxed" | "hogwild" => Exactness::Relaxed,
         other => bail!("unknown exactness {other:?} (expected \"exact\" or \"relaxed\")"),
+    })
+}
+
+fn parse_threads(v: &TomlValue) -> Result<ThreadCount> {
+    let spelled = match v {
+        TomlValue::Str(s) => s.clone(),
+        TomlValue::Int(i) => i.to_string(),
+        other => bail!(
+            "threads must be \"auto\" or an integer >= 1, got {} {other:?}",
+            other.type_name()
+        ),
+    };
+    ThreadCount::parse(&spelled).ok_or_else(|| {
+        anyhow!("unknown threads {spelled:?} (expected \"auto\" or an integer >= 1)")
     })
 }
 
@@ -380,6 +420,27 @@ mod tests {
         // Split-group execution needs a batched kernel.
         assert!(TrainConfig::from_toml_str("batch = 0\nsplit = 2").is_err());
         assert!(TrainConfig::from_toml_str("batch = \"auto\"\nsplit = 2").is_ok());
+    }
+
+    #[test]
+    fn parses_threads() {
+        let cfg = TrainConfig::from_toml_str("threads = \"auto\"\n").unwrap();
+        assert_eq!(cfg.threads, ThreadCount::Auto);
+        let cfg = TrainConfig::from_toml_str("threads = 4\n").unwrap();
+        assert_eq!(cfg.threads, ThreadCount::Fixed(4));
+        let cfg = TrainConfig::from_toml_str("threads = 1\n").unwrap();
+        assert_eq!(cfg.threads, ThreadCount::Fixed(1));
+
+        assert!(TrainConfig::from_toml_str("threads = 0").is_err());
+        assert!(TrainConfig::from_toml_str("threads = \"many\"").is_err());
+        assert!(TrainConfig::from_toml_str("threads = true").is_err());
+        // In-group pooling needs a batched kernel (like split/relaxed)…
+        assert!(TrainConfig::from_toml_str("batch = 0\nthreads = 2").is_err());
+        assert!(TrainConfig::from_toml_str("batch = 1\nthreads = 2").is_err());
+        // …but threads = 1 and "auto" are always legal.
+        assert!(TrainConfig::from_toml_str("batch = 0\nthreads = 1").is_ok());
+        assert!(TrainConfig::from_toml_str("batch = 0\nthreads = \"auto\"").is_ok());
+        assert!(TrainConfig::from_toml_str("batch = \"auto\"\nthreads = 2").is_ok());
     }
 
     #[test]

@@ -101,6 +101,7 @@ impl Trainer {
                             exactness: cfg.exactness,
                             lanes: cfg.lanes,
                             split: cfg.split,
+                            threads: cfg.threads,
                             ..Default::default()
                         };
                         Box::new(FastTucker::new(fc))
@@ -123,6 +124,7 @@ impl Trainer {
                     exactness: cfg.exactness,
                     lanes: cfg.lanes,
                     split: cfg.split,
+                    threads: cfg.threads,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))

@@ -62,19 +62,21 @@ pub struct BatchWorkspace {
     /// Hot copy of the group's shared mode-0 row.
     a0: Vec<f32>,
     /// Staged rows, `[s][n][j]`; slot `[s][0]` holds the per-sample
-    /// snapshot of the hot row (the Eq. 17 linearization point).
-    a_panel: Vec<f32>,
+    /// snapshot of the hot row (the Eq. 17 linearization point). Read by
+    /// the threaded dispatcher's core tape ([`crate::kernel::dispatch`]).
+    pub(crate) a_panel: Vec<f32>,
     /// `c[s][n][r]`.
     c_panel: Vec<f32>,
     /// Per-sample prefix/suffix scratch, `(order+1)*r`.
     pre: Vec<f32>,
     suf: Vec<f32>,
-    /// `w[s][n][r]`.
-    w_panel: Vec<f32>,
+    /// `w[s][n][r]` (tape-read by the threaded dispatcher).
+    pub(crate) w_panel: Vec<f32>,
     /// `GS[s][n][j]`.
     gs_panel: Vec<f32>,
-    /// Residuals of the current group.
-    e: Vec<f32>,
+    /// Residuals of the current group (tape-read by the threaded
+    /// dispatcher).
+    pub(crate) e: Vec<f32>,
     /// Core gradient accumulator, `[n][r][j]` flattened (same layout as
     /// [`Workspace::core_grad`](crate::kernel::contract::Workspace)).
     pub(crate) core_grad: Vec<f32>,
@@ -138,13 +140,10 @@ pub fn run_plan<F: FactorAccess>(
     update_core: bool,
     mut residual_log: Option<&mut Vec<f32>>,
 ) -> KernelStats {
-    let order = ws.order;
-    let r = ws.r_core;
-    let j = ws.j;
     assert!(plan.max_batch() <= ws.cap, "plan exceeds workspace capacity");
     let beta = 1.0 - lr_f * lam_f;
     // Panel-microkernel lane width for this plan (see `kernel::panel`).
-    let lanes = plan.params().lanes.resolve(r);
+    let lanes = plan.params().lanes.resolve(ws.r_core);
     let mut sse = 0.0f64;
     let mut samples = 0usize;
 
@@ -152,199 +151,280 @@ pub fn run_plan<F: FactorAccess>(
         let ids = plan.group(g);
         let b = ids.len();
         samples += b;
-
-        // Gather modes >= 1 into the panel (rows distinct by plan in
-        // exact mode; pre-group mini-batch snapshots in relaxed mode).
-        for (s, &k) in ids.iter().enumerate() {
-            let coords = tensor.index(k as usize);
-            for n in 1..order {
-                let base = (s * order + n) * j;
-                factors.stage(n, coords[n] as usize, &mut ws.a_panel[base..base + j]);
-            }
-        }
-
-        // Batched step 1 for modes >= 1: c[s][n] = B^(n) a[s][n], through
-        // the lane-blocked panel microkernels.
-        for n in 1..order {
-            match layout {
-                CoreLayout::Packed => panel::c_panel_packed(
-                    core.factor(n).data(),
-                    r,
-                    j,
-                    order,
-                    n,
-                    b,
-                    &ws.a_panel,
-                    &mut ws.c_panel,
-                    lanes,
-                ),
-                CoreLayout::Strided => panel::c_panel_strided(
-                    &strided[n],
-                    r,
-                    j,
-                    order,
-                    n,
-                    b,
-                    &ws.a_panel,
-                    &mut ws.c_panel,
-                ),
-            }
-        }
-
-        // Sequential mode-0 chain over the tile's fiber sub-runs: each
-        // sample observes the previous sample's update to its fiber's
-        // shared row. The row is staged at each sub-run start and written
-        // back at sub-run end — the sort guarantees a mode-0 coordinate
-        // appears in at most one sub-run per group, so this observes
-        // exactly the rows scalar execution would (even in relaxed mode).
-        let mut cur_i0 = usize::MAX;
-        for (s, &k) in ids.iter().enumerate() {
-            let coords = tensor.index(k as usize);
-            let i0 = coords[0] as usize;
-            if i0 != cur_i0 {
-                if cur_i0 != usize::MAX {
-                    factors.store(0, cur_i0, &ws.a0);
-                }
-                factors.stage(0, i0, &mut ws.a0);
-                cur_i0 = i0;
-            }
-            let x = tensor.value(k as usize);
-            let abase = s * order * j;
-            let cbase = s * order * r;
-            // Snapshot the hot row (pre-update linearization point).
-            ws.a_panel[abase..abase + j].copy_from_slice(&ws.a0);
-            match layout {
-                CoreLayout::Packed => {
-                    matvec_rowmajor(
-                        core.factor(0).data(),
-                        r,
-                        j,
-                        &ws.a_panel[abase..abase + j],
-                        &mut ws.c_panel[cbase..cbase + r],
-                    );
-                }
-                CoreLayout::Strided => {
-                    strided_matvec(
-                        &strided[0],
-                        r,
-                        &ws.a_panel[abase..abase + j],
-                        &mut ws.c_panel[cbase..cbase + r],
-                    );
-                }
-            }
-            prefix_suffix_w(
-                &ws.c_panel[cbase..cbase + order * r],
-                order,
-                r,
-                &mut ws.pre,
-                &mut ws.suf,
-                &mut ws.w_panel[s * order * r..(s + 1) * order * r],
-            );
-            let gbase = s * order * j;
-            match layout {
-                CoreLayout::Packed => {
-                    weighted_rowsum(
-                        core.factor(0).data(),
-                        r,
-                        j,
-                        &ws.w_panel[cbase..cbase + r],
-                        &mut ws.gs_panel[gbase..gbase + j],
-                    );
-                }
-                CoreLayout::Strided => {
-                    strided_weighted_sum(
-                        &strided[0],
-                        r,
-                        j,
-                        &ws.w_panel[cbase..cbase + r],
-                        &mut ws.gs_panel[gbase..gbase + j],
-                    );
-                }
-            }
-            let xhat = dot(&ws.a_panel[abase..abase + j], &ws.gs_panel[gbase..gbase + j]);
-            let e = xhat - x;
-            ws.e[s] = e;
+        run_group(
+            ws, tensor, ids, core, strided, layout, lanes, lr_f, beta, factors, update_core,
+        );
+        // Residual bookkeeping in plan order — the same per-sample f64
+        // accumulation sequence as the historical inline loop, so the
+        // refactor stays bitwise-neutral.
+        for &e in &ws.e[..b] {
             sse += (e as f64) * (e as f64);
-            if let Some(log) = residual_log.as_mut() {
-                log.push(e);
-            }
-            // Update the hot shared row (Eq. 13 on the current fiber).
-            scale_axpy(beta, -lr_f * e, &ws.gs_panel[gbase..gbase + j], &mut ws.a0);
         }
-
-        // Write the last fiber's shared row back.
-        if cur_i0 != usize::MAX {
-            factors.store(0, cur_i0, &ws.a0);
-        }
-
-        // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r,
-        // through the lane-blocked panel microkernels.
-        for n in 1..order {
-            match layout {
-                CoreLayout::Packed => panel::gs_panel_packed(
-                    core.factor(n).data(),
-                    r,
-                    j,
-                    order,
-                    n,
-                    b,
-                    &ws.w_panel,
-                    &mut ws.gs_panel,
-                    lanes,
-                ),
-                CoreLayout::Strided => panel::gs_panel_strided(
-                    &strided[n],
-                    r,
-                    j,
-                    order,
-                    n,
-                    b,
-                    &ws.w_panel,
-                    &mut ws.gs_panel,
-                ),
-            }
-        }
-
-        // Deferred factor SGD for modes >= 1. Exact plans: rows distinct
-        // in the group, so the write order cannot change any operand.
-        // Relaxed plans: duplicated rows were all staged pre-group
-        // (stale/mini-batch reads) and their updates compose here in
-        // sample order — the hogwild semantics the plan opted into.
-        for (s, &k) in ids.iter().enumerate() {
-            let coords = tensor.index(k as usize);
-            let e = ws.e[s];
-            for n in 1..order {
-                let gbase = (s * order + n) * j;
-                factors.update(
-                    n,
-                    coords[n] as usize,
-                    beta,
-                    -lr_f * e,
-                    &ws.gs_panel[gbase..gbase + j],
-                );
-            }
-        }
-
-        // Eq. 17 core-gradient accumulation from the staged (pre-update)
-        // rows, in sample order — the same element-wise accumulation
-        // sequence as the scalar path.
-        if update_core {
-            for s in 0..b {
-                let e = ws.e[s];
-                for n in 0..order {
-                    let a_row = &ws.a_panel[(s * order + n) * j..(s * order + n + 1) * j];
-                    for rr in 0..r {
-                        let coef = e * ws.w_panel[(s * order + n) * r + rr];
-                        let base = (n * r + rr) * j;
-                        axpy(coef, a_row, &mut ws.core_grad[base..base + j]);
-                    }
-                }
-                ws.core_grad_count += 1;
-            }
+        if let Some(log) = residual_log.as_mut() {
+            log.extend_from_slice(&ws.e[..b]);
         }
     }
 
     KernelStats { samples, sse }
+}
+
+/// Execute ONE group of a plan: stage → panel contraction → sequential
+/// mode-0 chain → deferred GS/SGD — the per-group body of [`run_plan`],
+/// extracted so the threaded dispatcher ([`crate::kernel::dispatch`]) can
+/// run independent sub-groups on separate workspaces/threads. Residuals
+/// land in `ws.e[..ids.len()]`; the group's staged `a`/`w` panels stay
+/// valid in `ws` afterwards (the dispatcher's core tape reads them).
+/// `accumulate_core` performs the Eq. 17 accumulation into `ws.core_grad`
+/// inline (the sequential semantics); the dispatcher passes `false` and
+/// replays the accumulation in plan order from its tape instead.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_group<F: FactorAccess>(
+    ws: &mut BatchWorkspace,
+    tensor: &SparseTensor,
+    ids: &[u32],
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    lanes: usize,
+    lr_f: f32,
+    beta: f32,
+    factors: &mut F,
+    accumulate_core: bool,
+) {
+    let order = ws.order;
+    let r = ws.r_core;
+    let j = ws.j;
+    let b = ids.len();
+    // Gather modes >= 1 into the panel (rows distinct by plan in
+    // exact mode; pre-group mini-batch snapshots in relaxed mode).
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        for n in 1..order {
+            let base = (s * order + n) * j;
+            factors.stage(n, coords[n] as usize, &mut ws.a_panel[base..base + j]);
+        }
+    }
+
+    // Batched step 1 for modes >= 1: c[s][n] = B^(n) a[s][n], through
+    // the lane-blocked panel microkernels.
+    for n in 1..order {
+        match layout {
+            CoreLayout::Packed => panel::c_panel_packed(
+                core.factor(n).data(),
+                r,
+                j,
+                order,
+                n,
+                b,
+                &ws.a_panel,
+                &mut ws.c_panel,
+                lanes,
+            ),
+            CoreLayout::Strided => panel::c_panel_strided(
+                &strided[n],
+                r,
+                j,
+                order,
+                n,
+                b,
+                &ws.a_panel,
+                &mut ws.c_panel,
+            ),
+        }
+    }
+
+    // Sequential mode-0 chain over the tile's fiber sub-runs: each
+    // sample observes the previous sample's update to its fiber's
+    // shared row. The row is staged at each sub-run start and written
+    // back at sub-run end — the sort guarantees a mode-0 coordinate
+    // appears in at most one sub-run per group, so this observes
+    // exactly the rows scalar execution would (even in relaxed mode).
+    let mut cur_i0 = usize::MAX;
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        let i0 = coords[0] as usize;
+        if i0 != cur_i0 {
+            if cur_i0 != usize::MAX {
+                factors.store(0, cur_i0, &ws.a0);
+            }
+            factors.stage(0, i0, &mut ws.a0);
+            cur_i0 = i0;
+        }
+        let x = tensor.value(k as usize);
+        let abase = s * order * j;
+        let cbase = s * order * r;
+        // Snapshot the hot row (pre-update linearization point).
+        ws.a_panel[abase..abase + j].copy_from_slice(&ws.a0);
+        match layout {
+            CoreLayout::Packed => {
+                matvec_rowmajor(
+                    core.factor(0).data(),
+                    r,
+                    j,
+                    &ws.a_panel[abase..abase + j],
+                    &mut ws.c_panel[cbase..cbase + r],
+                );
+            }
+            CoreLayout::Strided => {
+                strided_matvec(
+                    &strided[0],
+                    r,
+                    &ws.a_panel[abase..abase + j],
+                    &mut ws.c_panel[cbase..cbase + r],
+                );
+            }
+        }
+        prefix_suffix_w(
+            &ws.c_panel[cbase..cbase + order * r],
+            order,
+            r,
+            &mut ws.pre,
+            &mut ws.suf,
+            &mut ws.w_panel[s * order * r..(s + 1) * order * r],
+        );
+        let gbase = s * order * j;
+        match layout {
+            CoreLayout::Packed => {
+                weighted_rowsum(
+                    core.factor(0).data(),
+                    r,
+                    j,
+                    &ws.w_panel[cbase..cbase + r],
+                    &mut ws.gs_panel[gbase..gbase + j],
+                );
+            }
+            CoreLayout::Strided => {
+                strided_weighted_sum(
+                    &strided[0],
+                    r,
+                    j,
+                    &ws.w_panel[cbase..cbase + r],
+                    &mut ws.gs_panel[gbase..gbase + j],
+                );
+            }
+        }
+        let xhat = dot(&ws.a_panel[abase..abase + j], &ws.gs_panel[gbase..gbase + j]);
+        let e = xhat - x;
+        ws.e[s] = e;
+        // Update the hot shared row (Eq. 13 on the current fiber).
+        scale_axpy(beta, -lr_f * e, &ws.gs_panel[gbase..gbase + j], &mut ws.a0);
+    }
+
+    // Write the last fiber's shared row back.
+    if cur_i0 != usize::MAX {
+        factors.store(0, cur_i0, &ws.a0);
+    }
+
+    // Deferred batched step 3 for modes >= 1: GS[s][n] = Σ_r w b_r,
+    // through the lane-blocked panel microkernels.
+    for n in 1..order {
+        match layout {
+            CoreLayout::Packed => panel::gs_panel_packed(
+                core.factor(n).data(),
+                r,
+                j,
+                order,
+                n,
+                b,
+                &ws.w_panel,
+                &mut ws.gs_panel,
+                lanes,
+            ),
+            CoreLayout::Strided => panel::gs_panel_strided(
+                &strided[n],
+                r,
+                j,
+                order,
+                n,
+                b,
+                &ws.w_panel,
+                &mut ws.gs_panel,
+            ),
+        }
+    }
+
+    // Deferred factor SGD for modes >= 1. Exact plans: rows distinct
+    // in the group, so the write order cannot change any operand.
+    // Relaxed plans: duplicated rows were all staged pre-group
+    // (stale/mini-batch reads) and their updates compose here in
+    // sample order — the hogwild semantics the plan opted into.
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        let e = ws.e[s];
+        for n in 1..order {
+            let gbase = (s * order + n) * j;
+            factors.update(
+                n,
+                coords[n] as usize,
+                beta,
+                -lr_f * e,
+                &ws.gs_panel[gbase..gbase + j],
+            );
+        }
+    }
+
+    // Eq. 17 core-gradient accumulation from the staged (pre-update)
+    // rows, in sample order — the same element-wise accumulation
+    // sequence as the scalar path.
+    if accumulate_core {
+        for s in 0..b {
+            accumulate_sample_core_grad(
+                &mut ws.core_grad,
+                ws.e[s],
+                order,
+                r,
+                j,
+                &ws.w_panel[s * order * r..(s + 1) * order * r],
+                &ws.a_panel[s * order * j..(s + 1) * order * j],
+            );
+            ws.core_grad_count += 1;
+        }
+    }
+}
+
+/// One sample's Eq. 17 core-gradient accumulation from its staged
+/// (pre-update) panel slices (`w`: `order × r`, `a`: `order × j`).
+/// The single definition of the accumulation association — the
+/// sequential executor above AND the threaded dispatcher's plan-order
+/// tape replay ([`crate::kernel::dispatch`]) both call it, which is what
+/// makes the exact-mode pooled-vs-sequential bitwise contract structural
+/// rather than two hand-kept copies.
+pub(crate) fn accumulate_sample_core_grad(
+    core_grad: &mut [f32],
+    e: f32,
+    order: usize,
+    r: usize,
+    j: usize,
+    w: &[f32],
+    a: &[f32],
+) {
+    for n in 0..order {
+        let a_row = &a[n * j..(n + 1) * j];
+        for rr in 0..r {
+            let coef = e * w[n * r + rr];
+            let base = (n * r + rr) * j;
+            axpy(coef, a_row, &mut core_grad[base..base + j]);
+        }
+    }
+}
+
+/// Drain `(grad, count)` into `(grad0, count0)` — the worker-local /
+/// thread-local core-gradient merge used by the multi-device all-reduce
+/// ([`crate::parallel::worker`]) and the relaxed pooled epilogue
+/// ([`crate::kernel::dispatch`]). Element-wise adds in slot order;
+/// the source is zeroed.
+pub fn merge_core_grad(
+    grad0: &mut [f32],
+    count0: &mut usize,
+    grad: &mut [f32],
+    count: &mut usize,
+) {
+    for (a, b) in grad0.iter_mut().zip(grad.iter()) {
+        *a += *b;
+    }
+    *count0 += *count;
+    grad.fill(0.0);
+    *count = 0;
 }
 
 /// Pure mini-batch panel train step (deferred reads, duplicate deltas sum

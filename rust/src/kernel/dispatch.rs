@@ -1,0 +1,787 @@
+//! In-group thread pool: fan one plan's split sub-groups across T
+//! intra-worker threads — the second level of the paper's nested
+//! parallelism (inter-GPU Latin rounds × intra-GPU thread blocks over
+//! sampled nonzeros, cu_FastTucker §5; same structure in cuFasterTucker,
+//! arXiv:2210.06014). The PR 3 split-group machinery made sub-groups the
+//! independently dispatchable unit; this module actually dispatches them.
+//!
+//! [`DispatchPool`] owns T per-thread [`BatchWorkspace`]s plus the tape
+//! buffers below, and executes a [`BatchPlan`] as **barrier-separated
+//! waves** of a [`SubGroupColoring`]:
+//!
+//! * **Exact mode** uses the ordered coloring pass
+//!   ([`BatchPlan::color_subgroups`]): same-wave sub-groups have pairwise
+//!   disjoint factor-row footprints in every mode (safe to run
+//!   concurrently, unsynchronized), and waves replay every conflicting
+//!   pair in its sequential plan order — so the factor stream is
+//!   **bitwise identical** to sequential sub-group execution
+//!   ([`batched::run_plan`]).
+//! * **Relaxed mode** passes [`SubGroupColoring::single_wave`]: every
+//!   sub-group freely concurrent, the paper's hogwild GPU write
+//!   semantics. Concurrent row writes may interleave; the result is
+//!   pinned (like PR 2's relaxed plans) as a permutation of the sample
+//!   multiset that stays within the 2%-RMSE envelope of exact, not as a
+//!   bitwise contract.
+//!
+//! **The plan-order tape.** Residual/SSE/core-gradient accumulation is
+//! order-sensitive float arithmetic, so partial-sum merging would break
+//! the bitwise contract even under a correct coloring. Instead each
+//! thread records its sub-groups' per-sample residuals (and, when the
+//! core is being updated, the staged `a`/`w` panels the Eq. 17
+//! accumulation reads) into **disjoint plan-order slices** of shared tape
+//! buffers; a serial epilogue then replays SSE and the core-gradient
+//! accumulation in exact plan order — character-for-character the same
+//! loop [`batched::run_plan`] runs inline. Pooled exact execution is
+//! therefore bitwise identical to sequential execution at every thread
+//! count, including T = 1 (pinned by
+//! `tests/properties.rs::prop_threaded_exact_bitwise_matches_sequential`).
+//!
+//! The pool is persistent (workspaces, tapes, and the coloring scratch
+//! are reused across passes); the T worker threads themselves are scoped
+//! per executed chunk and synchronize between waves with a panic-aware
+//! `WaveBarrier` (waves with no groups in the chunk's range are skipped
+//! identically by every thread, so the barrier stays aligned). Work
+//! inside a wave is claimed dynamically through an atomic cursor — legal
+//! precisely because same-wave sub-groups commute (disjoint rows,
+//! disjoint tape slices). Tapes are bounded by [`TAPE_BUDGET_BYTES`]: an
+//! oversized plan executes as consecutive group chunks, replayed in plan
+//! order, which keeps the bitwise contract while capping memory.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::kernel::batched::{self, BatchWorkspace};
+use crate::kernel::contract::CoreLayout;
+use crate::kernel::plan::{BatchPlan, ColorScratch, Exactness, PlanScratch, SubGroupColoring};
+use crate::kernel::{FactorAccess, KernelStats};
+use crate::kruskal::KruskalCore;
+use crate::tensor::SparseTensor;
+
+/// How many intra-worker threads an engine's dispatch pool runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ThreadCount {
+    /// Harness-controlled: the `FASTTUCKER_POOL_THREADS` environment
+    /// variable when set (CI's 2-thread differential pass), else 1.
+    /// Conservative by design — exact pooling is bitwise-neutral, but
+    /// defaulting it on would make relaxed (hogwild) runs
+    /// nondeterministic without an explicit opt-in.
+    #[default]
+    Auto,
+    /// Exactly `n` threads (≥ 1; 1 = the sequential executor).
+    Fixed(usize),
+}
+
+impl ThreadCount {
+    /// Parse a config/CLI spelling (`"auto"` or a positive integer).
+    pub fn parse(s: &str) -> Option<ThreadCount> {
+        if s == "auto" {
+            return Some(ThreadCount::Auto);
+        }
+        s.parse::<usize>().ok().filter(|&n| n >= 1).map(ThreadCount::Fixed)
+    }
+}
+
+/// Budget for one pooled pass's plan-order tapes (64 MiB): a plan whose
+/// tape footprint exceeds it executes as consecutive **group chunks**
+/// (see [`DispatchPool::execute`]), bounding tape memory at O(budget)
+/// instead of O(plan samples) — the serial engine's full-epoch plans
+/// would otherwise scale the tapes with total nnz.
+pub const TAPE_BUDGET_BYTES: usize = 64 << 20;
+
+/// A panic-aware wave barrier: like `std::sync::Barrier`, but poisonable.
+/// When a pool thread panics mid-wave its [`PoisonGuard`] poisons the
+/// barrier; every other thread unblocks (notification or the timeout
+/// re-check), bails out of the dispatch loop, the thread scope joins, and
+/// the original panic propagates — instead of the survivors deadlocking
+/// forever on a barrier that can no longer fill.
+struct WaveBarrier {
+    /// `(waiting, generation)`.
+    state: Mutex<(usize, u64)>,
+    cv: Condvar,
+    threads: usize,
+    poisoned: AtomicBool,
+}
+
+impl WaveBarrier {
+    fn new(threads: usize) -> Self {
+        WaveBarrier {
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+            threads,
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Wait for every thread to arrive. Returns `false` when the barrier
+    /// was poisoned — the caller must abandon the dispatch loop.
+    fn wait(&self) -> bool {
+        let mut g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        g.0 += 1;
+        if g.0 == self.threads {
+            g.0 = 0;
+            g.1 = g.1.wrapping_add(1);
+            self.cv.notify_all();
+            return !self.poisoned.load(Ordering::Acquire);
+        }
+        let gen = g.1;
+        while g.1 == gen && !self.poisoned.load(Ordering::Acquire) {
+            let (guard, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(10))
+                .unwrap_or_else(|e| e.into_inner());
+            g = guard;
+        }
+        !self.poisoned.load(Ordering::Acquire)
+    }
+
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Poisons the wave barrier when dropped during a panic unwind (held by
+/// each pool thread for its whole lifetime).
+struct PoisonGuard<'a>(&'a WaveBarrier);
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// Raw views over the plan-order tape buffers, shared across the scoped
+/// worker threads.
+///
+/// SAFETY: groups partition the plan's sample stream into disjoint
+/// index ranges, and each group is claimed by exactly one thread (the
+/// atomic wave cursor hands out each index once) — so all writes through
+/// these pointers land in pairwise-disjoint slices, and the buffers are
+/// only read after the thread scope joins.
+struct TapePtrs {
+    e: *mut f32,
+    w: *mut f32,
+    a: *mut f32,
+}
+
+unsafe impl Sync for TapePtrs {}
+
+impl TapePtrs {
+    /// Copy one finished group's per-sample values into its plan-order
+    /// slots. `off` is the group's plan offset, `b` its length.
+    ///
+    /// SAFETY: caller guarantees exclusive ownership of the range (see
+    /// the struct-level contract) and that the tapes were sized for the
+    /// plan (`with_core` ⇒ `w`/`a` tapes sized too).
+    unsafe fn record(
+        &self,
+        off: usize,
+        b: usize,
+        ws: &BatchWorkspace,
+        with_core: bool,
+        order: usize,
+        r: usize,
+        j: usize,
+    ) {
+        std::ptr::copy_nonoverlapping(ws.e.as_ptr(), self.e.add(off), b);
+        if with_core {
+            std::ptr::copy_nonoverlapping(
+                ws.w_panel.as_ptr(),
+                self.w.add(off * order * r),
+                b * order * r,
+            );
+            std::ptr::copy_nonoverlapping(
+                ws.a_panel.as_ptr(),
+                self.a.add(off * order * j),
+                b * order * j,
+            );
+        }
+    }
+}
+
+/// A persistent in-group thread pool: T per-thread workspaces + the
+/// plan-order tapes + the coloring scratch, reused across passes. See the
+/// module docs for the execution model.
+pub struct DispatchPool {
+    workspaces: Vec<BatchWorkspace>,
+    /// Plan-order residual tape (sized to the current chunk, at most
+    /// [`TAPE_BUDGET_BYTES`] worth).
+    tape_e: Vec<f32>,
+    /// Plan-order `w`/`a` panel tapes (sized only for exact passes that
+    /// update the core; the Eq. 17 replay reads them).
+    tape_w: Vec<f32>,
+    tape_a: Vec<f32>,
+    color_scratch: ColorScratch,
+}
+
+impl DispatchPool {
+    /// Pool with `threads` workspaces shaped `(order, r_core, j, cap)`.
+    /// `threads` is clamped to ≥ 1; `threads == 1` makes [`Self::execute`]
+    /// a plain sequential [`batched::run_plan`] call on the primary
+    /// workspace.
+    pub fn new(threads: usize, order: usize, r_core: usize, j: usize, cap: usize) -> Self {
+        let threads = threads.max(1);
+        DispatchPool {
+            workspaces: (0..threads)
+                .map(|_| BatchWorkspace::new(order, r_core, j, cap))
+                .collect(),
+            tape_e: Vec::new(),
+            tape_w: Vec::new(),
+            tape_a: Vec::new(),
+            color_scratch: ColorScratch::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workspaces.len()
+    }
+
+    /// Shape of the per-thread workspaces.
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        self.workspaces[0].shape()
+    }
+
+    /// The primary workspace (sequential fallback target; holds the
+    /// pool's merged core-gradient accumulator).
+    pub fn primary_mut(&mut self) -> &mut BatchWorkspace {
+        &mut self.workspaces[0]
+    }
+
+    /// Planning scratch paired with this pool (lives on the primary
+    /// workspace, same as the unpooled engines).
+    pub fn plan_scratch_mut(&mut self) -> &mut PlanScratch {
+        self.workspaces[0].plan_scratch_mut()
+    }
+
+    /// Coloring scratch paired with this pool.
+    pub fn color_scratch_mut(&mut self) -> &mut ColorScratch {
+        &mut self.color_scratch
+    }
+
+    /// Core-gradient accumulator and count of the pool. Invariant: after
+    /// [`Self::execute`] (or a sequential pass on [`Self::primary_mut`])
+    /// the pool's whole accumulated gradient lives on the primary
+    /// workspace — the tape replay targets it directly and the thread
+    /// workspaces never accumulate.
+    pub fn core_grad_mut(&mut self) -> (&mut Vec<f32>, &mut usize) {
+        self.workspaces[0].core_grad_mut()
+    }
+
+    /// Execute `plan` over the waves of `coloring`, fanning each wave's
+    /// sub-groups across this pool's threads. `make_access` is invoked
+    /// once per worker thread to mint that thread's [`FactorAccess`]
+    /// handle; the caller is responsible for the handles being safe to
+    /// use concurrently under the coloring's disjointness guarantee
+    /// (exact waves) or the hogwild opt-in (relaxed single wave) — see
+    /// [`SharedFactors`](crate::parallel::shared::SharedFactors) for the
+    /// two-level contract.
+    ///
+    /// Exact-mode result contract: bitwise identical to
+    /// [`batched::run_plan`] over the same plan — factors, residual log,
+    /// SSE, and core gradients (accumulated onto the primary workspace).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute<A, M>(
+        &mut self,
+        tensor: &SparseTensor,
+        plan: &BatchPlan,
+        coloring: &SubGroupColoring,
+        core: &KruskalCore,
+        strided: &[Vec<f32>],
+        layout: CoreLayout,
+        make_access: M,
+        lr_f: f32,
+        lam_f: f32,
+        update_core: bool,
+        residual_log: Option<&mut Vec<f32>>,
+    ) -> KernelStats
+    where
+        A: FactorAccess,
+        M: Fn() -> A + Sync,
+    {
+        assert_eq!(
+            coloring.n_groups(),
+            plan.n_groups(),
+            "coloring was built for a different plan"
+        );
+        let cap = self.shape().3;
+        assert!(plan.max_batch() <= cap, "plan exceeds pool workspace capacity");
+        let n_threads = self.workspaces.len();
+        if n_threads == 1 || plan.n_groups() <= 1 {
+            // Sequential fast path — same semantics, no tape overhead.
+            let mut access = make_access();
+            return batched::run_plan(
+                &mut self.workspaces[0],
+                tensor,
+                plan,
+                core,
+                strided,
+                layout,
+                &mut access,
+                lr_f,
+                lam_f,
+                update_core,
+                residual_log,
+            );
+        }
+
+        self.execute_with_tape_budget(
+            tensor,
+            plan,
+            coloring,
+            core,
+            strided,
+            layout,
+            make_access,
+            lr_f,
+            lam_f,
+            update_core,
+            residual_log,
+            TAPE_BUDGET_BYTES,
+        )
+    }
+
+    /// [`Self::execute`] with an explicit tape budget (exposed for the
+    /// chunking tests; `execute` passes [`TAPE_BUDGET_BYTES`]).
+    ///
+    /// The plan's groups are processed as consecutive **chunks** whose
+    /// tape footprint fits the budget, each chunk fanned across the pool
+    /// as its waves (the global coloring restricted to the chunk's group
+    /// range, which stays sound: within a chunk conflicting sub-groups
+    /// keep their wave separation, and across chunks the full join
+    /// between chunks preserves plan order outright). This bounds the
+    /// exact-mode tape memory at O(budget) instead of O(plan samples)
+    /// without giving up bitwise identity — chunks replay in plan order.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_with_tape_budget<A, M>(
+        &mut self,
+        tensor: &SparseTensor,
+        plan: &BatchPlan,
+        coloring: &SubGroupColoring,
+        core: &KruskalCore,
+        strided: &[Vec<f32>],
+        layout: CoreLayout,
+        make_access: M,
+        lr_f: f32,
+        lam_f: f32,
+        update_core: bool,
+        mut residual_log: Option<&mut Vec<f32>>,
+        tape_budget: usize,
+    ) -> KernelStats
+    where
+        A: FactorAccess,
+        M: Fn() -> A + Sync,
+    {
+        let (order, r, j, _) = self.shape();
+        let n_threads = self.workspaces.len();
+        let ng = plan.n_groups();
+        // Exact mode owes the caller bitwise identity with sequential
+        // execution, so core-gradient accumulation must replay in plan
+        // order from the w/a tapes. Relaxed mode has no bitwise contract
+        // — its threads accumulate into their own workspaces (skipping
+        // the w/a tapes and the serial replay entirely) and the partials
+        // merge in thread order below.
+        let bitwise = plan.params().exactness == Exactness::Exact;
+        let tape_core = update_core && bitwise;
+        let accumulate_inline = update_core && !bitwise;
+        let bytes_per_sample =
+            4 + if tape_core { order * (r + j) * 4 } else { 0 };
+        // At least one full group per chunk, whatever the budget says.
+        let budget_samples =
+            (tape_budget / bytes_per_sample).max(plan.max_batch()).max(1);
+
+        let lanes = plan.params().lanes.resolve(r);
+        let beta = 1.0 - lr_f * lam_f;
+        let mut sse = 0.0f64;
+        let mut samples = 0usize;
+        let mut g_lo = 0usize;
+        while g_lo < ng {
+            // Grow the chunk [g_lo, g_hi) of consecutive groups up to the
+            // tape budget.
+            let chunk_base = plan.group_offset(g_lo);
+            let mut g_hi = g_lo;
+            let mut chunk_samples = 0usize;
+            while g_hi < ng {
+                let b = plan.group(g_hi).len();
+                if chunk_samples > 0 && chunk_samples + b > budget_samples {
+                    break;
+                }
+                chunk_samples += b;
+                g_hi += 1;
+            }
+            samples += chunk_samples;
+            // resize (not clear+resize): only a newly-grown tail is
+            // zeroed; stale prefixes are fine because the chunk's groups
+            // partition its sample range, so every slot is overwritten
+            // before it is read.
+            self.tape_e.resize(chunk_samples, 0.0);
+            if tape_core {
+                self.tape_w.resize(chunk_samples * order * r, 0.0);
+                self.tape_a.resize(chunk_samples * order * j, 0.0);
+            }
+            let tape = TapePtrs {
+                e: self.tape_e.as_mut_ptr(),
+                w: self.tape_w.as_mut_ptr(),
+                a: self.tape_a.as_mut_ptr(),
+            };
+            // One claim cursor per wave; the barrier separates waves,
+            // which both orders conflicting sub-groups (exact bitwise
+            // contract) and publishes each wave's factor writes to the
+            // next. Each wave is restricted to the chunk's ascending
+            // group range by binary search.
+            let cursors: Vec<AtomicUsize> =
+                (0..coloring.n_waves()).map(|_| AtomicUsize::new(0)).collect();
+            let barrier = WaveBarrier::new(n_threads);
+            std::thread::scope(|scope| {
+                for ws in self.workspaces.iter_mut() {
+                    let tape = &tape;
+                    let cursors = &cursors;
+                    let barrier = &barrier;
+                    let make_access = &make_access;
+                    scope.spawn(move || {
+                        // Poison the barrier if this thread unwinds, so
+                        // the others bail instead of deadlocking (the
+                        // panic then propagates through the scope join).
+                        let _poison = PoisonGuard(barrier);
+                        let mut access = make_access();
+                        for (w, cursor) in cursors.iter().enumerate() {
+                            let full = coloring.wave(w);
+                            let lo = full.partition_point(|&g| (g as usize) < g_lo);
+                            let hi = full.partition_point(|&g| (g as usize) < g_hi);
+                            // Every thread computes the same restriction,
+                            // so skipping an empty wave keeps the barrier
+                            // aligned — no T-thread no-op syncs for waves
+                            // outside this chunk's group range.
+                            if lo == hi {
+                                continue;
+                            }
+                            let wave = &full[lo..hi];
+                            loop {
+                                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                                let Some(&g) = wave.get(i) else { break };
+                                let g = g as usize;
+                                let ids = plan.group(g);
+                                batched::run_group(
+                                    ws, tensor, ids, core, strided, layout, lanes, lr_f,
+                                    beta, &mut access, accumulate_inline,
+                                );
+                                // SAFETY: this thread exclusively claimed
+                                // group `g`; groups occupy disjoint
+                                // chunk-relative ranges (TapePtrs
+                                // contract).
+                                unsafe {
+                                    tape.record(
+                                        plan.group_offset(g) - chunk_base,
+                                        ids.len(),
+                                        ws,
+                                        tape_core,
+                                        order,
+                                        r,
+                                        j,
+                                    );
+                                }
+                            }
+                            if !barrier.wait() {
+                                return;
+                            }
+                        }
+                    });
+                }
+            });
+
+            // Serial epilogue in exact plan order (chunks run in plan
+            // order, samples within a chunk replay in plan order): SSE,
+            // residual log, and the Eq. 17 core-gradient replay — the
+            // identical accumulation loops `run_plan` executes inline, so
+            // exact pooled results are bitwise equal to sequential
+            // execution.
+            for &e in &self.tape_e[..chunk_samples] {
+                sse += (e as f64) * (e as f64);
+            }
+            if let Some(log) = residual_log.as_mut() {
+                log.extend_from_slice(&self.tape_e[..chunk_samples]);
+            }
+            if tape_core {
+                let ws0 = &mut self.workspaces[0];
+                for s in 0..chunk_samples {
+                    batched::accumulate_sample_core_grad(
+                        &mut ws0.core_grad,
+                        self.tape_e[s],
+                        order,
+                        r,
+                        j,
+                        &self.tape_w[s * order * r..(s + 1) * order * r],
+                        &self.tape_a[s * order * j..(s + 1) * order * j],
+                    );
+                    ws0.core_grad_count += 1;
+                }
+            }
+            g_lo = g_hi;
+        }
+        if accumulate_inline {
+            // Relaxed: merge the threads' core-grad partials onto the
+            // primary workspace in thread-index order (deterministic
+            // merge; the per-sample values are hogwild).
+            let (first, rest) = self.workspaces.split_at_mut(1);
+            let (grad0, count0) = first[0].core_grad_mut();
+            for ws in rest.iter_mut() {
+                let (grad, count) = ws.core_grad_mut();
+                batched::merge_core_grad(grad0, count0, grad, count);
+            }
+        }
+        KernelStats { samples, sse }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernel::plan::PlanParams;
+    use crate::kernel::Workspace;
+    use crate::model::{CoreRepr, TuckerModel};
+    use crate::parallel::shared::{RelaxedRowAccess, SharedFactors, SharedRowAccess};
+    use crate::util::Rng;
+
+    #[test]
+    fn thread_count_parses() {
+        assert_eq!(ThreadCount::parse("auto"), Some(ThreadCount::Auto));
+        assert_eq!(ThreadCount::parse("1"), Some(ThreadCount::Fixed(1)));
+        assert_eq!(ThreadCount::parse("8"), Some(ThreadCount::Fixed(8)));
+        assert_eq!(ThreadCount::parse("0"), None);
+        assert_eq!(ThreadCount::parse("-2"), None);
+        assert_eq!(ThreadCount::parse("many"), None);
+    }
+
+    /// The module-level pin of the tentpole: pooled exact execution over
+    /// a colored split plan is bitwise identical to sequential
+    /// `run_plan` — factors, SSE, residual stream, and core gradients —
+    /// at T = 1, 2, and 3.
+    #[test]
+    fn pooled_exact_matches_sequential_bitwise() {
+        let mut rng = Rng::new(11);
+        let dims = vec![512usize, 60, 55];
+        let tensor = synth::random_uniform(&mut rng, &dims, 2000, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 6, 5);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let params = PlanParams::tiled(64, 8).with_split(4);
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        assert!(plan.n_groups() > 8);
+        let coloring = plan.color_subgroups(&tensor);
+        let (lr, lam) = (0.01f32, 0.003f32);
+
+        let mut f_seq = model.factors.clone();
+        let mut seq_ws = BatchWorkspace::new(3, 5, 6, 64);
+        let mut log_seq = Vec::new();
+        let st_seq = batched::run_plan(
+            &mut seq_ws, &tensor, &plan, &core, &[], CoreLayout::Packed, &mut f_seq, lr,
+            lam, true, Some(&mut log_seq),
+        );
+
+        for threads in [1usize, 2, 3] {
+            let mut f_pool = model.factors.clone();
+            let mut pool = DispatchPool::new(threads, 3, 5, 6, 64);
+            let mut log_pool = Vec::new();
+            let st_pool = {
+                let shared = SharedFactors::new(&mut f_pool);
+                // SAFETY: exact coloring waves have disjoint row
+                // footprints; only this test touches the factors.
+                pool.execute(
+                    &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                    || unsafe { SharedRowAccess::new(&shared) },
+                    lr, lam, true, Some(&mut log_pool),
+                )
+            };
+            assert_eq!(st_seq.samples, st_pool.samples);
+            assert_eq!(
+                st_seq.sse.to_bits(),
+                st_pool.sse.to_bits(),
+                "T={threads}: sse diverged"
+            );
+            assert_eq!(log_seq.len(), log_pool.len());
+            for (a, b) in log_seq.iter().zip(log_pool.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "T={threads}: residuals diverged");
+            }
+            for n in 0..3 {
+                for (a, b) in f_seq
+                    .mat(n)
+                    .data()
+                    .iter()
+                    .zip(f_pool.mat(n).data().iter())
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "T={threads}: mode {n} diverged");
+                }
+            }
+            let (gs, cs) = seq_ws.core_grad_mut();
+            let (gp, cp) = pool.core_grad_mut();
+            assert_eq!(*cs, *cp);
+            for (a, b) in gs.iter().zip(gp.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "T={threads}: core grads diverged");
+            }
+        }
+    }
+
+    /// Tape chunking: a budget far below the plan's footprint forces
+    /// many consecutive group chunks, and the result must STILL be
+    /// bitwise identical to sequential execution (chunks replay in plan
+    /// order; the restricted waves keep conflicting pairs separated).
+    #[test]
+    fn chunked_tapes_stay_bitwise_identical() {
+        let mut rng = Rng::new(14);
+        let dims = vec![400usize, 50, 45];
+        let tensor = synth::random_uniform(&mut rng, &dims, 1500, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 5, 4);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let plan =
+            BatchPlan::build_params(&tensor, &ids, PlanParams::tiled(32, 4).with_split(2));
+        let coloring = plan.color_subgroups(&tensor);
+        let (lr, lam) = (0.01f32, 0.003f32);
+
+        let mut f_seq = model.factors.clone();
+        let mut seq_ws = BatchWorkspace::new(3, 4, 5, 32);
+        let mut log_seq = Vec::new();
+        let st_seq = batched::run_plan(
+            &mut seq_ws, &tensor, &plan, &core, &[], CoreLayout::Packed, &mut f_seq, lr,
+            lam, true, Some(&mut log_seq),
+        );
+
+        let mut f_pool = model.factors.clone();
+        let mut pool = DispatchPool::new(3, 3, 4, 5, 32);
+        let mut log_pool = Vec::new();
+        // 1-byte budget: every chunk degenerates to a single group — the
+        // maximal chunking stress.
+        let st_pool = {
+            let shared = SharedFactors::new(&mut f_pool);
+            // SAFETY: exact coloring waves have disjoint row footprints.
+            pool.execute_with_tape_budget(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { SharedRowAccess::new(&shared) },
+                lr, lam, true, Some(&mut log_pool), 1,
+            )
+        };
+        assert_eq!(st_seq.samples, st_pool.samples);
+        assert_eq!(st_seq.sse.to_bits(), st_pool.sse.to_bits(), "sse diverged");
+        assert_eq!(log_seq.len(), log_pool.len());
+        for (a, b) in log_seq.iter().zip(log_pool.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "residuals diverged under chunking");
+        }
+        for n in 0..3 {
+            for (a, b) in f_seq
+                .mat(n)
+                .data()
+                .iter()
+                .zip(f_pool.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under chunking");
+            }
+        }
+        let (gs, cs) = seq_ws.core_grad_mut();
+        let (gp, cp) = pool.core_grad_mut();
+        assert_eq!(*cs, *cp);
+        for (a, b) in gs.iter().zip(gp.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged under chunking");
+        }
+    }
+
+    /// Relaxed single-wave dispatch: every sample executed exactly once
+    /// (plan-order residual tape filled), and the trained factors stay
+    /// finite — the hogwild contract; quality is pinned end-to-end in
+    /// `tests/integration.rs`.
+    #[test]
+    fn pooled_relaxed_executes_every_sample_once() {
+        let mut rng = Rng::new(12);
+        let dims = vec![256usize, 40, 40];
+        let tensor = synth::random_uniform(&mut rng, &dims, 1500, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 4, 4);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let params = PlanParams::relaxed(64, 16).with_split(8);
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let coloring = SubGroupColoring::single_wave(plan.n_groups());
+        let mut factors = model.factors.clone();
+        let mut pool = DispatchPool::new(3, 3, 4, 4, 64);
+        let mut log = Vec::new();
+        let st = {
+            let shared = SharedFactors::new(&mut factors);
+            // SAFETY: hogwild opt-in — concurrent row access goes through
+            // the relaxed-atomic path (the paper's GPU write semantics
+            // without UB races).
+            pool.execute(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { RelaxedRowAccess::new(&shared) },
+                0.005, 0.001, true, Some(&mut log),
+            )
+        };
+        assert_eq!(st.samples, ids.len());
+        assert_eq!(log.len(), ids.len());
+        assert!(log.iter().all(|e| e.is_finite()));
+        for n in 0..3 {
+            assert!(factors.mat(n).data().iter().all(|v| v.is_finite()));
+        }
+        let (_, count) = pool.core_grad_mut();
+        assert_eq!(*count, ids.len());
+    }
+
+    /// The scalar reference over plan order equals the pooled exact path
+    /// end to end (transitively through run_plan, asserted directly here
+    /// so the dispatcher has its own scalar anchor).
+    #[test]
+    fn pooled_exact_matches_scalar_over_plan_order() {
+        let mut rng = Rng::new(13);
+        let dims = vec![300usize, 50, 45];
+        let tensor = synth::random_uniform(&mut rng, &dims, 1200, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 5, 7);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let plan =
+            BatchPlan::build_params(&tensor, &ids, PlanParams::tiled(32, 4).with_split(2));
+        let coloring = plan.color_subgroups(&tensor);
+
+        let mut f_scalar = model.factors.clone();
+        let mut ws = Workspace::new(3, 7, 5);
+        let st_s = crate::kernel::scalar::run_ids(
+            &mut ws, &tensor, plan.ids(), &core, &[], CoreLayout::Packed, &mut f_scalar,
+            0.01, 0.001, false, None,
+        );
+
+        let mut f_pool = model.factors.clone();
+        let mut pool = DispatchPool::new(2, 3, 7, 5, 32);
+        let st_p = {
+            let shared = SharedFactors::new(&mut f_pool);
+            // SAFETY: exact coloring waves have disjoint row footprints.
+            pool.execute(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { SharedRowAccess::new(&shared) },
+                0.01, 0.001, false, None,
+            )
+        };
+        assert_eq!(st_s.samples, st_p.samples);
+        assert_eq!(st_s.sse.to_bits(), st_p.sse.to_bits());
+        for n in 0..3 {
+            for (a, b) in f_scalar
+                .mat(n)
+                .data()
+                .iter()
+                .zip(f_pool.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged");
+            }
+        }
+    }
+}

@@ -18,11 +18,12 @@
 //! | Module       | Role |
 //! |--------------|------|
 //! | [`contract`] | Thm-1/2 contraction primitives + core-grad accumulate/apply (the per-sample math) |
-//! | [`plan`]     | [`BatchPlan`]: tiles of mode-0 fibers per group, [`Exactness::Exact`] (bitwise) or [`Exactness::Relaxed`] (hogwild), split-group refinement ([`PlanParams::split`]) |
-//! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile, lane width) from fiber-length stats and `R_core`; [`BatchSizing`] `Auto`/`Fixed` |
+//! | [`plan`]     | [`BatchPlan`]: tiles of mode-0 fibers per group, [`Exactness::Exact`] (bitwise) or [`Exactness::Relaxed`] (hogwild), split-group refinement ([`PlanParams::split`]), sub-group coloring ([`BatchPlan::color_subgroups`]: the row-ownership waves in-group threading executes) |
+//! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile, lane width) from fiber-length stats and `R_core`; [`BatchSizing`] `Auto`/`Fixed`; thread resolution + the coloring pays-off gate |
 //! | [`scalar`]   | Reference executor: one nonzero at a time in stream order |
 //! | [`batched`]  | Fiber-batched executor over a plan: per-fiber hot rows, flat `batch × R_core` panels |
 //! | [`panel`]    | SIMD-shaped panel microkernels ([`Lanes`] 4/8 row blocks over `R_core`, scalar tails) the batched executor's deferred c/GS steps run on |
+//! | [`dispatch`] | In-group thread pool ([`DispatchPool`]): fans a plan's split sub-groups across T threads as barrier-separated coloring waves (exact: bitwise-identical to sequential via the plan-order tape; relaxed: one hogwild wave) |
 //!
 //! Two execution strategies share that math bit-for-bit:
 //!
@@ -49,6 +50,7 @@
 //! Tables 8–12 shared-vs-global-memory ablation runnable on either path.
 
 pub mod contract;
+pub mod dispatch;
 pub mod panel;
 pub mod plan;
 pub mod planner;
@@ -60,8 +62,9 @@ pub use contract::{
     accumulate_core_grad, apply_core_grad, apply_core_grad_raw, build_strided,
     contract_staged, CoreLayout, Workspace,
 };
+pub use dispatch::{DispatchPool, ThreadCount};
 pub use panel::Lanes;
-pub use plan::{BatchPlan, Exactness, PlanParams, PlanScratch};
+pub use plan::{BatchPlan, ColorScratch, ColorStats, Exactness, PlanParams, PlanScratch, SubGroupColoring};
 pub use planner::{BatchSizing, FiberStats};
 
 use crate::model::factors::FactorMatrices;

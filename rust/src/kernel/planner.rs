@@ -25,8 +25,10 @@
 //! `Auto` routes through this planner, `Fixed(n)` pins the legacy
 //! single-fiber cap (0/1 = scalar execution).
 
+use crate::kernel::dispatch::ThreadCount;
 use crate::kernel::panel::Lanes;
-use crate::kernel::plan::{Exactness, PlanParams};
+use crate::kernel::plan::{ColorStats, Exactness, PlanParams};
+use crate::log_warn;
 use crate::tensor::SparseTensor;
 
 /// Panel working-set budget the cap is sized against (≈ L2-resident).
@@ -74,6 +76,7 @@ impl BatchSizing {
                 exactness,
                 lanes: resolve_lanes(lanes, r_core),
                 split: split.max(1),
+                degraded: false,
             }),
             BatchSizing::Auto => {
                 let stats = FiberStats::compute_full(tensor, ids_hint);
@@ -181,8 +184,22 @@ pub fn choose_params(
     let split = split.max(1);
     if stats.n_ids == 0 || stats.n_fibers == 0 {
         // Empty/degenerate workload: nothing to batch — minimum cap,
-        // single-fiber tile (regression: ISSUE 3 satellite).
-        return PlanParams { max_batch: MIN_CAP, tile: 1, exactness, lanes, split };
+        // single-fiber tile (regression: ISSUE 3 satellite). When the
+        // caller asked for relaxed or split-group semantics, those become
+        // silent no-ops here — degrade LOUDLY instead (ISSUE 4
+        // satellite): warn once per resolution and mark the params so
+        // `PlanStats::degraded` records it.
+        let degraded = exactness == Exactness::Relaxed || split > 1;
+        if degraded {
+            log_warn!(
+                "degenerate workload (n_ids={}, n_fibers={}): requested \
+                 exactness={exactness:?}/split={split} cannot engage — falling back to \
+                 minimum-cap single-fiber groups (recorded in PlanStats::degraded)",
+                stats.n_ids,
+                stats.n_fibers
+            );
+        }
+        return PlanParams { max_batch: MIN_CAP, tile: 1, exactness, lanes, split, degraded };
     }
     let bytes_per_sample = order.max(1) * 2 * (j + r_core) * 4;
     let mut cap = PANEL_BUDGET_BYTES / bytes_per_sample.max(1);
@@ -202,7 +219,44 @@ pub fn choose_params(
     } else {
         ((cap as f64 / mean).ceil() as usize).clamp(1, MAX_TILE.min(cap))
     };
-    PlanParams { max_batch: cap, tile, exactness, lanes, split }
+    PlanParams { max_batch: cap, tile, exactness, lanes, split, degraded: false }
+}
+
+/// Resolve a [`ThreadCount`] to a concrete in-group pool width.
+/// `Fixed(n)` is honored (clamped to ≥ 1). `Auto` reads
+/// `FASTTUCKER_POOL_THREADS` (the CI differential knob) and otherwise
+/// stays at 1 — exact pooling is bitwise-neutral, but relaxed (hogwild)
+/// pooling is racy by design, so pools engage only on explicit opt-in.
+pub fn resolve_threads(threads: ThreadCount) -> usize {
+    match threads {
+        ThreadCount::Fixed(n) => n.max(1),
+        ThreadCount::Auto => match std::env::var("FASTTUCKER_POOL_THREADS") {
+            Err(_) => 1,
+            Ok(raw) => match raw.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    log_warn!(
+                        "FASTTUCKER_POOL_THREADS={raw:?} is not a positive integer; \
+                         running single-threaded"
+                    );
+                    1
+                }
+            },
+        },
+    }
+}
+
+/// Minimum mean sub-groups per coloring wave for in-group threading to
+/// beat sequential dispatch: below this, waves are near-chains and the
+/// barrier overhead outweighs the parallel width.
+pub const MIN_WAVE_PARALLELISM: f64 = 2.0;
+
+/// The planner's conflict-density gate: `true` when a coloring exposes
+/// enough parallel width ([`ColorStats::parallelism`]) for a wave-
+/// dispatched pool to pay off; `false` sends the pass down the
+/// sequential (bitwise-identical) path instead.
+pub fn coloring_pays_off(stats: &ColorStats) -> bool {
+    stats.parallelism() >= MIN_WAVE_PARALLELISM
 }
 
 /// Mini-batch cap for the PJRT (AOT artifact) path: its `train_step`
@@ -285,6 +339,55 @@ mod tests {
         let tiny = FiberStats { n_ids: 20, n_fibers: 10, mean_len: 2.0, p90_len: 3, max_len: 4 };
         let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
         assert!(p.max_batch <= 32, "cap {} for a 20-sample workload", p.max_batch);
+    }
+
+    #[test]
+    fn degenerate_relaxed_or_split_requests_are_marked_degraded() {
+        // ISSUE 4 satellite: a degenerate workload silently neutering
+        // relaxed/split semantics must be recorded, not swallowed.
+        let empty = FiberStats::default();
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 1);
+        assert!(p.degraded, "relaxed on an empty workload must degrade loudly");
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 4);
+        assert!(p.degraded, "split > 1 on an empty workload must degrade loudly");
+        assert_eq!(p.split, 4, "the requested split is still carried for observability");
+        // Plain exact/unsplit degenerate resolution is NOT degraded.
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
+        assert!(!p.degraded);
+        // Healthy workloads are never degraded.
+        let s = FiberStats { n_ids: 1000, n_fibers: 100, mean_len: 10.0, p90_len: 15, max_len: 30 };
+        let p = choose_params(&s, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 4);
+        assert!(!p.degraded);
+
+        // Through the Auto path end to end, and into PlanStats.
+        let t = SparseTensor::new_unchecked(vec![4, 4, 4], Vec::new(), Vec::new());
+        let p = BatchSizing::Auto
+            .resolve(&t, 0, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 2)
+            .unwrap();
+        assert!(p.degraded);
+        let plan = crate::kernel::BatchPlan::build_params(&t, &[], p);
+        assert!(plan.stats().degraded, "degrade marker must reach PlanStats");
+    }
+
+    #[test]
+    fn thread_resolution_and_pays_off_gate() {
+        use crate::kernel::dispatch::ThreadCount;
+        assert_eq!(resolve_threads(ThreadCount::Fixed(3)), 3);
+        assert_eq!(resolve_threads(ThreadCount::Fixed(0)), 1, "Fixed(0) clamps to 1");
+        // Auto without the env override stays sequential. (The env-set
+        // case is exercised by CI's FASTTUCKER_POOL_THREADS=2 pass; not
+        // asserted here to keep the test env-independent.)
+        if std::env::var("FASTTUCKER_POOL_THREADS").is_err() {
+            assert_eq!(resolve_threads(ThreadCount::Auto), 1);
+        }
+
+        // Conflict-density gate: chains don't pay, wide waves do.
+        let chain = ColorStats { n_groups: 8, n_waves: 8, max_wave: 1 };
+        assert!(!coloring_pays_off(&chain));
+        let wide = ColorStats { n_groups: 64, n_waves: 4, max_wave: 20 };
+        assert!(coloring_pays_off(&wide));
+        let empty = ColorStats::default();
+        assert!(!coloring_pays_off(&empty));
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!                   [--engine native|parallel|pjrt] [--j N] [--r-core N]
 //!                   [--epochs N] [--workers M] [--seed S] [--scale F]
 //!                   [--batch auto|N] [--exactness exact|relaxed]
-//!                   [--lanes auto|4|8] [--split N] [--checkpoint OUT.ftck]
+//!                   [--lanes auto|4|8] [--split N] [--threads auto|N]
+//!                   [--checkpoint OUT.ftck]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
 //! fasttucker partition-plan --workers M --order N
@@ -58,7 +59,7 @@ USAGE:
                     [--epochs N] [--workers M] [--seed S] [--scale F]
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
                     [--batch auto|N] [--exactness exact|relaxed]
-                    [--lanes auto|4|8] [--split N]
+                    [--lanes auto|4|8] [--split N] [--threads auto|N]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -121,6 +122,10 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get_usize("split")? {
         cfg.split = v;
+    }
+    if let Some(v) = args.get("threads") {
+        cfg.threads = fasttucker::kernel::ThreadCount::parse(v)
+            .ok_or_else(|| anyhow!("--threads expects auto or an integer >= 1, got {v:?}"))?;
     }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;
@@ -231,7 +236,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 fn cmd_partition_plan(args: &Args) -> Result<()> {
     let m = args.get_usize("workers")?.unwrap_or(2);
     let order = args.get_usize("order")?.unwrap_or(3);
-    let s = LatinSchedule::new(m, order);
+    let s = LatinSchedule::try_new(m, order)?;
     println!("workers={m} order={order} rounds={}", s.rounds());
     for round in 0..s.rounds() {
         let assigns = s.round_assignments(round);

@@ -124,6 +124,18 @@ pub struct PlanStats {
     pub split: usize,
     /// Group boundaries the split-group rule introduced.
     pub splits: usize,
+    /// In-group pool threads that executed the plan (1 = sequential
+    /// dispatch; set by the execution layer, not the plan builder).
+    pub threads: usize,
+    /// Barrier-separated waves the plan actually executed as (exact
+    /// pooled dispatch: the coloring's wave count; relaxed pooled
+    /// dispatch: 1). Stays 0 on any sequential execution — including an
+    /// exact pass whose coloring the conflict-density gate rejected.
+    pub waves: usize,
+    /// Planner degrade marker: requested relaxed/split semantics could
+    /// not engage on a degenerate workload (see
+    /// [`choose_params`](crate::kernel::planner::choose_params)).
+    pub degraded: bool,
 }
 
 impl PlanStats {
@@ -154,6 +166,16 @@ impl PlanStats {
             self.samples as f64 / (self.n_groups * self.cap) as f64
         }
     }
+
+    /// Mean sub-groups per coloring wave — the parallel width the
+    /// in-group pool exploited (0 when the plan was never colored).
+    pub fn wave_occupancy(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.n_groups as f64 / self.waves as f64
+        }
+    }
 }
 
 /// Accumulator over many [`PlanStats`] (e.g. every worker-pass plan of a
@@ -173,6 +195,13 @@ pub struct PlanAccum {
     pub split: usize,
     /// Split-rule group boundaries summed over plans.
     pub splits: u64,
+    /// Largest in-group pool width observed executing a plan.
+    pub threads: usize,
+    /// Coloring waves summed over pooled plans (with `groups`, gives the
+    /// mean wave occupancy of the epoch).
+    pub waves: u64,
+    /// Plans whose relaxed/split request was planner-degraded.
+    pub degraded: u64,
 }
 
 impl PlanAccum {
@@ -190,6 +219,9 @@ impl PlanAccum {
         self.lanes = self.lanes.max(s.lanes);
         self.split = self.split.max(s.split);
         self.splits += s.splits as u64;
+        self.threads = self.threads.max(s.threads);
+        self.waves += s.waves as u64;
+        self.degraded += s.degraded as u64;
     }
 
     pub fn merge(&mut self, other: &PlanAccum) {
@@ -202,6 +234,9 @@ impl PlanAccum {
         self.lanes = self.lanes.max(other.lanes);
         self.split = self.split.max(other.split);
         self.splits += other.splits;
+        self.threads = self.threads.max(other.threads);
+        self.waves += other.waves;
+        self.degraded += other.degraded;
     }
 
     pub fn mean_group_len(&self) -> f64 {
@@ -311,13 +346,18 @@ mod tests {
             lanes: 8,
             split: 2,
             splits: 3,
+            threads: 2,
+            waves: 5,
+            degraded: true,
         };
         assert!((s.mean_group_len() - 12.0).abs() < 1e-12);
         assert!((s.mean_fibers_per_group() - 4.0).abs() < 1e-12);
         assert!((s.occupancy() - 0.5).abs() < 1e-12);
+        assert!((s.wave_occupancy() - 2.0).abs() < 1e-12);
         let empty = PlanStats::default();
         assert_eq!(empty.mean_group_len(), 0.0);
         assert_eq!(empty.occupancy(), 0.0);
+        assert_eq!(empty.wave_occupancy(), 0.0);
 
         let mut acc = PlanAccum::new();
         acc.record(&s);
@@ -329,10 +369,16 @@ mod tests {
         assert_eq!(acc.lanes, 8);
         assert_eq!(acc.split, 2);
         assert_eq!(acc.splits, 6);
+        assert_eq!(acc.threads, 2);
+        assert_eq!(acc.waves, 10);
+        assert_eq!(acc.degraded, 2);
         let mut acc2 = PlanAccum::new();
         acc2.merge(&acc);
         assert_eq!(acc2.samples, 240);
         assert_eq!(acc2.splits, 6);
+        assert_eq!(acc2.waves, 10);
+        assert_eq!(acc2.threads, 2);
+        assert_eq!(acc2.degraded, 2);
     }
 
     #[test]

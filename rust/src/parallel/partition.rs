@@ -4,6 +4,7 @@
 //! block `(b_1..b_N)` holds the nonzeros whose mode-`n` index falls in
 //! chunk `b_n` for every `n`.
 
+use crate::algo::{AlgoError, AlgoResult};
 use crate::tensor::SparseTensor;
 
 /// Partition of a tensor's nonzeros into `M^order` blocks.
@@ -17,6 +18,13 @@ pub struct BlockPartition {
 }
 
 impl BlockPartition {
+    /// Upper bound on `M^N` blocks a partition will materialize: the
+    /// block table alone costs ~24 B per (mostly empty) block, so beyond
+    /// this the geometry is a misconfiguration even when the power does
+    /// not wrap `usize` — `try_build` rejects it with the same typed
+    /// error instead of aborting on a gargantuan allocation.
+    pub const MAX_BLOCKS: usize = 1 << 24;
+
     /// Chunk id of row `i` in a mode of size `dim` cut into `m` chunks.
     /// Chunks are `ceil(dim/m)`-sized, last chunk possibly short.
     #[inline]
@@ -44,11 +52,24 @@ impl BlockPartition {
         id
     }
 
-    /// Build the partition — one O(nnz) pass.
+    /// Build the partition — one O(nnz) pass. Panics when the `M^N`
+    /// block count overflows `usize`; config-driven callers should use
+    /// [`Self::try_build`], which surfaces that as a typed error
+    /// *before* any allocation (ISSUE 4 regression: `usize::pow` wraps
+    /// silently in release builds).
     pub fn build(t: &SparseTensor, m: usize) -> Self {
+        Self::try_build(t, m).expect("BlockPartition geometry overflows usize")
+    }
+
+    /// Checked [`Self::build`]: fails with
+    /// [`AlgoError::PartitionOverflow`] when `M^order` overflows.
+    pub fn try_build(t: &SparseTensor, m: usize) -> AlgoResult<Self> {
         assert!(m >= 1);
         let order = t.order();
-        let n_blocks = m.pow(order as u32);
+        let n_blocks = m
+            .checked_pow(order as u32)
+            .filter(|&n| n <= Self::MAX_BLOCKS)
+            .ok_or(AlgoError::PartitionOverflow { workers: m, order })?;
         let mut blocks = vec![Vec::new(); n_blocks];
         let dims = t.dims().to_vec();
         let mut coords = vec![0usize; order];
@@ -59,7 +80,7 @@ impl BlockPartition {
             }
             blocks[Self::block_id(&coords, m)].push(k as u32);
         }
-        BlockPartition { m, order, dims, blocks }
+        Ok(BlockPartition { m, order, dims, blocks })
     }
 
     pub fn m(&self) -> usize {
@@ -159,6 +180,28 @@ mod tests {
             }
             assert!(seen.iter().all(|&x| x));
         });
+    }
+
+    #[test]
+    fn overflowing_block_count_is_a_typed_error_before_allocating() {
+        // ISSUE 4 regression: a huge worker count must not wrap M^N and
+        // silently mis-partition (or OOM building the block table).
+        let t = synth::random_uniform(&mut Rng::new(2), &[8, 8, 8], 20, 1.0, 5.0);
+        let err = BlockPartition::try_build(&t, 1 << 22).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                crate::algo::AlgoError::PartitionOverflow { workers, order }
+                    if workers == 1 << 22 && order == 3
+            ),
+            "wrong error: {err}"
+        );
+        // Representable-but-absurd geometry (no usize wrap, 10^15 blocks)
+        // must also error instead of aborting on a petabyte allocation.
+        assert!(BlockPartition::try_build(&t, 100_000).is_err());
+        // A sane worker count still builds through the checked path.
+        let p = BlockPartition::try_build(&t, 2).unwrap();
+        assert_eq!(p.n_blocks(), 8);
     }
 
     #[test]

@@ -8,22 +8,47 @@
 //! * **Coverage** — over the `M^{N-1}` rounds of a cycle, every one of the
 //!   `M^N` blocks is processed exactly once.
 
+use crate::algo::{AlgoError, AlgoResult};
+
 /// The schedule for `m` workers over an order-`order` tensor.
 #[derive(Clone, Debug)]
 pub struct LatinSchedule {
     m: usize,
     order: usize,
+    /// `M^{N-1}`, checked at construction (`usize::pow` silently wraps in
+    /// release builds — ISSUE 4 regression).
+    rounds: usize,
 }
 
 impl LatinSchedule {
-    pub fn new(m: usize, order: usize) -> Self {
+    /// Checked constructor: fails with [`AlgoError::PartitionOverflow`]
+    /// when the `M^{N-1}` round count (or the `M^N` block space the
+    /// schedule cycles over) overflows `usize`, instead of silently
+    /// wrapping in release builds.
+    pub fn try_new(m: usize, order: usize) -> AlgoResult<Self> {
         assert!(m >= 1 && order >= 1);
-        LatinSchedule { m, order }
+        let rounds = m
+            .checked_pow((order - 1) as u32)
+            .ok_or(AlgoError::PartitionOverflow { workers: m, order })?;
+        // The cycle visits M^N blocks; a schedule whose block space
+        // overflows — or exceeds the partition's materialization budget
+        // (the matching BlockPartition would abort on allocation) — is
+        // unusable even if the round count fits.
+        m.checked_pow(order as u32)
+            .filter(|&n| n <= crate::parallel::BlockPartition::MAX_BLOCKS)
+            .ok_or(AlgoError::PartitionOverflow { workers: m, order })?;
+        Ok(LatinSchedule { m, order, rounds })
+    }
+
+    /// Panicking constructor for infallible call sites (small, validated
+    /// `m`/`order`); prefer [`Self::try_new`] on config-driven paths.
+    pub fn new(m: usize, order: usize) -> Self {
+        Self::try_new(m, order).expect("LatinSchedule geometry overflows usize")
     }
 
     /// Rounds per full cycle: `M^{N-1}`.
     pub fn rounds(&self) -> usize {
-        self.m.pow((self.order - 1) as u32)
+        self.rounds
     }
 
     /// Block chunk-coordinates assigned to `worker` in `round`.
@@ -136,5 +161,28 @@ mod tests {
         let s = LatinSchedule::new(1, 4);
         assert_eq!(s.rounds(), 1);
         assert_eq!(s.assignment(0, 0), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn overflowing_geometry_is_a_typed_error_not_a_wrap() {
+        // ISSUE 4 regression: m.pow(order) silently wrapped in release
+        // builds. 2^22 workers on an order-3 tensor needs 2^66 blocks.
+        let err = LatinSchedule::try_new(1 << 22, 3).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                crate::algo::AlgoError::PartitionOverflow { workers, order }
+                    if workers == 1 << 22 && order == 3
+            ),
+            "wrong error: {err}"
+        );
+        // Round count itself overflowing (order - 1 exponent).
+        assert!(LatinSchedule::try_new(1 << 33, 3).is_err());
+        // Representable-but-absurd block space (beyond the partition's
+        // materialization budget) is rejected the same way.
+        assert!(LatinSchedule::try_new(100_000, 3).is_err());
+        // Large-but-valid geometry still constructs.
+        let s = LatinSchedule::try_new(4, 5).unwrap();
+        assert_eq!(s.rounds(), 256);
     }
 }

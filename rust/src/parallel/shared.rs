@@ -1,17 +1,53 @@
 //! Unsafe-but-proven shared factor storage for the multi-device engine.
 //!
-//! Within one scheduling round, [`LatinSchedule`](super::LatinSchedule)
-//! guarantees the workers' blocks are pairwise disjoint in every mode's
-//! chunk index, so the factor rows any two workers touch never overlap.
-//! [`SharedFactors`] exposes raw row access under exactly that invariant
-//! (which `parallel::schedule::tests::prop_conflict_free_and_covering`
-//! pins); it is the CPU analogue of multiple GPUs updating disjoint slices
-//! of the same logically-global factor matrices.
+//! # The two-level disjointness contract
+//!
+//! Concurrent row access through [`SharedFactors`] is sound because two
+//! nested partitions guarantee writers never collide — the CPU analogue
+//! of the paper's two nested levels of parallelism (inter-GPU Latin
+//! rounds × intra-GPU thread blocks):
+//!
+//! 1. **Latin schedule (across workers):** within one scheduling round,
+//!    [`LatinSchedule`](super::LatinSchedule) guarantees the workers'
+//!    blocks are pairwise disjoint in every mode's chunk index, so the
+//!    factor rows any two *workers* touch never overlap (pinned by
+//!    `parallel::schedule::tests::prop_conflict_free_and_covering`).
+//! 2. **Color waves (within a worker):** when a worker fans its plan's
+//!    split sub-groups across an in-group thread pool
+//!    ([`DispatchPool`](crate::kernel::dispatch::DispatchPool)), the
+//!    sub-group coloring
+//!    ([`BatchPlan::color_subgroups`](crate::kernel::BatchPlan::color_subgroups))
+//!    guarantees same-wave sub-groups have pairwise-disjoint row
+//!    footprints in every mode, so the *pool threads* never collide
+//!    either; waves are barrier-separated, which also replays every
+//!    conflicting sub-group pair in its sequential order (the exact-mode
+//!    bitwise contract, pinned by
+//!    `tests/properties.rs::prop_subgroup_coloring_is_disjoint_ordered_partition`
+//!    and `prop_threaded_exact_bitwise_matches_sequential`).
+//!
+//! The single deliberate exception is **relaxed (hogwild) pooled
+//! dispatch**: a single wave of freely-concurrent sub-groups may update
+//! shared rows concurrently — the paper's GPU write semantics, opted into
+//! explicitly via `Exactness::Relaxed` and pinned as an accuracy envelope
+//! rather than a bitwise contract. Those accesses go through
+//! [`RelaxedRowAccess`] (relaxed-atomic element loads/stores), so racing
+//! updates can lose writes but are well-defined — never the aliasing
+//! `&mut` UB the plain [`SharedRowAccess`] path would incur.
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::kernel::contract::CoreLayout;
+use crate::kernel::{
+    batched, planner, BatchPlan, DispatchPool, Exactness, KernelStats, SubGroupColoring,
+};
+use crate::kruskal::KruskalCore;
+use crate::metrics::PlanStats;
 use crate::model::factors::FactorMatrices;
+use crate::tensor::SparseTensor;
 
 /// A `Sync` view over factor matrices allowing per-row mutable access from
-/// multiple threads, provided callers honor the disjointness contract.
+/// multiple threads, provided callers honor the two-level disjointness
+/// contract above.
 pub struct SharedFactors {
     ptrs: Vec<*mut f32>,
     rows: Vec<usize>,
@@ -68,6 +104,25 @@ impl SharedFactors {
         debug_assert!(i < self.rows[n]);
         std::slice::from_raw_parts_mut(self.ptrs[n].add(i * self.cols), self.cols)
     }
+
+    /// Row `(n, i)` as relaxed-atomic words (f32 bit patterns) — the
+    /// hogwild access path: concurrent readers/writers are well-defined
+    /// (individual element updates may be lost, never torn into UB).
+    ///
+    /// # Safety
+    /// While any thread accesses a row atomically, no thread may hold a
+    /// plain `&`/`&mut` reference to it ([`Self::row`]/[`Self::row_mut`])
+    /// — mixing the two access modes on one row is a data race again.
+    #[inline]
+    pub unsafe fn row_atomic(&self, n: usize, i: usize) -> &[AtomicU32] {
+        debug_assert!(i < self.rows[n]);
+        // f32 and AtomicU32 share size and alignment; the factor storage
+        // outlives `self` per the constructor's contract.
+        std::slice::from_raw_parts(
+            self.ptrs[n].add(i * self.cols) as *const AtomicU32,
+            self.cols,
+        )
+    }
 }
 
 /// [`FactorAccess`](crate::kernel::FactorAccess) view over
@@ -111,6 +166,179 @@ impl crate::kernel::FactorAccess for SharedRowAccess<'_> {
     fn store(&mut self, n: usize, i: usize, src: &[f32]) {
         // SAFETY: exclusive ownership per the constructor's contract.
         unsafe { self.shared.row_mut(n, i) }.copy_from_slice(src);
+    }
+}
+
+/// Hogwild-safe [`FactorAccess`](crate::kernel::FactorAccess) over
+/// [`SharedFactors`] for **relaxed pooled dispatch**: every element
+/// access is a relaxed-atomic load/store of the f32 bit pattern, so
+/// concurrent updates to a shared row are well-defined — racing
+/// read-modify-writes may *lose* an update (the paper's GPU write
+/// semantics, accuracy-pinned by the relaxed RMSE envelope) but can
+/// never tear into undefined behavior the way aliasing `&mut` rows
+/// would. Element-wise arithmetic is identical to
+/// [`SharedRowAccess`] (`row[k] = beta·row[k] + alpha·x[k]`), so a
+/// race-free relaxed pass computes the same values.
+pub struct RelaxedRowAccess<'a> {
+    shared: &'a SharedFactors,
+}
+
+impl<'a> RelaxedRowAccess<'a> {
+    /// Wrap a shared view for one hogwild pool thread.
+    ///
+    /// # Safety
+    /// For the lifetime of any returned accessor, every row it touches
+    /// may be accessed concurrently ONLY through other
+    /// [`RelaxedRowAccess`] handles (atomic path); non-atomic access
+    /// from outside the pool is excluded by the level-1 Latin ownership
+    /// (see [`SharedFactors`]).
+    pub unsafe fn new(shared: &'a SharedFactors) -> Self {
+        RelaxedRowAccess { shared }
+    }
+}
+
+impl crate::kernel::FactorAccess for RelaxedRowAccess<'_> {
+    #[inline]
+    fn stage(&self, n: usize, i: usize, out: &mut [f32]) {
+        // SAFETY: atomic-only concurrent access per constructor contract.
+        let row = unsafe { self.shared.row_atomic(n, i) };
+        for (o, slot) in out.iter_mut().zip(row.iter()) {
+            *o = f32::from_bits(slot.load(Ordering::Relaxed));
+        }
+    }
+
+    #[inline]
+    fn update(&mut self, n: usize, i: usize, beta: f32, alpha: f32, x: &[f32]) {
+        // SAFETY: atomic-only concurrent access per constructor contract.
+        let row = unsafe { self.shared.row_atomic(n, i) };
+        for (slot, &xk) in row.iter().zip(x.iter()) {
+            let v = f32::from_bits(slot.load(Ordering::Relaxed));
+            slot.store((beta * v + alpha * xk).to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, n: usize, i: usize, src: &[f32]) {
+        // SAFETY: atomic-only concurrent access per constructor contract.
+        let row = unsafe { self.shared.row_atomic(n, i) };
+        for (slot, &v) in row.iter().zip(src.iter()) {
+            slot.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+/// The pooled-dispatch policy shared by the Latin workers and the serial
+/// engine (one implementation — `parallel::worker::worker_pass` and
+/// `algo::fasttucker` both call it):
+///
+/// * `threads > 1` and the plan has parallel width: **exact** plans run
+///   their sub-group coloring's waves (threading only when the planner's
+///   conflict-density gate [`planner::coloring_pays_off`] says the waves
+///   pay for the barriers), through non-atomic [`SharedRowAccess`]
+///   handles (waves are row-disjoint); **relaxed** plans run one hogwild
+///   wave through atomic [`RelaxedRowAccess`] handles.
+/// * otherwise: the sequential executor ([`batched::run_plan`]) on the
+///   pool's primary workspace — which is also the exact fallback, and is
+///   bitwise identical to the pooled exact path by the dispatch
+///   contract.
+///
+/// `stats.threads`/`stats.waves` record what actually executed (both
+/// stay at their builder defaults — 1/0 — on the sequential path, even
+/// when a coloring was computed but rejected by the gate).
+///
+/// Cost note: with `threads > 1` in exact mode, the coloring pass (one
+/// O(plan footprint) sweep, comparable to plan construction) runs on
+/// every pass even when the gate then rejects it — pools are explicit
+/// opt-in, so conflict-dense workloads pay a bounded planning overhead
+/// until the gate verdict is cached per block (ROADMAP follow-up).
+///
+/// # Safety
+/// Level-1 ownership: every factor row the plan touches must be owned
+/// exclusively by this call for its duration — the Latin-round ownership
+/// for a worker, or holding the only live reference to the factors for
+/// the serial engine. Level-2 (intra-pool) safety is internal: exact
+/// coloring waves are row-disjoint, relaxed dispatch is atomic.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn dispatch_plan(
+    pool: &mut DispatchPool,
+    tensor: &SparseTensor,
+    plan: &BatchPlan,
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    shared: &SharedFactors,
+    lr_f: f32,
+    lam_f: f32,
+    update_core: bool,
+    stats: &mut PlanStats,
+) -> KernelStats {
+    let exactness = plan.params().exactness;
+    let coloring = if pool.threads() > 1 && plan.n_groups() > 1 {
+        match exactness {
+            Exactness::Exact => {
+                let c = plan.color_subgroups_with_scratch(tensor, pool.color_scratch_mut());
+                planner::coloring_pays_off(&c.stats()).then_some(c)
+            }
+            Exactness::Relaxed => Some(SubGroupColoring::single_wave(plan.n_groups())),
+        }
+    } else {
+        None
+    };
+    match coloring {
+        Some(coloring) => {
+            stats.threads = pool.threads();
+            stats.waves = coloring.n_waves();
+            match exactness {
+                // SAFETY: level 1 per this function's contract; level 2:
+                // exact waves have pairwise-disjoint row footprints.
+                Exactness::Exact => pool.execute(
+                    tensor,
+                    plan,
+                    &coloring,
+                    core,
+                    strided,
+                    layout,
+                    || unsafe { SharedRowAccess::new(shared) },
+                    lr_f,
+                    lam_f,
+                    update_core,
+                    None,
+                ),
+                // SAFETY: level 1 per this function's contract; level 2:
+                // every pool thread uses the atomic hogwild path.
+                Exactness::Relaxed => pool.execute(
+                    tensor,
+                    plan,
+                    &coloring,
+                    core,
+                    strided,
+                    layout,
+                    || unsafe { RelaxedRowAccess::new(shared) },
+                    lr_f,
+                    lam_f,
+                    update_core,
+                    None,
+                ),
+            }
+        }
+        None => {
+            // SAFETY: level 1 per this function's contract; no intra-pool
+            // concurrency on the sequential path.
+            let mut access = unsafe { SharedRowAccess::new(shared) };
+            batched::run_plan(
+                pool.primary_mut(),
+                tensor,
+                plan,
+                core,
+                strided,
+                layout,
+                &mut access,
+                lr_f,
+                lam_f,
+                update_core,
+                None,
+            )
+        }
     }
 }
 

@@ -17,12 +17,12 @@ use std::time::Instant;
 
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
 use crate::kernel::{
-    apply_core_grad_raw, batched, build_strided, BatchPlan, BatchSizing, BatchWorkspace,
-    CoreLayout, Exactness, Lanes, PlanParams,
+    apply_core_grad_raw, build_strided, planner, BatchPlan, BatchSizing, CoreLayout,
+    DispatchPool, Exactness, Lanes, PlanParams, ThreadCount,
 };
 use crate::metrics::{CommLedger, PlanAccum, PlanStats};
 use crate::model::{CoreRepr, TuckerModel};
-use crate::parallel::shared::{SharedFactors, SharedRowAccess};
+use crate::parallel::shared::{dispatch_plan, SharedFactors};
 use crate::parallel::{BlockPartition, LatinSchedule};
 use crate::tensor::SparseTensor;
 use crate::util::Rng;
@@ -82,6 +82,14 @@ pub struct ParallelOptions {
     /// plan can be fanned out across more workers (or an in-group thread
     /// pool / the PJRT backend) without changing results.
     pub split: usize,
+    /// In-group thread pool width (ISSUE 4 tentpole): each Latin worker
+    /// owns a [`DispatchPool`] fanning its plan's split sub-groups across
+    /// this many threads. Exact mode executes the sub-group coloring's
+    /// barrier-separated waves and stays **bitwise identical** to
+    /// sequential dispatch; relaxed mode dispatches one hogwild wave.
+    /// `Auto` = `FASTTUCKER_POOL_THREADS` or sequential (see
+    /// [`planner::resolve_threads`]).
+    pub threads: ThreadCount,
 }
 
 impl Default for ParallelOptions {
@@ -95,6 +103,7 @@ impl Default for ParallelOptions {
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
             split: 1,
+            threads: ThreadCount::Auto,
         }
     }
 }
@@ -104,7 +113,9 @@ pub struct ParallelFastTucker {
     pub opts: ParallelOptions,
     partition: Option<BlockPartition>,
     partition_for: Option<(usize, usize, usize)>, // (nnz, order, m)
-    workspaces: Vec<BatchWorkspace>,
+    /// One in-group [`DispatchPool`] per Latin worker (T = 1 degenerates
+    /// to the plain per-worker workspace of earlier PRs).
+    pools: Vec<DispatchPool>,
     /// Planner decision for the current dataset (one policy shared by
     /// every worker, resolved in `ensure_state`).
     plan_params: PlanParams,
@@ -138,7 +149,7 @@ impl ParallelFastTucker {
             opts,
             partition: None,
             partition_for: None,
-            workspaces: Vec::new(),
+            pools: Vec::new(),
             plan_params: PlanParams::exact(1),
             plan_params_for: None,
             ledger: CommLedger::new(),
@@ -146,10 +157,18 @@ impl ParallelFastTucker {
         }
     }
 
-    fn ensure_state(&mut self, train: &SparseTensor, order: usize, r_core: usize, j: usize) {
+    fn ensure_state(
+        &mut self,
+        train: &SparseTensor,
+        order: usize,
+        r_core: usize,
+        j: usize,
+    ) -> AlgoResult<()> {
         let fp = (train.nnz(), train.order(), self.opts.workers);
         if self.partition_for != Some(fp) {
-            self.partition = Some(BlockPartition::build(train, self.opts.workers));
+            // Checked build: an overflowing M^N block space surfaces as a
+            // typed error before any allocation (ISSUE 4 satellite).
+            self.partition = Some(BlockPartition::try_build(train, self.opts.workers)?);
             self.partition_for = Some(fp);
         }
         // One planner decision per dataset, shared by all workers (the
@@ -194,17 +213,19 @@ impl ParallelFastTucker {
             self.plan_params_for = Some(params_fp);
         }
         let cap = self.plan_params.max_batch;
-        let stale = self.workspaces.len() != self.opts.workers
+        let threads = planner::resolve_threads(self.opts.threads);
+        let stale = self.pools.len() != self.opts.workers
             || self
-                .workspaces
+                .pools
                 .first()
-                .map(|w| w.shape() != (order, r_core, j, cap))
+                .map(|p| p.shape() != (order, r_core, j, cap) || p.threads() != threads)
                 .unwrap_or(true);
         if stale {
-            self.workspaces = (0..self.opts.workers)
-                .map(|_| BatchWorkspace::new(order, r_core, j, cap))
+            self.pools = (0..self.opts.workers)
+                .map(|_| DispatchPool::new(threads, order, r_core, j, cap))
                 .collect();
         }
+        Ok(())
     }
 
     /// One multi-device epoch. Returns stats; communication volume goes to
@@ -223,7 +244,7 @@ impl ParallelFastTucker {
             }
         };
         let (order, r_core, j) = (core.order(), core.rank(), core.j(0));
-        self.ensure_state(train, order, r_core, j);
+        self.ensure_state(train, order, r_core, j)?;
         let m = self.opts.workers;
         let h = self.opts.hyper;
         let layout = self.opts.layout;
@@ -235,7 +256,7 @@ impl ParallelFastTucker {
             Vec::new()
         };
 
-        let schedule = LatinSchedule::new(m, order);
+        let schedule = LatinSchedule::try_new(m, order)?;
         let partition = self.partition.as_ref().unwrap();
         let dims = model.factors.dims();
 
@@ -267,7 +288,7 @@ impl ParallelFastTucker {
                         train,
                         partition,
                         &assignments,
-                        &mut self.workspaces,
+                        &mut self.pools,
                         &mut worker_rngs,
                         lr_f,
                         h,
@@ -281,7 +302,7 @@ impl ParallelFastTucker {
                         train,
                         partition,
                         &assignments,
-                        &mut self.workspaces,
+                        &mut self.pools,
                         &mut worker_rngs,
                         lr_f,
                         h,
@@ -305,17 +326,15 @@ impl ParallelFastTucker {
         let t1 = Instant::now();
         let mut core_secs = 0.0;
         if h.update_core {
-            // Merge worker-local gradients into workspace 0.
-            let (first, rest) = self.workspaces.split_at_mut(1);
+            // Merge worker-local gradients into worker 0's pool. Each
+            // pool's own gradient already lives wholly on its primary
+            // workspace (the DispatchPool invariant: sequential passes
+            // and the exact tape replay both target it).
+            let (first, rest) = self.pools.split_at_mut(1);
             let (grad0, count0) = first[0].core_grad_mut();
             for ws in rest.iter_mut() {
                 let (grad, count) = ws.core_grad_mut();
-                for (a, b) in grad0.iter_mut().zip(grad.iter()) {
-                    *a += *b;
-                }
-                *count0 += *count;
-                grad.fill(0.0);
-                *count = 0;
+                crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
             }
             self.ledger
                 .record_core_allreduce((m * order * r_core * j * 4) as u64);
@@ -342,7 +361,7 @@ fn run_round_threads(
     train: &SparseTensor,
     partition: &BlockPartition,
     assignments: &[Vec<usize>],
-    workspaces: &mut [BatchWorkspace],
+    pools: &mut [DispatchPool],
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
@@ -353,14 +372,14 @@ fn run_round_threads(
     let mut plans = PlanAccum::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for ((g, ws), wrng) in (0..assignments.len())
-            .zip(workspaces.iter_mut())
+        for ((g, pool), wrng) in (0..assignments.len())
+            .zip(pools.iter_mut())
             .zip(rngs.iter_mut())
         {
             let block = partition.block(&assignments[g]);
             let handle = scope.spawn(move || {
                 worker_pass(
-                    shared, core, strided, layout, train, block, ws, wrng, lr_f, h, params,
+                    shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params,
                 )
             });
             handles.push(handle);
@@ -388,7 +407,7 @@ fn run_round_simulated(
     train: &SparseTensor,
     partition: &BlockPartition,
     assignments: &[Vec<usize>],
-    workspaces: &mut [BatchWorkspace],
+    pools: &mut [DispatchPool],
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
@@ -397,14 +416,14 @@ fn run_round_simulated(
     let mut samples = 0usize;
     let mut slowest = 0.0f64;
     let mut plans = PlanAccum::new();
-    for ((g, ws), wrng) in (0..assignments.len())
-        .zip(workspaces.iter_mut())
+    for ((g, pool), wrng) in (0..assignments.len())
+        .zip(pools.iter_mut())
         .zip(rngs.iter_mut())
     {
         let block = partition.block(&assignments[g]);
         let t0 = Instant::now();
         let (count, stats) =
-            worker_pass(shared, core, strided, layout, train, block, ws, wrng, lr_f, h, params);
+            worker_pass(shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params);
         samples += count;
         slowest = slowest.max(t0.elapsed().as_secs_f64());
         if let Some(s) = stats {
@@ -418,7 +437,12 @@ fn run_round_simulated(
 /// nonzeros are grouped into fiber tiles by the engine's planner policy
 /// and dispatched as **one batched kernel call** — the same Theorem-1/2
 /// math as the serial engine, with each fiber's shared mode-0 row staged
-/// once per sub-run.
+/// once per sub-run. With an in-group pool (`threads > 1`) the plan's
+/// split sub-groups fan across the pool's threads: exact mode as the
+/// sub-group coloring's barrier-separated waves (bitwise identical to
+/// sequential dispatch — unless the conflict density makes threading
+/// pointless, in which case the pass falls back to the sequential
+/// executor), relaxed mode as one hogwild wave.
 #[allow(clippy::too_many_arguments)]
 fn worker_pass(
     shared: &SharedFactors,
@@ -427,7 +451,7 @@ fn worker_pass(
     layout: CoreLayout,
     train: &SparseTensor,
     block: &[u32],
-    ws: &mut BatchWorkspace,
+    pool: &mut DispatchPool,
     rng: &mut Rng,
     lr_f: f32,
     h: SgdHyper,
@@ -440,36 +464,41 @@ fn worker_pass(
     // historical per-sample draws), then group them by mode-0 fiber. The
     // full-pass case plans straight over the block slice; planning
     // scratch and the plan's own buffers are reused across rounds via the
-    // worker's workspace (see `PlanScratch::recycle`), so per-pass
-    // planning allocates nothing after warmup.
+    // worker's pool (see `PlanScratch::recycle`), so per-pass planning
+    // allocates nothing after warmup.
     let plan = if h.sample_frac >= 1.0 {
-        BatchPlan::build_params_with_scratch(train, block, params, ws.plan_scratch_mut())
+        BatchPlan::build_params_with_scratch(train, block, params, pool.plan_scratch_mut())
     } else {
         let n_samples = (((block.len() as f64) * h.sample_frac).round() as usize).max(1);
         let ids: Vec<u32> = (0..n_samples)
             .map(|_| block[rng.gen_range(block.len())])
             .collect();
-        BatchPlan::build_params_with_scratch(train, &ids, params, ws.plan_scratch_mut())
+        BatchPlan::build_params_with_scratch(train, &ids, params, pool.plan_scratch_mut())
     };
-    // SAFETY: every id in `ids` lies inside this worker's block; the Latin
-    // schedule gives the worker exclusive ownership of every factor chunk
-    // the block spans for the duration of this round.
-    let mut access = unsafe { SharedRowAccess::new(shared) };
-    let stats = batched::run_plan(
-        ws,
-        train,
-        &plan,
-        core,
-        strided,
-        layout,
-        &mut access,
-        lr_f,
-        h.lambda_factor,
-        h.update_core,
-        None,
-    );
-    let plan_stats = plan.stats();
-    ws.plan_scratch_mut().recycle(plan);
+    let mut plan_stats = plan.stats();
+
+    // SAFETY (level 1 of the two-level disjointness contract, see
+    // `SharedFactors`): every id in the plan lies inside this worker's
+    // block, and the Latin schedule gives the worker exclusive ownership
+    // of every factor chunk the block spans for the duration of this
+    // round. Level 2 (intra-pool) is handled inside `dispatch_plan`
+    // (exact coloring waves / atomic hogwild access).
+    let stats = unsafe {
+        dispatch_plan(
+            pool,
+            train,
+            &plan,
+            core,
+            strided,
+            layout,
+            shared,
+            lr_f,
+            h.lambda_factor,
+            h.update_core,
+            &mut plan_stats,
+        )
+    };
+    pool.plan_scratch_mut().recycle(plan);
     (stats.samples, Some(plan_stats))
 }
 
@@ -653,6 +682,80 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under split");
             }
         }
+    }
+
+    #[test]
+    fn in_group_threading_is_bitwise_neutral_in_exact_mode() {
+        // ISSUE 4 tentpole, worker level: fanning each Latin worker's
+        // split sub-groups across an in-group pool (coloring waves) must
+        // leave the trained model bitwise identical to sequential
+        // dispatch — including the core updates (the tape replay), so we
+        // train multiple epochs. Hollow workload with wide trailing
+        // modes: low conflict density, the pays-off gate engages.
+        let spec = PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.01,
+            clamp: None,
+        };
+        let mut prng = Rng::new(71);
+        let p = planted_tucker(&mut prng, &spec);
+        let run = |threads: usize| {
+            let mut rng = Rng::new(72);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 2;
+            opts.split = 8;
+            opts.threads = crate::kernel::ThreadCount::Fixed(threads);
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(73);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, engine.plan_accum)
+        };
+        let (seq, acc1) = run(1);
+        let (pooled, acc3) = run(3);
+        assert_eq!(acc1.threads, 1);
+        assert_eq!(acc3.threads, 3, "pool never engaged: {acc3:?}");
+        assert!(acc3.waves > 0, "coloring never ran: {acc3:?}");
+        assert!(
+            (acc3.groups as f64) / (acc3.waves as f64) >= 2.0,
+            "waves expose no parallelism: {acc3:?}"
+        );
+        for n in 0..3 {
+            for (a, b) in seq
+                .factors
+                .mat(n)
+                .data()
+                .iter()
+                .zip(pooled.factors.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under pooling");
+            }
+        }
+    }
+
+    #[test]
+    fn overflowing_worker_geometry_surfaces_as_algo_error() {
+        // ISSUE 4 satellite, engine level: a worker count whose M^N
+        // block space overflows must produce a typed error from
+        // train_epoch, not a silent wrap / OOM.
+        let (p, spec) = planted(9);
+        let mut rng = Rng::new(10);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 1 << 22; // (2^22)^3 = 2^66 blocks
+        let mut engine = ParallelFastTucker::new(opts);
+        let err = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap_err();
+        assert!(
+            matches!(err, AlgoError::PartitionOverflow { workers, order }
+                if workers == 1 << 22 && order == 3),
+            "wrong error: {err}"
+        );
     }
 
     #[test]

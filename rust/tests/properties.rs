@@ -4,10 +4,11 @@
 use fasttucker::algo::fasttucker::{build_strided, contract_staged, CoreLayout, Workspace};
 use fasttucker::algo::Decomposer;
 use fasttucker::data::synth;
-use fasttucker::kernel::{batched, scalar, BatchPlan, BatchWorkspace};
+use fasttucker::kernel::{batched, scalar, BatchPlan, BatchWorkspace, DispatchPool, Lanes};
 use fasttucker::kruskal::KruskalCore;
 use fasttucker::model::factors::FactorMatrices;
 use fasttucker::model::{CoreRepr, TuckerModel};
+use fasttucker::parallel::shared::{SharedFactors, SharedRowAccess};
 use fasttucker::parallel::{BlockPartition, LatinSchedule};
 use fasttucker::util::propcheck::forall;
 
@@ -508,6 +509,173 @@ fn prop_split_group_execution_bitwise_matches_unsplit() {
         let budget = rparams.split_budget();
         for g in 0..rplan.n_groups() {
             assert!(rplan.group(g).len() <= budget);
+        }
+    });
+}
+
+#[test]
+fn prop_subgroup_coloring_is_disjoint_ordered_partition() {
+    // ISSUE 4 satellite: the coloring pass is a partition of the plan's
+    // sub-groups whose waves have pairwise-disjoint row footprints — in
+    // the mode-≥1 rows the deferred panel ops write AND the mode-0 rows
+    // the sequential chains own (cap/distinctness cuts can split a fiber
+    // across sub-groups, so mode 0 conflicts are real) — and any two
+    // conflicting sub-groups sit in plan-order-preserving waves.
+    forall("coloring: disjoint ordered partition", 12, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let dims: Vec<usize> = (0..order).map(|_| 4 + rng.gen_range(40)).collect();
+        let nnz = 50 + rng.gen_range(400);
+        let tensor = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+        let n_ids = 1 + rng.gen_range(nnz);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+        let params = fasttucker::kernel::PlanParams::tiled(
+            2 + rng.gen_range(40),
+            1 + rng.gen_range(8),
+        )
+        .with_split(1 + rng.gen_range(6));
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let coloring = plan.color_subgroups(&tensor);
+        assert_eq!(coloring.n_groups(), plan.n_groups());
+
+        let rows = |g: usize| -> std::collections::HashSet<(usize, u32)> {
+            let mut set = std::collections::HashSet::new();
+            for &k in plan.group(g) {
+                for (n, &c) in tensor.index(k as usize).iter().enumerate() {
+                    set.insert((n, c));
+                }
+            }
+            set
+        };
+        let mut wave_of = vec![usize::MAX; plan.n_groups()];
+        for w in 0..coloring.n_waves() {
+            for &g in coloring.wave(w) {
+                assert_eq!(wave_of[g as usize], usize::MAX, "group {g} in two waves");
+                wave_of[g as usize] = w;
+            }
+            // Pairwise disjoint within the wave (all modes).
+            let wave = coloring.wave(w);
+            for i in 0..wave.len() {
+                let fi = rows(wave[i] as usize);
+                for l in i + 1..wave.len() {
+                    assert!(
+                        fi.is_disjoint(&rows(wave[l] as usize)),
+                        "wave {w}: sub-groups {} and {} share a factor row",
+                        wave[i],
+                        wave[l]
+                    );
+                }
+            }
+        }
+        assert!(wave_of.iter().all(|&w| w != usize::MAX), "partition incomplete");
+        // Conflicting pairs preserve plan order across waves.
+        for i in 0..plan.n_groups() {
+            let fi = rows(i);
+            for l in i + 1..plan.n_groups() {
+                if !fi.is_disjoint(&rows(l)) {
+                    assert!(
+                        wave_of[i] < wave_of[l],
+                        "conflicting sub-groups {i} < {l} execute out of order \
+                         (waves {} >= {})",
+                        wave_of[i],
+                        wave_of[l]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_exact_bitwise_matches_sequential() {
+    // ISSUE 4 acceptance: exact-mode in-group threading — any thread
+    // count × lane width × split factor × core layout — is bitwise
+    // identical to sequential sub-group execution: factors, SSE, the
+    // residual stream, and the core-gradient accumulators (the
+    // plan-order tape replay).
+    forall("threaded exact == sequential, bitwise", 10, |rng| {
+        let order = 2 + rng.gen_range(3);
+        let mut dims: Vec<usize> = vec![60 + rng.gen_range(400)];
+        for _ in 1..order {
+            dims.push(10 + rng.gen_range(60));
+        }
+        let j = 1 + rng.gen_range(7);
+        let r = 1 + rng.gen_range(9);
+        let nnz = 300 + rng.gen_range(1200);
+        let tensor = synth::random_uniform(rng, &dims, nnz, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(rng, &dims, j, r);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let layout = if rng.gen_range(2) == 0 {
+            CoreLayout::Packed
+        } else {
+            CoreLayout::Strided
+        };
+        let strided = build_strided(&core);
+        let n_ids = 1 + rng.gen_range(nnz);
+        let ids: Vec<u32> = (0..n_ids).map(|_| rng.gen_range(nnz) as u32).collect();
+        let cap = 2 + rng.gen_range(95);
+        let lanes = match rng.gen_range(3) {
+            0 => Lanes::Auto,
+            1 => Lanes::W4,
+            _ => Lanes::W8,
+        };
+        let params = fasttucker::kernel::PlanParams::tiled(cap, 1 + rng.gen_range(16))
+            .with_lanes(lanes)
+            .with_split(1 + rng.gen_range(cap));
+        let plan = BatchPlan::build_params(&tensor, &ids, params);
+        let coloring = plan.color_subgroups(&tensor);
+        let threads = 2 + rng.gen_range(3); // 2..=4
+        let (lr, lam) = (0.01f32, 0.003f32);
+        let update_core = rng.gen_range(2) == 0;
+
+        let mut f_seq = model.factors.clone();
+        let mut seq_ws = BatchWorkspace::new(order, r, j, cap);
+        let mut log_seq = Vec::new();
+        let st_seq = batched::run_plan(
+            &mut seq_ws, &tensor, &plan, &core, &strided, layout, &mut f_seq, lr, lam,
+            update_core, Some(&mut log_seq),
+        );
+
+        let mut f_pool = model.factors.clone();
+        let mut pool = DispatchPool::new(threads, order, r, j, cap);
+        let mut log_pool = Vec::new();
+        let st_pool = {
+            let shared = SharedFactors::new(&mut f_pool);
+            // SAFETY: exact coloring waves have pairwise-disjoint row
+            // footprints; nothing else touches the factors.
+            pool.execute(
+                &tensor, &plan, &coloring, &core, &strided, layout,
+                || unsafe { SharedRowAccess::new(&shared) },
+                lr, lam, update_core, Some(&mut log_pool),
+            )
+        };
+
+        assert_eq!(st_seq.samples, st_pool.samples);
+        assert_eq!(
+            st_seq.sse.to_bits(),
+            st_pool.sse.to_bits(),
+            "T={threads} {lanes:?} {layout:?}: sse diverged"
+        );
+        assert_eq!(log_seq.len(), log_pool.len());
+        for (i, (a, b)) in log_seq.iter().zip(log_pool.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "residual {i} diverged");
+        }
+        for n in 0..order {
+            for (a, b) in f_seq.mat(n).data().iter().zip(f_pool.mat(n).data().iter()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "T={threads} {lanes:?} {layout:?}: mode {n} factors diverged"
+                );
+            }
+        }
+        let (gs, cs) = seq_ws.core_grad_mut();
+        let (gp, cp) = pool.core_grad_mut();
+        assert_eq!(*cs, *cp);
+        for (a, b) in gs.iter().zip(gp.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged");
         }
     });
 }
