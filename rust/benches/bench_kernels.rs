@@ -305,6 +305,76 @@ fn run_workload(name: &str, dims: Vec<usize>, nnz: usize, reps: usize) -> Worklo
             threads: mt_threads,
         });
     }
+
+    // Device-sharded engine path (ISSUE 5 tentpole): the full parallel
+    // engine on a D=2 grid over 2 Latin workers (split sub-groups pooled
+    // across 2 in-group threads per worker) — one epoch = one full pass
+    // over the same nonzeros, so the speedup is comparable to the kernel
+    // paths while also pinning the device layer's end-to-end overhead
+    // (partition, Latin rounds, boundary-exchange bookkeeping, the
+    // fixed-order core merge).
+    {
+        use fasttucker::kernel::ThreadCount;
+        use fasttucker::parallel::{DeviceCount, Execution, ParallelFastTucker, ParallelOptions};
+        let devices = 2usize;
+        let mut opts = ParallelOptions::default();
+        opts.workers = devices;
+        opts.devices = DeviceCount::Fixed(devices);
+        opts.split = 8;
+        opts.threads = ThreadCount::Fixed(2);
+        opts.execution = Execution::auto();
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut model = TuckerModel {
+            factors: model.factors.clone(),
+            core: CoreRepr::Kruskal(core.clone()),
+        };
+        let mut erng = Rng::new(8);
+        let mut best = f64::INFINITY;
+        engine.train_epoch(&mut model, &tensor, 0, &mut erng).unwrap(); // warmup
+        for rep in 0..reps {
+            let t0 = Instant::now();
+            let st = engine.train_epoch(&mut model, &tensor, rep + 1, &mut erng).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(st.samples);
+        }
+        let acc = engine.plan_accum;
+        println!(
+            "tiled-split-mt-d{devices}: {} devices x {} workers, cap {}, \
+             device occupancy {:.2}, comm {} rows / {} bytes per run",
+            acc.devices,
+            devices,
+            acc.cap,
+            acc.device_occupancy(),
+            acc.comm_rows,
+            acc.comm_bytes
+        );
+        let label = format!("tiled-split-mt-d{devices}");
+        table.row(&[
+            label.clone(),
+            acc.cap.to_string(),
+            acc.tile.to_string(),
+            format!("{:.1}", acc.mean_group_len()),
+            format!("{:.2}", acc.mean_fibers_per_group()),
+            format!("{:.2}", acc.occupancy()),
+            format!("{best:.4}"),
+            format!("{:.2}", nnz as f64 / best / 1e6),
+            format!("{:.2}x", scalar_secs / best),
+        ]);
+        result.paths.push(PathResult {
+            path: label,
+            // The gate key pins the dataset-level planner cap (per-device
+            // decisions coincide with it on these uniform workloads).
+            cap: Some(auto.max_batch),
+            tile: Some(acc.tile),
+            mean_group_len: acc.mean_group_len(),
+            mean_fibers_per_group: acc.mean_fibers_per_group(),
+            occupancy: acc.occupancy(),
+            secs_per_pass: best,
+            msamples_per_sec: nnz as f64 / best / 1e6,
+            speedup_vs_scalar: scalar_secs / best,
+            threads: 2,
+        });
+    }
     table.print();
     result
 }

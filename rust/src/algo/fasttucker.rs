@@ -29,7 +29,9 @@ use crate::kernel::{
     apply_core_grad_raw, planner, scalar, BatchPlan, BatchSizing, DispatchPool, Exactness,
     Lanes, PlanParams, ThreadCount,
 };
+use crate::log_warn;
 use crate::parallel::shared::{dispatch_plan, SharedFactors};
+use crate::parallel::DeviceCount;
 // Re-exported for compatibility: the contraction primitives historically
 // lived in this module and are widely imported from here.
 pub use crate::kernel::contract::{
@@ -74,6 +76,15 @@ pub struct FastTuckerConfig {
     /// one hogwild wave. `Auto` = `FASTTUCKER_POOL_THREADS` or
     /// sequential. Ignored on the scalar path.
     pub threads: ThreadCount,
+    /// Device-shard grid width (ISSUE 5; config-surface parity with the
+    /// parallel engine, which owns the real
+    /// [`DeviceGrid`](crate::parallel::DeviceGrid) implementation). The
+    /// serial engine
+    /// IS a single device: `Auto` resolves to 1 here, and a fixed
+    /// `N > 1` is a degenerate request that degrades loudly — one
+    /// warning plus [`PlanStats::degraded`] — instead of erroring, so a
+    /// shared TOML can flip `engine` without re-editing `devices`.
+    pub devices: DeviceCount,
 }
 
 impl Default for FastTuckerConfig {
@@ -86,6 +97,7 @@ impl Default for FastTuckerConfig {
             lanes: Lanes::Auto,
             split: 1,
             threads: ThreadCount::Auto,
+            devices: DeviceCount::Auto,
         }
     }
 }
@@ -109,6 +121,8 @@ pub struct FastTucker {
     )>,
     /// Plan of the most recent batched epoch (observability).
     last_plan_stats: Option<PlanStats>,
+    /// One-shot guard for the degenerate `devices > 1` warning.
+    warned_devices: bool,
 }
 
 impl FastTucker {
@@ -120,6 +134,27 @@ impl FastTucker {
             strided: Vec::new(),
             auto_cache: None,
             last_plan_stats: None,
+            warned_devices: false,
+        }
+    }
+
+    /// The serial engine is one device: a fixed multi-device request is
+    /// degenerate here — warn once and report it through
+    /// [`PlanStats::degraded`] (ISSUE 5 degenerate-grid satellite).
+    fn devices_degraded(&mut self) -> bool {
+        match self.config.devices {
+            DeviceCount::Fixed(d) if d > 1 => {
+                if !self.warned_devices {
+                    log_warn!(
+                        "devices = {d} on the serial engine is degenerate (one device): \
+                         use engine = \"parallel\" for a real device grid \
+                         (recorded in PlanStats::degraded)"
+                    );
+                    self.warned_devices = true;
+                }
+                true
+            }
+            _ => false,
         }
     }
 
@@ -268,6 +303,7 @@ impl Decomposer for FastTucker {
         };
 
         let t0 = Instant::now();
+        let devices_degraded = self.devices_degraded();
         let use_batched = params.is_some();
         let stats = {
             let core = match &model.core {
@@ -279,6 +315,7 @@ impl Decomposer for FastTucker {
                 let plan =
                     BatchPlan::build_params_with_scratch(train, &ids, p, pool.plan_scratch_mut());
                 let mut plan_stats = plan.stats();
+                plan_stats.degraded |= devices_degraded;
                 let shared = SharedFactors::new(&mut model.factors);
                 // SAFETY (level 1, see `SharedFactors`): this engine
                 // holds the only live reference to the factors for the
@@ -623,6 +660,29 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "core mode {n} diverged (tape replay)");
             }
         }
+    }
+
+    #[test]
+    fn serial_engine_degrades_fixed_multi_device_requests_loudly() {
+        // ISSUE 5 satellite: the serial engine is one device — a fixed
+        // devices > 1 must train normally but surface the degenerate
+        // request through PlanStats::degraded (Auto stays clean).
+        let (p, spec) = planted(21, 3);
+        let run = |devices: DeviceCount| {
+            let mut rng = Rng::new(22);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut algo = FastTucker::new(FastTuckerConfig {
+                batch: crate::kernel::BatchSizing::Auto,
+                devices,
+                ..Default::default()
+            });
+            algo.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+            algo.last_plan_stats().unwrap()
+        };
+        assert!(run(DeviceCount::Fixed(4)).degraded);
+        assert!(!run(DeviceCount::Fixed(1)).degraded);
+        assert!(!run(DeviceCount::Auto).degraded);
     }
 
     #[test]

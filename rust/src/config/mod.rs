@@ -9,6 +9,7 @@ use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
 use crate::kernel::{BatchSizing, Exactness, Lanes, ThreadCount};
+use crate::parallel::DeviceCount;
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -107,6 +108,13 @@ pub struct TrainConfig {
     /// coloring's waves and is bitwise-neutral; relaxed-mode pooling is
     /// the hogwild opt-in. Needs a batched kernel when > 1.
     pub threads: ThreadCount,
+    /// Device-shard grid width for the parallel engine. TOML:
+    /// `devices = "auto"` (the `FASTTUCKER_DEVICES` env override, else
+    /// one device per worker) or `devices = N` (≥ 1, clamped loudly to
+    /// `workers`). Exact-mode sharding is bitwise-neutral at every `D`;
+    /// the native (serial) engine is a single device — a fixed `N > 1`
+    /// there degrades loudly instead of erroring.
+    pub devices: DeviceCount,
 }
 
 impl Default for TrainConfig {
@@ -132,6 +140,7 @@ impl Default for TrainConfig {
             lanes: Lanes::Auto,
             split: 1,
             threads: ThreadCount::Auto,
+            devices: DeviceCount::Auto,
         }
     }
 }
@@ -164,6 +173,7 @@ impl TrainConfig {
     /// lanes = "auto"        # or 4 / 8 (panel-microkernel lane width)
     /// split = 1             # split-group factor (>= 1)
     /// threads = "auto"      # or N >= 1 (in-group thread pool width)
+    /// devices = "auto"      # or N >= 1 (device-shard grid width)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -234,6 +244,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("", "threads") {
             cfg.threads = parse_threads(v)?;
+        }
+        if let Some(v) = doc.get("", "devices") {
+            cfg.devices = parse_devices(v)?;
         }
 
         let mut h = SgdHyper::default();
@@ -316,6 +329,9 @@ impl TrainConfig {
                 }
             }
         }
+        if self.devices == DeviceCount::Fixed(0) {
+            bail!("devices must be >= 1 or \"auto\"");
+        }
         if !(0.0..1.0).contains(&self.test_frac) {
             bail!("test_frac must be in [0, 1)");
         }
@@ -359,6 +375,20 @@ fn parse_threads(v: &TomlValue) -> Result<ThreadCount> {
     };
     ThreadCount::parse(&spelled).ok_or_else(|| {
         anyhow!("unknown threads {spelled:?} (expected \"auto\" or an integer >= 1)")
+    })
+}
+
+fn parse_devices(v: &TomlValue) -> Result<DeviceCount> {
+    let spelled = match v {
+        TomlValue::Str(s) => s.clone(),
+        TomlValue::Int(i) => i.to_string(),
+        other => bail!(
+            "devices must be \"auto\" or an integer >= 1, got {} {other:?}",
+            other.type_name()
+        ),
+    };
+    DeviceCount::parse(&spelled).ok_or_else(|| {
+        anyhow!("unknown devices {spelled:?} (expected \"auto\" or an integer >= 1)")
     })
 }
 
@@ -441,6 +471,27 @@ mod tests {
         assert!(TrainConfig::from_toml_str("batch = 0\nthreads = 1").is_ok());
         assert!(TrainConfig::from_toml_str("batch = 0\nthreads = \"auto\"").is_ok());
         assert!(TrainConfig::from_toml_str("batch = \"auto\"\nthreads = 2").is_ok());
+    }
+
+    #[test]
+    fn parses_devices() {
+        let cfg = TrainConfig::from_toml_str("devices = \"auto\"\n").unwrap();
+        assert_eq!(cfg.devices, DeviceCount::Auto);
+        let cfg = TrainConfig::from_toml_str("devices = 3\n").unwrap();
+        assert_eq!(cfg.devices, DeviceCount::Fixed(3));
+        let cfg = TrainConfig::from_toml_str("devices = 1\n").unwrap();
+        assert_eq!(cfg.devices, DeviceCount::Fixed(1));
+
+        assert!(TrainConfig::from_toml_str("devices = 0").is_err());
+        assert!(TrainConfig::from_toml_str("devices = \"many\"").is_err());
+        assert!(TrainConfig::from_toml_str("devices = true").is_err());
+        // devices > workers is NOT a config error: the grid clamps loudly
+        // at runtime (degenerate-grid satellite), so experiments with a
+        // fixed device count survive a worker override.
+        assert!(
+            TrainConfig::from_toml_str("engine = \"parallel\"\nworkers = 2\ndevices = 4")
+                .is_ok()
+        );
     }
 
     #[test]

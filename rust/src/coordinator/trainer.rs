@@ -102,6 +102,7 @@ impl Trainer {
                             lanes: cfg.lanes,
                             split: cfg.split,
                             threads: cfg.threads,
+                            devices: cfg.devices,
                             ..Default::default()
                         };
                         Box::new(FastTucker::new(fc))
@@ -125,6 +126,7 @@ impl Trainer {
                     lanes: cfg.lanes,
                     split: cfg.split,
                     threads: cfg.threads,
+                    devices: cfg.devices,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))

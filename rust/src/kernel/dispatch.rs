@@ -277,7 +277,7 @@ impl DispatchPool {
     /// use concurrently under the coloring's disjointness guarantee
     /// (exact waves) or the hogwild opt-in (relaxed single wave) — see
     /// [`SharedFactors`](crate::parallel::shared::SharedFactors) for the
-    /// two-level contract.
+    /// three-level contract.
     ///
     /// Exact-mode result contract: bitwise identical to
     /// [`batched::run_plan`] over the same plan — factors, residual log,

@@ -25,6 +25,14 @@
 //! | [`panel`]    | SIMD-shaped panel microkernels ([`Lanes`] 4/8 row blocks over `R_core`, scalar tails) the batched executor's deferred c/GS steps run on |
 //! | [`dispatch`] | In-group thread pool ([`DispatchPool`]): fans a plan's split sub-groups across T threads as barrier-separated coloring waves (exact: bitwise-identical to sequential via the plan-order tape; relaxed: one hogwild wave) |
 //!
+//! Above this layer sits the parallel engine's **three-level
+//! disjointness** stack — device grid × Latin schedule × color waves
+//! ([`crate::parallel::DeviceGrid`] shards workers/nonzeros/rows across
+//! devices; see [`crate::parallel::shared`] for the full contract): each
+//! level only refines the one below, so exact-mode execution stays
+//! bitwise-identical from a single scalar pass all the way to a
+//! multi-device, multi-worker, multi-thread run.
+//!
 //! Two execution strategies share that math bit-for-bit:
 //!
 //! * [`scalar`] — one nonzero at a time, in stream order. This is the

@@ -438,6 +438,7 @@ impl BatchPlan {
             splits: self.splits,
             threads: 1,
             waves: 0,
+            device: 0,
             degraded: self.params.degraded,
         }
     }

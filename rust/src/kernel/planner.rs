@@ -124,23 +124,47 @@ impl FiberStats {
         Self::from_counts(ids.len(), &mut counts)
     }
 
-    /// Stats over the whole tensor, scaled down to a workload of
-    /// `ids_hint` samples (what a uniform sample of that size would see:
-    /// lengths shrink proportionally, the fiber support does not grow).
-    pub fn compute_full(tensor: &SparseTensor, ids_hint: usize) -> FiberStats {
+    /// Per-mode-0-row nonzero counts of the whole tensor — the shared
+    /// counting pass behind [`Self::compute_full`] and the device-shard
+    /// layer's per-device decisions (which slice this by shard range).
+    pub fn mode0_counts(tensor: &SparseTensor) -> Vec<u32> {
         let mut counts = vec![0u32; tensor.dims()[0]];
         for k in 0..tensor.nnz() {
             counts[tensor.index(k)[0] as usize] += 1;
         }
-        let mut stats = Self::from_counts(tensor.nnz(), &mut counts);
-        if ids_hint < stats.n_ids && stats.n_ids > 0 {
-            let frac = ids_hint as f64 / stats.n_ids as f64;
-            stats.mean_len = (stats.mean_len * frac).max(1.0);
-            stats.p90_len = ((stats.p90_len as f64 * frac).round() as usize).max(1);
-            stats.max_len = ((stats.max_len as f64 * frac).round() as usize).max(1);
-            stats.n_ids = ids_hint;
+        counts
+    }
+
+    /// Stats over the whole tensor, scaled down to a workload of
+    /// `ids_hint` samples (see [`Self::scaled_to`]).
+    pub fn compute_full(tensor: &SparseTensor, ids_hint: usize) -> FiberStats {
+        let mut counts = Self::mode0_counts(tensor);
+        Self::from_mode0_counts(&mut counts).scaled_to(ids_hint)
+    }
+
+    /// Stats of a workload given its per-mode-0-row nonzero counts
+    /// (`counts` is scratch: sorted in place). The device-shard layer
+    /// uses this to derive **per-device** planner decisions from one
+    /// global counting pass — a device's shard is a contiguous mode-0 row
+    /// range, so its stats are the stats of that slice of the counts.
+    pub fn from_mode0_counts(counts: &mut [u32]) -> FiberStats {
+        let n_ids = counts.iter().map(|&c| c as usize).sum();
+        Self::from_counts(n_ids, counts)
+    }
+
+    /// Scale these stats down to a workload of `ids_hint` samples — what
+    /// a uniform sample of that size would see: lengths shrink
+    /// proportionally, the fiber support does not grow. A hint at or
+    /// above the population size is a no-op.
+    pub fn scaled_to(mut self, ids_hint: usize) -> FiberStats {
+        if ids_hint < self.n_ids && self.n_ids > 0 {
+            let frac = ids_hint as f64 / self.n_ids as f64;
+            self.mean_len = (self.mean_len * frac).max(1.0);
+            self.p90_len = ((self.p90_len as f64 * frac).round() as usize).max(1);
+            self.max_len = ((self.max_len as f64 * frac).round() as usize).max(1);
+            self.n_ids = ids_hint;
         }
-        stats
+        self
     }
 
     fn from_counts(n_ids: usize, counts: &mut [u32]) -> FiberStats {
@@ -308,6 +332,39 @@ mod tests {
         assert!((s.mean_len - 100.0).abs() < 1e-12);
         assert_eq!(s.max_len, 100);
         assert_eq!(s.p90_len, 100);
+    }
+
+    #[test]
+    fn mode0_count_slices_give_per_shard_stats() {
+        // The device-shard path: stats of a contiguous mode-0 row range
+        // computed from a slice of the global counts must equal stats
+        // computed from that shard's explicit id set.
+        let fibers: Vec<u32> =
+            (0..60u32).flat_map(|f| std::iter::repeat(f).take((f as usize % 5) + 1)).collect();
+        let t = tensor_with_fibers(&fibers, 60);
+        let mut counts = vec![0u32; 60];
+        for k in 0..t.nnz() {
+            counts[t.index(k)[0] as usize] += 1;
+        }
+        for (lo, hi) in [(0usize, 30usize), (30, 60), (0, 60), (10, 11)] {
+            let mut slice = counts[lo..hi].to_vec();
+            let from_counts = FiberStats::from_mode0_counts(&mut slice);
+            let ids: Vec<u32> = (0..t.nnz() as u32)
+                .filter(|&k| {
+                    let f = t.index(k as usize)[0] as usize;
+                    (lo..hi).contains(&f)
+                })
+                .collect();
+            let from_ids = FiberStats::compute(&t, &ids);
+            assert_eq!(from_counts, from_ids, "shard [{lo}, {hi})");
+        }
+        // scaled_to matches the historical compute_full scaling and is a
+        // no-op at or above the population size.
+        let full = FiberStats::compute_full(&t, t.nnz());
+        assert_eq!(full.scaled_to(t.nnz() * 2), full);
+        let half = FiberStats::compute_full(&t, t.nnz() / 2);
+        assert_eq!(full.scaled_to(t.nnz() / 2), half);
+        assert_eq!(half.n_ids, t.nnz() / 2);
     }
 
     #[test]

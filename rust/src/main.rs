@@ -6,7 +6,7 @@
 //!                   [--epochs N] [--workers M] [--seed S] [--scale F]
 //!                   [--batch auto|N] [--exactness exact|relaxed]
 //!                   [--lanes auto|4|8] [--split N] [--threads auto|N]
-//!                   [--checkpoint OUT.ftck]
+//!                   [--devices auto|D] [--checkpoint OUT.ftck]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
 //! fasttucker partition-plan --workers M --order N
@@ -60,6 +60,7 @@ USAGE:
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
                     [--batch auto|N] [--exactness exact|relaxed]
                     [--lanes auto|4|8] [--split N] [--threads auto|N]
+                    [--devices auto|D]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -126,6 +127,10 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("threads") {
         cfg.threads = fasttucker::kernel::ThreadCount::parse(v)
             .ok_or_else(|| anyhow!("--threads expects auto or an integer >= 1, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("devices") {
+        cfg.devices = fasttucker::parallel::DeviceCount::parse(v)
+            .ok_or_else(|| anyhow!("--devices expects auto or an integer >= 1, got {v:?}"))?;
     }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;

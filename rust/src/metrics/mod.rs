@@ -132,9 +132,15 @@ pub struct PlanStats {
     /// dispatch: 1). Stays 0 on any sequential execution — including an
     /// exact pass whose coloring the conflict-density gate rejected.
     pub waves: usize,
+    /// Device that executed the pass under a device grid
+    /// ([`DeviceGrid`](crate::parallel::DeviceGrid); 0 on single-device
+    /// and serial paths).
+    pub device: usize,
     /// Planner degrade marker: requested relaxed/split semantics could
     /// not engage on a degenerate workload (see
-    /// [`choose_params`](crate::kernel::planner::choose_params)).
+    /// [`choose_params`](crate::kernel::planner::choose_params)), or the
+    /// pass ran on a degenerate device grid (clamped device count, empty
+    /// shard, grid wider than the shortest mode).
     pub degraded: bool,
 }
 
@@ -200,8 +206,30 @@ pub struct PlanAccum {
     /// Coloring waves summed over pooled plans (with `groups`, gives the
     /// mean wave occupancy of the epoch).
     pub waves: u64,
-    /// Plans whose relaxed/split request was planner-degraded.
+    /// Plans whose relaxed/split request was planner-degraded, or that
+    /// ran on a degenerate device grid.
     pub degraded: u64,
+    /// Widest device grid observed executing plans (0 = nothing ran):
+    /// the max of the configured grid widths recorded per epoch and the
+    /// per-pass device attributions ([`PlanStats::device`] + 1).
+    pub devices: usize,
+    /// Busiest device's samples, summed per epoch (see
+    /// [`Self::device_occupancy`]); recorded by
+    /// [`Self::record_device_epoch`].
+    pub device_samples_max: u64,
+    /// Mean samples per device, summed per epoch (`epoch samples /
+    /// epoch grid width`) — the occupancy numerator, kept separately
+    /// from `samples` so [`Self::device_occupancy`] stays coherent when
+    /// accumulators from different grid widths merge.
+    pub device_samples_mean: f64,
+    /// Factor rows shipped **across devices** by the boundary-row
+    /// exchange (intra-device chunk handovers are free — this is the new
+    /// inter-device counter, distinct from the per-worker
+    /// [`CommLedger`]).
+    pub comm_rows: u64,
+    /// Bytes of inter-device traffic: boundary factor rows plus the
+    /// per-epoch Eq. 17 core-gradient panels shipped to the root device.
+    pub comm_bytes: u64,
 }
 
 impl PlanAccum {
@@ -222,6 +250,10 @@ impl PlanAccum {
         self.threads = self.threads.max(s.threads);
         self.waves += s.waves as u64;
         self.degraded += s.degraded as u64;
+        // Widest executing device id seen on a pass (the engine's
+        // per-epoch `record_device_epoch` carries the configured width;
+        // this keeps the per-pass attribution observable too).
+        self.devices = self.devices.max(s.device + 1);
     }
 
     pub fn merge(&mut self, other: &PlanAccum) {
@@ -237,6 +269,32 @@ impl PlanAccum {
         self.threads = self.threads.max(other.threads);
         self.waves += other.waves;
         self.degraded += other.degraded;
+        self.devices = self.devices.max(other.devices);
+        self.device_samples_max += other.device_samples_max;
+        self.device_samples_mean += other.device_samples_mean;
+        self.comm_rows += other.comm_rows;
+        self.comm_bytes += other.comm_bytes;
+    }
+
+    /// Record one device-grid epoch: the grid width, the epoch's total
+    /// samples, and the busiest device's sample count (the per-device
+    /// occupancy numerator/denominator pair).
+    pub fn record_device_epoch(
+        &mut self,
+        devices: usize,
+        epoch_samples: u64,
+        max_device_samples: u64,
+    ) {
+        self.devices = self.devices.max(devices);
+        self.device_samples_mean += epoch_samples as f64 / devices.max(1) as f64;
+        self.device_samples_max += max_device_samples;
+    }
+
+    /// Record inter-device communication (boundary factor rows and/or
+    /// core-gradient panel bytes).
+    pub fn record_comm(&mut self, rows: u64, bytes: u64) {
+        self.comm_rows += rows;
+        self.comm_bytes += bytes;
     }
 
     pub fn mean_group_len(&self) -> f64 {
@@ -260,6 +318,20 @@ impl PlanAccum {
             0.0
         } else {
             self.samples as f64 / (self.groups as usize * self.cap) as f64
+        }
+    }
+
+    /// Per-device load balance: mean samples per device over the busiest
+    /// device's samples (both summed per epoch), in (0, 1] — 1.0 means a
+    /// perfectly balanced shard assignment (the paper's
+    /// near-linear-scaling precondition), 0.0 means no device grid ran.
+    /// Coherent under [`Self::merge`] even across different grid widths
+    /// (each epoch contributes its own mean/width ratio).
+    pub fn device_occupancy(&self) -> f64 {
+        if self.device_samples_max == 0 {
+            0.0
+        } else {
+            self.device_samples_mean / self.device_samples_max as f64
         }
     }
 }
@@ -348,6 +420,7 @@ mod tests {
             splits: 3,
             threads: 2,
             waves: 5,
+            device: 1,
             degraded: true,
         };
         assert!((s.mean_group_len() - 12.0).abs() < 1e-12);
@@ -379,6 +452,43 @@ mod tests {
         assert_eq!(acc2.waves, 10);
         assert_eq!(acc2.threads, 2);
         assert_eq!(acc2.degraded, 2);
+    }
+
+    #[test]
+    fn device_epoch_and_comm_accounting() {
+        let mut acc = PlanAccum::new();
+        assert_eq!(acc.device_occupancy(), 0.0);
+        // Two epochs on a 2-device grid: 120 samples each, busiest
+        // device 80 then 60 -> occupancy = (60 + 60)/(80 + 60).
+        acc.record_device_epoch(2, 120, 80);
+        acc.record_device_epoch(2, 120, 60);
+        acc.record_comm(50, 800);
+        acc.record_comm(0, 256);
+        assert_eq!(acc.devices, 2);
+        assert_eq!(acc.device_samples_max, 140);
+        assert_eq!(acc.comm_rows, 50);
+        assert_eq!(acc.comm_bytes, 1056);
+        assert!((acc.device_occupancy() - 120.0 / 140.0).abs() < 1e-12);
+        // Perfect balance reaches 1.0.
+        let mut even = PlanAccum::new();
+        even.record_device_epoch(4, 100, 25);
+        assert!((even.device_occupancy() - 1.0).abs() < 1e-12);
+        // merge() carries the counters, and the merged occupancy stays
+        // coherent across different grid widths (each epoch contributes
+        // its own mean/width ratio): (120 + 25)/(140 + 25).
+        let mut merged = PlanAccum::new();
+        merged.merge(&acc);
+        merged.merge(&even);
+        assert_eq!(merged.devices, 4);
+        assert_eq!(merged.device_samples_max, 165);
+        assert_eq!(merged.comm_rows, 50);
+        assert_eq!(merged.comm_bytes, 1056);
+        assert!((merged.device_occupancy() - 145.0 / 165.0).abs() < 1e-12);
+        let (lo, hi) = (
+            acc.device_occupancy().min(even.device_occupancy()),
+            acc.device_occupancy().max(even.device_occupancy()),
+        );
+        assert!(merged.device_occupancy() >= lo && merged.device_occupancy() <= hi);
     }
 
     #[test]

@@ -12,12 +12,21 @@
 //! data is shared memory), which preserves exactly what the paper's
 //! experiments measure: the conflict-freedom of the schedule, the
 //! per-round load balance, and the scaling curve shape.
+//!
+//! The [`device`] layer (ISSUE 5) makes the device notion explicit: a
+//! [`DeviceGrid`] shards the `M` Latin workers (and with them the
+//! training nonzeros and mode-row ownership) across `D ≤ M` virtual
+//! devices, each with its own planner decision and dispatch pools, with
+//! a per-round boundary-row exchange and a fixed-order Eq. 17 core-
+//! gradient merge — exact mode is bitwise-identical at every `D`.
 
+pub mod device;
 pub mod partition;
 pub mod schedule;
 pub mod shared;
 pub mod worker;
 
+pub use device::{DeviceCount, DeviceGrid};
 pub use partition::BlockPartition;
 pub use schedule::LatinSchedule;
 pub use worker::{Execution, ParallelFastTucker, ParallelOptions};

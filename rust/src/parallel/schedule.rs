@@ -71,6 +71,28 @@ impl LatinSchedule {
         (0..self.m).map(|g| self.assignment(round, g)).collect()
     }
 
+    /// The worker processing chunk `chunk` of `mode` in `round` — the
+    /// inverse of [`Self::assignment`]. The device-shard layer uses it to
+    /// find the *source* of a chunk handover: an exchange is inter-device
+    /// traffic only when the previous owner lives on a different device
+    /// ([`DeviceGrid`](super::DeviceGrid)).
+    pub fn owner_of(&self, round: usize, mode: usize, chunk: usize) -> usize {
+        assert!(mode < self.order && chunk < self.m && round < self.rounds());
+        if mode == 0 {
+            // Mode 0 is worker-pinned: chunk g belongs to worker g.
+            return chunk;
+        }
+        // assignment(round, g)[mode] = (g + d_mode) % m with d_mode the
+        // mode-th base-m digit of `round`; invert for g.
+        let mut t = round;
+        let mut d = 0usize;
+        for _ in 0..mode {
+            d = t % self.m;
+            t /= self.m;
+        }
+        (chunk + self.m - d) % self.m
+    }
+
     /// The factor chunks worker `g` must receive before `round` that it
     /// did not own in `round - 1` — the paper's parameter-exchange set.
     /// Returns `(mode, chunk)` pairs; empty for round 0 (initial broadcast
@@ -154,6 +176,27 @@ mod tests {
                 assert!(incoming.iter().all(|(n, _)| *n != 0));
             }
         }
+    }
+
+    #[test]
+    fn owner_of_inverts_assignment() {
+        forall("owner_of == assignment⁻¹", 16, |rng| {
+            let m = 1 + rng.gen_range(5);
+            let order = 2 + rng.gen_range(4);
+            let s = LatinSchedule::new(m, order);
+            for round in 0..s.rounds() {
+                let assigns = s.round_assignments(round);
+                for mode in 0..order {
+                    for chunk in 0..m {
+                        let owner = s.owner_of(round, mode, chunk);
+                        assert_eq!(
+                            assigns[owner][mode], chunk,
+                            "round {round} mode {mode} chunk {chunk}"
+                        );
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -1,12 +1,24 @@
 //! Unsafe-but-proven shared factor storage for the multi-device engine.
 //!
-//! # The two-level disjointness contract
+//! # The three-level disjointness contract
 //!
-//! Concurrent row access through [`SharedFactors`] is sound because two
+//! Concurrent row access through [`SharedFactors`] is sound because
 //! nested partitions guarantee writers never collide — the CPU analogue
-//! of the paper's two nested levels of parallelism (inter-GPU Latin
-//! rounds × intra-GPU thread blocks):
+//! of the paper's nested levels of parallelism (device grid × inter-GPU
+//! Latin rounds × intra-GPU thread blocks):
 //!
+//! 0. **Device grid (across devices):** the
+//!    [`DeviceGrid`](super::DeviceGrid) groups the Latin workers onto
+//!    `D` devices as contiguous ranges. It is a *coarsening* of the
+//!    Latin level — two devices' row footprints in a round are unions of
+//!    their workers' pairwise-disjoint footprints — so it introduces no
+//!    new aliasing and only decides which device is accounted for each
+//!    pass, which boundary rows the communication step counts, and the
+//!    order of the per-epoch Eq. 17 core-gradient merge (flat worker-
+//!    order fold in exact mode — the bitwise-at-every-`D` contract,
+//!    pinned by
+//!    `tests/properties.rs::prop_sharded_exact_bitwise_matches_single_device`
+//!    — or the relaxed two-stage device tree).
 //! 1. **Latin schedule (across workers):** within one scheduling round,
 //!    [`LatinSchedule`](super::LatinSchedule) guarantees the workers'
 //!    blocks are pairwise disjoint in every mode's chunk index, so the
@@ -46,7 +58,7 @@ use crate::model::factors::FactorMatrices;
 use crate::tensor::SparseTensor;
 
 /// A `Sync` view over factor matrices allowing per-row mutable access from
-/// multiple threads, provided callers honor the two-level disjointness
+/// multiple threads, provided callers honor the three-level disjointness
 /// contract above.
 pub struct SharedFactors {
     ptrs: Vec<*mut f32>,

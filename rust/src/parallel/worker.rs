@@ -18,10 +18,12 @@ use std::time::Instant;
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
 use crate::kernel::{
     apply_core_grad_raw, build_strided, planner, BatchPlan, BatchSizing, CoreLayout,
-    DispatchPool, Exactness, Lanes, PlanParams, ThreadCount,
+    DispatchPool, Exactness, FiberStats, Lanes, PlanParams, ThreadCount,
 };
+use crate::log_warn;
 use crate::metrics::{CommLedger, PlanAccum, PlanStats};
 use crate::model::{CoreRepr, TuckerModel};
+use crate::parallel::device::{DeviceCount, DeviceGrid};
 use crate::parallel::shared::{dispatch_plan, SharedFactors};
 use crate::parallel::{BlockPartition, LatinSchedule};
 use crate::tensor::SparseTensor;
@@ -90,6 +92,18 @@ pub struct ParallelOptions {
     /// `Auto` = `FASTTUCKER_POOL_THREADS` or sequential (see
     /// [`planner::resolve_threads`]).
     pub threads: ThreadCount,
+    /// Device-shard grid width (ISSUE 5 tentpole): the `workers` Latin
+    /// workers — and with them the training nonzeros and mode-row
+    /// ownership — are grouped onto this many virtual devices
+    /// ([`DeviceGrid`]), each with its own planner decision and dispatch
+    /// pools, a per-round boundary-row exchange, and a fixed-device-order
+    /// Eq. 17 core-gradient merge. **Exact mode is bitwise-identical at
+    /// every `D`** (the grid only re-labels which device is accounted
+    /// for each row-disjoint worker pass); relaxed mode additionally
+    /// switches the core merge to the two-stage device tree, inside the
+    /// relaxed accuracy envelope. `Auto` = `FASTTUCKER_DEVICES` or one
+    /// device per worker (the historical semantics).
+    pub devices: DeviceCount,
 }
 
 impl Default for ParallelOptions {
@@ -104,6 +118,7 @@ impl Default for ParallelOptions {
             lanes: Lanes::Auto,
             split: 1,
             threads: ThreadCount::Auto,
+            devices: DeviceCount::Auto,
         }
     }
 }
@@ -112,21 +127,41 @@ impl Default for ParallelOptions {
 pub struct ParallelFastTucker {
     pub opts: ParallelOptions,
     partition: Option<BlockPartition>,
-    partition_for: Option<(usize, usize, usize)>, // (nnz, order, m)
+    /// `(nnz, dims, workers, devices)` — dims included so a same-sized
+    /// tensor with a different shape rebuilds the partition AND the grid
+    /// (a stale grid's `owned_rows` would mis-slice the per-device
+    /// stats, or panic on a shrunken mode 0).
+    partition_for: Option<(usize, Vec<usize>, usize, DeviceCount)>,
+    /// The device-shard grid the workers are grouped onto (rebuilt with
+    /// the partition; `D = 1 ..= workers`).
+    grid: Option<DeviceGrid>,
+    /// Degenerate-grid marker (clamped device count, grid wider than the
+    /// shortest mode, or an empty device shard) — surfaced on every
+    /// worker pass through [`PlanStats::degraded`].
+    grid_degraded: bool,
     /// One in-group [`DispatchPool`] per Latin worker (T = 1 degenerates
-    /// to the plain per-worker workspace of earlier PRs).
+    /// to the plain per-worker workspace of earlier PRs), sized by its
+    /// device's planner decision.
     pools: Vec<DispatchPool>,
-    /// Planner decision for the current dataset (one policy shared by
-    /// every worker, resolved in `ensure_state`).
-    plan_params: PlanParams,
-    /// Fingerprint the decision was made for: `(nnz, sample count,
-    /// order, r_core, j, sizing, exactness, lanes, split)` — every input
-    /// the cost model reads, so the O(nnz) fiber-stats scan runs once
-    /// per dataset/config, not once per epoch.
+    /// Planner decisions for the current dataset, one per device — each
+    /// device sizes cap/tile from its own shard's fiber statistics
+    /// (resolved in `ensure_state`; indexed by device id).
+    device_params: Vec<PlanParams>,
+    /// Per-mode-0-row nonzero counts of the current training tensor
+    /// (rebuilt with the partition): one shared O(nnz) counting pass
+    /// serves the empty-shard degrade check and every device's planner
+    /// stats (each shard is a contiguous slice of it).
+    mode0_counts: Vec<u32>,
+    /// Fingerprint the decisions were made for: `(nnz, dims, sample
+    /// count, r_core, j, sizing, exactness, lanes, split, workers,
+    /// devices)` — every input the cost model reads (dims + workers +
+    /// devices pin the shard geometry `owned_rows` slices by), so the
+    /// per-device resolution runs once per dataset/config, not once per
+    /// epoch.
     #[allow(clippy::type_complexity)]
-    plan_params_for: Option<(
+    device_params_for: Option<(
         usize,
-        usize,
+        Vec<usize>,
         usize,
         usize,
         usize,
@@ -134,11 +169,13 @@ pub struct ParallelFastTucker {
         Exactness,
         Lanes,
         usize,
+        usize,
+        usize,
     )>,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
     /// Plan observability accumulated across epochs (one record per
-    /// worker pass).
+    /// worker pass; device occupancy and inter-device comm per epoch).
     pub plan_accum: PlanAccum,
 }
 
@@ -149,9 +186,12 @@ impl ParallelFastTucker {
             opts,
             partition: None,
             partition_for: None,
+            grid: None,
+            grid_degraded: false,
             pools: Vec::new(),
-            plan_params: PlanParams::exact(1),
-            plan_params_for: None,
+            mode0_counts: Vec::new(),
+            device_params: Vec::new(),
+            device_params_for: None,
             ledger: CommLedger::new(),
             plan_accum: PlanAccum::new(),
         }
@@ -164,65 +204,129 @@ impl ParallelFastTucker {
         r_core: usize,
         j: usize,
     ) -> AlgoResult<()> {
-        let fp = (train.nnz(), train.order(), self.opts.workers);
-        if self.partition_for != Some(fp) {
+        let fp = (train.nnz(), train.dims().to_vec(), self.opts.workers, self.opts.devices);
+        if self.partition_for.as_ref() != Some(&fp) {
             // Checked build: an overflowing M^N block space surfaces as a
-            // typed error before any allocation (ISSUE 4 satellite).
+            // typed error before any allocation (ISSUE 4 satellite; the
+            // grid constructor carries the same guard).
             self.partition = Some(BlockPartition::try_build(train, self.opts.workers)?);
+            let grid = DeviceGrid::try_new(self.opts.devices, self.opts.workers, train.dims())?;
+            // One O(nnz) counting pass serves both the empty-shard check
+            // below and the per-device planner stats (a shard's size is
+            // the sum of its contiguous counts slice — equal to
+            // `grid.shard_sizes`, without another tensor walk).
+            self.mode0_counts = FiberStats::mode0_counts(train);
+            // Division-step degrade check: a grid leaving a device with
+            // an empty shard (more devices than busy mode-0 chunks —
+            // e.g. a one-nnz tensor on D ≥ 2) is degenerate but must
+            // train, not panic (ISSUE 5 satellite).
+            let mut degraded = grid.degraded();
+            if grid.devices() > 1 {
+                let sizes = grid.shard_sizes_from_counts(&self.mode0_counts);
+                if sizes.iter().any(|&c| c == 0) {
+                    log_warn!(
+                        "device grid: shard sizes {sizes:?} leave a device idle — \
+                         degenerate division (recorded in PlanStats::degraded)"
+                    );
+                    degraded = true;
+                }
+            }
+            self.grid_degraded = degraded;
+            self.grid = Some(grid);
             self.partition_for = Some(fp);
         }
-        // One planner decision per dataset, shared by all workers (the
-        // whole epoch visits every nonzero, so dataset-level fiber stats
-        // are the right input; per-block stats would only shrink the
-        // sample hint). Scalar-degenerate sizings map to cap 1. Cached on
-        // every cost-model input so the O(nnz) fiber scan runs once per
-        // dataset/config, not per epoch.
+        // One planner decision per DEVICE, each from its own shard's
+        // mode-0 fiber statistics (a device visits its whole shard every
+        // epoch, so shard-level stats are the right input — the device
+        // analogue of the historical per-dataset rationale). Exact-mode
+        // bitwise identity across D does not require the decisions to
+        // agree: a plan's sample order ignores every capacity parameter
+        // (see `kernel::plan`). Scalar-degenerate sizings map to cap 1.
+        // Cached on every cost-model input so the O(nnz) counting pass
+        // runs once per dataset/config, not per epoch.
+        let grid = self.grid.as_ref().unwrap();
         let m = ((train.nnz() as f64) * self.opts.hyper.sample_frac)
             .round()
             .max(1.0) as usize;
         let params_fp = (
             train.nnz(),
+            train.dims().to_vec(),
             m,
-            order,
             r_core,
             j,
             self.opts.batch,
             self.opts.exactness,
             self.opts.lanes,
             self.opts.split,
+            self.opts.workers,
+            grid.devices(),
         );
-        if self.plan_params_for != Some(params_fp) {
-            self.plan_params = self
-                .opts
-                .batch
-                .resolve(
-                    train,
-                    m,
-                    order,
-                    r_core,
-                    j,
-                    self.opts.exactness,
-                    self.opts.lanes,
-                    self.opts.split,
-                )
-                .unwrap_or(PlanParams {
-                    max_batch: 1,
-                    exactness: self.opts.exactness,
-                    ..Default::default()
-                });
-            self.plan_params_for = Some(params_fp);
+        if self.device_params_for.as_ref() != Some(&params_fp) {
+            self.device_params = match self.opts.batch {
+                BatchSizing::Fixed(_) => {
+                    let p = self
+                        .opts
+                        .batch
+                        .resolve(
+                            train,
+                            m,
+                            order,
+                            r_core,
+                            j,
+                            self.opts.exactness,
+                            self.opts.lanes,
+                            self.opts.split,
+                        )
+                        .unwrap_or(PlanParams {
+                            max_batch: 1,
+                            exactness: self.opts.exactness,
+                            ..Default::default()
+                        });
+                    vec![p; grid.devices()]
+                }
+                BatchSizing::Auto => {
+                    // The counting pass from the partition rebuild,
+                    // sliced per device (each shard is a contiguous
+                    // mode-0 row range).
+                    let counts = &self.mode0_counts;
+                    (0..grid.devices())
+                        .map(|dev| {
+                            let (lo, hi) = grid.owned_rows(dev, 0);
+                            let mut slice = counts[lo..hi].to_vec();
+                            let shard: usize =
+                                slice.iter().map(|&c| c as usize).sum();
+                            let hint = ((shard as f64) * self.opts.hyper.sample_frac)
+                                .round()
+                                .max(1.0) as usize;
+                            let stats =
+                                FiberStats::from_mode0_counts(&mut slice).scaled_to(hint);
+                            planner::choose_params(
+                                &stats,
+                                order,
+                                r_core,
+                                j,
+                                self.opts.exactness,
+                                self.opts.lanes,
+                                self.opts.split,
+                            )
+                        })
+                        .collect()
+                }
+            };
+            self.device_params_for = Some(params_fp);
         }
-        let cap = self.plan_params.max_batch;
         let threads = planner::resolve_threads(self.opts.threads);
         let stale = self.pools.len() != self.opts.workers
-            || self
-                .pools
-                .first()
-                .map(|p| p.shape() != (order, r_core, j, cap) || p.threads() != threads)
-                .unwrap_or(true);
+            || self.pools.iter().enumerate().any(|(g, p)| {
+                let cap = self.device_params[grid.device_of(g)].max_batch;
+                p.shape() != (order, r_core, j, cap) || p.threads() != threads
+            });
         if stale {
             self.pools = (0..self.opts.workers)
-                .map(|_| DispatchPool::new(threads, order, r_core, j, cap))
+                .map(|g| {
+                    let cap = self.device_params[grid.device_of(g)].max_batch;
+                    DispatchPool::new(threads, order, r_core, j, cap)
+                })
                 .collect();
         }
         Ok(())
@@ -258,25 +362,43 @@ impl ParallelFastTucker {
 
         let schedule = LatinSchedule::try_new(m, order)?;
         let partition = self.partition.as_ref().unwrap();
+        let grid = self.grid.as_ref().unwrap();
+        let grid_degraded = self.grid_degraded;
+        let n_devices = grid.devices();
         let dims = model.factors.dims();
 
-        // Per-worker RNG streams, forked deterministically.
+        // Per-worker RNG streams, forked deterministically (in global
+        // worker order, independent of the device grouping — part of the
+        // exact-mode D-invariance contract).
         let mut worker_rngs: Vec<Rng> = (0..m).map(|_| rng.fork()).collect();
 
         let execution = self.opts.execution;
         let t0 = Instant::now();
         let mut samples = 0usize;
         let mut simulated_secs = 0.0f64;
+        let mut device_samples = vec![0u64; n_devices];
+        let mut comm_rows = 0u64;
+        let mut comm_bytes = 0u64;
         {
             let shared = SharedFactors::new(&mut model.factors);
             for round in 0..schedule.rounds() {
                 let assignments = schedule.round_assignments(round);
-                // Ledger the factor chunks changing owners at this boundary.
+                // Parameter-exchange bookkeeping at the round boundary,
+                // in fixed device order. The per-worker ledger keeps the
+                // historical "each worker is a GPU" accounting; the
+                // inter-device counters additionally locate each chunk's
+                // previous owner and count only rows that actually cross
+                // a device boundary (intra-device handovers are free).
                 for g in 0..m {
                     for (mode, chunk) in schedule.incoming_chunks(round, g) {
                         let (s, e) = BlockPartition::chunk_range(chunk, dims[mode], m);
                         self.ledger
                             .record_factor_exchange(((e - s) * j * 4) as u64);
+                        let src = schedule.owner_of(round - 1, mode, chunk);
+                        if grid.device_of(src) != grid.device_of(g) {
+                            comm_rows += (e - s) as u64;
+                            comm_bytes += ((e - s) * j * 4) as u64;
+                        }
                     }
                 }
                 let (count, round_secs, round_plans) = match execution {
@@ -292,7 +414,10 @@ impl ParallelFastTucker {
                         &mut worker_rngs,
                         lr_f,
                         h,
-                        self.plan_params,
+                        grid,
+                        &self.device_params,
+                        grid_degraded,
+                        &mut device_samples,
                     ),
                     Execution::Simulated => run_round_simulated(
                         &shared,
@@ -306,7 +431,10 @@ impl ParallelFastTucker {
                         &mut worker_rngs,
                         lr_f,
                         h,
-                        self.plan_params,
+                        grid,
+                        &self.device_params,
+                        grid_degraded,
+                        &mut device_samples,
                     ),
                 };
                 samples += count;
@@ -316,42 +444,97 @@ impl ParallelFastTucker {
         }
         // Threads mode reports wall time; Simulated mode reports the
         // discrete-event parallel time (sum over rounds of the slowest
-        // worker).
+        // *device*, each device executing its workers serially).
         let factor_secs = match execution {
             Execution::Threads => t0.elapsed().as_secs_f64(),
             Execution::Simulated => simulated_secs,
         };
 
-        // Core all-reduce + update.
+        // Core all-reduce + update (Eq. 17 merge in fixed device order).
         let t1 = Instant::now();
         let mut core_secs = 0.0;
         if h.update_core {
-            // Merge worker-local gradients into worker 0's pool. Each
-            // pool's own gradient already lives wholly on its primary
-            // workspace (the DispatchPool invariant: sequential passes
-            // and the exact tape replay both target it).
-            let (first, rest) = self.pools.split_at_mut(1);
-            let (grad0, count0) = first[0].core_grad_mut();
-            for ws in rest.iter_mut() {
-                let (grad, count) = ws.core_grad_mut();
-                crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+            // Each pool's gradient lives wholly on its primary workspace
+            // (the DispatchPool invariant: sequential passes and the
+            // exact tape replay both target it).
+            match self.opts.exactness {
+                Exactness::Exact => {
+                    // Flat left fold in global worker order — the bitwise
+                    // contract. Identical at every D: device worker
+                    // ranges are contiguous, so device-major order IS
+                    // worker order and the fold never reassociates.
+                    let (first, rest) = self.pools.split_at_mut(1);
+                    let (grad0, count0) = first[0].core_grad_mut();
+                    for ws in rest.iter_mut() {
+                        let (grad, count) = ws.core_grad_mut();
+                        crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                    }
+                }
+                Exactness::Relaxed => {
+                    // The paper's two-stage all-reduce tree: device-local
+                    // fold (free), then one gradient panel per non-root
+                    // device, merged in fixed device order. Reassociates
+                    // the f32 sums — covered by the relaxed accuracy
+                    // envelope, not the bitwise contract. At D = workers
+                    // the local folds are no-ops and this degenerates to
+                    // the flat fold.
+                    for dev in 0..n_devices {
+                        let r = grid.workers_of(dev);
+                        let dev_pools = &mut self.pools[r.start..r.end];
+                        let (first, rest) = dev_pools.split_at_mut(1);
+                        let (grad0, count0) = first[0].core_grad_mut();
+                        for ws in rest.iter_mut() {
+                            let (grad, count) = ws.core_grad_mut();
+                            crate::kernel::batched::merge_core_grad(
+                                grad0, count0, grad, count,
+                            );
+                        }
+                    }
+                    for dev in 1..n_devices {
+                        let leader = grid.workers_of(dev).start;
+                        let (head, tail) = self.pools.split_at_mut(leader);
+                        let (grad0, count0) = head[0].core_grad_mut();
+                        let (grad, count) = tail[0].core_grad_mut();
+                        crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                    }
+                }
             }
+            // Inter-device Eq. 17 traffic. Exact mode's flat fold cannot
+            // pre-reduce panels on their device (that reassociation is
+            // exactly what the relaxed tree does), so every worker pool
+            // off the root device ships its own panel; the relaxed tree
+            // ships one pre-folded panel per non-root device.
+            let shipped_panels = match self.opts.exactness {
+                Exactness::Exact => (m - grid.workers_of(0).len()) as u64,
+                Exactness::Relaxed => n_devices as u64 - 1,
+            };
+            comm_bytes += shipped_panels * (order * r_core * j * 4) as u64;
             self.ledger
                 .record_core_allreduce((m * order * r_core * j * 4) as u64);
             let core_mut = match &mut model.core {
                 CoreRepr::Kruskal(k) => k,
                 _ => unreachable!(),
             };
+            let (grad0, count0) = self.pools[0].core_grad_mut();
             apply_core_grad_raw(grad0, count0, core_mut, lr_c, h.lambda_core);
             core_secs = t1.elapsed().as_secs_f64();
         }
+
+        // Per-device observability: grid width, the busiest device's
+        // sample share (occupancy), and the epoch's inter-device traffic.
+        let max_device = device_samples.iter().copied().max().unwrap_or(0);
+        self.plan_accum
+            .record_device_epoch(n_devices, samples as u64, max_device);
+        self.plan_accum.record_comm(comm_rows, comm_bytes);
 
         Ok(EpochStats { samples, factor_secs, core_secs })
     }
 }
 
 /// Execute one scheduling round on real threads; returns (samples, wall
-/// secs of the round, merged plan stats).
+/// secs of the round, merged plan stats). Workers spawn individually
+/// (the Latin level makes them row-disjoint regardless of their device),
+/// the device grid only attributes each pass to its device.
 #[allow(clippy::too_many_arguments)]
 fn run_round_threads(
     shared: &SharedFactors,
@@ -365,7 +548,10 @@ fn run_round_threads(
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
-    params: PlanParams,
+    grid: &DeviceGrid,
+    device_params: &[PlanParams],
+    grid_degraded: bool,
+    device_samples: &mut [u64],
 ) -> (usize, f64, PlanAccum) {
     let t0 = Instant::now();
     let mut samples = 0usize;
@@ -377,6 +563,7 @@ fn run_round_threads(
             .zip(rngs.iter_mut())
         {
             let block = partition.block(&assignments[g]);
+            let params = device_params[grid.device_of(g)];
             let handle = scope.spawn(move || {
                 worker_pass(
                     shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params,
@@ -384,10 +571,14 @@ fn run_round_threads(
             });
             handles.push(handle);
         }
-        for hdl in handles {
+        for (g, hdl) in handles.into_iter().enumerate() {
             let (count, stats) = hdl.join().expect("worker panicked");
             samples += count;
-            if let Some(s) = stats {
+            let dev = grid.device_of(g);
+            device_samples[dev] += count as u64;
+            if let Some(mut s) = stats {
+                s.device = dev;
+                s.degraded |= grid_degraded;
                 plans.record(&s);
             }
         }
@@ -396,8 +587,10 @@ fn run_round_threads(
 }
 
 /// Execute one round as a discrete-event simulation: workers run
-/// sequentially, each timed; the round "takes" the slowest worker's time,
-/// exactly what M synchronized devices would observe.
+/// sequentially, each timed; a device executes its workers serially, so
+/// the round "takes" the slowest **device's** summed time — exactly what
+/// D synchronized devices hosting W workers would observe (at D = W this
+/// is the historical slowest-worker time).
 #[allow(clippy::too_many_arguments)]
 fn run_round_simulated(
     shared: &SharedFactors,
@@ -411,31 +604,41 @@ fn run_round_simulated(
     rngs: &mut [Rng],
     lr_f: f32,
     h: SgdHyper,
-    params: PlanParams,
+    grid: &DeviceGrid,
+    device_params: &[PlanParams],
+    grid_degraded: bool,
+    device_samples: &mut [u64],
 ) -> (usize, f64, PlanAccum) {
     let mut samples = 0usize;
-    let mut slowest = 0.0f64;
     let mut plans = PlanAccum::new();
+    let mut device_secs = vec![0.0f64; grid.devices()];
     for ((g, pool), wrng) in (0..assignments.len())
         .zip(pools.iter_mut())
         .zip(rngs.iter_mut())
     {
         let block = partition.block(&assignments[g]);
+        let dev = grid.device_of(g);
         let t0 = Instant::now();
-        let (count, stats) =
-            worker_pass(shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params);
+        let (count, stats) = worker_pass(
+            shared, core, strided, layout, train, block, pool, wrng, lr_f, h,
+            device_params[dev],
+        );
+        device_secs[dev] += t0.elapsed().as_secs_f64();
         samples += count;
-        slowest = slowest.max(t0.elapsed().as_secs_f64());
-        if let Some(s) = stats {
+        device_samples[dev] += count as u64;
+        if let Some(mut s) = stats {
+            s.device = dev;
+            s.degraded |= grid_degraded;
             plans.record(&s);
         }
     }
+    let slowest = device_secs.iter().copied().fold(0.0f64, f64::max);
     (samples, slowest, plans)
 }
 
 /// One worker's pass over its block: the sampled (or full) block-local
-/// nonzeros are grouped into fiber tiles by the engine's planner policy
-/// and dispatched as **one batched kernel call** — the same Theorem-1/2
+/// nonzeros are grouped into fiber tiles by the worker's **device-level**
+/// planner decision and dispatched as **one batched kernel call** — the same Theorem-1/2
 /// math as the serial engine, with each fiber's shared mode-0 row staged
 /// once per sub-run. With an in-group pool (`threads > 1`) the plan's
 /// split sub-groups fan across the pool's threads: exact mode as the
@@ -477,7 +680,7 @@ fn worker_pass(
     };
     let mut plan_stats = plan.stats();
 
-    // SAFETY (level 1 of the two-level disjointness contract, see
+    // SAFETY (level 1 of the three-level disjointness contract, see
     // `SharedFactors`): every id in the plan lies inside this worker's
     // block, and the Latin schedule gives the worker exclusive ownership
     // of every factor chunk the block spans for the duration of this
@@ -737,6 +940,97 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under pooling");
             }
         }
+    }
+
+    #[test]
+    fn device_grid_is_bitwise_neutral_in_exact_mode() {
+        // ISSUE 5 tentpole, engine level: grouping the Latin workers onto
+        // D devices (per-device planner decisions, device-attributed
+        // passes, fixed-order core merge) must leave the multi-epoch
+        // trained model — factors AND core — bitwise identical to D = 1.
+        let (p, spec) = planted(101);
+        let run = |devices: usize| {
+            let mut rng = Rng::new(102);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = crate::parallel::DeviceCount::Fixed(devices);
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(103);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, engine.plan_accum)
+        };
+        let (base, acc1) = run(1);
+        assert_eq!(acc1.devices, 1);
+        assert_eq!(acc1.comm_rows, 0, "a single device communicates nothing");
+        for devices in [2usize, 3, 4] {
+            let (sharded, acc) = run(devices);
+            assert_eq!(acc.devices, devices);
+            assert!(acc.comm_rows > 0, "D={devices}: no boundary rows counted");
+            assert!(acc.device_occupancy() > 0.0 && acc.device_occupancy() <= 1.0);
+            for n in 0..3 {
+                for (a, b) in base
+                    .factors
+                    .mat(n)
+                    .data()
+                    .iter()
+                    .zip(sharded.factors.mat(n).data().iter())
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "D={devices}: mode {n} diverged");
+                }
+            }
+            let (ck, cs) = match (&base.core, &sharded.core) {
+                (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+                _ => unreachable!(),
+            };
+            for n in 0..3 {
+                for (a, b) in ck.factor(n).data().iter().zip(cs.factor(n).data().iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "D={devices}: core mode {n} diverged (merge order)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_device_grids_degrade_loudly() {
+        // ISSUE 5 satellite, engine level: D > workers clamps and trains
+        // (marked degraded), and a one-nnz tensor on a multi-device grid
+        // trains (idle shard marked degraded) — never a panic.
+        let (p, spec) = planted(111);
+        let mut rng = Rng::new(112);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.devices = crate::parallel::DeviceCount::Fixed(8);
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        assert_eq!(engine.plan_accum.devices, 2, "grid must clamp to the worker count");
+        assert!(engine.plan_accum.degraded > 0, "clamped grid not recorded as degraded");
+
+        let one = crate::tensor::SparseTensor::new_unchecked(
+            vec![40, 40, 40],
+            vec![1, 2, 3],
+            vec![3.0],
+        );
+        let mut model = TuckerModel::init_kruskal(&mut rng, &[40, 40, 40], 4, 4);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.devices = crate::parallel::DeviceCount::Fixed(2);
+        let mut engine = ParallelFastTucker::new(opts);
+        let stats = engine.train_epoch(&mut model, &one, 0, &mut rng).unwrap();
+        assert_eq!(stats.samples, 1);
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "idle device shard not recorded as degraded: {:?}",
+            engine.plan_accum
+        );
     }
 
     #[test]

@@ -681,6 +681,127 @@ fn prop_threaded_exact_bitwise_matches_sequential() {
 }
 
 #[test]
+fn prop_sharded_exact_bitwise_matches_single_device() {
+    // ISSUE 5 acceptance: exact-mode training on a D-device grid — for
+    // D ∈ {1, 2, 3, 4}, across in-group thread counts, split factors, and
+    // core layouts, on BOTH a tall and a hollow workload — is bitwise
+    // identical to the D = 1 path: factors, the applied core gradients
+    // (compared through the core factors), and the per-epoch residual
+    // trajectory. The D = 1 baseline also pins that a single device
+    // ships no boundary rows.
+    use fasttucker::algo::SgdHyper;
+    use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+    use fasttucker::kernel::ThreadCount;
+    use fasttucker::kruskal::reconstruct::rmse;
+    use fasttucker::parallel::{DeviceCount, ParallelFastTucker, ParallelOptions};
+
+    let workloads = [
+        // Tall: long mode-0 fibers, dense chunk interactions.
+        ("tall", PlantedSpec {
+            dims: vec![40, 40, 40],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+        // Hollow HOHDST shape: short fibers, wide trailing modes — the
+        // planner tiles, splits engage, pools find parallel width.
+        ("hollow", PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+    ];
+    // (threads, split, layout): sequential dispatch, pooled + split
+    // dispatch, and the Strided core walk.
+    let combos = [
+        (1usize, 1usize, CoreLayout::Packed),
+        (2, 8, CoreLayout::Packed),
+        (2, 4, CoreLayout::Strided),
+    ];
+    for (wname, spec) in &workloads {
+        let mut prng = fasttucker::util::Rng::new(0xD1CE);
+        let p = planted_tucker(&mut prng, spec);
+        for &(threads, split, layout) in &combos {
+            let run = |devices: usize| {
+                let mut rng = fasttucker::util::Rng::new(7001);
+                let mut model =
+                    TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+                let mut opts = ParallelOptions::default();
+                opts.workers = 4;
+                opts.devices = DeviceCount::Fixed(devices);
+                opts.threads = ThreadCount::Fixed(threads);
+                opts.split = split;
+                opts.layout = layout;
+                opts.hyper = SgdHyper::default();
+                let mut engine = ParallelFastTucker::new(opts);
+                let mut rng2 = fasttucker::util::Rng::new(7002);
+                let mut trajectory = Vec::new();
+                for epoch in 0..2 {
+                    engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+                    trajectory.push(rmse(&model, &p.tensor));
+                }
+                (model, trajectory, engine.plan_accum)
+            };
+            let (base, base_traj, base_acc) = run(1);
+            assert_eq!(base_acc.comm_rows, 0, "{wname}: one device has no boundary");
+            for devices in [2usize, 3, 4] {
+                let (sharded, traj, acc) = run(devices);
+                assert_eq!(acc.devices, devices);
+                assert!(
+                    acc.comm_rows > 0,
+                    "{wname} D={devices}: boundary exchange never counted"
+                );
+                for (e, (a, b)) in base_traj.iter().zip(traj.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{wname} D={devices} T={threads} split={split} {layout:?}: \
+                         epoch {e} residual trajectory diverged ({a} vs {b})"
+                    );
+                }
+                for n in 0..3 {
+                    for (a, b) in base
+                        .factors
+                        .mat(n)
+                        .data()
+                        .iter()
+                        .zip(sharded.factors.mat(n).data().iter())
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{wname} D={devices} T={threads} split={split} {layout:?}: \
+                             mode {n} factors diverged"
+                        );
+                    }
+                }
+                let (ck, cs) = match (&base.core, &sharded.core) {
+                    (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+                    _ => unreachable!(),
+                };
+                for n in 0..3 {
+                    for (a, b) in
+                        ck.factor(n).data().iter().zip(cs.factor(n).data().iter())
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{wname} D={devices}: core mode {n} diverged \
+                             (Eq. 17 merge order)"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_relaxed_plan_execution_is_permutation_and_descends() {
     // Relaxed (hogwild) plans: the executed sample multiset is exactly
     // the input multiset (KernelStats::samples + the residual count), and
