@@ -1,0 +1,854 @@
+//! Independent disjointness auditor for the three-level concurrency
+//! contract (see `parallel/shared.rs`).
+//!
+//! Everything here is deliberately re-derived from first principles —
+//! brute-force conflict graphs and plain set algebra over the *inputs*
+//! (tensor indices, wave lists, chunk coordinates, worker ranges) — and
+//! shares **no code** with the builders under audit
+//! ([`crate::kernel::plan::color_subgroups`], [`crate::parallel::LatinSchedule`],
+//! [`crate::parallel::DeviceGrid`]). A bug in a builder therefore cannot
+//! hide inside the checker that is supposed to catch it. The only
+//! geometry the auditor re-states is the ceil-split chunk rule
+//! (`chunk = ceil(dim / m)`), written out locally in [`chunk_rows`].
+//!
+//! The audited contract, level by level:
+//!
+//! - **Level 2 (color waves)** — [`audit_coloring`]: the waves are a
+//!   partition of the plan's sub-groups; same-wave sub-groups share no
+//!   factor row in any mode; for two sub-groups that *do* share a row,
+//!   their wave order preserves their plan order.
+//! - **Level 1 (Latin rounds)** — [`audit_latin`]: within a round, the
+//!   workers' chunk assignments are row-disjoint in every mode, every
+//!   assignment is well-formed, and a full cycle visits each block
+//!   exactly once.
+//! - **Level 0 (device grid)** — [`audit_grid`] over [`GridFacts`]: the
+//!   per-device worker ranges partition the workers; the owned row
+//!   ranges tile every mode exactly; every nonzero lands on exactly one
+//!   device (the owner of its mode-0 row); and each round's boundary
+//!   set is the exact complement of the home set within the touched
+//!   chunks.
+//!
+//! Violations come back as named [`Violation`] variants inside an
+//! [`AuditReport`]; with the `strict-audit` cargo feature the engines
+//! run these audits on every coloring/grid they build and panic on the
+//! first red report.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::kernel::{BatchPlan, SubGroupColoring};
+use crate::parallel::{DeviceGrid, LatinSchedule};
+use crate::tensor::SparseTensor;
+
+/// One named contract violation. Each variant carries enough provenance
+/// to locate the offending object without re-running the audit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// A sub-group of the plan appears in no wave.
+    WavePartitionGap { group: usize },
+    /// A sub-group appears in more than one wave (or twice in one).
+    WavePartitionDuplicate { group: usize },
+    /// A wave names a group id outside the plan's `0..n_groups` range.
+    WaveUnknownGroup { wave: usize, group: usize },
+    /// Two sub-groups in the same wave touch the same factor row.
+    WaveRowOverlap { wave: usize, group_a: usize, group_b: usize, mode: usize, row: usize },
+    /// Two conflicting sub-groups run in waves that invert their plan
+    /// order (`group_a < group_b` but `wave_a > wave_b`).
+    WaveOrderInversion {
+        group_a: usize,
+        group_b: usize,
+        wave_a: usize,
+        wave_b: usize,
+        mode: usize,
+        row: usize,
+    },
+    /// A Latin assignment has the wrong arity or an out-of-range chunk.
+    LatinMalformedAssignment { round: usize, worker: usize },
+    /// Two workers of one round touch the same row of the same mode.
+    LatinRowOverlap { round: usize, mode: usize, worker_a: usize, worker_b: usize, row: usize },
+    /// A full Latin cycle visits the same block twice.
+    LatinBlockRevisited { round: usize, worker: usize },
+    /// A full Latin cycle never visits some block.
+    LatinCoverageGap { block: Vec<usize> },
+    /// A worker belongs to no device range.
+    DeviceWorkerGap { worker: usize },
+    /// A worker belongs to two device ranges.
+    DeviceWorkerOverlap { worker: usize, device_a: usize, device_b: usize },
+    /// A factor row of some mode is homed on no device.
+    OwnershipGap { mode: usize, row: usize },
+    /// A factor row of some mode is homed on two devices.
+    OwnershipOverlap { mode: usize, row: usize, device_a: usize, device_b: usize },
+    /// A device's owned range differs from the union of its workers'
+    /// chunk ranges.
+    OwnershipMismatch { device: usize, mode: usize },
+    /// A nonzero is assigned to a device other than the owner of its
+    /// mode-0 row.
+    NnzDeviceMismatch { nnz: usize, assigned: usize, expected: usize },
+    /// A round's boundary set misses a remote chunk the device touches.
+    BoundaryMissing { device: usize, round: usize, mode: usize, chunk: usize },
+    /// A round's boundary set lists a chunk the device homes (or never
+    /// touches).
+    BoundarySpurious { device: usize, round: usize, mode: usize, chunk: usize },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::WavePartitionGap { group } => {
+                write!(f, "wave partition gap: sub-group {group} is in no wave")
+            }
+            Violation::WavePartitionDuplicate { group } => {
+                write!(f, "wave partition duplicate: sub-group {group} scheduled twice")
+            }
+            Violation::WaveUnknownGroup { wave, group } => {
+                write!(f, "wave {wave} names unknown sub-group {group}")
+            }
+            Violation::WaveRowOverlap { wave, group_a, group_b, mode, row } => write!(
+                f,
+                "wave {wave}: sub-groups {group_a} and {group_b} both touch mode-{mode} row {row}"
+            ),
+            Violation::WaveOrderInversion { group_a, group_b, wave_a, wave_b, mode, row } => {
+                write!(
+                    f,
+                    "order inversion: sub-group {group_a} (wave {wave_a}) conflicts with \
+                     {group_b} (wave {wave_b}) on mode-{mode} row {row} but runs later"
+                )
+            }
+            Violation::LatinMalformedAssignment { round, worker } => {
+                write!(f, "round {round}: worker {worker} has a malformed block assignment")
+            }
+            Violation::LatinRowOverlap { round, mode, worker_a, worker_b, row } => write!(
+                f,
+                "round {round}: workers {worker_a} and {worker_b} both own mode-{mode} row {row}"
+            ),
+            Violation::LatinBlockRevisited { round, worker } => {
+                write!(f, "round {round}: worker {worker} revisits an already-covered block")
+            }
+            Violation::LatinCoverageGap { block } => {
+                write!(f, "latin cycle never visits block {block:?}")
+            }
+            Violation::DeviceWorkerGap { worker } => {
+                write!(f, "worker {worker} belongs to no device")
+            }
+            Violation::DeviceWorkerOverlap { worker, device_a, device_b } => {
+                write!(f, "worker {worker} belongs to devices {device_a} and {device_b}")
+            }
+            Violation::OwnershipGap { mode, row } => {
+                write!(f, "mode-{mode} row {row} is homed on no device")
+            }
+            Violation::OwnershipOverlap { mode, row, device_a, device_b } => write!(
+                f,
+                "mode-{mode} row {row} is homed on devices {device_a} and {device_b}"
+            ),
+            Violation::OwnershipMismatch { device, mode } => write!(
+                f,
+                "device {device}: owned mode-{mode} rows differ from its workers' chunk union"
+            ),
+            Violation::NnzDeviceMismatch { nnz, assigned, expected } => write!(
+                f,
+                "nonzero {nnz} assigned to device {assigned}, mode-0 row owner is {expected}"
+            ),
+            Violation::BoundaryMissing { device, round, mode, chunk } => write!(
+                f,
+                "device {device} round {round}: remote mode-{mode} chunk {chunk} missing \
+                 from boundary set"
+            ),
+            Violation::BoundarySpurious { device, round, mode, chunk } => write!(
+                f,
+                "device {device} round {round}: boundary set lists mode-{mode} chunk {chunk} \
+                 it does not need"
+            ),
+        }
+    }
+}
+
+/// Outcome of one audit: how many elementary facts were checked and
+/// every violation found. `checks` exists so a green report can be told
+/// apart from a vacuous one.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Number of elementary facts verified.
+    pub checks: usize,
+    /// Violations found, in discovery order.
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, other: AuditReport) {
+        self.checks += other.checks;
+        self.violations.extend(other.violations);
+    }
+
+    /// Panic with the full report when it is red (`strict-audit` hook).
+    pub fn assert_clean(&self, what: &str) {
+        assert!(self.ok(), "strict-audit: {what} failed the disjointness audit\n{self}");
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "audit: {} checks, {} violation(s)",
+            self.checks,
+            self.violations.len()
+        )?;
+        const SHOWN: usize = 16;
+        for v in self.violations.iter().take(SHOWN) {
+            writeln!(f, "  - {v}")?;
+        }
+        if self.violations.len() > SHOWN {
+            writeln!(f, "  ... {} more", self.violations.len() - SHOWN)?;
+        }
+        Ok(())
+    }
+}
+
+/// Row range `[lo, hi)` of chunk `c` when a `dim`-row mode is cut into
+/// `m` ceil-sized chunks. Re-derived locally (NOT calling
+/// `BlockPartition::chunk_range`) so the auditor stays independent of
+/// the code under audit.
+fn chunk_rows(c: usize, dim: usize, m: usize) -> (usize, usize) {
+    let w = dim.div_ceil(m);
+    ((c * w).min(dim), ((c + 1) * w).min(dim))
+}
+
+/// Chunk id of row `i` under the same ceil-split rule.
+fn chunk_of_row(i: usize, dim: usize, m: usize) -> usize {
+    (i / dim.div_ceil(m)).min(m - 1)
+}
+
+/// Extract the wave lists of a [`SubGroupColoring`] as plain data, so
+/// the auditor (and the mutation tests) operate on values the coloring
+/// code no longer controls.
+pub fn waves_of(coloring: &SubGroupColoring) -> Vec<Vec<u32>> {
+    (0..coloring.n_waves()).map(|w| coloring.wave(w).to_vec()).collect()
+}
+
+/// Level-2 audit: wave partition, same-wave row disjointness, and
+/// plan-order preservation for conflicting pairs.
+///
+/// `waves[w]` lists the plan sub-group indices scheduled in wave `w`
+/// (use [`waves_of`] on a real coloring). The conflict graph is built
+/// by brute force from the tensor indices of every sample in every
+/// sub-group — per-(mode,row) chains of touching groups in plan order
+/// must have strictly increasing wave numbers: an equal pair is a
+/// same-wave overlap, a decreasing pair is an order inversion.
+pub fn audit_coloring(
+    tensor: &SparseTensor,
+    plan: &BatchPlan,
+    waves: &[Vec<u32>],
+) -> AuditReport {
+    let mut report = AuditReport::default();
+    let n_groups = plan.n_groups();
+
+    // -- Partition: every sub-group in exactly one wave. --------------
+    const NO_WAVE: usize = usize::MAX;
+    let mut wave_of = vec![NO_WAVE; n_groups];
+    for (w, wave) in waves.iter().enumerate() {
+        for &g in wave {
+            let g = g as usize;
+            if g >= n_groups {
+                report.violations.push(Violation::WaveUnknownGroup { wave: w, group: g });
+                continue;
+            }
+            if wave_of[g] != NO_WAVE {
+                report.violations.push(Violation::WavePartitionDuplicate { group: g });
+            } else {
+                wave_of[g] = w;
+            }
+            report.checks += 1;
+        }
+    }
+    for (g, &w) in wave_of.iter().enumerate() {
+        if w == NO_WAVE {
+            report.violations.push(Violation::WavePartitionGap { group: g });
+        }
+    }
+
+    // -- Conflict chains: per (mode, row), the groups touching it in
+    //    plan order. Groups are visited ascending, so each chain is
+    //    already plan-ordered. -----------------------------------------
+    let order = tensor.order();
+    let mut chains: BTreeMap<(usize, u32), Vec<usize>> = BTreeMap::new();
+    let mut footprint: BTreeSet<(usize, u32)> = BTreeSet::new();
+    for g in 0..n_groups {
+        footprint.clear();
+        for &id in plan.group(g) {
+            let ix = tensor.index(id as usize);
+            for (mode, &row) in ix.iter().enumerate().take(order) {
+                footprint.insert((mode, row));
+            }
+        }
+        for &key in &footprint {
+            chains.entry(key).or_default().push(g);
+        }
+    }
+
+    // Strictly increasing waves along each plan-ordered chain imply the
+    // property for every conflicting pair, so checking consecutive
+    // chain neighbours suffices.
+    for (&(mode, row), chain) in &chains {
+        for pair in chain.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            let (wa, wb) = (wave_of[a], wave_of[b]);
+            if wa == NO_WAVE || wb == NO_WAVE {
+                continue; // already reported as a partition gap
+            }
+            report.checks += 1;
+            if wa == wb {
+                report.violations.push(Violation::WaveRowOverlap {
+                    wave: wa,
+                    group_a: a,
+                    group_b: b,
+                    mode,
+                    row: row as usize,
+                });
+            } else if wa > wb {
+                report.violations.push(Violation::WaveOrderInversion {
+                    group_a: a,
+                    group_b: b,
+                    wave_a: wa,
+                    wave_b: wb,
+                    mode,
+                    row: row as usize,
+                });
+            }
+        }
+    }
+    report
+}
+
+/// Level-1 audit: within every round the workers' blocks are pairwise
+/// row-disjoint in every mode; over a full cycle every block is visited
+/// exactly once.
+///
+/// `rounds[t][g]` is worker `g`'s chunk-coordinate vector in round `t`
+/// (use [`LatinSchedule::round_assignments`] to gather it). Coverage is
+/// only checked when `rounds.len() * workers == workers^order`, i.e.
+/// when handed a full cycle.
+pub fn audit_latin(dims: &[usize], workers: usize, rounds: &[Vec<Vec<usize>>]) -> AuditReport {
+    let mut report = AuditReport::default();
+    let order = dims.len();
+    let mut visited: BTreeSet<Vec<usize>> = BTreeSet::new();
+
+    for (t, round) in rounds.iter().enumerate() {
+        for (g, coords) in round.iter().enumerate() {
+            if coords.len() != order || coords.iter().any(|&c| c >= workers) {
+                report.violations.push(Violation::LatinMalformedAssignment {
+                    round: t,
+                    worker: g,
+                });
+                continue;
+            }
+            report.checks += 1;
+            if !visited.insert(coords.clone()) {
+                report.violations.push(Violation::LatinBlockRevisited { round: t, worker: g });
+            }
+        }
+        // Row disjointness: in each mode, materialize every worker's
+        // row range and check pairwise intersections (brute force over
+        // worker pairs — worker counts are small).
+        for (mode, &dim) in dims.iter().enumerate() {
+            let ranges: Vec<(usize, (usize, usize))> = round
+                .iter()
+                .enumerate()
+                .filter(|(_, coords)| coords.len() == order)
+                .map(|(g, coords)| (g, chunk_rows(coords[mode], dim, workers)))
+                .collect();
+            for (i, &(ga, (alo, ahi))) in ranges.iter().enumerate() {
+                for &(gb, (blo, bhi)) in ranges.iter().skip(i + 1) {
+                    report.checks += 1;
+                    let lo = alo.max(blo);
+                    let hi = ahi.min(bhi);
+                    if lo < hi {
+                        report.violations.push(Violation::LatinRowOverlap {
+                            round: t,
+                            mode,
+                            worker_a: ga,
+                            worker_b: gb,
+                            row: lo,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Coverage, only for a full cycle.
+    let full_cycle = workers
+        .checked_pow(order as u32)
+        .is_some_and(|blocks| rounds.len() * workers == blocks);
+    if full_cycle {
+        let mut coords = vec![0usize; order];
+        loop {
+            report.checks += 1;
+            if !visited.contains(&coords) {
+                report.violations.push(Violation::LatinCoverageGap { block: coords.clone() });
+            }
+            // Odometer increment over the block coordinate space.
+            let mut n = 0;
+            while n < order {
+                coords[n] += 1;
+                if coords[n] < workers {
+                    break;
+                }
+                coords[n] = 0;
+                n += 1;
+            }
+            if n == order {
+                break;
+            }
+        }
+    }
+    report
+}
+
+/// Plain-data snapshot of a device grid + schedule, decoupled from the
+/// builders so mutation tests can corrupt individual facts.
+#[derive(Clone, Debug)]
+pub struct GridFacts {
+    /// Factor mode sizes.
+    pub dims: Vec<usize>,
+    /// Latin worker count (grid columns).
+    pub workers: usize,
+    /// Per-device worker range `[start, end)`.
+    pub device_workers: Vec<(usize, usize)>,
+    /// `owned_rows[d][mode]` = row range `[lo, hi)` homed on device `d`.
+    pub owned_rows: Vec<Vec<(usize, usize)>>,
+    /// Device each nonzero was assigned to.
+    pub nnz_device: Vec<usize>,
+    /// Mode-0 row of each nonzero.
+    pub nnz_row0: Vec<u32>,
+    /// `boundaries[t][d]` = `(mode, chunk)` pairs device `d` must fetch
+    /// in round `t`.
+    pub boundaries: Vec<Vec<Vec<(usize, usize)>>>,
+    /// `rounds[t][g]` = worker `g`'s chunk coordinates in round `t`.
+    pub rounds: Vec<Vec<Vec<usize>>>,
+}
+
+/// Gather [`GridFacts`] from live objects through their public API.
+pub fn gather_grid_facts(
+    grid: &DeviceGrid,
+    schedule: &LatinSchedule,
+    tensor: &SparseTensor,
+) -> GridFacts {
+    let devices = grid.devices();
+    let rounds: Vec<Vec<Vec<usize>>> =
+        (0..schedule.rounds()).map(|t| schedule.round_assignments(t)).collect();
+    GridFacts {
+        dims: tensor.dims().to_vec(),
+        workers: grid.workers(),
+        device_workers: (0..devices)
+            .map(|d| {
+                let r = grid.workers_of(d);
+                (r.start, r.end)
+            })
+            .collect(),
+        owned_rows: (0..devices)
+            .map(|d| (0..tensor.order()).map(|n| grid.owned_rows(d, n)).collect())
+            .collect(),
+        nnz_device: (0..tensor.nnz()).map(|k| grid.device_of_nnz(tensor, k)).collect(),
+        nnz_row0: (0..tensor.nnz()).map(|k| tensor.index(k)[0]).collect(),
+        boundaries: (0..schedule.rounds())
+            .map(|t| (0..devices).map(|d| grid.boundary_chunks(schedule, t, d)).collect())
+            .collect(),
+        rounds,
+    }
+}
+
+/// Level-0 audit over [`GridFacts`]: worker-range partition, ownership
+/// tiling, nonzero placement, and boundary/home complementarity.
+pub fn audit_grid(facts: &GridFacts) -> AuditReport {
+    let mut report = AuditReport::default();
+    let devices = facts.device_workers.len();
+
+    // -- Worker ranges partition 0..workers. --------------------------
+    const NO_DEV: usize = usize::MAX;
+    let mut device_of_worker = vec![NO_DEV; facts.workers];
+    for (d, &(lo, hi)) in facts.device_workers.iter().enumerate() {
+        for g in lo..hi.min(facts.workers) {
+            report.checks += 1;
+            if device_of_worker[g] != NO_DEV {
+                report.violations.push(Violation::DeviceWorkerOverlap {
+                    worker: g,
+                    device_a: device_of_worker[g],
+                    device_b: d,
+                });
+            } else {
+                device_of_worker[g] = d;
+            }
+        }
+    }
+    for (g, &d) in device_of_worker.iter().enumerate() {
+        if d == NO_DEV {
+            report.violations.push(Violation::DeviceWorkerGap { worker: g });
+        }
+    }
+
+    // -- Ownership tiles every mode exactly, and matches the union of
+    //    each device's worker chunk ranges. ---------------------------
+    for (mode, &dim) in facts.dims.iter().enumerate() {
+        // Brute force per row: count owning devices.
+        for row in 0..dim {
+            report.checks += 1;
+            let mut owner = NO_DEV;
+            for (d, ranges) in facts.owned_rows.iter().enumerate() {
+                let (lo, hi) = ranges[mode];
+                if (lo..hi).contains(&row) {
+                    if owner != NO_DEV {
+                        report.violations.push(Violation::OwnershipOverlap {
+                            mode,
+                            row,
+                            device_a: owner,
+                            device_b: d,
+                        });
+                    } else {
+                        owner = d;
+                    }
+                }
+            }
+            if owner == NO_DEV {
+                report.violations.push(Violation::OwnershipGap { mode, row });
+            }
+        }
+        for (d, &(wlo, whi)) in facts.device_workers.iter().enumerate() {
+            report.checks += 1;
+            let expected = if wlo >= whi {
+                (0, 0)
+            } else {
+                (
+                    chunk_rows(wlo, dim, facts.workers).0,
+                    chunk_rows(whi - 1, dim, facts.workers).1,
+                )
+            };
+            let got = facts.owned_rows[d][mode];
+            let empty = |r: (usize, usize)| r.0 >= r.1;
+            if got != expected && !(empty(got) && empty(expected)) {
+                report.violations.push(Violation::OwnershipMismatch { device: d, mode });
+            }
+        }
+    }
+
+    // -- Every nonzero on exactly one device: the owner of its mode-0
+    //    chunk (mode-0 chunks are worker-pinned). ----------------------
+    for (k, (&assigned, &row0)) in
+        facts.nnz_device.iter().zip(facts.nnz_row0.iter()).enumerate()
+    {
+        report.checks += 1;
+        let worker = chunk_of_row(row0 as usize, facts.dims[0], facts.workers);
+        let expected = device_of_worker.get(worker).copied().unwrap_or(NO_DEV);
+        if assigned != expected {
+            report.violations.push(Violation::NnzDeviceMismatch {
+                nnz: k,
+                assigned,
+                expected,
+            });
+        }
+    }
+
+    // -- Boundary sets: exactly the touched-but-not-homed chunks. -----
+    for (t, per_device) in facts.boundaries.iter().enumerate() {
+        let Some(round) = facts.rounds.get(t) else { continue };
+        for (d, given) in per_device.iter().enumerate().take(devices) {
+            let (wlo, whi) = facts.device_workers[d];
+            let mut expected: BTreeSet<(usize, usize)> = BTreeSet::new();
+            for (g, coords) in round.iter().enumerate() {
+                if g < wlo || g >= whi {
+                    continue;
+                }
+                for (mode, &chunk) in coords.iter().enumerate() {
+                    // Homed iff the chunk's worker column lies in this
+                    // device's range (chunk c of any mode is worker c's
+                    // home column).
+                    if chunk < wlo || chunk >= whi {
+                        expected.insert((mode, chunk));
+                    }
+                }
+            }
+            let given_set: BTreeSet<(usize, usize)> = given.iter().copied().collect();
+            for &(mode, chunk) in expected.difference(&given_set) {
+                report.violations.push(Violation::BoundaryMissing { device: d, round: t, mode, chunk });
+            }
+            for &(mode, chunk) in given_set.difference(&expected) {
+                report.violations.push(Violation::BoundarySpurious { device: d, round: t, mode, chunk });
+            }
+            report.checks += expected.len().max(1);
+        }
+    }
+    report
+}
+
+/// Run the level-0 and level-1 audits for a live grid + schedule over
+/// `tensor` and merge the reports (the `strict-audit` engine hook and
+/// the `audit_plan` binary both call this).
+pub fn audit_schedule_and_grid(
+    grid: &DeviceGrid,
+    schedule: &LatinSchedule,
+    tensor: &SparseTensor,
+) -> AuditReport {
+    let facts = gather_grid_facts(grid, schedule, tensor);
+    let mut report = audit_latin(&facts.dims, facts.workers, &facts.rounds);
+    report.merge(audit_grid(&facts));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernel::PlanParams;
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    fn workload(rng: &mut Rng, dims: &[usize], nnz: usize) -> SparseTensor {
+        synth::random_uniform(rng, dims, nnz, 1.0, 5.0)
+    }
+
+    fn exact_plan(t: &SparseTensor, cap: usize, tile: usize, split: usize) -> BatchPlan {
+        let ids: Vec<u32> = (0..t.nnz() as u32).collect();
+        BatchPlan::build_params(t, &ids, PlanParams::tiled(cap, tile).with_split(split))
+    }
+
+    #[test]
+    fn real_colorings_audit_green() {
+        forall("auditor accepts real colorings", 16, |rng| {
+            let order = 2 + rng.gen_range(2);
+            let dims: Vec<usize> = (0..order).map(|_| 8 + rng.gen_range(40)).collect();
+            let t = workload(rng, &dims, 200 + rng.gen_range(400));
+            let plan = exact_plan(&t, 4 + rng.gen_range(28), 4, 1 + rng.gen_range(4));
+            let coloring = plan.color_subgroups(&t);
+            let report = audit_coloring(&t, &plan, &waves_of(&coloring));
+            assert!(report.ok(), "{report}");
+            assert!(report.checks > 0, "vacuous audit");
+        });
+    }
+
+    #[test]
+    fn merged_conflicting_waves_are_caught() {
+        // Mutation: pull a group from a later wave into wave 0. The
+        // greedy coloring only defers a group when it conflicts with an
+        // earlier one, so the merge must produce a WaveRowOverlap (the
+        // chain neighbour case) for some shared row.
+        let mut rng = Rng::new(7);
+        let t = workload(&mut rng, &[24, 10, 10], 600);
+        let plan = exact_plan(&t, 8, 4, 1);
+        let coloring = plan.color_subgroups(&t);
+        let mut waves = waves_of(&coloring);
+        assert!(waves.len() >= 2, "need a conflict to corrupt (got {} waves)", waves.len());
+        // Move the first group of wave 1 into wave 0 (keep ascending
+        // order inside the wave so only the disjointness breaks).
+        let moved = waves[1].remove(0);
+        let pos = waves[0].partition_point(|&g| g < moved);
+        waves[0].insert(pos, moved);
+        let report = audit_coloring(&t, &plan, &waves);
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::WaveRowOverlap { .. })),
+            "expected WaveRowOverlap, got: {report}"
+        );
+    }
+
+    #[test]
+    fn inverted_wave_order_is_caught() {
+        // Mutation: swap the waves of a conflicting pair entirely. A
+        // group from wave 0 moved *after* its wave-1 conflictor breaks
+        // plan-order preservation.
+        let mut rng = Rng::new(11);
+        let t = workload(&mut rng, &[24, 10, 10], 600);
+        let plan = exact_plan(&t, 8, 4, 1);
+        let coloring = plan.color_subgroups(&t);
+        let mut waves = waves_of(&coloring);
+        assert!(waves.len() >= 2);
+        // The greedy pass put the *first* wave-1 group there because it
+        // conflicts with some wave-0 group that precedes it in plan
+        // order. Swapping the two waves wholesale therefore inverts at
+        // least one conflicting pair.
+        waves.swap(0, 1);
+        let report = audit_coloring(&t, &plan, &waves);
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::WaveOrderInversion { .. })),
+            "expected WaveOrderInversion, got: {report}"
+        );
+    }
+
+    #[test]
+    fn dropped_and_duplicated_groups_are_caught() {
+        let mut rng = Rng::new(3);
+        let t = workload(&mut rng, &[24, 10, 10], 300);
+        let plan = exact_plan(&t, 8, 4, 1);
+        let coloring = plan.color_subgroups(&t);
+        let mut waves = waves_of(&coloring);
+        let victim = waves[0].pop().expect("wave 0 nonempty");
+        let report = audit_coloring(&t, &plan, &waves);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| *v == Violation::WavePartitionGap { group: victim as usize }));
+
+        let mut waves = waves_of(&coloring);
+        let dup = waves[0][0];
+        waves.last_mut().unwrap().push(dup);
+        let report = audit_coloring(&t, &plan, &waves);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| *v == Violation::WavePartitionDuplicate { group: dup as usize }));
+    }
+
+    #[test]
+    fn real_latin_schedules_audit_green() {
+        forall("auditor accepts real latin schedules", 24, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let m = 1 + rng.gen_range(5);
+            let dims: Vec<usize> = (0..order).map(|_| 5 + rng.gen_range(30)).collect();
+            let s = LatinSchedule::new(m, order);
+            let rounds: Vec<Vec<Vec<usize>>> =
+                (0..s.rounds()).map(|t| s.round_assignments(t)).collect();
+            let report = audit_latin(&dims, m, &rounds);
+            assert!(report.ok(), "{report}");
+            assert!(report.checks > 0);
+        });
+    }
+
+    #[test]
+    fn duplicated_latin_chunk_is_caught() {
+        // Mutation: give worker 1 the same mode-1 chunk as worker 0.
+        let s = LatinSchedule::new(3, 3);
+        let mut rounds: Vec<Vec<Vec<usize>>> =
+            (0..s.rounds()).map(|t| s.round_assignments(t)).collect();
+        rounds[0][1][1] = rounds[0][0][1];
+        let report = audit_latin(&[30, 30, 30], 3, &rounds);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::LatinRowOverlap { round: 0, mode: 1, worker_a: 0, worker_b: 1, .. }
+            )),
+            "expected LatinRowOverlap, got: {report}"
+        );
+        // The mutated cycle also fails coverage: the orphaned block is
+        // never visited.
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::LatinCoverageGap { .. })));
+    }
+
+    #[test]
+    fn real_grids_audit_green() {
+        forall("auditor accepts real device grids", 16, |rng| {
+            let order = 2 + rng.gen_range(2);
+            let workers = 2 + rng.gen_range(5);
+            let devices = 1 + rng.gen_range(workers.min(4));
+            let dims: Vec<usize> = (0..order).map(|_| workers + rng.gen_range(40)).collect();
+            let t = workload(rng, &dims, 300);
+            let g = DeviceGrid::try_new(
+                crate::parallel::DeviceCount::Fixed(devices),
+                workers,
+                &dims,
+            )
+            .unwrap();
+            let s = LatinSchedule::new(workers, order);
+            let report = audit_schedule_and_grid(&g, &s, &t);
+            assert!(report.ok(), "{report}");
+            assert!(report.checks > 0);
+        });
+    }
+
+    #[test]
+    fn dropped_boundary_chunk_is_caught() {
+        let dims = [40usize, 40, 40];
+        let workers = 4;
+        let t = {
+            let mut rng = Rng::new(5);
+            workload(&mut rng, &dims, 400)
+        };
+        let g = DeviceGrid::try_new(crate::parallel::DeviceCount::Fixed(2), workers, &dims).unwrap();
+        let s = LatinSchedule::new(workers, 3);
+        let mut facts = gather_grid_facts(&g, &s, &t);
+        // Mutation: drop one boundary chunk from a round that has any.
+        let (t_ix, d_ix) = (1..facts.boundaries.len())
+            .flat_map(|t| (0..facts.boundaries[t].len()).map(move |d| (t, d)))
+            .find(|&(t, d)| !facts.boundaries[t][d].is_empty())
+            .expect("some round needs remote chunks");
+        let dropped = facts.boundaries[t_ix][d_ix].pop().unwrap();
+        let report = audit_grid(&facts);
+        assert!(
+            report.violations.iter().any(|v| *v
+                == Violation::BoundaryMissing {
+                    device: d_ix,
+                    round: t_ix,
+                    mode: dropped.0,
+                    chunk: dropped.1
+                }),
+            "expected BoundaryMissing for {dropped:?}, got: {report}"
+        );
+    }
+
+    #[test]
+    fn corrupted_ownership_and_placement_are_caught() {
+        let dims = [40usize, 40, 40];
+        let t = {
+            let mut rng = Rng::new(9);
+            workload(&mut rng, &dims, 200)
+        };
+        let g = DeviceGrid::try_new(crate::parallel::DeviceCount::Fixed(2), 4, &dims).unwrap();
+        let s = LatinSchedule::new(4, 3);
+
+        // Shrink device 0's mode-0 ownership: rows fall off both the
+        // tiling and the worker-chunk union.
+        let mut facts = gather_grid_facts(&g, &s, &t);
+        facts.owned_rows[0][0].1 -= 1;
+        let report = audit_grid(&facts);
+        assert!(report.violations.iter().any(|v| matches!(v, Violation::OwnershipGap { .. })));
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| *v == Violation::OwnershipMismatch { device: 0, mode: 0 }));
+
+        // Reassign one nonzero to the wrong device.
+        let mut facts = gather_grid_facts(&g, &s, &t);
+        let k = 0;
+        facts.nnz_device[k] = 1 - facts.nnz_device[k];
+        let report = audit_grid(&facts);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::NnzDeviceMismatch { nnz: 0, .. })));
+
+        // Overlap the worker ranges.
+        let mut facts = gather_grid_facts(&g, &s, &t);
+        facts.device_workers[1].0 -= 1;
+        let report = audit_grid(&facts);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::DeviceWorkerOverlap { .. })));
+    }
+
+    #[test]
+    fn report_display_names_violations() {
+        let mut r = AuditReport::default();
+        r.violations.push(Violation::WaveRowOverlap {
+            wave: 2,
+            group_a: 1,
+            group_b: 5,
+            mode: 0,
+            row: 7,
+        });
+        let text = r.to_string();
+        assert!(text.contains("wave 2"), "{text}");
+        assert!(text.contains("row 7"), "{text}");
+        assert!(!r.ok());
+    }
+}

@@ -1,0 +1,298 @@
+//! Source lint for the crate's `unsafe` discipline, in the
+//! `bench_support::regression` style: pure string-scanning functions
+//! with unit-tested fixtures, plus one test that walks the real tree so
+//! `cargo test` *is* the CI gate — no external linter binary.
+//!
+//! Two rules, both scoped to keep the unsafe surface frozen:
+//!
+//! 1. **Containment** — only the four audited modules
+//!    ([`ALLOWED_UNSAFE_MODULES`]) may contain `unsafe` in `src/`. A new
+//!    file that introduces `unsafe` fails CI until it is explicitly
+//!    allowlisted here (and thereby pulled into the Miri/TSan/shadow
+//!    coverage). Test and bench sources may exercise the unsafe API
+//!    freely — rule 2 still applies to them.
+//! 2. **Justification** — every line of code containing the `unsafe`
+//!    token must have a `SAFETY` comment (`// SAFETY: ...` or a
+//!    `/// # Safety` doc section) on the same line or within the
+//!    [`LOOKBACK`] lines above it.
+//!
+//! The scanner is line-oriented: a line whose trimmed form starts with
+//! `//` is a comment (searched for the `SAFETY` marker, never for the
+//! token); on code lines only the part before a trailing `//` comment
+//! is searched. That is deliberately simple — string literals are not
+//! parsed — and the fixtures below pin exactly that behavior. This
+//! file itself never spells the token outside comments: fixtures build
+//! it at runtime from a placeholder.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// The only `src/` modules allowed to contain `unsafe` code: the shared
+/// factor view and its three consumers, each carrying the documented
+/// three-level disjointness contract (see `parallel/shared.rs`).
+pub const ALLOWED_UNSAFE_MODULES: &[&str] = &[
+    "src/parallel/shared.rs",
+    "src/kernel/dispatch.rs",
+    "src/parallel/worker.rs",
+    "src/algo/fasttucker.rs",
+];
+
+/// How many lines above a flagged line may carry the `SAFETY` comment.
+pub const LOOKBACK: usize = 12;
+
+/// Which rule a finding violates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LintRule {
+    /// `unsafe` in a `src/` file outside [`ALLOWED_UNSAFE_MODULES`].
+    OutsideAllowlist,
+    /// `unsafe` without a nearby `SAFETY` comment.
+    MissingSafetyComment,
+}
+
+/// One lint hit: file, 1-based line, rule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintFinding {
+    pub file: String,
+    pub line: usize,
+    pub rule: LintRule,
+}
+
+impl std::fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let what = match self.rule {
+            LintRule::OutsideAllowlist => "outside the allowlisted modules",
+            LintRule::MissingSafetyComment => "without a SAFETY comment",
+        };
+        write!(f, "{}:{}: {TOKEN} {what}", self.file, self.line)
+    }
+}
+
+/// True when the line is purely a comment (`//`, `///`, `//!`).
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// The code portion of a line: everything before a `//` comment.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// True when the line carries a safety justification marker.
+fn has_safety_marker(line: &str) -> bool {
+    line.contains("SAFETY") || line.contains("# Safety")
+}
+
+/// The token under scrutiny, spelled in two halves so this file's own
+/// code lines never contain it contiguously (the repo-walk test lints
+/// this file too).
+const TOKEN: &str = concat!("uns", "afe");
+
+/// True when `code` contains the token as a standalone word.
+fn contains_unsafe_token(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let word = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(TOKEN) {
+        let at = from + pos;
+        let pre_ok = at == 0 || !word(bytes[at - 1]);
+        let end = at + TOKEN.len();
+        let post_ok = end >= bytes.len() || !word(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// Scan one source file. `file` is its path relative to the crate root
+/// (used in findings and nothing else); `allowlisted` controls rule 1.
+pub fn scan_source(file: &str, text: &str, allowlisted: bool) -> Vec<LintFinding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut findings = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        if !contains_unsafe_token(code_part(line)) {
+            continue;
+        }
+        let lineno = idx + 1;
+        if !allowlisted {
+            findings.push(LintFinding {
+                file: file.to_string(),
+                line: lineno,
+                rule: LintRule::OutsideAllowlist,
+            });
+        }
+        let lo = idx.saturating_sub(LOOKBACK);
+        let justified = lines[lo..=idx].iter().any(|l| has_safety_marker(l));
+        if !justified {
+            findings.push(LintFinding {
+                file: file.to_string(),
+                line: lineno,
+                rule: LintRule::MissingSafetyComment,
+            });
+        }
+    }
+    findings
+}
+
+/// Walk `root` (the crate directory) and lint every `.rs` file under
+/// `src/`, `tests/`, and `benches/`. `src/` files get the allowlist
+/// rule; test and bench sources only the SAFETY-comment rule.
+pub fn scan_tree(root: &Path) -> io::Result<Vec<LintFinding>> {
+    let mut findings = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs_files(&dir, &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace(std::path::MAIN_SEPARATOR, "/");
+            let allowlisted = if rel.starts_with("src/") {
+                ALLOWED_UNSAFE_MODULES.contains(&rel.as_str())
+            } else {
+                true
+            };
+            let text = fs::read_to_string(&path)?;
+            findings.extend(scan_source(&rel, &text, allowlisted));
+        }
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fixtures spell the token as `uns@afe` so this file itself stays
+    /// clean under its own rule 1; `fix` rebuilds the real source.
+    fn fix(s: &str) -> String {
+        s.replace('@', "")
+    }
+
+    #[test]
+    fn token_matching_is_word_bounded() {
+        assert!(contains_unsafe_token(&fix("let x = uns@afe { y };")));
+        assert!(contains_unsafe_token(&fix("uns@afe fn f() {}")));
+        assert!(!contains_unsafe_token(&fix("let uns@afety = 1;")));
+        assert!(!contains_unsafe_token(&fix("call_uns@afe()")));
+        assert!(!contains_unsafe_token("perfectly safe code"));
+    }
+
+    #[test]
+    fn comment_lines_never_flag() {
+        let src = fix("// this mentions uns@afe code\n/// docs about uns@afe\nlet a = 1;\n");
+        assert_eq!(scan_source("src/x.rs", &src, false), vec![]);
+    }
+
+    #[test]
+    fn justified_block_passes_both_rules_when_allowlisted() {
+        let src = fix(
+            "fn f() {\n    // SAFETY: rows are disjoint per the wave contract.\n    \
+             let r = uns@afe { g() };\n}\n",
+        );
+        assert_eq!(scan_source("src/parallel/shared.rs", &src, true), vec![]);
+    }
+
+    #[test]
+    fn missing_safety_comment_is_flagged() {
+        let src = fix("fn f() {\n    let r = uns@afe { g() };\n}\n");
+        let findings = scan_source("src/parallel/shared.rs", &src, true);
+        assert_eq!(
+            findings,
+            vec![LintFinding {
+                file: "src/parallel/shared.rs".into(),
+                line: 2,
+                rule: LintRule::MissingSafetyComment,
+            }]
+        );
+    }
+
+    #[test]
+    fn safety_comment_beyond_lookback_does_not_count() {
+        let mut src = String::from("// SAFETY: way too far away.\n");
+        for _ in 0..LOOKBACK {
+            src.push_str("let pad = 0;\n");
+        }
+        src.push_str(&fix("let r = uns@afe { g() };\n"));
+        let findings = scan_source("src/parallel/shared.rs", &src, true);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, LintRule::MissingSafetyComment);
+    }
+
+    #[test]
+    fn doc_safety_section_justifies_an_unsafe_fn() {
+        let src = fix(
+            "/// Does raw things.\n///\n/// # Safety\n/// Caller owns the rows.\n\
+             pub uns@afe fn f() {}\n",
+        );
+        assert_eq!(scan_source("src/parallel/shared.rs", &src, true), vec![]);
+    }
+
+    #[test]
+    fn non_allowlisted_file_is_flagged_even_when_justified() {
+        let src = fix("// SAFETY: justified but misplaced.\nlet r = uns@afe { g() };\n");
+        let findings = scan_source("src/metrics/mod.rs", &src, false);
+        assert_eq!(
+            findings,
+            vec![LintFinding {
+                file: "src/metrics/mod.rs".into(),
+                line: 2,
+                rule: LintRule::OutsideAllowlist,
+            }]
+        );
+    }
+
+    #[test]
+    fn trailing_comment_code_split_is_respected() {
+        // Token only inside the trailing comment: clean.
+        let src = fix("let a = 1; // not uns@afe at all\n");
+        assert_eq!(scan_source("src/x.rs", &src, false), vec![]);
+        // Token in code, SAFETY in the same line's trailing comment.
+        let src = fix("let r = uns@afe { g() }; // SAFETY: disjoint rows.\n");
+        assert_eq!(scan_source("src/parallel/shared.rs", &src, true), vec![]);
+    }
+
+    /// The CI gate: the real tree must be clean. Runs as part of the
+    /// normal test suite, so any new `unsafe` (or one that lost its
+    /// justification) fails `cargo test` directly.
+    #[test]
+    fn repo_sources_pass_the_safety_lint() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = scan_tree(root).expect("walk crate sources");
+        assert!(
+            findings.is_empty(),
+            "{TOKEN}-discipline lint failed:\n{}",
+            findings
+                .iter()
+                .map(|f| format!("  {f}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

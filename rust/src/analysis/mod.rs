@@ -1,0 +1,40 @@
+//! Concurrency-safety analysis layer: the three-level disjointness
+//! contract of `parallel/shared.rs`, *audited by construction* instead
+//! of tested by example. Three legs:
+//!
+//! 1. **Disjointness auditor** ([`audit`]) — an independent,
+//!    first-principles checker (brute-force conflict graphs + set
+//!    algebra, sharing no code with the builders) for all three levels:
+//!    color waves ([`audit_coloring`]), Latin rounds ([`audit_latin`]),
+//!    and the device grid ([`audit_grid`]). Violations are named
+//!    [`Violation`] variants in an [`AuditReport`]. With the
+//!    `strict-audit` cargo feature the engines run it on every coloring
+//!    and every grid they build and panic on a red report; the
+//!    `audit_plan` binary runs it ad hoc on synthetic geometries.
+//! 2. **Shadow race detector** ([`shadow`]) — `shadow-ledger`-gated
+//!    instrumentation in `SharedFactors` records every row access with
+//!    full provenance `(epoch, round, worker, wave, thread, mode, row,
+//!    kind)`; the post-pass happens-before check mirrors the engine's
+//!    barrier structure (exact mode: zero same-wave or same-round
+//!    overlap; relaxed mode: a contention histogram instead of a
+//!    failure — the first measured view of hogwild contention).
+//! 3. **Unsafe-discipline lint** ([`lint`]) — a unit-tested source
+//!    scanner that fails `cargo test` when an `unsafe` block lacks a
+//!    `SAFETY` comment or a file outside the four allowlisted modules
+//!    introduces `unsafe`. CI adds Miri and ThreadSanitizer legs over
+//!    the same four modules (`.github/workflows/ci.yml`).
+//!
+//! The contract itself — why the `unsafe impl Send/Sync` on
+//! `SharedFactors` is sound — is documented once, in
+//! `parallel/shared.rs`; everything in this module checks that
+//! documentation against reality.
+
+pub mod audit;
+pub mod lint;
+pub mod shadow;
+
+pub use audit::{
+    audit_coloring, audit_grid, audit_latin, audit_schedule_and_grid, gather_grid_facts,
+    waves_of, AuditReport, GridFacts, Violation,
+};
+pub use shadow::{AccessKind, RaceViolation, ShadowLog, ShadowSession};

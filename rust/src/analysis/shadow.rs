@@ -1,0 +1,541 @@
+//! Shadow race detector for [`SharedFactors`] row accesses.
+//!
+//! The checker logic (ledger model, happens-before pass, contention
+//! histogram) always compiles so it stays unit-testable; the *hooks*
+//! inside `parallel/shared.rs`, `kernel/dispatch.rs`, and
+//! `parallel/worker.rs` only exist under the `shadow-ledger` cargo
+//! feature, and even then recording is inert until a test opens a
+//! [`ShadowSession`]. A session snapshots every row access with full
+//! provenance `(epoch, round, worker, wave, thread, mode, row, kind)`
+//! into per-thread ledgers; [`ShadowSession::finish`] drains them into a
+//! [`ShadowLog`].
+//!
+//! The happens-before model mirrors the engine's synchronization
+//! structure instead of a general vector-clock race detector — that is
+//! the point: the engine's *only* defenses are the three disjointness
+//! levels plus barriers, so the check is exactly those rules
+//! ([`ShadowLog::check`]):
+//!
+//! - **Latin level**: two different workers in the same `(epoch, round)`
+//!   must not touch the same `(mode, row)` when either side writes —
+//!   rounds are the units Latin disjointness protects, and barriers only
+//!   separate *rounds*, not workers within one.
+//! - **Wave level**: within one worker's `(epoch, round, wave)`, two
+//!   different pool threads must not touch the same row when a plain
+//!   (non-atomic) write is involved; waves are barrier-separated, so
+//!   cross-wave overlap is ordered and legal.
+//! - **Mixed access**: atomic (relaxed hogwild) and plain access to the
+//!   same row from different threads of one wave is a torn-model bug
+//!   even though each side is individually "safe".
+//!
+//! Atomic/atomic overlap is *not* a violation — it is hogwild by design;
+//! [`ShadowLog::overlap_histogram`] turns it into the first measured
+//! view of actual relaxed-mode contention (how many distinct threads
+//! hit the same row within one wave).
+//!
+//! [`SharedFactors`]: crate::parallel::SharedFactors
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// How a row was touched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AccessKind {
+    /// Shared read (`SharedFactors::row`).
+    Read,
+    /// Exclusive plain write (`SharedFactors::row_mut`).
+    Write,
+    /// Relaxed atomic access (`SharedFactors::row_atomic`).
+    Atomic,
+}
+
+impl AccessKind {
+    fn writes(self) -> bool {
+        !matches!(self, AccessKind::Read)
+    }
+}
+
+/// Where an access came from, in engine coordinates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Provenance {
+    pub epoch: u32,
+    pub round: u32,
+    pub worker: u32,
+    pub wave: u32,
+    pub thread: u32,
+}
+
+/// One recorded row access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub mode: u32,
+    pub row: u32,
+    pub kind: AccessKind,
+    pub prov: Provenance,
+}
+
+/// A race the wave-structured happens-before pass found.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RaceViolation {
+    /// Two workers of one round conflict on a row (Latin level broken).
+    LatinRace { epoch: u32, round: u32, mode: u32, row: u32, worker_a: u32, worker_b: u32 },
+    /// Two pool threads of one wave conflict on a row with a plain
+    /// write involved (wave level broken).
+    WaveRace { epoch: u32, round: u32, worker: u32, wave: u32, mode: u32, row: u32 },
+    /// Atomic and plain access to one row from different threads of one
+    /// wave.
+    MixedAccessRace { epoch: u32, round: u32, worker: u32, wave: u32, mode: u32, row: u32 },
+}
+
+// ---------------------------------------------------------------------
+// Recording machinery. Global state is deliberately tiny: an enabled
+// flag, a session id (so stale thread-local ledgers from a previous
+// session re-register instead of leaking records across sessions), the
+// engine epoch/round (set from the coordinator thread), and a registry
+// of every thread's ledger.
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SESSION_ID: AtomicU64 = AtomicU64::new(0);
+static EPOCH: AtomicU32 = AtomicU32::new(0);
+static ROUND: AtomicU32 = AtomicU32::new(0);
+static REGISTRY: Mutex<Vec<Arc<Mutex<Vec<Access>>>>> = Mutex::new(Vec::new());
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+/// Per-thread placement coordinates (worker / wave / pool-thread).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThreadCtx {
+    pub worker: u32,
+    pub wave: u32,
+    pub thread: u32,
+}
+
+thread_local! {
+    static CTX: Cell<ThreadCtx> = Cell::new(ThreadCtx::default());
+    static LEDGER: RefCell<Option<(u64, Arc<Mutex<Vec<Access>>>)>> = RefCell::new(None);
+}
+
+/// Set the engine epoch (coordinator thread, start of `train_epoch`).
+pub fn set_epoch(epoch: usize) {
+    EPOCH.store(epoch as u32, Ordering::Relaxed);
+}
+
+/// Set the Latin round (coordinator thread, start of each round).
+pub fn set_round(round: usize) {
+    ROUND.store(round as u32, Ordering::Relaxed);
+}
+
+/// Bind the current thread to Latin worker `worker` (round spawn).
+pub fn set_worker(worker: usize) {
+    CTX.with(|c| c.set(ThreadCtx { worker: worker as u32, wave: 0, thread: 0 }));
+}
+
+/// Set the current color wave on this thread (pool wave loop).
+pub fn set_wave(wave: usize) {
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        ctx.wave = wave as u32;
+        c.set(ctx);
+    });
+}
+
+/// Adopt a parent worker's context on a pool thread, tagging it with
+/// the pool-thread index.
+pub fn adopt(parent: ThreadCtx, thread: usize) {
+    CTX.with(|c| c.set(ThreadCtx { thread: thread as u32, ..parent }));
+}
+
+/// Snapshot this thread's context (captured before spawning the pool).
+pub fn current_ctx() -> ThreadCtx {
+    CTX.with(|c| c.get())
+}
+
+/// Record one row access. No-op unless a [`ShadowSession`] is active.
+#[inline]
+pub fn record(mode: usize, row: usize, kind: AccessKind) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let sid = SESSION_ID.load(Ordering::Relaxed);
+    let ctx = current_ctx();
+    let access = Access {
+        mode: mode as u32,
+        row: row as u32,
+        kind,
+        prov: Provenance {
+            epoch: EPOCH.load(Ordering::Relaxed),
+            round: ROUND.load(Ordering::Relaxed),
+            worker: ctx.worker,
+            wave: ctx.wave,
+            thread: ctx.thread,
+        },
+    };
+    LEDGER.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let stale = match &*slot {
+            Some((id, _)) => *id != sid,
+            None => true,
+        };
+        if stale {
+            let ledger: Arc<Mutex<Vec<Access>>> = Arc::new(Mutex::new(Vec::new()));
+            REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(ledger.clone());
+            *slot = Some((sid, ledger));
+        }
+        if let Some((_, ledger)) = &*slot {
+            ledger.lock().unwrap_or_else(|e| e.into_inner()).push(access);
+        }
+    });
+}
+
+/// An active recording session. Sessions are process-global and
+/// serialized by an internal lock, so concurrently running tests queue
+/// up instead of polluting each other's ledgers.
+pub struct ShadowSession {
+    _serialize: MutexGuard<'static, ()>,
+}
+
+impl ShadowSession {
+    /// Start recording. Blocks until any other session finishes.
+    pub fn begin() -> ShadowSession {
+        let guard = SESSION_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        SESSION_ID.fetch_add(1, Ordering::Relaxed);
+        EPOCH.store(0, Ordering::Relaxed);
+        ROUND.store(0, Ordering::Relaxed);
+        ENABLED.store(true, Ordering::SeqCst);
+        ShadowSession { _serialize: guard }
+    }
+
+    /// Stop recording and drain every thread's ledger. Call after the
+    /// instrumented run has joined all its threads.
+    pub fn finish(self) -> ShadowLog {
+        ENABLED.store(false, Ordering::SeqCst);
+        let ledgers = std::mem::take(&mut *REGISTRY.lock().unwrap_or_else(|e| e.into_inner()));
+        let mut records = Vec::new();
+        for ledger in ledgers {
+            records.append(&mut ledger.lock().unwrap_or_else(|e| e.into_inner()));
+        }
+        ShadowLog { records }
+    }
+}
+
+/// Everything one session recorded, plus the analysis passes.
+#[derive(Clone, Debug, Default)]
+pub struct ShadowLog {
+    pub records: Vec<Access>,
+}
+
+impl ShadowLog {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Distinct `(mode, row)` pairs that saw a write-ish access — the
+    /// provenance row-set that must be identical across thread counts
+    /// in exact mode.
+    pub fn written_rows(&self) -> BTreeSet<(u32, u32)> {
+        self.records
+            .iter()
+            .filter(|a| a.kind.writes())
+            .map(|a| (a.mode, a.row))
+            .collect()
+    }
+
+    /// The wave-structured happens-before pass (see module docs).
+    pub fn check(&self) -> Vec<RaceViolation> {
+        let mut violations = Vec::new();
+        let mut reported: BTreeSet<RaceViolation> = BTreeSet::new();
+        let mut report = |v: RaceViolation, sink: &mut Vec<RaceViolation>| {
+            // Dedup: one report per site, not per access pair.
+            if reported.insert(v.clone()) {
+                sink.push(v);
+            }
+        };
+
+        // Group by (epoch, round, mode, row): the granularity every
+        // rule below quantifies over.
+        let mut sites: BTreeMap<(u32, u32, u32, u32), Vec<&Access>> = BTreeMap::new();
+        for a in &self.records {
+            sites
+                .entry((a.prov.epoch, a.prov.round, a.mode, a.row))
+                .or_default()
+                .push(a);
+        }
+
+        for (&(epoch, round, mode, row), accesses) in &sites {
+            // Latin level: per-worker write/any-access summary.
+            let mut per_worker: BTreeMap<u32, bool> = BTreeMap::new();
+            for a in accesses {
+                let writes = per_worker.entry(a.prov.worker).or_insert(false);
+                *writes |= a.kind.writes();
+            }
+            if per_worker.len() > 1 {
+                let workers: Vec<(u32, bool)> =
+                    per_worker.iter().map(|(&w, &wr)| (w, wr)).collect();
+                for (i, &(wa, wra)) in workers.iter().enumerate() {
+                    for &(wb, wrb) in workers.iter().skip(i + 1) {
+                        if wra || wrb {
+                            report(
+                                RaceViolation::LatinRace {
+                                    epoch,
+                                    round,
+                                    mode,
+                                    row,
+                                    worker_a: wa,
+                                    worker_b: wb,
+                                },
+                                &mut violations,
+                            );
+                        }
+                    }
+                }
+            }
+
+            // Wave level: within (worker, wave), cross-thread overlap.
+            let mut per_wave: BTreeMap<(u32, u32), Vec<&&Access>> = BTreeMap::new();
+            for a in accesses {
+                per_wave.entry((a.prov.worker, a.prov.wave)).or_default().push(a);
+            }
+            for (&(worker, wave), group) in &per_wave {
+                let threads: BTreeSet<u32> = group.iter().map(|a| a.prov.thread).collect();
+                if threads.len() < 2 {
+                    continue;
+                }
+                // Plain write from one thread + anything from another.
+                let plain_write_threads: BTreeSet<u32> = group
+                    .iter()
+                    .filter(|a| a.kind == AccessKind::Write)
+                    .map(|a| a.prov.thread)
+                    .collect();
+                let cross_thread_plain_write = plain_write_threads
+                    .iter()
+                    .any(|t| group.iter().any(|a| a.prov.thread != *t));
+                if cross_thread_plain_write {
+                    report(
+                        RaceViolation::WaveRace { epoch, round, worker, wave, mode, row },
+                        &mut violations,
+                    );
+                }
+                // Atomic + non-atomic from different threads.
+                let atomic_threads: BTreeSet<u32> = group
+                    .iter()
+                    .filter(|a| a.kind == AccessKind::Atomic)
+                    .map(|a| a.prov.thread)
+                    .collect();
+                let mixed = atomic_threads.iter().any(|t| {
+                    group
+                        .iter()
+                        .any(|a| a.kind != AccessKind::Atomic && a.prov.thread != *t)
+                });
+                if mixed {
+                    report(
+                        RaceViolation::MixedAccessRace { epoch, round, worker, wave, mode, row },
+                        &mut violations,
+                    );
+                }
+            }
+        }
+        violations
+    }
+
+    /// Relaxed-contention histogram: for every `(epoch, round, worker,
+    /// wave, mode, row)` site touched *atomically* by `k ≥ 2` distinct
+    /// threads, bump bucket `k`. Empty means the run never actually
+    /// contended (or never used the atomic path).
+    pub fn overlap_histogram(&self) -> BTreeMap<u32, u64> {
+        let mut threads_per_site: BTreeMap<(u32, u32, u32, u32, u32, u32), BTreeSet<u32>> =
+            BTreeMap::new();
+        for a in &self.records {
+            if a.kind != AccessKind::Atomic {
+                continue;
+            }
+            threads_per_site
+                .entry((a.prov.epoch, a.prov.round, a.prov.worker, a.prov.wave, a.mode, a.row))
+                .or_default()
+                .insert(a.prov.thread);
+        }
+        let mut hist = BTreeMap::new();
+        for threads in threads_per_site.values() {
+            if threads.len() >= 2 {
+                *hist.entry(threads.len() as u32).or_insert(0u64) += 1;
+            }
+        }
+        hist
+    }
+}
+
+// `RaceViolation` needs an order for the dedup set.
+impl PartialOrd for RaceViolation {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RaceViolation {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        fn key(v: &RaceViolation) -> (u8, u32, u32, u32, u32, u32, u32) {
+            match *v {
+                RaceViolation::LatinRace { epoch, round, mode, row, worker_a, worker_b } => {
+                    (0, epoch, round, mode, row, worker_a, worker_b)
+                }
+                RaceViolation::WaveRace { epoch, round, worker, wave, mode, row } => {
+                    (1, epoch, round, worker, wave, mode, row)
+                }
+                RaceViolation::MixedAccessRace { epoch, round, worker, wave, mode, row } => {
+                    (2, epoch, round, worker, wave, mode, row)
+                }
+            }
+        }
+        key(self).cmp(&key(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[allow(clippy::too_many_arguments)]
+    fn acc(
+        kind: AccessKind,
+        mode: u32,
+        row: u32,
+        epoch: u32,
+        round: u32,
+        worker: u32,
+        wave: u32,
+        thread: u32,
+    ) -> Access {
+        Access { mode, row, kind, prov: Provenance { epoch, round, worker, wave, thread } }
+    }
+
+    #[test]
+    fn disjoint_structured_accesses_are_race_free() {
+        // Two workers on different rows; two waves of one worker on the
+        // same row (barrier-ordered); two threads of one wave on
+        // different rows.
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Write, 0, 1, 0, 0, 0, 0, 0),
+                acc(AccessKind::Write, 0, 2, 0, 0, 1, 0, 0),
+                acc(AccessKind::Write, 1, 5, 0, 0, 0, 0, 0),
+                acc(AccessKind::Write, 1, 5, 0, 0, 0, 1, 1),
+                acc(AccessKind::Read, 2, 9, 0, 0, 0, 0, 0),
+                acc(AccessKind::Read, 2, 9, 0, 0, 0, 0, 1),
+            ],
+        };
+        assert_eq!(log.check(), vec![]);
+        assert!(log.overlap_histogram().is_empty());
+    }
+
+    #[test]
+    fn cross_worker_same_round_write_is_a_latin_race() {
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Write, 1, 7, 0, 3, 0, 0, 0),
+                acc(AccessKind::Read, 1, 7, 0, 3, 2, 0, 0),
+            ],
+        };
+        let v = log.check();
+        assert_eq!(
+            v,
+            vec![RaceViolation::LatinRace {
+                epoch: 0,
+                round: 3,
+                mode: 1,
+                row: 7,
+                worker_a: 0,
+                worker_b: 2
+            }]
+        );
+        // Same overlap in *different* rounds is barrier-ordered: legal.
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Write, 1, 7, 0, 3, 0, 0, 0),
+                acc(AccessKind::Read, 1, 7, 0, 4, 2, 0, 0),
+            ],
+        };
+        assert_eq!(log.check(), vec![]);
+    }
+
+    #[test]
+    fn same_wave_cross_thread_write_is_a_wave_race() {
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Write, 0, 4, 1, 0, 0, 2, 0),
+                acc(AccessKind::Read, 0, 4, 1, 0, 0, 2, 1),
+            ],
+        };
+        assert_eq!(
+            log.check(),
+            vec![RaceViolation::WaveRace { epoch: 1, round: 0, worker: 0, wave: 2, mode: 0, row: 4 }]
+        );
+        // Same row, same wave, same *thread*: sequential, legal.
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Write, 0, 4, 1, 0, 0, 2, 1),
+                acc(AccessKind::Read, 0, 4, 1, 0, 0, 2, 1),
+            ],
+        };
+        assert_eq!(log.check(), vec![]);
+    }
+
+    #[test]
+    fn atomic_overlap_feeds_histogram_not_violations() {
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Atomic, 1, 3, 0, 0, 0, 0, 0),
+                acc(AccessKind::Atomic, 1, 3, 0, 0, 0, 0, 1),
+                acc(AccessKind::Atomic, 1, 3, 0, 0, 0, 0, 2),
+                acc(AccessKind::Atomic, 2, 8, 0, 0, 0, 0, 0),
+            ],
+        };
+        assert_eq!(log.check(), vec![]);
+        let hist = log.overlap_histogram();
+        assert_eq!(hist.get(&3), Some(&1));
+        assert_eq!(hist.len(), 1);
+    }
+
+    #[test]
+    fn mixed_atomic_plain_access_is_reported() {
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Atomic, 1, 3, 0, 0, 0, 0, 0),
+                acc(AccessKind::Write, 1, 3, 0, 0, 0, 0, 1),
+            ],
+        };
+        let v = log.check();
+        assert!(v.contains(&RaceViolation::MixedAccessRace {
+            epoch: 0,
+            round: 0,
+            worker: 0,
+            wave: 0,
+            mode: 1,
+            row: 3
+        }));
+    }
+
+    // NOTE: session-based tests (begin/record/finish round trips) live
+    // in `tests/shadow.rs`: with the `shadow-ledger` feature on, the
+    // lib test binary's *other* tests drive instrumented engines on
+    // parallel libtest threads, so an open session here would capture
+    // their accesses too. The integration binary owns its process.
+
+    #[test]
+    fn written_rows_collects_write_ish_sites() {
+        let log = ShadowLog {
+            records: vec![
+                acc(AccessKind::Read, 0, 1, 0, 0, 0, 0, 0),
+                acc(AccessKind::Write, 0, 2, 0, 0, 0, 0, 0),
+                acc(AccessKind::Atomic, 1, 3, 0, 0, 0, 0, 0),
+            ],
+        };
+        let rows = log.written_rows();
+        assert_eq!(rows, [(0, 2), (1, 3)].into_iter().collect());
+    }
+}

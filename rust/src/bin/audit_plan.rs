@@ -1,0 +1,162 @@
+//! `audit_plan` — run the first-principles disjointness auditor
+//! (`fasttucker::analysis::audit`) over a synthetic workload, ad hoc:
+//! build a plan + sub-group coloring and a device grid + Latin schedule
+//! for the requested geometry, audit all three contract levels, print
+//! the report, and exit nonzero on any violation.
+//!
+//! ```text
+//! audit_plan [--dims 512,64,48] [--nnz 4000] [--workers 4] [--devices 2]
+//!            [--cap 64] [--tile 8] [--split 2] [--seed 7]
+//! ```
+//!
+//! This is the same checker the `strict-audit` cargo feature wires into
+//! the engines; the binary exists so a geometry can be audited without
+//! running a training epoch (e.g. when bisecting a scheduler change).
+
+use fasttucker::analysis::{audit_coloring, audit_schedule_and_grid, waves_of, AuditReport};
+use fasttucker::data::synth;
+use fasttucker::kernel::{BatchPlan, PlanParams};
+use fasttucker::parallel::{DeviceCount, DeviceGrid, LatinSchedule};
+use fasttucker::util::Rng;
+
+struct Opts {
+    dims: Vec<usize>,
+    nnz: usize,
+    workers: usize,
+    devices: usize,
+    cap: usize,
+    tile: usize,
+    split: usize,
+    seed: u64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            dims: vec![512, 64, 48],
+            nnz: 4000,
+            workers: 4,
+            devices: 2,
+            cap: 64,
+            tile: 8,
+            split: 2,
+            seed: 7,
+        }
+    }
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts::default();
+    let mut args = std::env::args().skip(1);
+    while let Some(flag) = args.next() {
+        if flag == "--help" || flag == "-h" {
+            println!(
+                "audit_plan [--dims D0,D1,...] [--nnz N] [--workers M] [--devices D] \
+                 [--cap C] [--tile T] [--split S] [--seed K]"
+            );
+            std::process::exit(0);
+        }
+        let value = args
+            .next()
+            .ok_or_else(|| format!("{flag} expects a value"))?;
+        let usize_of = |v: &str| {
+            v.parse::<usize>()
+                .map_err(|_| format!("{flag} expects an integer, got {v:?}"))
+        };
+        match flag.as_str() {
+            "--dims" => {
+                opts.dims = value
+                    .split(',')
+                    .map(|p| {
+                        p.trim()
+                            .parse::<usize>()
+                            .map_err(|_| format!("--dims expects integers, got {p:?}"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                if opts.dims.len() < 2 || opts.dims.iter().any(|&d| d == 0) {
+                    return Err(format!("--dims needs >= 2 nonzero extents, got {value:?}"));
+                }
+            }
+            "--nnz" => opts.nnz = usize_of(&value)?.max(1),
+            "--workers" => opts.workers = usize_of(&value)?.max(1),
+            "--devices" => opts.devices = usize_of(&value)?.max(1),
+            "--cap" => opts.cap = usize_of(&value)?.max(1),
+            "--tile" => opts.tile = usize_of(&value)?.max(1),
+            "--split" => opts.split = usize_of(&value)?.max(1),
+            "--seed" => opts.seed = usize_of(&value)? as u64,
+            other => return Err(format!("unknown flag {other:?} (see --help)")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let mut rng = Rng::new(opts.seed);
+    let tensor = synth::random_uniform(&mut rng, &opts.dims, opts.nnz, 1.0, 5.0);
+    println!(
+        "workload: dims={:?} nnz={} workers={} devices={} cap={} tile={} split={} seed={}",
+        opts.dims,
+        tensor.nnz(),
+        opts.workers,
+        opts.devices,
+        opts.cap,
+        opts.tile,
+        opts.split,
+        opts.seed
+    );
+
+    let mut report = AuditReport::default();
+
+    // Level 2: exact-mode sub-group coloring over the full-tensor plan.
+    let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+    let params = PlanParams::tiled(opts.cap, opts.tile).with_split(opts.split);
+    let plan = BatchPlan::build_params(&tensor, &ids, params);
+    let coloring = plan.color_subgroups(&tensor);
+    let waves = waves_of(&coloring);
+    let r = audit_coloring(&tensor, &plan, &waves);
+    println!(
+        "coloring: {} sub-groups in {} waves — {}",
+        plan.n_groups(),
+        waves.len(),
+        if r.ok() { "clean" } else { "VIOLATIONS" }
+    );
+    report.merge(r);
+
+    // Levels 0 + 1: device grid and the Latin schedule it coarsens.
+    let schedule = match LatinSchedule::try_new(opts.workers, opts.dims.len()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: cannot build Latin schedule: {e}");
+            std::process::exit(2);
+        }
+    };
+    let grid = match DeviceGrid::try_new(DeviceCount::Fixed(opts.devices), opts.workers, &opts.dims) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: cannot build device grid: {e}");
+            std::process::exit(2);
+        }
+    };
+    let r = audit_schedule_and_grid(&grid, &schedule, &tensor);
+    println!(
+        "grid/schedule: {} devices x {} workers, {} rounds — {}",
+        grid.devices(),
+        opts.workers,
+        schedule.rounds(),
+        if r.ok() { "clean" } else { "VIOLATIONS" }
+    );
+    report.merge(r);
+
+    print!("{report}");
+    if !report.ok() {
+        std::process::exit(1);
+    }
+}

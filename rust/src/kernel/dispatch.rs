@@ -173,9 +173,10 @@ impl TapePtrs {
     /// Copy one finished group's per-sample values into its plan-order
     /// slots. `off` is the group's plan offset, `b` its length.
     ///
-    /// SAFETY: caller guarantees exclusive ownership of the range (see
-    /// the struct-level contract) and that the tapes were sized for the
-    /// plan (`with_core` ⇒ `w`/`a` tapes sized too).
+    /// # Safety
+    /// Caller guarantees exclusive ownership of the range (see the
+    /// struct-level SAFETY contract) and that the tapes were sized for
+    /// the plan (`with_core` ⇒ `w`/`a` tapes sized too).
     unsafe fn record(
         &self,
         off: usize,
@@ -186,18 +187,24 @@ impl TapePtrs {
         r: usize,
         j: usize,
     ) {
-        std::ptr::copy_nonoverlapping(ws.e.as_ptr(), self.e.add(off), b);
-        if with_core {
-            std::ptr::copy_nonoverlapping(
-                ws.w_panel.as_ptr(),
-                self.w.add(off * order * r),
-                b * order * r,
-            );
-            std::ptr::copy_nonoverlapping(
-                ws.a_panel.as_ptr(),
-                self.a.add(off * order * j),
-                b * order * j,
-            );
+        // SAFETY: source panels hold >= b (resp. b·order·r, b·order·j)
+        // initialized elements for the group just executed; the
+        // destination ranges are exclusively owned per the fn contract
+        // and in-bounds because the tapes were sized for the plan.
+        unsafe {
+            std::ptr::copy_nonoverlapping(ws.e.as_ptr(), self.e.add(off), b);
+            if with_core {
+                std::ptr::copy_nonoverlapping(
+                    ws.w_panel.as_ptr(),
+                    self.w.add(off * order * r),
+                    b * order * r,
+                );
+                std::ptr::copy_nonoverlapping(
+                    ws.a_panel.as_ptr(),
+                    self.a.add(off * order * j),
+                    b * order * j,
+                );
+            }
         }
     }
 }
@@ -434,8 +441,12 @@ impl DispatchPool {
             let cursors: Vec<AtomicUsize> =
                 (0..coloring.n_waves()).map(|_| AtomicUsize::new(0)).collect();
             let barrier = WaveBarrier::new(n_threads);
+            // Shadow-ledger provenance: pool threads inherit the worker
+            // coordinates of the thread that owns this pool.
+            #[cfg(feature = "shadow-ledger")]
+            let parent_ctx = crate::analysis::shadow::current_ctx();
             std::thread::scope(|scope| {
-                for ws in self.workspaces.iter_mut() {
+                for (_t, ws) in self.workspaces.iter_mut().enumerate() {
                     let tape = &tape;
                     let cursors = &cursors;
                     let barrier = &barrier;
@@ -445,8 +456,12 @@ impl DispatchPool {
                         // the others bail instead of deadlocking (the
                         // panic then propagates through the scope join).
                         let _poison = PoisonGuard(barrier);
+                        #[cfg(feature = "shadow-ledger")]
+                        crate::analysis::shadow::adopt(parent_ctx, _t);
                         let mut access = make_access();
                         for (w, cursor) in cursors.iter().enumerate() {
+                            #[cfg(feature = "shadow-ledger")]
+                            crate::analysis::shadow::set_wave(w);
                             let full = coloring.wave(w);
                             let lo = full.partition_point(|&g| (g as usize) < g_lo);
                             let hi = full.partition_point(|&g| (g as usize) < g_hi);
@@ -782,6 +797,88 @@ mod tests {
             {
                 assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged");
             }
+        }
+    }
+
+    /// Miri anchor (tiny on purpose — the interpreter is ~1000x slower
+    /// than native): pooled exact dispatch over a colored split plan on a
+    /// minimal geometry, bitwise against sequential `run_plan`. CI's Miri
+    /// leg runs `cargo miri test --lib -- unsafe_access_`, i.e. exactly
+    /// the `unsafe_access_*` tests here and in `parallel::shared`.
+    #[test]
+    fn unsafe_access_pooled_exact_smoke() {
+        let mut rng = Rng::new(21);
+        let dims = vec![24usize, 6, 5];
+        let tensor = synth::random_uniform(&mut rng, &dims, 40, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 3, 3);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let plan =
+            BatchPlan::build_params(&tensor, &ids, PlanParams::tiled(8, 2).with_split(2));
+        let coloring = plan.color_subgroups(&tensor);
+
+        let mut f_seq = model.factors.clone();
+        let mut seq_ws = BatchWorkspace::new(3, 3, 3, 8);
+        let st_seq = batched::run_plan(
+            &mut seq_ws, &tensor, &plan, &core, &[], CoreLayout::Packed, &mut f_seq, 0.01,
+            0.001, true, None,
+        );
+
+        let mut f_pool = model.factors.clone();
+        let mut pool = DispatchPool::new(2, 3, 3, 3, 8);
+        let st_pool = {
+            let shared = SharedFactors::new(&mut f_pool);
+            // SAFETY: exact coloring waves have disjoint row footprints.
+            pool.execute(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { SharedRowAccess::new(&shared) },
+                0.01, 0.001, true, None,
+            )
+        };
+        assert_eq!(st_seq.samples, st_pool.samples);
+        assert_eq!(st_seq.sse.to_bits(), st_pool.sse.to_bits());
+        for n in 0..3 {
+            for (a, b) in f_seq.mat(n).data().iter().zip(f_pool.mat(n).data().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged");
+            }
+        }
+    }
+
+    /// Miri anchor, relaxed leg: hogwild single-wave dispatch on the same
+    /// tiny geometry — every sample executed once, results finite.
+    #[test]
+    fn unsafe_access_pooled_relaxed_smoke() {
+        let mut rng = Rng::new(22);
+        let dims = vec![24usize, 6, 5];
+        let tensor = synth::random_uniform(&mut rng, &dims, 40, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 3, 3);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        let plan = BatchPlan::build_params(
+            &tensor, &ids, PlanParams::relaxed(8, 2).with_split(2),
+        );
+        let coloring = SubGroupColoring::single_wave(plan.n_groups());
+        let mut factors = model.factors.clone();
+        let mut pool = DispatchPool::new(2, 3, 3, 3, 8);
+        let st = {
+            let shared = SharedFactors::new(&mut factors);
+            // SAFETY: hogwild opt-in — concurrent row access goes through
+            // the relaxed-atomic path.
+            pool.execute(
+                &tensor, &plan, &coloring, &core, &[], CoreLayout::Packed,
+                || unsafe { RelaxedRowAccess::new(&shared) },
+                0.005, 0.001, true, None,
+            )
+        };
+        assert_eq!(st.samples, ids.len());
+        for n in 0..3 {
+            assert!(factors.mat(n).data().iter().all(|v| v.is_finite()));
         }
     }
 }

@@ -21,6 +21,12 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a bench target.
 
+// Every `unsafe` operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own SAFETY comment (the fn-level contract
+// covers the caller, not the body) — enforced crate-wide, audited by
+// `analysis::lint`.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod util;
 pub mod tensor;
 pub mod data;
@@ -30,6 +36,7 @@ pub mod kernel;
 pub mod algo;
 pub mod sched;
 pub mod parallel;
+pub mod analysis;
 pub mod metrics;
 pub mod config;
 pub mod runtime;

@@ -380,6 +380,12 @@ mod tests {
             let dims: Vec<usize> = (0..order).map(|_| w + rng.gen_range(20)).collect();
             let g = grid(d, w, &dims);
             let s = LatinSchedule::new(w, order);
+            // The independent level-0/1 auditor must agree with the
+            // hand-rolled complement check below (ISSUE 6 tentpole).
+            let t = synth::random_uniform(rng, &dims, 200, 1.0, 5.0);
+            let report = crate::analysis::audit_schedule_and_grid(&g, &s, &t);
+            assert!(report.ok(), "auditor rejected a real grid: {report}");
+            assert!(report.checks > 0);
             for round in 0..s.rounds() {
                 for dev in 0..d {
                     let boundary: std::collections::HashSet<(usize, usize)> =

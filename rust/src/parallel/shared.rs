@@ -45,6 +45,16 @@
 //! [`RelaxedRowAccess`] (relaxed-atomic element loads/stores), so racing
 //! updates can lose writes but are well-defined — never the aliasing
 //! `&mut` UB the plain [`SharedRowAccess`] path would incur.
+//!
+//! This module is the **single authoritative statement** of the
+//! contract; the `unsafe impl Send/Sync` below and every `# Safety`
+//! section cite it. It is checked from outside by
+//! [`crate::analysis`]: the disjointness auditor re-derives all three
+//! levels from first principles (`strict-audit` runs it on every
+//! coloring/grid the engines build), and the `shadow-ledger` feature
+//! compiles provenance hooks into the three row accessors so the shadow
+//! race detector can replay a run's accesses against the wave/round
+//! structure.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -66,12 +76,34 @@ pub struct SharedFactors {
     cols: usize,
 }
 
-// SAFETY: all mutation goes through `row_mut_unchecked`, whose contract
-// (disjoint rows across threads within a round) is enforced by the Latin
-// schedule; reads of rows owned by other workers do not occur within a
-// round because every mode chunk a worker reads is also one it owns.
+// SAFETY: `SharedFactors` is a bag of raw pointers into factor storage
+// the constructor borrowed mutably, so the aliasing rules hinge entirely
+// on the three-level disjointness contract in the module docs:
+//
+// * `Send` — the view holds no thread-affine state; moving it (or a
+//   reference) to another thread moves only pointers whose pointees the
+//   caller keeps alive across the thread scope (constructor contract).
+// * `Sync` — concurrent `&SharedFactors` access is sound because every
+//   mutation goes through `row_mut` (level-1 Latin ownership + level-2
+//   wave disjointness ⇒ one thread per row at a time), every read
+//   through `row` targets rows the reading worker owns in the current
+//   round, and hogwild mode swaps BOTH sides to the `row_atomic` path —
+//   racy but atomic, never a plain-access data race.
+//
+// The contract is verified from outside: `analysis::audit` re-derives
+// the row-disjointness of every coloring/schedule/grid the engines
+// build (`strict-audit`), and `analysis::shadow` checks recorded
+// accesses against the wave structure (`shadow-ledger`).
+//
+// SAFETY: the `Sync` bullet above.
 unsafe impl Sync for SharedFactors {}
+// SAFETY: see the `Sync` justification above (`Send` bullet).
 unsafe impl Send for SharedFactors {}
+
+// The hogwild path reinterprets `*mut f32` as `&[AtomicU32]`; that is
+// only layout-sound while the two types agree exactly.
+const _: () = assert!(std::mem::size_of::<f32>() == std::mem::size_of::<AtomicU32>());
+const _: () = assert!(std::mem::align_of::<f32>() == std::mem::align_of::<AtomicU32>());
 
 impl SharedFactors {
     /// Wrap `factors`; the borrow is held for `'_`'s scope by the caller
@@ -101,8 +133,13 @@ impl SharedFactors {
     /// whenever `(n, i)` lies inside the calling worker's round assignment.
     #[inline]
     pub unsafe fn row(&self, n: usize, i: usize) -> &[f32] {
-        debug_assert!(i < self.rows[n]);
-        std::slice::from_raw_parts(self.ptrs[n].add(i * self.cols), self.cols)
+        debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
+        debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
+        #[cfg(feature = "shadow-ledger")]
+        crate::analysis::shadow::record(n, i, crate::analysis::shadow::AccessKind::Read);
+        // SAFETY: in-bounds by the asserts above (callers index real
+        // factor geometry); no concurrent writer per the fn contract.
+        unsafe { std::slice::from_raw_parts(self.ptrs[n].add(i * self.cols), self.cols) }
     }
 
     /// Mutable row access; same contract as [`Self::row`] plus exclusivity.
@@ -113,8 +150,14 @@ impl SharedFactors {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn row_mut(&self, n: usize, i: usize) -> &mut [f32] {
-        debug_assert!(i < self.rows[n]);
-        std::slice::from_raw_parts_mut(self.ptrs[n].add(i * self.cols), self.cols)
+        debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
+        debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
+        #[cfg(feature = "shadow-ledger")]
+        crate::analysis::shadow::record(n, i, crate::analysis::shadow::AccessKind::Write);
+        // SAFETY: in-bounds by the asserts above; the fn contract makes
+        // this thread the row's unique owner, so minting `&mut` cannot
+        // alias another live reference.
+        unsafe { std::slice::from_raw_parts_mut(self.ptrs[n].add(i * self.cols), self.cols) }
     }
 
     /// Row `(n, i)` as relaxed-atomic words (f32 bit patterns) — the
@@ -127,13 +170,20 @@ impl SharedFactors {
     /// — mixing the two access modes on one row is a data race again.
     #[inline]
     pub unsafe fn row_atomic(&self, n: usize, i: usize) -> &[AtomicU32] {
-        debug_assert!(i < self.rows[n]);
-        // f32 and AtomicU32 share size and alignment; the factor storage
-        // outlives `self` per the constructor's contract.
-        std::slice::from_raw_parts(
-            self.ptrs[n].add(i * self.cols) as *const AtomicU32,
-            self.cols,
-        )
+        debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
+        debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
+        #[cfg(feature = "shadow-ledger")]
+        crate::analysis::shadow::record(n, i, crate::analysis::shadow::AccessKind::Atomic);
+        // SAFETY: in-bounds by the asserts above; f32 and AtomicU32
+        // share size and alignment (const-asserted at module level); the
+        // factor storage outlives `self` per the constructor's contract,
+        // and the fn contract excludes concurrent plain references.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.ptrs[n].add(i * self.cols) as *const AtomicU32,
+                self.cols,
+            )
+        }
     }
 }
 
@@ -256,7 +306,11 @@ impl crate::kernel::FactorAccess for RelaxedRowAccess<'_> {
 ///
 /// `stats.threads`/`stats.waves` record what actually executed (both
 /// stay at their builder defaults — 1/0 — on the sequential path, even
-/// when a coloring was computed but rejected by the gate).
+/// when a coloring was computed but rejected by the gate). A *relaxed*
+/// plan that falls to the sequential path despite a multi-thread pool
+/// (≤ 1 sub-group: degenerate shard geometry) additionally sets
+/// `stats.degraded` — the caller asked for hogwild and got exact-style
+/// sequential access, which is safe but worth surfacing.
 ///
 /// Cost note: with `threads > 1` in exact mode, the coloring pass (one
 /// O(plan footprint) sweep, comparable to plan construction) runs on
@@ -289,11 +343,28 @@ pub unsafe fn dispatch_plan(
         match exactness {
             Exactness::Exact => {
                 let c = plan.color_subgroups_with_scratch(tensor, pool.color_scratch_mut());
+                #[cfg(feature = "strict-audit")]
+                crate::analysis::audit_coloring(
+                    tensor,
+                    plan,
+                    &crate::analysis::waves_of(&c),
+                )
+                .assert_clean("sub-group coloring");
                 planner::coloring_pays_off(&c.stats()).then_some(c)
             }
             Exactness::Relaxed => Some(SubGroupColoring::single_wave(plan.n_groups())),
         }
     } else {
+        if exactness == Exactness::Relaxed && pool.threads() > 1 && !plan.is_empty() {
+            // A relaxed plan that cannot engage the pool (≤ 1 sub-group:
+            // a degenerate shard — e.g. a zero-row factor mode collapsed
+            // the geometry — or a too-small batch) silently runs the
+            // sequential *exact-style* non-atomic path below. That is
+            // safe and numerically fine, but it is not the hogwild
+            // execution the config asked for — degrade loudly like the
+            // PR 4/5 clamps instead of masking the shape problem.
+            stats.degraded = true;
+        }
         None
     };
     match coloring {
@@ -357,10 +428,17 @@ pub unsafe fn dispatch_plan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synth;
+    use crate::kernel::PlanParams;
     use crate::util::Rng;
 
+    // The `unsafe_access_*` tests below are deliberately tiny: they are
+    // the Miri CI leg (`cargo miri test --lib -- unsafe_access_`), where
+    // interpreted execution is ~100x slower, and they concentrate every
+    // raw-pointer/atomic pattern the accessors mint.
+
     #[test]
-    fn disjoint_parallel_writes_are_visible() {
+    fn unsafe_access_disjoint_parallel_writes_are_visible() {
         let mut rng = Rng::new(1);
         let mut factors = FactorMatrices::random(&mut rng, &[64, 64], 4, 1.0);
         let shared = SharedFactors::new(&mut factors);
@@ -371,6 +449,9 @@ mod tests {
                     // Worker w owns rows [w*16, (w+1)*16) of both modes.
                     for n in 0..2 {
                         for i in w * 16..(w + 1) * 16 {
+                            // SAFETY: this thread is the unique owner of
+                            // row (n, i) — the row ranges are disjoint
+                            // across the four workers by construction.
                             let row = unsafe { shared.row_mut(n, i) };
                             for v in row {
                                 *v = (n * 1000 + w) as f32;
@@ -390,5 +471,129 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn unsafe_access_atomic_rows_tolerate_contention() {
+        // Two threads hammer the SAME rows through the hogwild path:
+        // every interleaving is well-defined (Miri/TSan-visible), and
+        // each element must end up holding one of the written values.
+        let mut rng = Rng::new(2);
+        let mut factors = FactorMatrices::random(&mut rng, &[8, 8], 4, 1.0);
+        let shared = SharedFactors::new(&mut factors);
+        std::thread::scope(|scope| {
+            for t in 0..2u32 {
+                let shared = &shared;
+                scope.spawn(move || {
+                    for n in 0..2 {
+                        for i in 0..8 {
+                            // SAFETY: all concurrent access to these
+                            // rows goes through the atomic path.
+                            let row = unsafe { shared.row_atomic(n, i) };
+                            for slot in row {
+                                slot.store(((100 + t) as f32).to_bits(), Ordering::Relaxed);
+                                let _ = f32::from_bits(slot.load(Ordering::Relaxed));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        for n in 0..2 {
+            for i in 0..8 {
+                for &v in factors.row(n, i) {
+                    assert!(v == 100.0 || v == 101.0, "torn value {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsafe_access_mixed_modes_on_disjoint_rows() {
+        // Plain-mut and atomic access may coexist as long as they touch
+        // DISJOINT rows (the mixed-mode hazard is per-row).
+        let mut rng = Rng::new(3);
+        let mut factors = FactorMatrices::random(&mut rng, &[16], 4, 1.0);
+        let shared = SharedFactors::new(&mut factors);
+        std::thread::scope(|scope| {
+            let s = &shared;
+            scope.spawn(move || {
+                for i in 0..8 {
+                    // SAFETY: rows 0..8 are exclusively this thread's.
+                    unsafe { s.row_mut(0, i) }.fill(1.0);
+                }
+            });
+            scope.spawn(move || {
+                for i in 8..16 {
+                    // SAFETY: rows 8..16 are only touched atomically.
+                    for slot in unsafe { s.row_atomic(0, i) } {
+                        slot.store(2.0f32.to_bits(), Ordering::Relaxed);
+                    }
+                }
+            });
+        });
+        for i in 0..8 {
+            assert!(factors.row(0, i).iter().all(|&v| v == 1.0));
+        }
+        for i in 8..16 {
+            assert!(factors.row(0, i).iter().all(|&v| v == 2.0));
+        }
+    }
+
+    #[test]
+    fn relaxed_plan_without_pool_width_degrades_loudly() {
+        // ISSUE 6 satellite: a relaxed plan with <= 1 sub-group cannot
+        // engage the hogwild pool and silently runs the sequential
+        // exact-style path — that must be recorded in PlanStats::degraded.
+        let mut rng = Rng::new(4);
+        let dims = [12usize, 6, 5];
+        let t = synth::random_uniform(&mut rng, &dims, 6, 1.0, 5.0);
+        let ids: Vec<u32> = (0..t.nnz() as u32).collect();
+        let mut factors = FactorMatrices::random(&mut rng, &dims, 4, 0.1);
+        let core = KruskalCore::random(&mut rng, 3, 4, 4, 0.1);
+        let run = |params: PlanParams, threads: usize, factors: &mut FactorMatrices| {
+            let plan = BatchPlan::build_params(&t, &ids, params);
+            let mut pool = DispatchPool::new(threads, 3, 4, 4, plan.max_batch());
+            let mut stats = plan.stats();
+            let shared = SharedFactors::new(factors);
+            // SAFETY: the test holds the only live factor reference.
+            unsafe {
+                dispatch_plan(
+                    &mut pool, &t, &plan, &core, &[], CoreLayout::Packed, &shared, 0.01,
+                    0.001, false, &mut stats,
+                )
+            };
+            stats
+        };
+        // cap >= nnz: one sub-group. Relaxed + 2 threads => degraded.
+        let stats = run(PlanParams::relaxed(64, 8), 2, &mut factors);
+        assert_eq!(stats.threads, 1);
+        assert!(stats.degraded, "degenerate relaxed fallback must degrade loudly");
+        // Same geometry, sequential pool: sequential is what was asked.
+        let stats = run(PlanParams::relaxed(64, 8), 1, &mut factors);
+        assert!(!stats.degraded);
+        // Exact mode falling back is the documented bitwise-identical
+        // path, not a degradation.
+        let stats = run(PlanParams::tiled(64, 8), 2, &mut factors);
+        assert!(!stats.degraded);
+        // A relaxed plan with real pool width engages the single wave
+        // and stays clean.
+        let t_wide = synth::random_uniform(&mut Rng::new(5), &[64, 32, 32], 600, 1.0, 5.0);
+        let ids_wide: Vec<u32> = (0..t_wide.nnz() as u32).collect();
+        let plan = BatchPlan::build_params(&t_wide, &ids_wide, PlanParams::relaxed(16, 8));
+        assert!(plan.n_groups() > 1, "workload must have pool width");
+        let mut factors_wide = FactorMatrices::random(&mut Rng::new(6), &[64, 32, 32], 4, 0.1);
+        let mut pool = DispatchPool::new(2, 3, 4, 4, plan.max_batch());
+        let mut stats = plan.stats();
+        let shared = SharedFactors::new(&mut factors_wide);
+        // SAFETY: the test holds the only live factor reference.
+        unsafe {
+            dispatch_plan(
+                &mut pool, &t_wide, &plan, &core, &[], CoreLayout::Packed, &shared, 0.01,
+                0.001, false, &mut stats,
+            )
+        };
+        assert!(!stats.degraded);
+        assert_eq!(stats.threads, 2);
     }
 }

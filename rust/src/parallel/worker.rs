@@ -231,6 +231,16 @@ impl ParallelFastTucker {
                     degraded = true;
                 }
             }
+            // strict-audit: independently re-verify levels 0 + 1 of the
+            // disjointness contract (device grid + the Latin schedule it
+            // coarsens) with the first-principles auditor before any
+            // worker touches the factors (`crate::analysis::audit`).
+            #[cfg(feature = "strict-audit")]
+            {
+                let schedule = LatinSchedule::try_new(self.opts.workers, order)?;
+                crate::analysis::audit_schedule_and_grid(&grid, &schedule, train)
+                    .assert_clean("device grid / Latin schedule");
+            }
             self.grid_degraded = degraded;
             self.grid = Some(grid);
             self.partition_for = Some(fp);
@@ -379,9 +389,13 @@ impl ParallelFastTucker {
         let mut device_samples = vec![0u64; n_devices];
         let mut comm_rows = 0u64;
         let mut comm_bytes = 0u64;
+        #[cfg(feature = "shadow-ledger")]
+        crate::analysis::shadow::set_epoch(epoch);
         {
             let shared = SharedFactors::new(&mut model.factors);
             for round in 0..schedule.rounds() {
+                #[cfg(feature = "shadow-ledger")]
+                crate::analysis::shadow::set_round(round);
                 let assignments = schedule.round_assignments(round);
                 // Parameter-exchange bookkeeping at the round boundary,
                 // in fixed device order. The per-worker ledger keeps the
@@ -565,6 +579,8 @@ fn run_round_threads(
             let block = partition.block(&assignments[g]);
             let params = device_params[grid.device_of(g)];
             let handle = scope.spawn(move || {
+                #[cfg(feature = "shadow-ledger")]
+                crate::analysis::shadow::set_worker(g);
                 worker_pass(
                     shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params,
                 )
@@ -618,6 +634,8 @@ fn run_round_simulated(
     {
         let block = partition.block(&assignments[g]);
         let dev = grid.device_of(g);
+        #[cfg(feature = "shadow-ledger")]
+        crate::analysis::shadow::set_worker(g);
         let t0 = Instant::now();
         let (count, stats) = worker_pass(
             shared, core, strided, layout, train, block, pool, wrng, lr_f, h,
@@ -1029,6 +1047,51 @@ mod tests {
         assert!(
             engine.plan_accum.degraded > 0,
             "idle device shard not recorded as degraded: {:?}",
+            engine.plan_accum
+        );
+    }
+
+    #[test]
+    fn relaxed_pool_fallback_degrades_loudly() {
+        // ISSUE 6 satellite: a relaxed pass whose plan cannot feed the
+        // in-group pool (a single group — nothing to hogwild across
+        // threads) used to fall back to sequential dispatch *silently*.
+        // It must surface through `PlanStats::degraded` at the engine
+        // level, while a healthy relaxed workload with real group
+        // fan-out stays clean.
+        let one = crate::tensor::SparseTensor::new_unchecked(
+            vec![40, 40, 40],
+            vec![1, 2, 3],
+            vec![3.0],
+        );
+        let mut rng = Rng::new(61);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &[40, 40, 40], 4, 4);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 1;
+        opts.exactness = Exactness::Relaxed;
+        opts.threads = ThreadCount::Fixed(2);
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &one, 0, &mut rng).unwrap();
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "single-group relaxed plan under a 2-thread pool not marked degraded: {:?}",
+            engine.plan_accum
+        );
+
+        // Healthy relaxed run: ~1000 nonzeros per pass at cap 64 fan out
+        // into many groups, the pool hogwilds them, nothing degrades.
+        let (p, spec) = planted(62);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.exactness = Exactness::Relaxed;
+        opts.threads = ThreadCount::Fixed(2);
+        opts.batch = BatchSizing::Fixed(64);
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        assert_eq!(
+            engine.plan_accum.degraded, 0,
+            "healthy relaxed workload wrongly marked degraded: {:?}",
             engine.plan_accum
         );
     }

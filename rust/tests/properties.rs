@@ -82,6 +82,14 @@ fn prop_partition_and_schedule_compose() {
         let part = BlockPartition::build(&t, m);
         let sched = LatinSchedule::new(m, order);
 
+        // The independent level-1 auditor must agree with the hand-rolled
+        // checks below on every geometry (ISSUE 6 tentpole).
+        let rounds: Vec<Vec<Vec<usize>>> =
+            (0..sched.rounds()).map(|r| sched.round_assignments(r)).collect();
+        let report = fasttucker::analysis::audit_latin(&dims, m, &rounds);
+        assert!(report.ok(), "auditor rejected a real schedule: {report}");
+        assert!(report.checks > 0);
+
         let mut seen = vec![false; t.nnz()];
         for round in 0..sched.rounds() {
             let assigns = sched.round_assignments(round);
@@ -536,6 +544,13 @@ fn prop_subgroup_coloring_is_disjoint_ordered_partition() {
         let plan = BatchPlan::build_params(&tensor, &ids, params);
         let coloring = plan.color_subgroups(&tensor);
         assert_eq!(coloring.n_groups(), plan.n_groups());
+
+        // The independent level-2 auditor must agree with the hand-rolled
+        // checks below on every geometry (ISSUE 6 tentpole).
+        let waves = fasttucker::analysis::waves_of(&coloring);
+        let report = fasttucker::analysis::audit_coloring(&tensor, &plan, &waves);
+        assert!(report.ok(), "auditor rejected a real coloring: {report}");
+        assert!(report.checks > 0);
 
         let rows = |g: usize| -> std::collections::HashSet<(usize, u32)> {
             let mut set = std::collections::HashSet::new();
