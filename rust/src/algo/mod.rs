@@ -74,6 +74,18 @@ pub enum AlgoError {
     /// `usize::pow`) or an allocation abort; now surfaced before any
     /// allocation happens.
     PartitionOverflow { workers: usize, order: usize },
+    /// The channel transport's exchange failed unrecoverably (retry
+    /// budget exhausted, dead device, protocol violation, or invalid
+    /// `FASTTUCKER_FAULT_*` configuration). The inner
+    /// [`TransportError`](crate::parallel::TransportError) names the
+    /// fault class; [`TransportError::DeviceDead`](crate::parallel::TransportError)
+    /// is the elastic-recovery trigger — reload the last checkpoint into
+    /// a freshly sharded engine and resume.
+    Transport(crate::parallel::TransportError),
+    /// A checkpoint file failed validation on load (truncated, corrupt
+    /// checksum, impossible dimensions) — previously a panic or silently
+    /// loaded garbage.
+    CheckpointCorrupt { detail: String },
 }
 
 impl AlgoError {
@@ -103,11 +115,27 @@ impl std::fmt::Display for AlgoError {
                  block budget; reduce `workers` or the tensor order",
                 order.saturating_sub(1)
             ),
+            AlgoError::Transport(e) => write!(
+                f,
+                "device exchange failed: {e}; the model may hold a partial epoch — \
+                 resume from the last checkpoint"
+            ),
+            AlgoError::CheckpointCorrupt { detail } => write!(
+                f,
+                "checkpoint rejected: {detail}; the file is unusable — fall back to an \
+                 older checkpoint or retrain"
+            ),
         }
     }
 }
 
 impl std::error::Error for AlgoError {}
+
+impl From<crate::parallel::TransportError> for AlgoError {
+    fn from(e: crate::parallel::TransportError) -> Self {
+        AlgoError::Transport(e)
+    }
+}
 
 impl From<AlgoError> for crate::util::error::Error {
     fn from(e: AlgoError) -> Self {

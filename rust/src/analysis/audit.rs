@@ -27,17 +27,25 @@
 //!   device (the owner of its mode-0 row); and each round's boundary
 //!   set is the exact complement of the home set within the touched
 //!   chunks.
+//! - **In-flight exchange** — [`audit_exchange`] over the transport's
+//!   [`ExchangeEvent`](crate::parallel::ExchangeEvent) log: every panel
+//!   apply lands strictly inside its round's barrier window (after
+//!   `BarrierStart`, before `ComputeStart`), each sequence number is
+//!   applied at most once, nothing is applied that was never delivered,
+//!   and nothing delivered is left unapplied when the workers resume.
+//!   A `ComputeStart` with no preceding `BarrierStart` is *not* a
+//!   violation — panel-free rounds legitimately skip the window.
 //!
 //! Violations come back as named [`Violation`] variants inside an
 //! [`AuditReport`]; with the `strict-audit` cargo feature the engines
-//! run these audits on every coloring/grid they build and panic on the
-//! first red report.
+//! run these audits on every coloring/grid they build (and on every
+//! epoch's exchange log) and panic on the first red report.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 use crate::kernel::{BatchPlan, SubGroupColoring};
-use crate::parallel::{DeviceGrid, LatinSchedule};
+use crate::parallel::{DeviceGrid, ExchangeEvent, LatinSchedule};
 use crate::tensor::SparseTensor;
 
 /// One named contract violation. Each variant carries enough provenance
@@ -89,6 +97,22 @@ pub enum Violation {
     /// A round's boundary set lists a chunk the device homes (or never
     /// touches).
     BoundarySpurious { device: usize, round: usize, mode: usize, chunk: usize },
+    /// A panel was applied before its round's exchange window opened
+    /// (no `BarrierStart` for that `(epoch, round)` yet) — the write
+    /// could race workers still inside the previous round.
+    ExchangeApplyBeforeBarrier { epoch: usize, round: usize, seq: u64 },
+    /// A panel was applied after `ComputeStart` released the workers —
+    /// the write could race workers already inside the round.
+    ExchangeApplyAfterCompute { epoch: usize, round: usize, seq: u64 },
+    /// The same sequence number was applied twice (dedup failed; the
+    /// second write would double-apply a core-gradient panel).
+    ExchangeDuplicateApply { seq: u64 },
+    /// A sequence number was applied that no delivery produced.
+    ExchangePhantomApply { seq: u64 },
+    /// A delivered panel was never applied before its round's
+    /// `ComputeStart` (or before the log ended) — its destination rows
+    /// silently kept stale values.
+    ExchangeUnappliedDelivery { epoch: usize, round: usize, seq: u64 },
 }
 
 impl fmt::Display for Violation {
@@ -157,6 +181,26 @@ impl fmt::Display for Violation {
                 f,
                 "device {device} round {round}: boundary set lists mode-{mode} chunk {chunk} \
                  it does not need"
+            ),
+            Violation::ExchangeApplyBeforeBarrier { epoch, round, seq } => write!(
+                f,
+                "epoch {epoch} round {round}: panel seq {seq} applied before the exchange \
+                 window opened"
+            ),
+            Violation::ExchangeApplyAfterCompute { epoch, round, seq } => write!(
+                f,
+                "epoch {epoch} round {round}: panel seq {seq} applied after the workers \
+                 were released"
+            ),
+            Violation::ExchangeDuplicateApply { seq } => {
+                write!(f, "panel seq {seq} applied twice")
+            }
+            Violation::ExchangePhantomApply { seq } => {
+                write!(f, "panel seq {seq} applied but never delivered")
+            }
+            Violation::ExchangeUnappliedDelivery { epoch, round, seq } => write!(
+                f,
+                "epoch {epoch} round {round}: delivered panel seq {seq} was never applied"
             ),
         }
     }
@@ -584,6 +628,80 @@ pub fn audit_grid(facts: &GridFacts) -> AuditReport {
     report
 }
 
+/// In-flight-exchange audit over a transport event log: every applied
+/// panel lands strictly inside its round's barrier window, sequence
+/// numbers are applied exactly once, and every delivery is consumed.
+///
+/// The checker is a plain linear scan over the log — it shares no state
+/// with the [`Exchanger`](crate::parallel::transport::Exchanger) that
+/// emitted it, so a protocol bug in the driver cannot hide inside the
+/// audit. Tolerated by design: a `ComputeStart` with no `BarrierStart`
+/// (rounds that shipped no panels skip the window entirely), and `Sent`
+/// frames that never arrive (drops/kills are the *transport's* problem;
+/// this leg audits only what was claimed delivered and applied).
+pub fn audit_exchange(events: &[ExchangeEvent]) -> AuditReport {
+    let mut report = AuditReport::default();
+    let mut started: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut computed: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut applied: BTreeSet<u64> = BTreeSet::new();
+    // Delivered but not yet applied: seq -> (epoch, round).
+    let mut pending: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+    for ev in events {
+        match *ev {
+            ExchangeEvent::BarrierStart { epoch, round } => {
+                report.checks += 1;
+                started.insert((epoch, round));
+            }
+            ExchangeEvent::Sent { .. } => report.checks += 1,
+            ExchangeEvent::Delivered { epoch, round, seq, .. } => {
+                report.checks += 1;
+                pending.insert(seq, (epoch, round));
+            }
+            ExchangeEvent::Applied { epoch, round, seq, .. } => {
+                report.checks += 1;
+                if !started.contains(&(epoch, round)) {
+                    report
+                        .violations
+                        .push(Violation::ExchangeApplyBeforeBarrier { epoch, round, seq });
+                }
+                if computed.contains(&(epoch, round)) {
+                    report
+                        .violations
+                        .push(Violation::ExchangeApplyAfterCompute { epoch, round, seq });
+                }
+                if applied.contains(&seq) {
+                    report.violations.push(Violation::ExchangeDuplicateApply { seq });
+                } else {
+                    applied.insert(seq);
+                    if pending.remove(&seq).is_none() {
+                        report.violations.push(Violation::ExchangePhantomApply { seq });
+                    }
+                }
+            }
+            ExchangeEvent::ComputeStart { epoch, round } => {
+                report.checks += 1;
+                computed.insert((epoch, round));
+                let stale: Vec<u64> = pending
+                    .iter()
+                    .filter(|&(_, &er)| er == (epoch, round))
+                    .map(|(&seq, _)| seq)
+                    .collect();
+                for seq in stale {
+                    pending.remove(&seq);
+                    report
+                        .violations
+                        .push(Violation::ExchangeUnappliedDelivery { epoch, round, seq });
+                }
+            }
+        }
+    }
+    // Deliveries still pending when the log ends were never consumed.
+    for (&seq, &(epoch, round)) in &pending {
+        report.violations.push(Violation::ExchangeUnappliedDelivery { epoch, round, seq });
+    }
+    report
+}
+
 /// Run the level-0 and level-1 audits for a live grid + schedule over
 /// `tensor` and merge the reports (the `strict-audit` engine hook and
 /// the `audit_plan` binary both call this).
@@ -834,6 +952,184 @@ mod tests {
             .violations
             .iter()
             .any(|v| matches!(v, Violation::DeviceWorkerOverlap { .. })));
+    }
+
+    // ---- In-flight exchange leg (ISSUE 7 satellite) -----------------
+
+    /// One well-formed exchange window: barrier, sends, deliveries,
+    /// applies, release.
+    fn healthy_window(epoch: usize, round: usize, seqs: &[u64]) -> Vec<ExchangeEvent> {
+        let mut evs = vec![ExchangeEvent::BarrierStart { epoch, round }];
+        for &seq in seqs {
+            evs.push(ExchangeEvent::Sent { epoch, round, src: 0, dst: 1, mode: 0, chunk: 0, seq });
+        }
+        for &seq in seqs {
+            evs.push(ExchangeEvent::Delivered {
+                epoch,
+                round,
+                src: 0,
+                dst: 1,
+                mode: 0,
+                chunk: 0,
+                seq,
+            });
+        }
+        for &seq in seqs {
+            evs.push(ExchangeEvent::Applied { epoch, round, dst: 1, mode: 0, chunk: 0, seq });
+        }
+        evs.push(ExchangeEvent::ComputeStart { epoch, round });
+        evs
+    }
+
+    #[test]
+    fn healthy_exchange_log_audits_green() {
+        let mut evs = healthy_window(0, 0, &[0, 1, 2]);
+        // A panel-free round: ComputeStart with no BarrierStart must be
+        // tolerated — the exchanger skips the window when nothing ships.
+        evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: 1 });
+        evs.extend(healthy_window(0, 2, &[3, 4]));
+        let report = audit_exchange(&evs);
+        assert!(report.ok(), "{report}");
+        assert!(report.checks > 0, "vacuous audit");
+    }
+
+    #[test]
+    fn exchange_mutations_each_raise_their_named_violation() {
+        // Mutation per variant: corrupt one healthy log in one way and
+        // demand exactly the matching violation class.
+        let base = || healthy_window(0, 0, &[0, 1]);
+
+        // Apply before its barrier: prepend an apply for round 1.
+        let mut evs = vec![ExchangeEvent::Applied {
+            epoch: 0,
+            round: 1,
+            dst: 1,
+            mode: 0,
+            chunk: 0,
+            seq: 9,
+        }];
+        evs.extend(base());
+        let report = audit_exchange(&evs);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::ExchangeApplyBeforeBarrier { epoch: 0, round: 1, seq: 9 }
+            )),
+            "expected ExchangeApplyBeforeBarrier, got: {report}"
+        );
+
+        // Apply after the workers were released: re-apply seq 2 of a
+        // second window after its ComputeStart.
+        let mut evs = base();
+        evs.push(ExchangeEvent::BarrierStart { epoch: 0, round: 1 });
+        evs.push(ExchangeEvent::Delivered {
+            epoch: 0,
+            round: 1,
+            src: 0,
+            dst: 1,
+            mode: 0,
+            chunk: 0,
+            seq: 2,
+        });
+        evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: 1 });
+        evs.push(ExchangeEvent::Applied { epoch: 0, round: 1, dst: 1, mode: 0, chunk: 0, seq: 2 });
+        let report = audit_exchange(&evs);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::ExchangeApplyAfterCompute { epoch: 0, round: 1, seq: 2 }
+            )),
+            "expected ExchangeApplyAfterCompute, got: {report}"
+        );
+        // The same mutated log also flags the delivery as unapplied at
+        // ComputeStart time (the late apply does not retroactively count).
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::ExchangeUnappliedDelivery { seq: 2, .. })));
+
+        // Duplicate apply of one seq.
+        let mut evs = base();
+        evs.insert(
+            evs.len() - 1,
+            ExchangeEvent::Applied { epoch: 0, round: 0, dst: 1, mode: 0, chunk: 0, seq: 0 },
+        );
+        let report = audit_exchange(&evs);
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::ExchangeDuplicateApply { seq: 0 })),
+            "expected ExchangeDuplicateApply, got: {report}"
+        );
+
+        // Phantom apply: a seq never delivered.
+        let mut evs = base();
+        evs.insert(
+            evs.len() - 1,
+            ExchangeEvent::Applied { epoch: 0, round: 0, dst: 1, mode: 0, chunk: 0, seq: 77 },
+        );
+        let report = audit_exchange(&evs);
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::ExchangePhantomApply { seq: 77 })),
+            "expected ExchangePhantomApply, got: {report}"
+        );
+
+        // Unapplied delivery, both at ComputeStart and at end-of-log.
+        let mut evs = base();
+        let apply_ix = evs
+            .iter()
+            .position(|e| matches!(e, ExchangeEvent::Applied { seq: 1, .. }))
+            .unwrap();
+        evs.remove(apply_ix);
+        let report = audit_exchange(&evs);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::ExchangeUnappliedDelivery { epoch: 0, round: 0, seq: 1 }
+            )),
+            "expected ExchangeUnappliedDelivery, got: {report}"
+        );
+        let evs = vec![
+            ExchangeEvent::BarrierStart { epoch: 0, round: 0 },
+            ExchangeEvent::Delivered { epoch: 0, round: 0, src: 0, dst: 1, mode: 0, chunk: 0, seq: 5 },
+        ];
+        let report = audit_exchange(&evs);
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::ExchangeUnappliedDelivery { seq: 5, .. })));
+    }
+
+    #[test]
+    fn real_channel_engine_exchange_log_audits_green() {
+        // The live engine's event log over a W=4 D=2 channel run must
+        // satisfy the protocol contract end to end.
+        use crate::model::TuckerModel;
+        use crate::parallel::{
+            DeviceCount, ParallelFastTucker, ParallelOptions, TransportKind,
+        };
+        let dims = [40usize, 30, 30];
+        let mut rng = Rng::new(21);
+        let t = workload(&mut rng, &dims, 3000);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &dims, 4, 3);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = DeviceCount::Fixed(2);
+        opts.transport = TransportKind::Channel;
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut rng2 = Rng::new(22);
+        for epoch in 0..2 {
+            engine.train_epoch(&mut model, &t, epoch, &mut rng2).unwrap();
+        }
+        let events = engine.exchange_events();
+        assert!(!events.is_empty(), "channel engine logged no exchange events");
+        let report = audit_exchange(events);
+        assert!(report.ok(), "{report}");
+        assert!(report.checks > 0);
     }
 
     #[test]

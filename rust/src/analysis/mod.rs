@@ -10,7 +10,11 @@
 //!    [`Violation`] variants in an [`AuditReport`]. With the
 //!    `strict-audit` cargo feature the engines run it on every coloring
 //!    and every grid they build and panic on a red report; the
-//!    `audit_plan` binary runs it ad hoc on synthetic geometries.
+//!    `audit_plan` binary runs it ad hoc on synthetic geometries. A
+//!    fourth leg, [`audit_exchange`], replays the channel transport's
+//!    event log and proves every delivered panel was applied exactly
+//!    once, strictly inside its round's barrier window (`strict-audit`
+//!    runs it on every epoch's log).
 //! 2. **Shadow race detector** ([`shadow`]) — `shadow-ledger`-gated
 //!    instrumentation in `SharedFactors` records every row access with
 //!    full provenance `(epoch, round, worker, wave, thread, mode, row,
@@ -34,7 +38,7 @@ pub mod lint;
 pub mod shadow;
 
 pub use audit::{
-    audit_coloring, audit_grid, audit_latin, audit_schedule_and_grid, gather_grid_facts,
-    waves_of, AuditReport, GridFacts, Violation,
+    audit_coloring, audit_exchange, audit_grid, audit_latin, audit_schedule_and_grid,
+    gather_grid_facts, waves_of, AuditReport, GridFacts, Violation,
 };
 pub use shadow::{AccessKind, RaceViolation, ShadowLog, ShadowSession};

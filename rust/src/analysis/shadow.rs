@@ -33,6 +33,15 @@
 //! view of actual relaxed-mode contention (how many distinct threads
 //! hit the same row within one wave).
 //!
+//! **Deliberate blind spot**: the coordinator-serial exchange accessors
+//! (`SharedFactors::{row_exchange, row_mut_exchange}`, used by the
+//! channel transport to serialize/apply boundary panels at the round
+//! barrier) do NOT record into the ledger — no workers run at the
+//! barrier, so any recording would land under a stale worker/round
+//! context and report false Latin races. That leg of the contract is
+//! covered by the transport's own event log instead
+//! ([`crate::analysis::audit_exchange`]).
+//!
 //! [`SharedFactors`]: crate::parallel::SharedFactors
 
 use std::cell::{Cell, RefCell};

@@ -9,7 +9,7 @@ use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
 use crate::kernel::{BatchSizing, Exactness, Lanes, ThreadCount};
-use crate::parallel::DeviceCount;
+use crate::parallel::{DeviceCount, TransportKind};
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -115,6 +115,14 @@ pub struct TrainConfig {
     /// the native (serial) engine is a single device — a fixed `N > 1`
     /// there degrades loudly instead of erroring.
     pub devices: DeviceCount,
+    /// Boundary-exchange mechanism for the parallel engine. TOML:
+    /// `transport = "auto"` (the `FASTTUCKER_TRANSPORT` env override,
+    /// else direct), `"direct"` (in-memory handover), or `"channel"`
+    /// (framed, checksummed messages with retry/timeout/backoff —
+    /// bitwise-identical to direct when healthy, loudly fault-tolerant
+    /// otherwise). Only the parallel engine exchanges anything; fixing
+    /// `"channel"` on another engine is a config error.
+    pub transport: TransportKind,
 }
 
 impl Default for TrainConfig {
@@ -141,6 +149,7 @@ impl Default for TrainConfig {
             split: 1,
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
+            transport: TransportKind::Auto,
         }
     }
 }
@@ -174,6 +183,7 @@ impl TrainConfig {
     /// split = 1             # split-group factor (>= 1)
     /// threads = "auto"      # or N >= 1 (in-group thread pool width)
     /// devices = "auto"      # or N >= 1 (device-shard grid width)
+    /// transport = "auto"    # or "direct" / "channel" (framed exchange)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -247,6 +257,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("", "devices") {
             cfg.devices = parse_devices(v)?;
+        }
+        if let Some(v) = doc.get("", "transport") {
+            cfg.transport = parse_transport(v)?;
         }
 
         let mut h = SgdHyper::default();
@@ -341,6 +354,12 @@ impl TrainConfig {
         if self.engine == EngineKind::Parallel && self.algo != AlgoKind::FastTucker {
             bail!("the parallel engine supports only fasttucker");
         }
+        if self.transport == TransportKind::Channel && self.engine != EngineKind::Parallel {
+            bail!(
+                "transport = \"channel\" needs the parallel engine (only it exchanges \
+                 device panels); set engine = \"parallel\" or transport = \"auto\""
+            );
+        }
         Ok(())
     }
 }
@@ -389,6 +408,19 @@ fn parse_devices(v: &TomlValue) -> Result<DeviceCount> {
     };
     DeviceCount::parse(&spelled).ok_or_else(|| {
         anyhow!("unknown devices {spelled:?} (expected \"auto\" or an integer >= 1)")
+    })
+}
+
+fn parse_transport(v: &TomlValue) -> Result<TransportKind> {
+    let spelled = match v {
+        TomlValue::Str(s) => s.clone(),
+        other => bail!(
+            "transport must be \"auto\", \"direct\", or \"channel\", got {} {other:?}",
+            other.type_name()
+        ),
+    };
+    TransportKind::parse(&spelled).ok_or_else(|| {
+        anyhow!("unknown transport {spelled:?} (expected \"auto\", \"direct\", or \"channel\")")
     })
 }
 
@@ -491,6 +523,27 @@ mod tests {
         assert!(
             TrainConfig::from_toml_str("engine = \"parallel\"\nworkers = 2\ndevices = 4")
                 .is_ok()
+        );
+    }
+
+    #[test]
+    fn parses_transport() {
+        let cfg = TrainConfig::from_toml_str("transport = \"auto\"\n").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Auto);
+        let cfg =
+            TrainConfig::from_toml_str("engine = \"parallel\"\ntransport = \"channel\"\n")
+                .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Channel);
+        let cfg = TrainConfig::from_toml_str("transport = \"direct\"\n").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Direct);
+
+        assert!(TrainConfig::from_toml_str("transport = \"carrier-pigeon\"").is_err());
+        assert!(TrainConfig::from_toml_str("transport = 3").is_err());
+        // Only the parallel engine exchanges panels; a fixed channel on
+        // any other engine is a config error, not a silent no-op.
+        assert!(TrainConfig::from_toml_str("transport = \"channel\"").is_err());
+        assert!(
+            TrainConfig::from_toml_str("engine = \"pjrt\"\ntransport = \"channel\"").is_err()
         );
     }
 

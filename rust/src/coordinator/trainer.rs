@@ -127,6 +127,7 @@ impl Trainer {
                     split: cfg.split,
                     threads: cfg.threads,
                     devices: cfg.devices,
+                    transport: cfg.transport,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))

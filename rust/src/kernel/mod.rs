@@ -25,6 +25,7 @@
 //! | [`panel`]    | SIMD-shaped panel microkernels ([`Lanes`] 4/8 row blocks over `R_core`, scalar tails) the batched executor's deferred c/GS steps run on |
 //! | [`dispatch`] | In-group thread pool ([`DispatchPool`]): fans a plan's split sub-groups across T threads as barrier-separated coloring waves (exact: bitwise-identical to sequential via the plan-order tape; relaxed: one hogwild wave) |
 //! | [`crate::analysis`] | Concurrency-safety layer over everything above: first-principles disjointness auditor (`strict-audit` re-checks every coloring/grid), shadow race detector (`shadow-ledger` records every `SharedFactors` row access), and the unsafe-discipline source lint |
+//! | [`crate::parallel::transport`] | Fault-tolerant exchange behind the device grid: boundary-row and core-gradient panels as framed, checksummed messages over a `Transport` trait (in-proc bitwise oracle + seeded fault injector), with retry/dedup/backoff recovery, typed `TransportError`s, and a protocol event log audited by `analysis::audit_exchange` |
 //!
 //! Above this layer sits the parallel engine's **three-level
 //! disjointness** stack — device grid × Latin schedule × color waves

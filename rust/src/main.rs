@@ -6,7 +6,8 @@
 //!                   [--epochs N] [--workers M] [--seed S] [--scale F]
 //!                   [--batch auto|N] [--exactness exact|relaxed]
 //!                   [--lanes auto|4|8] [--split N] [--threads auto|N]
-//!                   [--devices auto|D] [--checkpoint OUT.ftck]
+//!                   [--devices auto|D] [--transport auto|direct|channel]
+//!                   [--checkpoint OUT.ftck]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
 //! fasttucker partition-plan --workers M --order N
@@ -60,7 +61,7 @@ USAGE:
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
                     [--batch auto|N] [--exactness exact|relaxed]
                     [--lanes auto|4|8] [--split N] [--threads auto|N]
-                    [--devices auto|D]
+                    [--devices auto|D] [--transport auto|direct|channel]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -131,6 +132,10 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("devices") {
         cfg.devices = fasttucker::parallel::DeviceCount::parse(v)
             .ok_or_else(|| anyhow!("--devices expects auto or an integer >= 1, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = fasttucker::parallel::TransportKind::parse(v)
+            .ok_or_else(|| anyhow!("--transport expects auto|direct|channel, got {v:?}"))?;
     }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;

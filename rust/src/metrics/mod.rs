@@ -230,6 +230,27 @@ pub struct PlanAccum {
     /// Bytes of inter-device traffic: boundary factor rows plus the
     /// per-epoch Eq. 17 core-gradient panels shipped to the root device.
     pub comm_bytes: u64,
+    /// Transport frames handed to the channel exchange (first sends +
+    /// resends; 0 under the direct transport). Recorded per epoch by
+    /// [`Self::record_transport`] (ISSUE 7).
+    pub frames_sent: u64,
+    /// Serialized bytes of those frames (headers + payloads + checksums).
+    pub frame_bytes: u64,
+    /// Frames that arrived, validated, and filled an expected panel.
+    pub frames_delivered: u64,
+    /// Frames resent after a timeout/backoff window found panels missing
+    /// (the drop-recovery counter — the acceptance criterion's "retry
+    /// counters > 0" lives here).
+    pub transport_retries: u64,
+    /// Frames discarded by sequence-number dedup (duplicate recovery).
+    pub transport_dups: u64,
+    /// Frames discarded for checksum/framing damage (corruption caught
+    /// before it could touch the factors).
+    pub transport_checksum_failures: u64,
+    /// Out-of-order arrivals observed (recovered by panel-slot matching).
+    pub transport_reorders: u64,
+    /// Drain attempts that found panels still missing (delay/drop cost).
+    pub transport_timeouts: u64,
 }
 
 impl PlanAccum {
@@ -274,6 +295,14 @@ impl PlanAccum {
         self.device_samples_mean += other.device_samples_mean;
         self.comm_rows += other.comm_rows;
         self.comm_bytes += other.comm_bytes;
+        self.frames_sent += other.frames_sent;
+        self.frame_bytes += other.frame_bytes;
+        self.frames_delivered += other.frames_delivered;
+        self.transport_retries += other.transport_retries;
+        self.transport_dups += other.transport_dups;
+        self.transport_checksum_failures += other.transport_checksum_failures;
+        self.transport_reorders += other.transport_reorders;
+        self.transport_timeouts += other.transport_timeouts;
     }
 
     /// Record one device-grid epoch: the grid width, the epoch's total
@@ -295,6 +324,34 @@ impl PlanAccum {
     pub fn record_comm(&mut self, rows: u64, bytes: u64) {
         self.comm_rows += rows;
         self.comm_bytes += bytes;
+    }
+
+    /// Record one epoch's channel-transport counters (ISSUE 7): traffic
+    /// volumes plus every recovered-fault event. Recovery is *loud* —
+    /// these counters and a per-epoch warning — but deliberately not
+    /// [`Self::degraded`], which stays reserved for geometry/config
+    /// trouble: a transparently recovered exchange is still a correct
+    /// exchange.
+    pub fn record_transport(&mut self, ts: &crate::parallel::TransportStats) {
+        self.frames_sent += ts.frames_sent;
+        self.frame_bytes += ts.bytes_sent;
+        self.frames_delivered += ts.frames_delivered;
+        self.transport_retries += ts.retries;
+        self.transport_dups += ts.duplicates_dropped;
+        self.transport_checksum_failures += ts.checksum_failures;
+        self.transport_reorders += ts.reorders;
+        self.transport_timeouts += ts.timeouts;
+    }
+
+    /// Total detected transport fault events (anything a healthy
+    /// exchange would not produce) — 0 for a clean run, > 0 whenever
+    /// injection (or a real fault) was survived.
+    pub fn transport_faults(&self) -> u64 {
+        self.transport_retries
+            + self.transport_dups
+            + self.transport_checksum_failures
+            + self.transport_reorders
+            + self.transport_timeouts
     }
 
     pub fn mean_group_len(&self) -> f64 {
@@ -489,6 +546,43 @@ mod tests {
             acc.device_occupancy().max(even.device_occupancy()),
         );
         assert!(merged.device_occupancy() >= lo && merged.device_occupancy() <= hi);
+    }
+
+    #[test]
+    fn transport_counter_block_records_and_merges() {
+        // ISSUE 7: the transport block must flow through record_transport
+        // AND field-by-field merge (the known PlanAccum foot-gun: a new
+        // counter that misses merge() silently vanishes when per-round
+        // accumulators fold into the engine's).
+        let ts = crate::parallel::TransportStats {
+            frames_sent: 10,
+            bytes_sent: 4000,
+            frames_delivered: 9,
+            retries: 2,
+            duplicates_dropped: 1,
+            checksum_failures: 3,
+            reorders: 1,
+            timeouts: 2,
+        };
+        let mut acc = PlanAccum::new();
+        assert_eq!(acc.transport_faults(), 0);
+        acc.record_transport(&ts);
+        assert_eq!(acc.frames_sent, 10);
+        assert_eq!(acc.frame_bytes, 4000);
+        assert_eq!(acc.frames_delivered, 9);
+        assert_eq!(acc.transport_retries, 2);
+        assert_eq!(acc.transport_dups, 1);
+        assert_eq!(acc.transport_checksum_failures, 3);
+        assert_eq!(acc.transport_reorders, 1);
+        assert_eq!(acc.transport_timeouts, 2);
+        assert_eq!(acc.transport_faults(), 9);
+        let mut merged = PlanAccum::new();
+        merged.merge(&acc);
+        merged.merge(&acc);
+        assert_eq!(merged.frames_sent, 20);
+        assert_eq!(merged.frame_bytes, 8000);
+        assert_eq!(merged.frames_delivered, 18);
+        assert_eq!(merged.transport_faults(), 18);
     }
 
     #[test]

@@ -8,25 +8,57 @@
 //! factor chunks that change owners; core gradients are accumulated
 //! locally and all-reduced once per epoch.
 //!
-//! Here "devices" are OS threads, and the exchange is a ledger entry (the
-//! data is shared memory), which preserves exactly what the paper's
-//! experiments measure: the conflict-freedom of the schedule, the
-//! per-round load balance, and the scaling curve shape.
+//! Here "devices" are OS threads. The [`device`] layer (ISSUE 5) makes
+//! the device notion explicit: a [`DeviceGrid`] shards the `M` Latin
+//! workers (and with them the training nonzeros and mode-row ownership)
+//! across `D ≤ M` virtual devices, each with its own planner decision
+//! and dispatch pools, with a per-round boundary-row exchange and a
+//! fixed-order Eq. 17 core-gradient merge — exact mode is
+//! bitwise-identical at every `D`.
 //!
-//! The [`device`] layer (ISSUE 5) makes the device notion explicit: a
-//! [`DeviceGrid`] shards the `M` Latin workers (and with them the
-//! training nonzeros and mode-row ownership) across `D ≤ M` virtual
-//! devices, each with its own planner decision and dispatch pools, with
-//! a per-round boundary-row exchange and a fixed-order Eq. 17 core-
-//! gradient merge — exact mode is bitwise-identical at every `D`.
+//! The [`transport`] layer (ISSUE 7) makes the *exchange* explicit: with
+//! `transport = channel`, every inter-device boundary-row panel and
+//! per-epoch core-gradient panel is serialized into a framed, checksummed
+//! message and routed through a [`Transport`] implementation instead of
+//! handed over in shared memory. The contract is three-way:
+//!
+//! * **Bitwise** — over the healthy [`InProcTransport`], exact-mode
+//!   training is bitwise-identical (factors, core, residual trajectory)
+//!   to the direct handover at every `D`, because the payloads are exact
+//!   little-endian f32 round-trips applied at the same round barrier by
+//!   the same coordinator.
+//! * **Retries** — drops, duplicates, reorders, delays, and detected
+//!   corruption recover transparently (bounded resend with virtual-time
+//!   backoff, sequence-number dedup, out-of-order buffering). Recovery
+//!   is loud: it lands in the [`metrics::PlanAccum`](crate::metrics::PlanAccum)
+//!   transport counter block and a per-epoch warning, never in the
+//!   factors.
+//! * **Degrades/fails** — what cannot be recovered is *typed*: the
+//!   exchange aborts with a named [`TransportError`]
+//!   ([`AlgoError::Transport`](crate::algo::AlgoError) from
+//!   `train_epoch`), and a dead device surfaces as
+//!   [`TransportError::DeviceDead`] so the caller can reload the last
+//!   checkpoint into a freshly sharded engine (any new `D`) and resume —
+//!   bitwise-equal to a run that never failed. A [`FaultPlan`] configured
+//!   while `transport = direct` cannot engage and marks the run degraded.
+//!
+//! The direct in-memory handover remains the default; the channel path
+//! exists so the failure modes of a real multi-process backend (socket /
+//! TCP — the ROADMAP item 2 follow-up) are testable before that backend
+//! lands.
 
 pub mod device;
 pub mod partition;
 pub mod schedule;
 pub mod shared;
+pub mod transport;
 pub mod worker;
 
 pub use device::{DeviceCount, DeviceGrid};
 pub use partition::BlockPartition;
 pub use schedule::LatinSchedule;
+pub use transport::{
+    ExchangeEvent, FaultKind, FaultKinds, FaultPlan, InProcTransport, KillSpec, PanelKind,
+    PanelSpec, Transport, TransportError, TransportKind, TransportStats,
+};
 pub use worker::{Execution, ParallelFastTucker, ParallelOptions};

@@ -46,6 +46,29 @@
 //! updates can lose writes but are well-defined — never the aliasing
 //! `&mut` UB the plain [`SharedRowAccess`] path would incur.
 //!
+//! # The message-passing exchange (transport layer)
+//!
+//! With `transport = channel` (ISSUE 7), the round-boundary parameter
+//! exchange is no longer pure bookkeeping: the coordinator serializes
+//! every inter-device boundary-row panel, routes it through
+//! [`crate::parallel::transport`] as a framed, checksummed message, and
+//! writes the *validated* payload back before releasing the round's
+//! workers. Those coordinator reads/writes use the dedicated
+//! [`SharedFactors::row_exchange`]/[`SharedFactors::row_mut_exchange`]
+//! accessors, which are sound for a simpler reason than the three levels
+//! above: they run **coordinator-serial at the round barrier**, when no
+//! worker thread is live — there is nothing to be disjoint *from*. What
+//! is bitwise: the healthy exchange (exact little-endian f32
+//! round-trips applied by the same single actor). What retries: frames
+//! lost, duplicated, reordered, delayed, or detectably corrupted —
+//! recovered by the exchanger's resend/dedup/buffering protocol without
+//! touching the factors with bad bytes. What degrades or fails: an
+//! exhausted retry budget, a dead device, or a protocol violation
+//! aborts `train_epoch` with a typed
+//! [`TransportError`](crate::parallel::TransportError) — the factors
+//! are never silently corrupted. The in-flight protocol is audited from
+//! outside by [`crate::analysis::audit_exchange`].
+//!
 //! This module is the **single authoritative statement** of the
 //! contract; the `unsafe impl Send/Sync` below and every `# Safety`
 //! section cite it. It is checked from outside by
@@ -184,6 +207,43 @@ impl SharedFactors {
                 self.cols,
             )
         }
+    }
+
+    /// Read row `i` of mode `n` for transport serialization — the
+    /// coordinator's exchange path. Unlike [`Self::row`] this records
+    /// nothing in the shadow ledger: the exchange runs between rounds
+    /// with stale worker context, and its correctness is checked by the
+    /// protocol auditor ([`crate::analysis::audit_exchange`]) instead of
+    /// the per-row race detector (see `analysis::shadow`'s module doc).
+    ///
+    /// # Safety
+    /// Caller must be the coordinator at a round barrier: no worker
+    /// thread may be live (the engine's thread scopes are closed), so no
+    /// concurrent access to any row exists.
+    #[inline]
+    pub unsafe fn row_exchange(&self, n: usize, i: usize) -> &[f32] {
+        debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
+        debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
+        // SAFETY: in-bounds by the asserts above; coordinator-serial per
+        // the fn contract — no concurrent access exists at the barrier.
+        unsafe { std::slice::from_raw_parts(self.ptrs[n].add(i * self.cols), self.cols) }
+    }
+
+    /// Write-back access for a validated transport payload; same
+    /// coordinator-serial contract as [`Self::row_exchange`].
+    ///
+    /// # Safety
+    /// Caller must be the coordinator at a round barrier: no worker
+    /// thread may be live, making this the only reference to the row.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut_exchange(&self, n: usize, i: usize) -> &mut [f32] {
+        debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
+        debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
+        // SAFETY: in-bounds by the asserts above; coordinator-serial per
+        // the fn contract, so the minted `&mut` cannot alias any live
+        // reference.
+        unsafe { std::slice::from_raw_parts_mut(self.ptrs[n].add(i * self.cols), self.cols) }
     }
 }
 
@@ -538,6 +598,39 @@ mod tests {
         for i in 8..16 {
             assert!(factors.row(0, i).iter().all(|&v| v == 2.0));
         }
+    }
+
+    #[test]
+    fn unsafe_access_exchange_rows_roundtrip_bitwise() {
+        // The coordinator-serial exchange accessors (ISSUE 7): serialize
+        // rows to little-endian bytes, write them back — exact bitwise
+        // round-trip, no worker threads involved (Miri-checks the
+        // raw-pointer pattern the transport write-back mints).
+        let mut rng = Rng::new(7);
+        let mut factors = FactorMatrices::random(&mut rng, &[8, 6], 4, 1.0);
+        let before: Vec<u32> =
+            (0..8).flat_map(|i| factors.row(0, i).iter().map(|v| v.to_bits())).collect();
+        let shared = SharedFactors::new(&mut factors);
+        let mut bytes = Vec::new();
+        for i in 0..8 {
+            // SAFETY: no worker threads exist — the test is the
+            // coordinator at an (empty) barrier.
+            for &v in unsafe { shared.row_exchange(0, i) } {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for i in 0..8 {
+            // SAFETY: no worker threads exist (see above).
+            let row = unsafe { shared.row_mut_exchange(0, i) };
+            for (c, item) in row.iter_mut().enumerate() {
+                let o = (i * 4 + c) * 4;
+                *item = f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+            }
+        }
+        drop(shared);
+        let after: Vec<u32> =
+            (0..8).flat_map(|i| factors.row(0, i).iter().map(|v| v.to_bits())).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!    and accumulating core gradients worker-locally.
 //! 3. Ledger the parameter exchange the paper's GPUs would perform at each
 //!    round boundary, all-reduce the core gradients, apply the core update.
+//!    With `transport = channel` the exchange is real: boundary-row
+//!    panels and core-gradient panels travel as framed, checksummed
+//!    messages through [`crate::parallel::transport`], bitwise-identical
+//!    in exact mode and fault-tolerant (retry/dedup/reorder-buffering)
+//!    under injection.
 
 use std::time::Instant;
 
@@ -25,6 +30,9 @@ use crate::metrics::{CommLedger, PlanAccum, PlanStats};
 use crate::model::{CoreRepr, TuckerModel};
 use crate::parallel::device::{DeviceCount, DeviceGrid};
 use crate::parallel::shared::{dispatch_plan, SharedFactors};
+use crate::parallel::transport::{
+    ExchangeEvent, Exchanger, FaultPlan, PanelKind, PanelSpec, TransportKind,
+};
 use crate::parallel::{BlockPartition, LatinSchedule};
 use crate::tensor::SparseTensor;
 use crate::util::Rng;
@@ -104,6 +112,20 @@ pub struct ParallelOptions {
     /// relaxed accuracy envelope. `Auto` = `FASTTUCKER_DEVICES` or one
     /// device per worker (the historical semantics).
     pub devices: DeviceCount,
+    /// Exchange path (ISSUE 7 tentpole): `Direct` keeps the historical
+    /// shared-memory handover; `Channel` routes every inter-device
+    /// boundary-row panel and per-epoch core-gradient panel through the
+    /// framed, checksummed [`Transport`](crate::parallel::Transport)
+    /// layer — bitwise-identical in exact mode at every `D`, with typed
+    /// fault detection and recovery. `Auto` = `FASTTUCKER_TRANSPORT` or
+    /// direct.
+    pub transport: TransportKind,
+    /// Deterministic fault-injection plan for the channel transport
+    /// (fault-matrix tests, chaos CI). `None` falls back to the
+    /// `FASTTUCKER_FAULT_{SEED,RATE,KINDS}` environment variables. A
+    /// plan configured while `transport` resolves to `Direct` cannot
+    /// engage — that run is marked degraded, never silently clean.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ParallelOptions {
@@ -119,6 +141,8 @@ impl Default for ParallelOptions {
             split: 1,
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
+            transport: TransportKind::Auto,
+            fault: None,
         }
     }
 }
@@ -172,6 +196,12 @@ pub struct ParallelFastTucker {
         usize,
         usize,
     )>,
+    /// The channel exchanger (ISSUE 7): present when `transport`
+    /// resolves to `Channel`, rebuilt with the partition/grid. Fault and
+    /// kill state persist across epochs — a device killed by injection
+    /// stays dead until the engine is rebuilt (the elastic-recovery
+    /// path: reload the checkpoint into a fresh engine).
+    exchanger: Option<Exchanger>,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
     /// Plan observability accumulated across epochs (one record per
@@ -188,6 +218,7 @@ impl ParallelFastTucker {
             partition_for: None,
             grid: None,
             grid_degraded: false,
+            exchanger: None,
             pools: Vec::new(),
             mode0_counts: Vec::new(),
             device_params: Vec::new(),
@@ -241,6 +272,33 @@ impl ParallelFastTucker {
                 crate::analysis::audit_schedule_and_grid(&grid, &schedule, train)
                     .assert_clean("device grid / Latin schedule");
             }
+            // ISSUE 7: the exchange path is decided with the grid. A
+            // programmatic fault plan wins over the environment; a plan
+            // that cannot engage (direct transport) is a degraded run,
+            // never a silent ignore. Invalid FASTTUCKER_FAULT_* values
+            // abort with a typed error.
+            let fault = match self.opts.fault {
+                Some(plan) => Some(plan),
+                None => FaultPlan::from_env()?,
+            };
+            self.exchanger = match self.opts.transport.resolve() {
+                TransportKind::Channel => {
+                    let mut ex = Exchanger::new(grid.devices(), fault);
+                    ex.enable_event_log();
+                    Some(ex)
+                }
+                _ => {
+                    if fault.is_some() {
+                        log_warn!(
+                            "a FaultPlan is configured but the transport resolves to \
+                             direct — fault injection cannot engage (recorded in \
+                             PlanStats::degraded)"
+                        );
+                        degraded = true;
+                    }
+                    None
+                }
+            };
             self.grid_degraded = degraded;
             self.grid = Some(grid);
             self.partition_for = Some(fp);
@@ -382,6 +440,11 @@ impl ParallelFastTucker {
         // exact-mode D-invariance contract).
         let mut worker_rngs: Vec<Rng> = (0..m).map(|_| rng.fork()).collect();
 
+        if let Some(ex) = self.exchanger.as_mut() {
+            // One epoch's audit window: the event log is drained per
+            // epoch (see `exchange_events`) and stays bounded.
+            ex.clear_events();
+        }
         let execution = self.opts.execution;
         let t0 = Instant::now();
         let mut samples = 0usize;
@@ -403,6 +466,7 @@ impl ParallelFastTucker {
                 // inter-device counters additionally locate each chunk's
                 // previous owner and count only rows that actually cross
                 // a device boundary (intra-device handovers are free).
+                let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
                 for g in 0..m {
                     for (mode, chunk) in schedule.incoming_chunks(round, g) {
                         let (s, e) = BlockPartition::chunk_range(chunk, dims[mode], m);
@@ -412,8 +476,34 @@ impl ParallelFastTucker {
                         if grid.device_of(src) != grid.device_of(g) {
                             comm_rows += (e - s) as u64;
                             comm_bytes += ((e - s) * j * 4) as u64;
+                            if self.exchanger.is_some() {
+                                let spec = PanelSpec {
+                                    kind: PanelKind::Rows,
+                                    src_dev: grid.device_of(src),
+                                    dst_dev: grid.device_of(g),
+                                    mode,
+                                    chunk,
+                                    row_start: s,
+                                    n_rows: e - s,
+                                };
+                                panels.push((spec, rows_payload(&shared, mode, s, e, j)));
+                            }
                         }
                     }
+                }
+                // Channel transport: the boundary rows actually travel
+                // as framed, checksummed messages and are written back
+                // from the *validated* payloads — a bitwise no-op when
+                // healthy (exact little-endian f32 round-trip), a typed
+                // error when unrecoverable. The coordinator is the only
+                // live actor at the barrier, so the writes cannot race.
+                if let Some(ex) = self.exchanger.as_mut() {
+                    let delivered = ex.exchange(epoch, round, &panels)?;
+                    for (spec, payload, seq) in &delivered {
+                        apply_rows_payload(&shared, spec, payload, j);
+                        ex.note_applied(epoch, round, spec, *seq);
+                    }
+                    ex.note_compute_start(epoch, round);
                 }
                 let (count, round_secs, round_plans) = match execution {
                     Execution::Threads => run_round_threads(
@@ -472,18 +562,73 @@ impl ParallelFastTucker {
             // (the DispatchPool invariant: sequential passes and the
             // exact tape replay both target it).
             match self.opts.exactness {
-                Exactness::Exact => {
-                    // Flat left fold in global worker order — the bitwise
-                    // contract. Identical at every D: device worker
-                    // ranges are contiguous, so device-major order IS
-                    // worker order and the fold never reassociates.
-                    let (first, rest) = self.pools.split_at_mut(1);
-                    let (grad0, count0) = first[0].core_grad_mut();
-                    for ws in rest.iter_mut() {
-                        let (grad, count) = ws.core_grad_mut();
-                        crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                Exactness::Exact => match self.exchanger.as_mut() {
+                    Some(ex) if n_devices > 1 => {
+                        // Channel path, same flat fold in global worker
+                        // order: the root device's pools fold locally;
+                        // every off-root pool ships its (grad, count) as
+                        // a CoreGrad panel to the root. Worker ranges
+                        // are contiguous and panels come back in send
+                        // order, so the fold order — and the bits —
+                        // match the direct handover exactly.
+                        let root_end = grid.workers_of(0).end;
+                        let (head, tail) = self.pools.split_at_mut(root_end);
+                        let (first, rest) = head.split_at_mut(1);
+                        let (grad0, count0) = first[0].core_grad_mut();
+                        for ws in rest.iter_mut() {
+                            let (grad, count) = ws.core_grad_mut();
+                            crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                        }
+                        let merge_round = schedule.rounds();
+                        let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
+                        for (off, ws) in tail.iter_mut().enumerate() {
+                            let g = root_end + off;
+                            let (grad, count) = ws.core_grad_mut();
+                            panels.push((
+                                PanelSpec {
+                                    kind: PanelKind::CoreGrad,
+                                    src_dev: grid.device_of(g),
+                                    dst_dev: 0,
+                                    mode: 0,
+                                    chunk: g,
+                                    row_start: 0,
+                                    n_rows: 0,
+                                },
+                                core_grad_payload(grad, *count),
+                            ));
+                            // Mirror merge_core_grad's source-zeroing:
+                            // the panel now owns the gradient.
+                            grad.fill(0.0);
+                            *count = 0;
+                        }
+                        let delivered = ex.exchange(epoch, merge_round, &panels)?;
+                        let mut scratch = vec![0.0f32; grad0.len()];
+                        for (spec, payload, seq) in &delivered {
+                            let mut cnt = read_core_grad_payload(payload, &mut scratch);
+                            crate::kernel::batched::merge_core_grad(
+                                grad0,
+                                count0,
+                                &mut scratch,
+                                &mut cnt,
+                            );
+                            ex.note_applied(epoch, merge_round, spec, *seq);
+                        }
+                        ex.note_compute_start(epoch, merge_round);
                     }
-                }
+                    _ => {
+                        // Flat left fold in global worker order — the
+                        // bitwise contract. Identical at every D: device
+                        // worker ranges are contiguous, so device-major
+                        // order IS worker order and the fold never
+                        // reassociates.
+                        let (first, rest) = self.pools.split_at_mut(1);
+                        let (grad0, count0) = first[0].core_grad_mut();
+                        for ws in rest.iter_mut() {
+                            let (grad, count) = ws.core_grad_mut();
+                            crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                        }
+                    }
+                },
                 Exactness::Relaxed => {
                     // The paper's two-stage all-reduce tree: device-local
                     // fold (free), then one gradient panel per non-root
@@ -504,12 +649,56 @@ impl ParallelFastTucker {
                             );
                         }
                     }
-                    for dev in 1..n_devices {
-                        let leader = grid.workers_of(dev).start;
-                        let (head, tail) = self.pools.split_at_mut(leader);
-                        let (grad0, count0) = head[0].core_grad_mut();
-                        let (grad, count) = tail[0].core_grad_mut();
-                        crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                    match self.exchanger.as_mut() {
+                        Some(ex) if n_devices > 1 => {
+                            // The tree's inter-device stage over the
+                            // channel: one pre-folded panel per non-root
+                            // device leader, merged in device order
+                            // (panel order == send order).
+                            let merge_round = schedule.rounds();
+                            let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
+                            for dev in 1..n_devices {
+                                let leader = grid.workers_of(dev).start;
+                                let (grad, count) = self.pools[leader].core_grad_mut();
+                                panels.push((
+                                    PanelSpec {
+                                        kind: PanelKind::CoreGrad,
+                                        src_dev: dev,
+                                        dst_dev: 0,
+                                        mode: 0,
+                                        chunk: leader,
+                                        row_start: 0,
+                                        n_rows: 0,
+                                    },
+                                    core_grad_payload(grad, *count),
+                                ));
+                                grad.fill(0.0);
+                                *count = 0;
+                            }
+                            let delivered = ex.exchange(epoch, merge_round, &panels)?;
+                            let (grad0, count0) = self.pools[0].core_grad_mut();
+                            let mut scratch = vec![0.0f32; grad0.len()];
+                            for (spec, payload, seq) in &delivered {
+                                let mut cnt = read_core_grad_payload(payload, &mut scratch);
+                                crate::kernel::batched::merge_core_grad(
+                                    grad0,
+                                    count0,
+                                    &mut scratch,
+                                    &mut cnt,
+                                );
+                                ex.note_applied(epoch, merge_round, spec, *seq);
+                            }
+                            ex.note_compute_start(epoch, merge_round);
+                        }
+                        _ => {
+                            for dev in 1..n_devices {
+                                let leader = grid.workers_of(dev).start;
+                                let (head, tail) = self.pools.split_at_mut(leader);
+                                let (grad0, count0) = head[0].core_grad_mut();
+                                let (grad, count) = tail[0].core_grad_mut();
+                                crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
+                            }
+                        }
                     }
                 }
             }
@@ -541,7 +730,40 @@ impl ParallelFastTucker {
             .record_device_epoch(n_devices, samples as u64, max_device);
         self.plan_accum.record_comm(comm_rows, comm_bytes);
 
+        // Transport observability: recovered faults are loud — counters
+        // in the accumulator plus a warning — but NOT `degraded`, which
+        // stays reserved for geometry/config trouble (a transparently
+        // recovered exchange is still a correct exchange).
+        if let Some(ex) = self.exchanger.as_mut() {
+            let ts = ex.drain_stats();
+            self.plan_accum.record_transport(&ts);
+            if ts.faults_detected() > 0 {
+                log_warn!(
+                    "transport recovered faults this epoch: {} retries, {} duplicates \
+                     dropped, {} checksum failures, {} reorders, {} timeouts",
+                    ts.retries,
+                    ts.duplicates_dropped,
+                    ts.checksum_failures,
+                    ts.reorders,
+                    ts.timeouts
+                );
+            }
+            // strict-audit: independently re-verify the in-flight
+            // exchange protocol (every delivered panel applied exactly
+            // once, inside its own round window) from the event stream.
+            #[cfg(feature = "strict-audit")]
+            crate::analysis::audit_exchange(ex.events())
+                .assert_clean("in-flight exchange protocol");
+        }
+
         Ok(EpochStats { samples, factor_secs, core_secs })
+    }
+
+    /// The channel exchanger's event log for the most recent epoch
+    /// (empty under the direct transport) — the input of the in-flight
+    /// exchange auditor ([`crate::analysis::audit_exchange`]).
+    pub fn exchange_events(&self) -> &[ExchangeEvent] {
+        self.exchanger.as_ref().map(|ex| ex.events()).unwrap_or(&[])
     }
 }
 
@@ -652,6 +874,67 @@ fn run_round_simulated(
     }
     let slowest = device_secs.iter().copied().fold(0.0f64, f64::max);
     (samples, slowest, plans)
+}
+
+/// Serialize a contiguous factor-row panel (rows `s..e` of `mode`, `j`
+/// columns) as little-endian f32 bytes — the exact-round-trip payload of
+/// a `Rows` frame. Exactness matters: because `to_le_bytes`/
+/// `from_le_bytes` round-trip every f32 bit pattern, a healthy
+/// send-and-apply is a bitwise no-op, and any divergence after an
+/// exchange can only mean undetected corruption.
+fn rows_payload(shared: &SharedFactors, mode: usize, s: usize, e: usize, j: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity((e - s) * j * 4);
+    for i in s..e {
+        // SAFETY: the exchange runs coordinator-serial at the round
+        // barrier — no worker threads are live — so this read cannot
+        // race (see `SharedFactors::row_exchange`).
+        let row = unsafe { shared.row_exchange(mode, i) };
+        for &v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Write a validated `Rows` payload back into the factors — the exact
+/// inverse of [`rows_payload`], and the only place transported bytes
+/// reach the model, which is why it runs strictly after frame checksum
+/// and geometry validation.
+fn apply_rows_payload(shared: &SharedFactors, spec: &PanelSpec, payload: &[u8], j: usize) {
+    debug_assert_eq!(payload.len(), spec.n_rows * j * 4);
+    for r in 0..spec.n_rows {
+        // SAFETY: coordinator-serial at the round barrier — no worker
+        // threads are live — so this exclusive write cannot race (see
+        // `SharedFactors::row_mut_exchange`).
+        let row = unsafe { shared.row_mut_exchange(spec.mode, spec.row_start + r) };
+        for (c, item) in row.iter_mut().enumerate() {
+            let o = (r * j + c) * 4;
+            *item = f32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
+        }
+    }
+}
+
+/// Serialize one pool's Eq. 17 gradient block as a `CoreGrad` payload:
+/// the sample count (u64 LE) followed by the gradient as little-endian
+/// f32 — another exact round-trip.
+fn core_grad_payload(grad: &[f32], count: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + grad.len() * 4);
+    out.extend_from_slice(&(count as u64).to_le_bytes());
+    for &v in grad {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`core_grad_payload`]: fills `grad` and returns the count.
+fn read_core_grad_payload(payload: &[u8], grad: &mut [f32]) -> usize {
+    debug_assert_eq!(payload.len(), 8 + grad.len() * 4);
+    let count = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    for (i, item) in grad.iter_mut().enumerate() {
+        let o = 8 + i * 4;
+        *item = f32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
+    }
+    count
 }
 
 /// One worker's pass over its block: the sampled (or full) block-local
@@ -1128,6 +1411,121 @@ mod tests {
         // worker, plus one core all-reduce.
         assert!(engine.ledger.factor_bytes > 0);
         assert!(engine.ledger.core_bytes > 0);
+    }
+
+    #[test]
+    fn channel_transport_is_bitwise_neutral_and_counts_frames() {
+        // ISSUE 7 tentpole, engine level: routing the boundary rows and
+        // core-gradient panels through the framed channel transport must
+        // leave the trained model — factors AND core — bitwise identical
+        // to the direct handover, while actually moving frames for
+        // D > 1 (and none for D = 1, where nothing crosses a device).
+        let (p, spec) = planted(141);
+        let run = |transport, devices: usize| {
+            let mut rng = Rng::new(142);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = crate::parallel::DeviceCount::Fixed(devices);
+            opts.transport = transport;
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(143);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, engine)
+        };
+        let (direct, _) = run(TransportKind::Direct, 2);
+        let (channel, engine) = run(TransportKind::Channel, 2);
+        assert!(engine.plan_accum.frames_sent > 0, "no frames moved at D=2");
+        assert_eq!(
+            engine.plan_accum.transport_faults(),
+            0,
+            "healthy channel reported faults: {:?}",
+            engine.plan_accum
+        );
+        assert!(!engine.exchange_events().is_empty(), "event log empty");
+        for n in 0..3 {
+            for (a, b) in direct
+                .factors
+                .mat(n)
+                .data()
+                .iter()
+                .zip(channel.factors.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged over the channel");
+            }
+        }
+        let (ck, cs) = match (&direct.core, &channel.core) {
+            (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        for n in 0..3 {
+            for (a, b) in ck.factor(n).data().iter().zip(cs.factor(n).data().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "core mode {n} diverged over the channel");
+            }
+        }
+        let (_, engine1) = run(TransportKind::Channel, 1);
+        assert_eq!(
+            engine1.plan_accum.frames_sent, 0,
+            "a single device must ship nothing"
+        );
+    }
+
+    #[test]
+    fn fault_plan_on_direct_transport_degrades_loudly() {
+        // A configured FaultPlan that cannot engage (direct transport)
+        // must be surfaced, not silently ignored.
+        let (p, spec) = planted(151);
+        let mut rng = Rng::new(152);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.transport = TransportKind::Direct;
+        opts.fault = Some(FaultPlan {
+            seed: 1,
+            rate: 0.5,
+            kinds: crate::parallel::FaultKinds::ALL,
+            kill: None,
+        });
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "ignored fault plan not marked degraded: {:?}",
+            engine.plan_accum
+        );
+    }
+
+    #[test]
+    fn killed_device_surfaces_from_train_epoch() {
+        // ISSUE 7 elastic-recovery trigger: a permanently dead device
+        // must abort the epoch with the named typed error (the caller's
+        // cue to reload a checkpoint into a re-sharded engine), never
+        // hang or silently train on partial exchanges.
+        let (p, spec) = planted(161);
+        let mut rng = Rng::new(162);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = crate::parallel::DeviceCount::Fixed(2);
+        opts.transport = TransportKind::Channel;
+        opts.fault = Some(FaultPlan {
+            seed: 1,
+            rate: 0.0,
+            kinds: crate::parallel::FaultKinds::NONE,
+            kill: Some(crate::parallel::KillSpec { device: 1, after_sends: 3 }),
+        });
+        let mut engine = ParallelFastTucker::new(opts);
+        let err = engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                AlgoError::Transport(crate::parallel::TransportError::DeviceDead { device: 1 })
+            ),
+            "wrong error: {err}"
+        );
     }
 
     #[test]

@@ -1,0 +1,60 @@
+//! FNV-1a 64-bit hashing — the crate's integrity checksum.
+//!
+//! Used by the transport frame format
+//! ([`crate::parallel::transport`]) and the checkpoint file format
+//! ([`crate::model::checkpoint`], format version 2) to detect
+//! corruption. FNV-1a is not cryptographic — it guards against
+//! bit-flips, truncation, and framing bugs, not adversaries — but it is
+//! tiny, dependency-free, and has a published reference the constants
+//! below can be checked against.
+
+/// FNV-1a offset basis (64-bit).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Hash `bytes` with 64-bit FNV-1a.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_fnv1a_vectors() {
+        // Reference vectors from the FNV specification (Noll's tables).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let base = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let h0 = fnv1a64(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(fnv1a64(&flipped), h0, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let base = vec![7u8; 64];
+        let h0 = fnv1a64(&base);
+        for cut in 0..64 {
+            assert_ne!(fnv1a64(&base[..cut]), h0, "truncation to {cut} undetected");
+        }
+    }
+}

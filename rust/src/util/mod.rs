@@ -6,10 +6,12 @@
 //! by focused in-tree implementations.
 
 pub mod error;
+pub mod hash;
 pub mod rng;
 pub mod logger;
 pub mod linalg;
 pub mod propcheck;
 
 pub use error::{Context, Error, Result};
+pub use hash::fnv1a64;
 pub use rng::Rng;

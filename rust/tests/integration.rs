@@ -654,3 +654,133 @@ fn threads_and_simulated_execution_identical() {
     let b = run(Execution::Simulated);
     assert!((a - b).abs() < 1e-12, "{a} vs {b}");
 }
+
+#[test]
+fn elastic_recovery_after_device_death_resumes_bitwise_on_new_grid() {
+    // ISSUE 7 tentpole e2e: a device dies mid-epoch on a channel grid →
+    // train_epoch surfaces a typed DeviceDead error (no silent
+    // corruption, no panic); reloading the last checkpoint into a FRESH
+    // engine re-sharded to a DIFFERENT device count and resuming at the
+    // same epoch indices is bitwise-equal to a never-interrupted run —
+    // elastic recovery rides on the grid's device-count invariance.
+    use fasttucker::algo::AlgoError;
+    use fasttucker::parallel::{
+        DeviceCount, FaultKinds, FaultPlan, KillSpec, TransportError, TransportKind,
+    };
+
+    let spec = PlantedSpec {
+        dims: vec![60, 45, 45],
+        nnz: 8000,
+        j: 4,
+        r_core: 4,
+        noise: 0.05,
+        clamp: None,
+    };
+    let mut prng = Rng::new(171);
+    let tensor = planted_tucker(&mut prng, &spec).tensor;
+    let make_engine = |devices: usize, fault: Option<FaultPlan>| {
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = DeviceCount::Fixed(devices);
+        opts.transport = TransportKind::Channel;
+        opts.fault = fault;
+        opts.hyper.lr_factor = LrSchedule::constant(0.02);
+        opts.hyper.lr_core = LrSchedule::constant(0.01);
+        ParallelFastTucker::new(opts)
+    };
+
+    // Phase 1: two healthy epochs on a D = 2 channel grid, then
+    // checkpoint model + RNG position.
+    let mut rng = Rng::new(172);
+    let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+    let mut engine = make_engine(2, None);
+    let mut rng2 = Rng::new(173);
+    for epoch in 0..2 {
+        engine.train_epoch(&mut model, &tensor, epoch, &mut rng2).unwrap();
+    }
+    let dir = std::env::temp_dir().join("fasttucker_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("elastic_kill.ftck");
+    fasttucker::model::checkpoint::save(&model, &path).unwrap();
+    let rng_at_ckpt = rng2.clone();
+
+    // Reference: uninterrupted continuation, same D = 2 grid.
+    let mut reference = fasttucker::model::checkpoint::load(&path).unwrap();
+    let mut engine = make_engine(2, None);
+    let mut rng2 = rng_at_ckpt.clone();
+    let mut ref_traj = Vec::new();
+    for epoch in 2..4 {
+        engine.train_epoch(&mut reference, &tensor, epoch, &mut rng2).unwrap();
+        ref_traj.push(rmse(&reference, &tensor));
+    }
+
+    // The failure: device 1 is killed mid-epoch. The epoch must surface
+    // the named DeviceDead error from train_epoch.
+    let mut victim = fasttucker::model::checkpoint::load(&path).unwrap();
+    let kill = FaultPlan {
+        seed: 1,
+        rate: 0.0,
+        kinds: FaultKinds::NONE,
+        kill: Some(KillSpec { device: 1, after_sends: 3 }),
+    };
+    let mut engine = make_engine(2, Some(kill));
+    let mut rng2 = rng_at_ckpt.clone();
+    let err = engine.train_epoch(&mut victim, &tensor, 2, &mut rng2).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            AlgoError::Transport(TransportError::DeviceDead { device: 1 })
+        ),
+        "expected DeviceDead for device 1, got {err:?}"
+    );
+
+    // Elastic recovery: reload the checkpoint into a fresh engine
+    // re-sharded to D = 3 (the dead device's capacity is gone) and
+    // resume at the same epoch indices.
+    let mut recovered = fasttucker::model::checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut engine = make_engine(3, None);
+    let mut rng2 = rng_at_ckpt;
+    let mut rec_traj = Vec::new();
+    for epoch in 2..4 {
+        engine.train_epoch(&mut recovered, &tensor, epoch, &mut rng2).unwrap();
+        rec_traj.push(rmse(&recovered, &tensor));
+    }
+
+    for (i, (a, b)) in ref_traj.iter().zip(rec_traj.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "epoch {}: recovered trajectory diverged ({a} vs {b})",
+            i + 2
+        );
+    }
+    for n in 0..3 {
+        for (a, b) in reference
+            .factors
+            .mat(n)
+            .data()
+            .iter()
+            .zip(recovered.factors.mat(n).data().iter())
+        {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "mode {n} factors diverged after elastic recovery"
+            );
+        }
+    }
+    let (ck, cr) = match (&reference.core, &recovered.core) {
+        (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+        _ => unreachable!(),
+    };
+    for n in 0..3 {
+        for (a, b) in ck.factor(n).data().iter().zip(cr.factor(n).data().iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "core mode {n} diverged after elastic recovery"
+            );
+        }
+    }
+}

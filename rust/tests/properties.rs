@@ -938,3 +938,234 @@ fn prop_factor_matrices_shapes_consistent() {
         }
     });
 }
+
+#[test]
+fn prop_channel_transport_exact_bitwise_matches_direct() {
+    // ISSUE 7 tentpole acceptance: routing every boundary-row panel and
+    // core-gradient panel through the framed, checksummed channel
+    // transport is bitwise-neutral — for D ∈ {1, 2, 3, 4}, on both the
+    // tall and the hollow workload, factors, core factors, and the
+    // per-epoch residual trajectory match the direct handover exactly.
+    // D > 1 must actually move frames (no vacuous pass); D = 1 must
+    // move none.
+    use fasttucker::algo::SgdHyper;
+    use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+    use fasttucker::kruskal::reconstruct::rmse;
+    use fasttucker::parallel::{
+        DeviceCount, ParallelFastTucker, ParallelOptions, TransportKind,
+    };
+
+    let workloads = [
+        ("tall", PlantedSpec {
+            dims: vec![40, 40, 40],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+        ("hollow", PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+    ];
+    for (wname, spec) in &workloads {
+        let mut prng = fasttucker::util::Rng::new(0xD1CE);
+        let p = planted_tucker(&mut prng, spec);
+        let run = |transport: TransportKind, devices: usize| {
+            let mut rng = fasttucker::util::Rng::new(7001);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = DeviceCount::Fixed(devices);
+            opts.transport = transport;
+            opts.hyper = SgdHyper::default();
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = fasttucker::util::Rng::new(7002);
+            let mut trajectory = Vec::new();
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+                trajectory.push(rmse(&model, &p.tensor));
+            }
+            (model, trajectory, engine.plan_accum)
+        };
+        for devices in [1usize, 2, 3, 4] {
+            let (direct, dtraj, _) = run(TransportKind::Direct, devices);
+            let (channel, ctraj, acc) = run(TransportKind::Channel, devices);
+            if devices > 1 {
+                assert!(
+                    acc.frames_sent > 0,
+                    "{wname} D={devices}: the channel shipped no frames"
+                );
+                assert!(acc.frames_delivered > 0);
+            } else {
+                assert_eq!(acc.frames_sent, 0, "{wname}: D=1 must ship nothing");
+            }
+            assert_eq!(
+                acc.transport_faults(),
+                0,
+                "{wname} D={devices}: healthy channel reported faults"
+            );
+            for (e, (a, b)) in dtraj.iter().zip(ctraj.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{wname} D={devices}: epoch {e} trajectory diverged over the channel"
+                );
+            }
+            for n in 0..3 {
+                for (a, b) in direct
+                    .factors
+                    .mat(n)
+                    .data()
+                    .iter()
+                    .zip(channel.factors.mat(n).data().iter())
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{wname} D={devices}: mode {n} factors diverged over the channel"
+                    );
+                }
+            }
+            let (ck, cs) = match (&direct.core, &channel.core) {
+                (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+                _ => unreachable!(),
+            };
+            for n in 0..3 {
+                for (a, b) in ck.factor(n).data().iter().zip(cs.factor(n).data().iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{wname} D={devices}: core mode {n} diverged over the channel"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fault_matrix_recovers_bitwise_or_fails_named() {
+    // ISSUE 7 acceptance: for every fault class × injection rate × seed,
+    // a faulty channel run either (a) completes AND is bitwise-equal to
+    // the fault-free channel run — recovery, not approximation — or
+    // (b) fails with a typed AlgoError::Transport. There is no third
+    // outcome: no panic, no silent divergence, no other error class.
+    use fasttucker::algo::{AlgoError, SgdHyper};
+    use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+    use fasttucker::parallel::{
+        DeviceCount, FaultKind, FaultKinds, FaultPlan, ParallelFastTucker, ParallelOptions,
+        TransportKind,
+    };
+
+    let spec = PlantedSpec {
+        dims: vec![30, 24, 24],
+        nnz: 2500,
+        j: 4,
+        r_core: 3,
+        noise: 0.05,
+        clamp: None,
+    };
+    let mut prng = fasttucker::util::Rng::new(0xFA17);
+    let p = planted_tucker(&mut prng, &spec);
+    let run = |fault: Option<FaultPlan>| {
+        let mut rng = fasttucker::util::Rng::new(9001);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 3;
+        opts.devices = DeviceCount::Fixed(2);
+        opts.transport = TransportKind::Channel;
+        opts.fault = fault;
+        opts.hyper = SgdHyper::default();
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut rng2 = fasttucker::util::Rng::new(9002);
+        for epoch in 0..2 {
+            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2)?;
+        }
+        Ok::<_, AlgoError>((model, engine.plan_accum))
+    };
+    let (reference, _) = run(None).expect("fault-free channel run failed");
+
+    let kinds = [
+        FaultKind::Drop,
+        FaultKind::Duplicate,
+        FaultKind::Reorder,
+        FaultKind::Corrupt,
+        FaultKind::Delay,
+    ];
+    let mut completions = 0usize;
+    let mut named_failures = 0usize;
+    let mut faults_observed = 0u64;
+    for kind in kinds {
+        for rate in [0.05f32, 0.4] {
+            for seed in [1u64, 2, 3] {
+                let plan = FaultPlan {
+                    seed,
+                    rate,
+                    kinds: FaultKinds::single(kind),
+                    kill: None,
+                };
+                match run(Some(plan)) {
+                    Ok((model, acc)) => {
+                        completions += 1;
+                        faults_observed += acc.transport_faults();
+                        for n in 0..3 {
+                            for (a, b) in reference
+                                .factors
+                                .mat(n)
+                                .data()
+                                .iter()
+                                .zip(model.factors.mat(n).data().iter())
+                            {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{kind:?} rate={rate} seed={seed}: recovery was not \
+                                     bitwise (mode {n})"
+                                );
+                            }
+                        }
+                        let (ck, cs) = match (&reference.core, &model.core) {
+                            (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b)) => (a, b),
+                            _ => unreachable!(),
+                        };
+                        for n in 0..3 {
+                            for (a, b) in
+                                ck.factor(n).data().iter().zip(cs.factor(n).data().iter())
+                            {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{kind:?} rate={rate} seed={seed}: core recovery was \
+                                     not bitwise (mode {n})"
+                                );
+                            }
+                        }
+                    }
+                    // The only legal failure is a typed transport error
+                    // (retry budget exhausted under heavy loss).
+                    Err(AlgoError::Transport(e)) => {
+                        named_failures += 1;
+                        let _ = e;
+                    }
+                    Err(other) => panic!(
+                        "{kind:?} rate={rate} seed={seed}: non-transport error {other:?}"
+                    ),
+                }
+            }
+        }
+    }
+    // The matrix must exercise both recovery and the injectors: most
+    // cells complete bitwise, and the counters prove faults were real.
+    assert!(completions > 0, "no fault cell ever completed");
+    assert!(faults_observed > 0, "injectors never fired across the whole matrix");
+    // Named failures are allowed but not required (rate 0.4 drops may or
+    // may not exhaust the retry budget depending on the dice).
+    let _ = named_failures;
+}
