@@ -113,6 +113,11 @@ pub enum Violation {
     /// `ComputeStart` (or before the log ended) — its destination rows
     /// silently kept stale values.
     ExchangeUnappliedDelivery { epoch: usize, round: usize, seq: u64 },
+    /// A panel was applied later than the relaxed staleness bound
+    /// allows: `late_by` exchange windows at-or-after the panel's own
+    /// round had already closed, exceeding the audited `max_staleness`
+    /// (the bounded-staleness contract of async prefetch).
+    ExchangeStalenessExceeded { epoch: usize, round: usize, seq: u64, late_by: usize },
 }
 
 impl fmt::Display for Violation {
@@ -201,6 +206,11 @@ impl fmt::Display for Violation {
             Violation::ExchangeUnappliedDelivery { epoch, round, seq } => write!(
                 f,
                 "epoch {epoch} round {round}: delivered panel seq {seq} was never applied"
+            ),
+            Violation::ExchangeStalenessExceeded { epoch, round, seq, late_by } => write!(
+                f,
+                "epoch {epoch} round {round}: panel seq {seq} applied {late_by} closed \
+                 window(s) late, over the staleness bound"
             ),
         }
     }
@@ -640,6 +650,28 @@ pub fn audit_grid(facts: &GridFacts) -> AuditReport {
 /// frames that never arrive (drops/kills are the *transport's* problem;
 /// this leg audits only what was claimed delivered and applied).
 pub fn audit_exchange(events: &[ExchangeEvent]) -> AuditReport {
+    audit_exchange_with_staleness(events, 0)
+}
+
+/// [`audit_exchange`] with the relaxed bounded-staleness contract of
+/// async prefetch (ISSUE 8): a delivered panel may be applied up to
+/// `max_staleness` closed exchange windows after its own. Concretely,
+/// when a panel of round `r` is applied, the number of `ComputeStart`
+/// events already seen for rounds `>= r` of the same epoch is its
+/// lateness; lateness above the bound raises
+/// [`Violation::ExchangeStalenessExceeded`] (or, at `max_staleness = 0`
+/// where no apply may ever leave its own window,
+/// [`Violation::ExchangeApplyAfterCompute`] — the strict exact-mode
+/// reading). Unapplied-delivery detection defers the same way: a
+/// pending delivery is only overdue once the window `max_staleness`
+/// rounds past its own closes (or the log ends). The pipelined
+/// transfer itself needs no tolerance carve-out — `Sent`/`Delivered`
+/// events landing before their round's `BarrierStart` were never
+/// violations; the window constrains the *apply*.
+pub fn audit_exchange_with_staleness(
+    events: &[ExchangeEvent],
+    max_staleness: usize,
+) -> AuditReport {
     let mut report = AuditReport::default();
     let mut started: BTreeSet<(usize, usize)> = BTreeSet::new();
     let mut computed: BTreeSet<(usize, usize)> = BTreeSet::new();
@@ -664,10 +696,15 @@ pub fn audit_exchange(events: &[ExchangeEvent]) -> AuditReport {
                         .violations
                         .push(Violation::ExchangeApplyBeforeBarrier { epoch, round, seq });
                 }
-                if computed.contains(&(epoch, round)) {
-                    report
-                        .violations
-                        .push(Violation::ExchangeApplyAfterCompute { epoch, round, seq });
+                // Lateness: closed windows at-or-after the panel's own.
+                let late_by =
+                    computed.range((epoch, round)..=(epoch, usize::MAX)).count();
+                if late_by > max_staleness {
+                    report.violations.push(if max_staleness == 0 {
+                        Violation::ExchangeApplyAfterCompute { epoch, round, seq }
+                    } else {
+                        Violation::ExchangeStalenessExceeded { epoch, round, seq, late_by }
+                    });
                 }
                 if applied.contains(&seq) {
                     report.violations.push(Violation::ExchangeDuplicateApply { seq });
@@ -681,16 +718,21 @@ pub fn audit_exchange(events: &[ExchangeEvent]) -> AuditReport {
             ExchangeEvent::ComputeStart { epoch, round } => {
                 report.checks += 1;
                 computed.insert((epoch, round));
+                // A pending delivery of round r is overdue once this
+                // close leaves it no legal later window: its apply after
+                // this point would be > max_staleness windows late.
                 let stale: Vec<u64> = pending
                     .iter()
-                    .filter(|&(_, &er)| er == (epoch, round))
+                    .filter(|&(_, &(e, r))| {
+                        e == epoch && round >= r + max_staleness
+                    })
                     .map(|(&seq, _)| seq)
                     .collect();
                 for seq in stale {
-                    pending.remove(&seq);
+                    let (e, r) = pending.remove(&seq).unwrap();
                     report
                         .violations
-                        .push(Violation::ExchangeUnappliedDelivery { epoch, round, seq });
+                        .push(Violation::ExchangeUnappliedDelivery { epoch: e, round: r, seq });
                 }
             }
         }
@@ -1102,6 +1144,152 @@ mod tests {
             .violations
             .iter()
             .any(|v| matches!(v, Violation::ExchangeUnappliedDelivery { seq: 5, .. })));
+    }
+
+    #[test]
+    fn pipelined_transfer_before_barrier_is_tolerated() {
+        // ISSUE 8 pipelining leg: under async prefetch the next round's
+        // frames are sent — and can arrive — while the previous round
+        // still computes, so Sent/Delivered legally precede their
+        // round's BarrierStart. Only the *apply* is window-bound.
+        let mut evs = vec![ExchangeEvent::BarrierStart { epoch: 0, round: 0 }];
+        // Round 1's transfer pipelines inside round 0's window.
+        evs.push(ExchangeEvent::Sent { epoch: 0, round: 1, src: 0, dst: 1, mode: 0, chunk: 0, seq: 8 });
+        evs.push(ExchangeEvent::Delivered {
+            epoch: 0,
+            round: 1,
+            src: 0,
+            dst: 1,
+            mode: 0,
+            chunk: 0,
+            seq: 8,
+        });
+        evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: 0 });
+        evs.push(ExchangeEvent::BarrierStart { epoch: 0, round: 1 });
+        evs.push(ExchangeEvent::Applied { epoch: 0, round: 1, dst: 1, mode: 0, chunk: 0, seq: 8 });
+        evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: 1 });
+        let report = audit_exchange(&evs);
+        assert!(report.ok(), "pipelined transfer wrongly flagged: {report}");
+    }
+
+    /// A round-`r` window whose panel is delivered in-window but applied
+    /// `late` windows later (each intervening window closes empty).
+    fn staleness_log(late: usize) -> Vec<ExchangeEvent> {
+        let mut evs = vec![
+            ExchangeEvent::BarrierStart { epoch: 0, round: 0 },
+            ExchangeEvent::Sent { epoch: 0, round: 0, src: 0, dst: 1, mode: 0, chunk: 0, seq: 3 },
+            ExchangeEvent::Delivered {
+                epoch: 0,
+                round: 0,
+                src: 0,
+                dst: 1,
+                mode: 0,
+                chunk: 0,
+                seq: 3,
+            },
+        ];
+        for r in 0..late {
+            evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: r });
+            evs.push(ExchangeEvent::BarrierStart { epoch: 0, round: r + 1 });
+        }
+        evs.push(ExchangeEvent::Applied { epoch: 0, round: 0, dst: 1, mode: 0, chunk: 0, seq: 3 });
+        evs.push(ExchangeEvent::ComputeStart { epoch: 0, round: late });
+        evs
+    }
+
+    #[test]
+    fn staleness_auditor_accepts_bounded_and_flags_excess_lateness() {
+        // An apply `late` closed windows after its own round is legal
+        // exactly when late <= S; one window further raises the named
+        // staleness violation, and the strict S = 0 form keeps raising
+        // the exact-mode ApplyAfterCompute on any lateness at all.
+        for s in [1usize, 2] {
+            let report = audit_exchange_with_staleness(&staleness_log(s), s);
+            assert!(report.ok(), "S={s}: bounded lateness wrongly flagged: {report}");
+            let report = audit_exchange_with_staleness(&staleness_log(s + 1), s);
+            assert!(
+                report.violations.iter().any(|v| matches!(
+                    v,
+                    Violation::ExchangeStalenessExceeded { epoch: 0, round: 0, seq: 3, .. }
+                )),
+                "S={s}: excess lateness not flagged: {report}"
+            );
+        }
+        let report = audit_exchange(&staleness_log(1));
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::ExchangeApplyAfterCompute { epoch: 0, round: 0, seq: 3 }
+            )),
+            "strict form lost the exact-mode violation: {report}"
+        );
+    }
+
+    #[test]
+    fn staleness_auditor_defers_unapplied_delivery_by_the_bound() {
+        // Delete the late apply: the delivery is overdue only once the
+        // window S rounds past its own closes — the S = 0 auditor flags
+        // it at its own ComputeStart, the relaxed one S windows later,
+        // and an in-bound pending delivery at end-of-log is still
+        // flagged (epochs are self-contained).
+        let mut evs = staleness_log(1);
+        let ix = evs.iter().position(|e| matches!(e, ExchangeEvent::Applied { .. })).unwrap();
+        evs.remove(ix);
+        let report = audit_exchange_with_staleness(&evs, 1);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::ExchangeUnappliedDelivery { epoch: 0, round: 0, seq: 3 }
+            )),
+            "overdue delivery not flagged at the deferred close: {report}"
+        );
+        // Same log, larger bound: window 1's close is still inside the
+        // bound, so the only flag is the end-of-log sweep.
+        let report = audit_exchange_with_staleness(&evs, 2);
+        assert_eq!(
+            report.violations.len(),
+            1,
+            "expected only the end-of-log sweep: {report}"
+        );
+        assert!(matches!(
+            report.violations[0],
+            Violation::ExchangeUnappliedDelivery { epoch: 0, round: 0, seq: 3 }
+        ));
+    }
+
+    #[test]
+    fn real_async_engine_exchange_log_audits_green() {
+        // ISSUE 8 acceptance: the live async-prefetch engine's event log
+        // over a W=4 D=2 channel run — transfers pipelined ahead of
+        // their windows, applies still at their own barriers — must pass
+        // the strict (S = 0) auditor unchanged.
+        use crate::model::TuckerModel;
+        use crate::parallel::{
+            DeviceCount, ParallelFastTucker, ParallelOptions, PrefetchMode, TransportKind,
+        };
+        let dims = [40usize, 30, 30];
+        let mut rng = Rng::new(31);
+        let t = workload(&mut rng, &dims, 3000);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &dims, 4, 3);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = DeviceCount::Fixed(2);
+        opts.transport = TransportKind::Channel;
+        opts.prefetch = PrefetchMode::Async;
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut rng2 = Rng::new(32);
+        for epoch in 0..2 {
+            engine.train_epoch(&mut model, &t, epoch, &mut rng2).unwrap();
+        }
+        let events = engine.exchange_events();
+        assert!(!events.is_empty(), "async channel engine logged no exchange events");
+        assert!(
+            events.iter().any(|e| matches!(e, ExchangeEvent::Sent { .. })),
+            "no frames pipelined"
+        );
+        let report = audit_exchange(events);
+        assert!(report.ok(), "{report}");
+        assert!(report.checks > 0);
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //!    `audit_plan` binary runs it ad hoc on synthetic geometries. A
 //!    fourth leg, [`audit_exchange`], replays the channel transport's
 //!    event log and proves every delivered panel was applied exactly
-//!    once, strictly inside its round's barrier window (`strict-audit`
-//!    runs it on every epoch's log).
+//!    once, strictly inside its round's barrier window; under async
+//!    prefetch the transfer may pipeline ahead of the window but the
+//!    apply may not, and [`audit_exchange_with_staleness`] relaxes
+//!    only the latter by the configured bound (`strict-audit` runs the
+//!    staleness-aware form on every epoch's log).
 //! 2. **Shadow race detector** ([`shadow`]) — `shadow-ledger`-gated
 //!    instrumentation in `SharedFactors` records every row access with
 //!    full provenance `(epoch, round, worker, wave, thread, mode, row,
@@ -38,7 +41,8 @@ pub mod lint;
 pub mod shadow;
 
 pub use audit::{
-    audit_coloring, audit_exchange, audit_grid, audit_latin, audit_schedule_and_grid,
+    audit_coloring, audit_exchange, audit_exchange_with_staleness, audit_grid, audit_latin,
+    audit_schedule_and_grid,
     gather_grid_facts, waves_of, AuditReport, GridFacts, Violation,
 };
 pub use shadow::{AccessKind, RaceViolation, ShadowLog, ShadowSession};

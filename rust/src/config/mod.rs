@@ -9,7 +9,7 @@ use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
 use crate::kernel::{BatchSizing, Exactness, Lanes, ThreadCount};
-use crate::parallel::{DeviceCount, TransportKind};
+use crate::parallel::{DeviceCount, PrefetchMode, TransportKind};
 use crate::sched::LrSchedule;
 
 /// Which algorithm to train with.
@@ -123,6 +123,20 @@ pub struct TrainConfig {
     /// otherwise). Only the parallel engine exchanges anything; fixing
     /// `"channel"` on another engine is a config error.
     pub transport: TransportKind,
+    /// Boundary-exchange prefetch for the parallel engine. TOML:
+    /// `prefetch = "auto"` (the `FASTTUCKER_PREFETCH` env override,
+    /// else off), `"off"` (synchronous exchange at each barrier), or
+    /// `"async"` (double-buffered: round r+1's panels are issued while
+    /// round r computes; exact-mode applies still land at their own
+    /// barriers, bitwise-identical). Fixing `"async"` needs
+    /// `transport = "channel"` — the direct handover has no transfer to
+    /// hide.
+    pub prefetch: PrefetchMode,
+    /// Relaxed-mode staleness bound (rounds) for async prefetch. TOML:
+    /// `staleness = 0` (default: every panel applies at its own
+    /// barrier) or `N > 0` (a panel may apply up to N rounds late —
+    /// needs `exactness = "relaxed"` and `prefetch = "async"`).
+    pub staleness: usize,
 }
 
 impl Default for TrainConfig {
@@ -150,6 +164,8 @@ impl Default for TrainConfig {
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
             transport: TransportKind::Auto,
+            prefetch: PrefetchMode::Auto,
+            staleness: 0,
         }
     }
 }
@@ -184,6 +200,8 @@ impl TrainConfig {
     /// threads = "auto"      # or N >= 1 (in-group thread pool width)
     /// devices = "auto"      # or N >= 1 (device-shard grid width)
     /// transport = "auto"    # or "direct" / "channel" (framed exchange)
+    /// prefetch = "auto"     # or "off" / "async" (double-buffered exchange)
+    /// staleness = 0         # relaxed-mode async bound (rounds a panel may lag)
     ///
     /// [sgd]
     /// lr_factor_alpha = 0.006
@@ -260,6 +278,12 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("", "transport") {
             cfg.transport = parse_transport(v)?;
+        }
+        if let Some(v) = doc.get("", "prefetch") {
+            cfg.prefetch = parse_prefetch(v)?;
+        }
+        if let Some(v) = doc.get("", "staleness") {
+            cfg.staleness = v.as_usize()?;
         }
 
         let mut h = SgdHyper::default();
@@ -360,6 +384,36 @@ impl TrainConfig {
                  device panels); set engine = \"parallel\" or transport = \"auto\""
             );
         }
+        if self.prefetch == PrefetchMode::Async {
+            if self.engine != EngineKind::Parallel {
+                bail!(
+                    "prefetch = \"async\" needs the parallel engine (only it exchanges \
+                     device panels); set engine = \"parallel\" or prefetch = \"auto\""
+                );
+            }
+            if self.transport == TransportKind::Direct {
+                bail!(
+                    "prefetch = \"async\" needs transport = \"channel\" (the direct \
+                     in-memory handover has no transfer to hide)"
+                );
+            }
+        }
+        if self.staleness > 0 {
+            if self.exactness != Exactness::Relaxed {
+                bail!(
+                    "staleness = {} needs exactness = \"relaxed\" (exact mode owes every \
+                     panel to its own barrier)",
+                    self.staleness
+                );
+            }
+            if self.prefetch == PrefetchMode::Off {
+                bail!(
+                    "staleness = {} needs prefetch = \"async\" (without in-flight panels \
+                     there is nothing to defer)",
+                    self.staleness
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -424,6 +478,19 @@ fn parse_transport(v: &TomlValue) -> Result<TransportKind> {
     })
 }
 
+fn parse_prefetch(v: &TomlValue) -> Result<PrefetchMode> {
+    let spelled = match v {
+        TomlValue::Str(s) => s.clone(),
+        other => bail!(
+            "prefetch must be \"auto\", \"off\", or \"async\", got {} {other:?}",
+            other.type_name()
+        ),
+    };
+    PrefetchMode::parse(&spelled).ok_or_else(|| {
+        anyhow!("unknown prefetch {spelled:?} (expected \"auto\", \"off\", or \"async\")")
+    })
+}
+
 fn parse_lanes(v: &TomlValue) -> Result<Lanes> {
     let spelled = match v {
         TomlValue::Str(s) => s.clone(),
@@ -464,6 +531,43 @@ mod tests {
         // Relaxed exactness on the scalar path is a config error.
         assert!(TrainConfig::from_toml_str("batch = 0\nexactness = \"relaxed\"").is_err());
         assert!(TrainConfig::from_toml_str("batch = 2\nexactness = \"relaxed\"").is_ok());
+    }
+
+    #[test]
+    fn parses_prefetch_and_staleness() {
+        let cfg = TrainConfig::from_toml_str("prefetch = \"auto\"\n").unwrap();
+        assert_eq!(cfg.prefetch, PrefetchMode::Auto);
+        assert_eq!(cfg.staleness, 0);
+        let cfg = TrainConfig::from_toml_str(
+            "engine = \"parallel\"\ntransport = \"channel\"\nprefetch = \"async\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.prefetch, PrefetchMode::Async);
+        let cfg = TrainConfig::from_toml_str(
+            "engine = \"parallel\"\ntransport = \"channel\"\nprefetch = \"async\"\n\
+             exactness = \"relaxed\"\nstaleness = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.staleness, 2);
+
+        assert!(TrainConfig::from_toml_str("prefetch = \"eager\"").is_err());
+        assert!(TrainConfig::from_toml_str("prefetch = 1").is_err());
+        // Async prefetch needs the parallel engine and a transfer to hide.
+        assert!(TrainConfig::from_toml_str("prefetch = \"async\"").is_err());
+        assert!(TrainConfig::from_toml_str(
+            "engine = \"parallel\"\ntransport = \"direct\"\nprefetch = \"async\"\n"
+        )
+        .is_err());
+        // Staleness needs relaxed exactness and in-flight panels.
+        assert!(TrainConfig::from_toml_str(
+            "engine = \"parallel\"\ntransport = \"channel\"\nprefetch = \"async\"\nstaleness = 1\n"
+        )
+        .is_err());
+        assert!(TrainConfig::from_toml_str(
+            "engine = \"parallel\"\ntransport = \"channel\"\nprefetch = \"off\"\n\
+             exactness = \"relaxed\"\nstaleness = 1\n"
+        )
+        .is_err());
     }
 
     #[test]

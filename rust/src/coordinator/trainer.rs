@@ -128,6 +128,8 @@ impl Trainer {
                     threads: cfg.threads,
                     devices: cfg.devices,
                     transport: cfg.transport,
+                    prefetch: cfg.prefetch,
+                    staleness: cfg.staleness,
                     ..Default::default()
                 };
                 Engine::Parallel(ParallelFastTucker::new(po))

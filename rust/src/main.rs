@@ -7,6 +7,7 @@
 //!                   [--batch auto|N] [--exactness exact|relaxed]
 //!                   [--lanes auto|4|8] [--split N] [--threads auto|N]
 //!                   [--devices auto|D] [--transport auto|direct|channel]
+//!                   [--prefetch auto|off|async] [--staleness N]
 //!                   [--checkpoint OUT.ftck]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
@@ -62,6 +63,7 @@ USAGE:
                     [--batch auto|N] [--exactness exact|relaxed]
                     [--lanes auto|4|8] [--split N] [--threads auto|N]
                     [--devices auto|D] [--transport auto|direct|channel]
+                    [--prefetch auto|off|async] [--staleness N]
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -136,6 +138,13 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("transport") {
         cfg.transport = fasttucker::parallel::TransportKind::parse(v)
             .ok_or_else(|| anyhow!("--transport expects auto|direct|channel, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("prefetch") {
+        cfg.prefetch = fasttucker::parallel::PrefetchMode::parse(v)
+            .ok_or_else(|| anyhow!("--prefetch expects auto|off|async, got {v:?}"))?;
+    }
+    if let Some(v) = args.get_usize("staleness")? {
+        cfg.staleness = v;
     }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;

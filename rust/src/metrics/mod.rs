@@ -251,6 +251,17 @@ pub struct PlanAccum {
     pub transport_reorders: u64,
     /// Drain attempts that found panels still missing (delay/drop cost).
     pub transport_timeouts: u64,
+    /// Panels issued into the transport *before* their round barrier by
+    /// the async prefetch path (ISSUE 8; 0 when prefetch is off).
+    pub prefetch_issued: u64,
+    /// Exchange cost overlapped with compute (ISSUE 8): seconds spent
+    /// serializing + issuing prefetched panels and polling the transport
+    /// while compute was still in flight — cost the round barrier never
+    /// sees.
+    pub comm_hidden_secs: f64,
+    /// Exchange cost the round barriers *did* see: seconds the
+    /// coordinator spent blocking in collect/exchange calls.
+    pub comm_exposed_secs: f64,
 }
 
 impl PlanAccum {
@@ -303,6 +314,9 @@ impl PlanAccum {
         self.transport_checksum_failures += other.transport_checksum_failures;
         self.transport_reorders += other.transport_reorders;
         self.transport_timeouts += other.transport_timeouts;
+        self.prefetch_issued += other.prefetch_issued;
+        self.comm_hidden_secs += other.comm_hidden_secs;
+        self.comm_exposed_secs += other.comm_exposed_secs;
     }
 
     /// Record one device-grid epoch: the grid width, the epoch's total
@@ -341,6 +355,30 @@ impl PlanAccum {
         self.transport_checksum_failures += ts.checksum_failures;
         self.transport_reorders += ts.reorders;
         self.transport_timeouts += ts.timeouts;
+    }
+
+    /// Record one epoch's prefetch-overlap measurements (ISSUE 8): how
+    /// many panels were issued ahead of their barrier, and how the
+    /// exchange cost split into hidden (overlapped with compute) vs
+    /// exposed (blocking at a barrier) seconds.
+    pub fn record_overlap(&mut self, issued: u64, hidden_secs: f64, exposed_secs: f64) {
+        self.prefetch_issued += issued;
+        self.comm_hidden_secs += hidden_secs;
+        self.comm_exposed_secs += exposed_secs;
+    }
+
+    /// Fraction of the measured exchange cost hidden behind compute, in
+    /// [0, 1] — `None` until any exchange time was measured. 1.0 means
+    /// every barrier found its panels already delivered (the paper's
+    /// fully-overlapped communication ideal); 0.0 means every byte was
+    /// paid for while blocking at a barrier (the synchronous path).
+    pub fn overlap_efficiency(&self) -> Option<f64> {
+        let total = self.comm_hidden_secs + self.comm_exposed_secs;
+        if total > 0.0 {
+            Some(self.comm_hidden_secs / total)
+        } else {
+            None
+        }
     }
 
     /// Total detected transport fault events (anything a healthy
@@ -583,6 +621,31 @@ mod tests {
         assert_eq!(merged.frame_bytes, 8000);
         assert_eq!(merged.frames_delivered, 18);
         assert_eq!(merged.transport_faults(), 18);
+    }
+
+    #[test]
+    fn overlap_block_records_and_merges() {
+        // ISSUE 8: the prefetch-overlap block through record_overlap AND
+        // merge (same foot-gun as the transport block above), plus the
+        // efficiency ratio's edge cases.
+        let mut acc = PlanAccum::new();
+        assert_eq!(acc.overlap_efficiency(), None, "no exchange measured yet");
+        acc.record_overlap(6, 0.03, 0.01);
+        assert_eq!(acc.prefetch_issued, 6);
+        assert!((acc.comm_hidden_secs - 0.03).abs() < 1e-12);
+        assert!((acc.comm_exposed_secs - 0.01).abs() < 1e-12);
+        let eff = acc.overlap_efficiency().unwrap();
+        assert!((eff - 0.75).abs() < 1e-9, "hidden/(hidden+exposed) = {eff}");
+        let mut merged = PlanAccum::new();
+        merged.merge(&acc);
+        merged.merge(&acc);
+        assert_eq!(merged.prefetch_issued, 12);
+        assert!((merged.comm_hidden_secs - 0.06).abs() < 1e-12);
+        assert!((merged.comm_exposed_secs - 0.02).abs() < 1e-12);
+        // A synchronous run measures only exposed time: efficiency 0.
+        let mut sync = PlanAccum::new();
+        sync.record_overlap(0, 0.0, 0.02);
+        assert_eq!(sync.overlap_efficiency(), Some(0.0));
     }
 
     #[test]

@@ -292,6 +292,54 @@ impl DeviceGrid {
         out
     }
 
+    /// Every factor-chunk handover entering `round`: for each chunk a
+    /// worker receives at this round boundary, who wrote it last round,
+    /// which rows it spans, and whether the handover crosses a device
+    /// boundary (only those become transport panels — intra-device
+    /// handovers are free). The order is the engine's fixed apply order
+    /// (destination worker, then mode), which both the synchronous
+    /// exchange and the async prefetch path (ISSUE 8) must preserve for
+    /// the exact-mode bitwise contract. Round 0 has no handovers.
+    pub fn round_handovers(&self, schedule: &LatinSchedule, round: usize) -> Vec<Handover> {
+        let mut out = Vec::new();
+        if round == 0 {
+            return out;
+        }
+        for g in 0..self.workers {
+            for (mode, chunk) in schedule.incoming_chunks(round, g) {
+                let (row_start, row_end) =
+                    BlockPartition::chunk_range(chunk, self.dims[mode], self.workers);
+                let src_worker = schedule.owner_of(round - 1, mode, chunk);
+                out.push(Handover {
+                    src_worker,
+                    dst_worker: g,
+                    mode,
+                    chunk,
+                    row_start,
+                    n_rows: row_end - row_start,
+                    crosses: self.device_of[src_worker] != self.device_of[g],
+                });
+            }
+        }
+        out
+    }
+}
+
+/// One factor-chunk handover at a round boundary (see
+/// [`DeviceGrid::round_handovers`]): worker `dst_worker` takes over
+/// `chunk` of `mode` — rows `row_start .. row_start + n_rows` — from
+/// `src_worker`, who owned (and last wrote) it in the previous round.
+/// `crosses` marks the inter-device subset that the channel transport
+/// ships as panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handover {
+    pub src_worker: usize,
+    pub dst_worker: usize,
+    pub mode: usize,
+    pub chunk: usize,
+    pub row_start: usize,
+    pub n_rows: usize,
+    pub crosses: bool,
 }
 
 #[cfg(test)]
@@ -434,6 +482,48 @@ mod tests {
             }
             assert_eq!(next, dims[mode], "mode {mode} rows not fully homed");
         }
+    }
+
+    #[test]
+    fn round_handovers_cover_every_incoming_chunk_in_apply_order() {
+        // ISSUE 8: the shared geometry helper behind both the
+        // synchronous exchange accounting and the async prefetch
+        // spec-builder must enumerate exactly the schedule's incoming
+        // chunks, in (dst worker, mode) order, with the correct previous
+        // owner, row range, and device-crossing flag.
+        forall("round handovers", 12, |rng| {
+            let order = 2 + rng.gen_range(2);
+            let w = 2 + rng.gen_range(4);
+            let d = 1 + rng.gen_range(w);
+            let dims: Vec<usize> = (0..order).map(|_| w + rng.gen_range(20)).collect();
+            let g = grid(d, w, &dims);
+            let s = LatinSchedule::new(w, order);
+            assert!(g.round_handovers(&s, 0).is_empty(), "round 0 has no handovers");
+            for round in 1..s.rounds() {
+                let hs = g.round_handovers(&s, round);
+                let mut expect = Vec::new();
+                for worker in 0..w {
+                    for (mode, chunk) in s.incoming_chunks(round, worker) {
+                        expect.push((worker, mode, chunk));
+                    }
+                }
+                assert_eq!(hs.len(), expect.len(), "round {round}: handover count");
+                for (h, (worker, mode, chunk)) in hs.iter().zip(&expect) {
+                    assert_eq!((h.dst_worker, h.mode, h.chunk), (*worker, *mode, *chunk));
+                    assert_eq!(h.src_worker, s.owner_of(round - 1, h.mode, h.chunk));
+                    let (lo, hi) = BlockPartition::chunk_range(h.chunk, dims[h.mode], w);
+                    assert_eq!((h.row_start, h.n_rows), (lo, hi - lo));
+                    assert_eq!(
+                        h.crosses,
+                        g.device_of(h.src_worker) != g.device_of(h.dst_worker),
+                        "crossing flag disagrees with the device map"
+                    );
+                    if d == 1 {
+                        assert!(!h.crosses, "one device cannot cross a boundary");
+                    }
+                }
+            }
+        });
     }
 
     #[test]

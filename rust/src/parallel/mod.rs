@@ -46,6 +46,37 @@
 //! exists so the failure modes of a real multi-process backend (socket /
 //! TCP — the ROADMAP item 2 follow-up) are testable before that backend
 //! lands.
+//!
+//! # Async prefetch: what moves early, what may not (ISSUE 8)
+//!
+//! With `prefetch = async` (channel transport only), the exchange is
+//! double-buffered around the round barrier. What moves early is only
+//! the **transfer**: round r+1's panel headers are opened (and sequence
+//! numbers assigned, deterministically, in spec order) before round r
+//! computes, and each outgoing payload is serialized and handed to the
+//! transport as soon as its owning worker finishes its round-r pass —
+//! legal because the Latin schedule gives that worker exclusive
+//! ownership of the chunk for the whole round, so the rows are final the
+//! moment its pass ends. What may **not** move is the *apply*: in exact
+//! mode every prefetched panel's write-back still lands at its own round
+//! barrier, applied by the coordinator in spec order, which is why exact
+//! mode stays bitwise-identical to the synchronous exchange (and to the
+//! direct handover) at every `(D, threads, split, transport)` setting.
+//! The per-epoch core merge pipelines the same way: each off-root
+//! worker's Eq. 17 gradient panel is issued right after that worker's
+//! *last* round pass (the gradient is complete then), and the root
+//! drains and folds at the merge barrier in the same device-major order.
+//!
+//! Relaxed mode may additionally defer the apply itself: with
+//! `staleness = S > 0`, a panel that has not arrived by its barrier is
+//! applied at a later barrier, at most S rounds late (the paper's
+//! multi-GPU overlap made explicit), enforced by a forced blocking
+//! collect at the bound and audited by
+//! [`audit_exchange_with_staleness`](crate::analysis::audit_exchange_with_staleness).
+//! Overlap is measured, not assumed:
+//! [`PlanAccum`](crate::metrics::PlanAccum) splits the exchange cost
+//! into `comm_hidden_secs` (drained at a barrier that never had to
+//! wait) vs `comm_exposed_secs` (barrier time spent blocking).
 
 pub mod device;
 pub mod partition;
@@ -59,6 +90,6 @@ pub use partition::BlockPartition;
 pub use schedule::LatinSchedule;
 pub use transport::{
     ExchangeEvent, FaultKind, FaultKinds, FaultPlan, InProcTransport, KillSpec, PanelKind,
-    PanelSpec, Transport, TransportError, TransportKind, TransportStats,
+    PanelSpec, PrefetchMode, Transport, TransportError, TransportKind, TransportStats,
 };
 pub use worker::{Execution, ParallelFastTucker, ParallelOptions};

@@ -53,12 +53,27 @@
 //! every inter-device boundary-row panel, routes it through
 //! [`crate::parallel::transport`] as a framed, checksummed message, and
 //! writes the *validated* payload back before releasing the round's
-//! workers. Those coordinator reads/writes use the dedicated
+//! workers. Those reads/writes use the dedicated
 //! [`SharedFactors::row_exchange`]/[`SharedFactors::row_mut_exchange`]
-//! accessors, which are sound for a simpler reason than the three levels
-//! above: they run **coordinator-serial at the round barrier**, when no
-//! worker thread is live — there is nothing to be disjoint *from*. What
-//! is bitwise: the healthy exchange (exact little-endian f32
+//! accessors. The write-back side is sound for a simpler reason than the
+//! three levels above: it runs **coordinator-serial at the round
+//! barrier**, when no worker thread is live — there is nothing to be
+//! disjoint *from*. The read side has two sound callers:
+//!
+//! 1. the coordinator at the barrier (same no-worker-live argument), the
+//!    synchronous exchange path; and
+//! 2. with async prefetch (ISSUE 8), **the owning worker itself, after
+//!    its own round pass** — the Latin schedule gives that worker
+//!    exclusive ownership of the chunk for the entire round, its pass
+//!    has finished writing the rows, and no other worker may touch them
+//!    until the next barrier, so the post-pass serialization read is the
+//!    only access to those rows even while *other* workers are still
+//!    computing. This is what lets round r+1's outgoing panels enter the
+//!    transport while round r is still in flight; the **apply**
+//!    (`row_mut_exchange`) never moves — it stays coordinator-serial at
+//!    the barrier, which is the exact-mode bitwise argument.
+//!
+//! What is bitwise: the healthy exchange (exact little-endian f32
 //! round-trips applied by the same single actor). What retries: frames
 //! lost, duplicated, reordered, delayed, or detectably corrupted —
 //! recovered by the exchanger's resend/dedup/buffering protocol without
@@ -217,20 +232,30 @@ impl SharedFactors {
     /// the per-row race detector (see `analysis::shadow`'s module doc).
     ///
     /// # Safety
-    /// Caller must be the coordinator at a round barrier: no worker
-    /// thread may be live (the engine's thread scopes are closed), so no
-    /// concurrent access to any row exists.
+    /// Caller must be one of the two exclusive readers of the module
+    /// contract's exchange section: (a) the coordinator at a round
+    /// barrier — no worker thread is live (the engine's thread scopes
+    /// are closed), so no concurrent access to any row exists — or
+    /// (b) the Latin worker owning the chunk containing row `i` in the
+    /// current round, strictly *after* its own pass over the round has
+    /// returned (the async prefetch path): ownership makes this worker
+    /// the only thread allowed to touch the row until the next barrier,
+    /// and its pass having finished means it is no longer writing.
     #[inline]
     pub unsafe fn row_exchange(&self, n: usize, i: usize) -> &[f32] {
         debug_assert!(n < self.ptrs.len(), "mode {n} out of range ({})", self.ptrs.len());
         debug_assert!(i < self.rows[n], "row {i} out of range for mode {n} ({})", self.rows[n]);
-        // SAFETY: in-bounds by the asserts above; coordinator-serial per
-        // the fn contract — no concurrent access exists at the barrier.
+        // SAFETY: in-bounds by the asserts above; exclusive per the fn
+        // contract — either coordinator-serial at the barrier, or the
+        // post-pass read of the round's sole owner.
         unsafe { std::slice::from_raw_parts(self.ptrs[n].add(i * self.cols), self.cols) }
     }
 
-    /// Write-back access for a validated transport payload; same
-    /// coordinator-serial contract as [`Self::row_exchange`].
+    /// Write-back access for a validated transport payload. Unlike
+    /// [`Self::row_exchange`], this has **no** worker-side caller: the
+    /// apply always lands at the barrier, even under async prefetch
+    /// (that asymmetry — transfer may move early, apply may not — is the
+    /// exact-mode bitwise argument of the module contract).
     ///
     /// # Safety
     /// Caller must be the coordinator at a round barrier: no worker

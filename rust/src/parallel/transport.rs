@@ -60,7 +60,24 @@
 //! All recovery activity is loud: per-epoch counters land in
 //! [`PlanAccum`](crate::metrics::PlanAccum)'s transport block and a
 //! warning is logged whenever an epoch saw faults.
+//!
+//! # Async prefetch (ROADMAP item 1)
+//!
+//! The exchange can be split around the round barrier: [`Exchanger::begin_round`]
+//! opens a round and pre-assigns sequence numbers (in spec order, so the
+//! numbering is deterministic no matter which worker thread reaches the
+//! transport first), [`Exchanger::issue`] hands individual panel payloads
+//! to the transport *while the previous round still computes*, and
+//! [`Exchanger::collect`] drains at the barrier with the same
+//! retry/dedup/backoff machinery the synchronous [`Exchanger::exchange`]
+//! uses (and `exchange` is now literally `begin_round` + issue-all +
+//! `collect`). In exact mode the **apply** still lands at the barrier, so
+//! prefetch moves only the transfer earlier and results stay bitwise.
+//! Relaxed mode may instead [`Exchanger::poll`] + [`Exchanger::take_ready`]
+//! to apply whatever has arrived and defer stragglers up to a bounded
+//! number of rounds ([`PrefetchMode`], `ParallelOptions::staleness`).
 
+use std::collections::HashMap;
 use std::collections::HashSet;
 use std::collections::VecDeque;
 
@@ -121,6 +138,66 @@ impl TransportKind {
     }
 }
 
+/// Environment variable consulted by [`PrefetchMode::resolve`].
+pub const PREFETCH_VAR: &str = "FASTTUCKER_PREFETCH";
+
+/// When boundary panels are handed to the transport relative to the
+/// round barrier they are applied at (ROADMAP item 1).
+///
+/// In exact mode the **apply** always lands at the panel's own round
+/// barrier — prefetch moves only the *transfer* earlier (issued during
+/// the previous round's compute), so exact results stay bitwise-identical
+/// to the synchronous path. Relaxed mode may additionally defer applies
+/// up to a bounded number of rounds (`ParallelOptions::staleness`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchMode {
+    /// Harness-controlled: the `FASTTUCKER_PREFETCH` environment
+    /// variable (`off`/`async`), else `Off`.
+    Auto,
+    /// Send and apply at the barrier (the PR 7 synchronous exchange).
+    Off,
+    /// Double-buffered: issue round r+1's outgoing panels while round r
+    /// computes; drain and apply at round r+1's barrier. Requires the
+    /// channel transport — under `Direct` there is no transfer to
+    /// overlap, so the engine warns and degrades to `Off`.
+    Async,
+}
+
+impl PrefetchMode {
+    /// Parse `"auto"`, `"off"`, or `"async"` (case-insensitive).
+    pub fn parse(s: &str) -> Option<PrefetchMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(PrefetchMode::Auto),
+            "off" => Some(PrefetchMode::Off),
+            "async" => Some(PrefetchMode::Async),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` against `FASTTUCKER_PREFETCH` (same loud-fallback
+    /// policy as [`TransportKind::resolve`]): unknown values warn and
+    /// fall back to `Off`. Never returns `Auto`.
+    pub fn resolve(self) -> PrefetchMode {
+        match self {
+            PrefetchMode::Off | PrefetchMode::Async => self,
+            PrefetchMode::Auto => match std::env::var(PREFETCH_VAR) {
+                Ok(v) => match PrefetchMode::parse(&v) {
+                    Some(PrefetchMode::Async) => PrefetchMode::Async,
+                    Some(_) => PrefetchMode::Off,
+                    None => {
+                        log_warn!(
+                            "FASTTUCKER_PREFETCH={v:?} is not \"off\"/\"async\" — \
+                             falling back to off"
+                        );
+                        PrefetchMode::Off
+                    }
+                },
+                Err(_) => PrefetchMode::Off,
+            },
+        }
+    }
+}
+
 /// Typed transport failures. Every fault class the receive path can
 /// detect has a named variant; `Clone + PartialEq + Eq` so the variants
 /// can ride inside [`crate::algo::AlgoError`] and be `matches!`-asserted.
@@ -153,6 +230,10 @@ pub enum TransportError {
     DeviceDead { device: usize },
     /// A `FASTTUCKER_FAULT_*` environment variable failed validation.
     InvalidFaultEnv { var: String, value: String, reason: String },
+    /// A panel header field too large for the 32-bit wire format —
+    /// caught at encode time, before a silently wrapped value could
+    /// corrupt routing (ISSUE 8 bugfix; previously a bare `as u32`).
+    FrameOverflow { field: &'static str, value: usize },
 }
 
 impl std::fmt::Display for TransportError {
@@ -196,6 +277,11 @@ impl std::fmt::Display for TransportError {
             TransportError::InvalidFaultEnv { var, value, reason } => {
                 write!(f, "{var}={value:?} is invalid: {reason}")
             }
+            TransportError::FrameOverflow { field, value } => write!(
+                f,
+                "transport frame field {field}={value} exceeds the u32 wire format — \
+                 refusing to encode a silently wrapped header"
+            ),
         }
     }
 }
@@ -508,12 +594,10 @@ impl FaultPlan {
     /// values are **loud** typed errors (the PR 4 bench-env policy), not
     /// silent defaults.
     pub fn from_env() -> Result<Option<FaultPlan>, TransportError> {
-        let get = |var: &str| std::env::var(var).ok();
-        FaultPlan::from_vars(
-            get(FAULT_SEED_VAR).as_deref(),
-            get(FAULT_RATE_VAR).as_deref(),
-            get(FAULT_KINDS_VAR).as_deref(),
-        )
+        let seed = env_value(FAULT_SEED_VAR, std::env::var_os(FAULT_SEED_VAR))?;
+        let rate = env_value(FAULT_RATE_VAR, std::env::var_os(FAULT_RATE_VAR))?;
+        let kinds = env_value(FAULT_KINDS_VAR, std::env::var_os(FAULT_KINDS_VAR))?;
+        FaultPlan::from_vars(seed.as_deref(), rate.as_deref(), kinds.as_deref())
     }
 
     /// The pure parser behind [`Self::from_env`] (testable without
@@ -567,6 +651,29 @@ impl FaultPlan {
             })?,
         };
         Ok(Some(FaultPlan { seed: seed_v, rate: rate_v, kinds: kinds_v, kill: None }))
+    }
+}
+
+/// Interpret one raw environment value **loudly**: a set-but-non-unicode
+/// value is a typed error, never a silent "unset". (ISSUE 8 bugfix: the
+/// old `env::var(..).ok()` collapsed `VarError::NotUnicode` into `None`,
+/// silently disabling a configured fault plan.) Pure over the raw
+/// [`OsString`](std::ffi::OsString) so the failure path is unit-testable
+/// without mutating process-global environment state.
+fn env_value(
+    var: &str,
+    raw: Option<std::ffi::OsString>,
+) -> Result<Option<String>, TransportError> {
+    match raw {
+        None => Ok(None),
+        Some(os) => match os.into_string() {
+            Ok(s) => Ok(Some(s)),
+            Err(os) => Err(TransportError::InvalidFaultEnv {
+                var: var.into(),
+                value: os.to_string_lossy().into_owned(),
+                reason: "value is not valid unicode".into(),
+            }),
+        },
     }
 }
 
@@ -789,21 +896,92 @@ pub enum ExchangeEvent {
     ComputeStart { epoch: usize, round: usize },
 }
 
+/// Default per-destination dedup-window size: the number of delivered
+/// sequence numbers retained for idempotent duplicate dropping.
+pub const DEDUP_WINDOW: usize = 8192;
+
+/// Checked narrowing into the u32 wire header (ISSUE 8 bugfix: a bare
+/// `as u32` silently wrapped large dims / long runs into valid-looking
+/// but wrongly routed frames).
+fn frame_u32(field: &'static str, value: usize) -> Result<u32, TransportError> {
+    u32::try_from(value).map_err(|_| TransportError::FrameOverflow { field, value })
+}
+
+/// Opaque handle to one in-flight round exchange opened by
+/// [`Exchanger::begin_round`]. Single-use: [`Exchanger::collect`]
+/// consumes the round's in-flight state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundToken(u64);
+
+/// One round barrier's in-flight state: specs, pre-built frames with
+/// pre-assigned sequence numbers, and per-slot delivery status.
+struct PendingRound {
+    token: u64,
+    epoch: usize,
+    round: usize,
+    specs: Vec<PanelSpec>,
+    /// One frame per slot. Headers are built — and seqs assigned — at
+    /// [`Exchanger::begin_round`] in spec order, so the numbering is
+    /// deterministic no matter which worker thread issues first; the
+    /// payload is attached at [`Exchanger::issue`] and kept for resends
+    /// and geometry validation.
+    frames: Vec<Frame>,
+    issued: Vec<bool>,
+    got: Vec<Option<Vec<u8>>>,
+    delivered_seq: Vec<u64>,
+    /// Slots already handed out by [`Exchanger::take_ready`].
+    taken: Vec<bool>,
+    barrier_opened: bool,
+    /// Highest seq seen per (dst, src) pair this round. Prefetch issues
+    /// from different workers interleave nondeterministically across
+    /// sources, but each source issues in increasing-seq order, so only
+    /// a per-(dst, src) inversion is a genuine transport reorder.
+    last_seq: HashMap<(usize, usize), u64>,
+}
+
+impl PendingRound {
+    /// Slots neither delivered nor already handed out.
+    fn missing(&self) -> usize {
+        self.got
+            .iter()
+            .zip(&self.taken)
+            .filter(|(g, &t)| g.is_none() && !t)
+            .count()
+    }
+}
+
 /// The exchange protocol driver: owns the transport, global sequence
-/// numbering, dedup state, retry policy, counters, and the optional
-/// audit event log.
+/// numbering, per-destination dedup state, retry policy, counters, the
+/// in-flight round set, and the optional audit event log.
 pub struct Exchanger {
     transport: Box<dyn Transport + Send>,
     policy: RetryPolicy,
     next_seq: u64,
-    /// Sequence numbers already satisfied — late/duplicate arrivals of
-    /// these are dropped idempotently, even across barriers (a delayed
-    /// frame can surface rounds later). Pruned below `next_seq - 4096`
-    /// to stay bounded.
-    satisfied: HashSet<u64>,
+    /// Per-destination sets of **delivered** sequence numbers — late and
+    /// duplicate arrivals of these are dropped idempotently, even across
+    /// barriers (a delayed frame can surface rounds later). Bounded by
+    /// `dedup_window` via `floor`.
+    satisfied: Vec<HashSet<u64>>,
+    /// Per-destination dedup floor: seqs below it were pruned from
+    /// `satisfied`, and any arrival below it is dropped as a stale
+    /// duplicate — never re-applied, never a protocol error.
+    floor: Vec<u64>,
+    /// Highest delivered seq per destination. The dedup window is keyed
+    /// on what each receiver has actually seen, not the sender-side
+    /// `next_seq` (ISSUE 8 bugfix: the old prune floored at
+    /// `next_seq - 4096` over one global set, so under heavy
+    /// reorder+duplicate plans a late duplicate below the floor stopped
+    /// being recognized as a duplicate at all).
+    delivered_high: Vec<u64>,
+    /// Max retained `satisfied` entries per destination.
+    dedup_window: usize,
     stats: TransportStats,
     events: Vec<ExchangeEvent>,
     record_events: bool,
+    /// Rounds opened by [`Self::begin_round`] and not yet collected —
+    /// under async prefetch, up to staleness-bound + 1 rounds at once.
+    pending: Vec<PendingRound>,
+    next_token: u64,
 }
 
 impl Exchanger {
@@ -814,19 +992,39 @@ impl Exchanger {
             Some(plan) => Box::new(FaultyTransport::new(InProcTransport::new(devices), plan)),
             None => Box::new(InProcTransport::new(devices)),
         };
+        Exchanger::with_transport(transport)
+    }
+
+    /// An exchanger over an arbitrary [`Transport`] (tests inject
+    /// capturing/replaying transports here; the multi-process backends —
+    /// Unix socket, TCP — will plug in the same way).
+    pub fn with_transport(transport: Box<dyn Transport + Send>) -> Exchanger {
+        let devices = transport.devices();
         Exchanger {
             transport,
             policy: RetryPolicy::default(),
             next_seq: 0,
-            satisfied: HashSet::new(),
+            satisfied: vec![HashSet::new(); devices],
+            floor: vec![0; devices],
+            delivered_high: vec![0; devices],
+            dedup_window: DEDUP_WINDOW,
             stats: TransportStats::default(),
             events: Vec::new(),
             record_events: false,
+            pending: Vec::new(),
+            next_token: 0,
         }
     }
 
     pub fn set_policy(&mut self, policy: RetryPolicy) {
         self.policy = policy;
+    }
+
+    /// Shrink the per-destination dedup window (a test knob: the soak
+    /// and regression tests cross the prune threshold without shipping
+    /// thousands of real frames first).
+    pub fn set_dedup_window(&mut self, window: usize) {
+        self.dedup_window = window.max(2);
     }
 
     /// Record [`ExchangeEvent`]s for the in-flight-exchange auditor.
@@ -869,10 +1067,12 @@ impl Exchanger {
         }
     }
 
-    /// Execute one barrier's exchange: send every panel, then
-    /// drain/validate with dedup + reorder buffering and bounded
-    /// resend-with-backoff. Returns each panel's payload with its
-    /// sequence number, in the caller's panel order (deterministic).
+    /// Execute one barrier's exchange synchronously: open the window,
+    /// send every panel, then drain/validate with dedup + reorder
+    /// buffering and bounded resend-with-backoff. Returns each panel's
+    /// payload with its sequence number, in the caller's panel order
+    /// (deterministic). Literally [`Self::begin_round`] + issue-all +
+    /// [`Self::collect`] with nothing prefetched.
     pub fn exchange(
         &mut self,
         epoch: usize,
@@ -882,50 +1082,154 @@ impl Exchanger {
         if panels.is_empty() {
             return Ok(Vec::new());
         }
-        if self.record_events {
-            self.events.push(ExchangeEvent::BarrierStart { epoch, round });
+        let specs: Vec<PanelSpec> = panels.iter().map(|(s, _)| *s).collect();
+        let token = self.begin_round(epoch, round, &specs)?;
+        self.open_barrier(token)?;
+        for (idx, (_, payload)) in panels.iter().enumerate() {
+            self.issue(token, idx, payload.clone())?;
         }
-        // Keep the dedup set bounded: anything 4096 sequence numbers in
-        // the past can no longer be in flight on the in-proc transports.
-        if self.satisfied.len() > 8192 {
-            let floor = self.next_seq.saturating_sub(4096);
-            self.satisfied.retain(|&s| s >= floor);
-        }
-        let frames: Vec<Frame> = panels
-            .iter()
-            .map(|(spec, payload)| {
-                let seq = self.next_seq;
-                self.next_seq += 1;
-                Frame {
-                    epoch: epoch as u32,
-                    round: round as u32,
-                    src: spec.src_dev as u32,
-                    dst: spec.dst_dev as u32,
-                    kind: spec.kind,
-                    mode: spec.mode as u32,
-                    chunk: spec.chunk as u32,
-                    row_start: spec.row_start as u32,
-                    n_rows: spec.n_rows as u32,
-                    seq,
-                    payload: payload.clone(),
-                }
-            })
-            .collect();
-        for f in &frames {
-            self.send_frame(f, epoch, round)?;
-        }
+        Ok(self
+            .collect(token)?
+            .into_iter()
+            .map(|(_, spec, payload, seq)| (spec, payload, seq))
+            .collect())
+    }
 
-        let n_devices = self.transport.devices();
-        let mut got: Vec<Option<Vec<u8>>> = vec![None; frames.len()];
-        let mut last_seq: Vec<Option<u64>> = vec![None; n_devices];
-        let mut delivered_seq: Vec<u64> = vec![0; frames.len()];
+    /// Open round `round`'s exchange: validate every header field
+    /// against the wire format and pre-build every frame, assigning
+    /// sequence numbers in spec order. Payloads are attached later by
+    /// [`Self::issue`]; the round drains at [`Self::collect`] (or
+    /// incrementally via [`Self::poll`] + [`Self::take_ready`]).
+    pub fn begin_round(
+        &mut self,
+        epoch: usize,
+        round: usize,
+        specs: &[PanelSpec],
+    ) -> Result<RoundToken, TransportError> {
+        let mut frames = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            frames.push(Frame {
+                epoch: frame_u32("epoch", epoch)?,
+                round: frame_u32("round", round)?,
+                src: frame_u32("src_dev", spec.src_dev)?,
+                dst: frame_u32("dst_dev", spec.dst_dev)?,
+                kind: spec.kind,
+                mode: frame_u32("mode", spec.mode)?,
+                chunk: frame_u32("chunk", spec.chunk)?,
+                row_start: frame_u32("row_start", spec.row_start)?,
+                n_rows: frame_u32("n_rows", spec.n_rows)?,
+                seq,
+                payload: Vec::new(),
+            });
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        let n = specs.len();
+        self.pending.push(PendingRound {
+            token,
+            epoch,
+            round,
+            specs: specs.to_vec(),
+            frames,
+            issued: vec![false; n],
+            got: vec![None; n],
+            delivered_seq: vec![0; n],
+            taken: vec![false; n],
+            barrier_opened: false,
+            last_seq: HashMap::new(),
+        });
+        Ok(RoundToken(token))
+    }
 
-        self.drain(epoch, round, panels, &frames, &mut got, &mut last_seq, &mut delivered_seq)?;
+    /// Hand slot `idx`'s payload to the transport. Under async prefetch
+    /// this runs *during* the previous round's compute, as soon as the
+    /// owning worker's pass has finalized the rows it ships.
+    pub fn issue(
+        &mut self,
+        token: RoundToken,
+        idx: usize,
+        payload: Vec<u8>,
+    ) -> Result<(), TransportError> {
+        let i = self.pending_pos(token)?;
+        let p = &mut self.pending[i];
+        assert!(!p.issued[idx], "exchange slot {idx} issued twice");
+        p.frames[idx].payload = payload;
+        p.issued[idx] = true;
+        let (epoch, round) = (p.epoch, p.round);
+        let f = p.frames[idx].clone();
+        self.send_frame(&f, epoch, round)
+    }
+
+    /// Emit the round's `BarrierStart` audit event (idempotent). The
+    /// synchronous [`Self::exchange`] opens the window before its sends;
+    /// the async path opens it when the coordinator reaches the barrier
+    /// ([`Self::collect`] / [`Self::take_ready`] open it implicitly).
+    pub fn open_barrier(&mut self, token: RoundToken) -> Result<(), TransportError> {
+        let i = self.pending_pos(token)?;
+        let p = &mut self.pending[i];
+        if !p.barrier_opened {
+            p.barrier_opened = true;
+            let (epoch, round) = (p.epoch, p.round);
+            if self.record_events {
+                self.events.push(ExchangeEvent::BarrierStart { epoch, round });
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain whatever has already arrived — no retries, no backoff, no
+    /// blocking. The relaxed bounded-staleness path calls this at each
+    /// barrier before deciding what it can apply.
+    pub fn poll(&mut self) -> Result<(), TransportError> {
+        self.drain_all()
+    }
+
+    /// Hand out every slot of `token`'s round that has arrived and was
+    /// not handed out before, as `(slot index, spec, payload, seq)`.
+    /// Leaves the round in flight (stragglers keep draining); pair with
+    /// [`Self::collect`] to force completion at the staleness bound.
+    pub fn take_ready(
+        &mut self,
+        token: RoundToken,
+    ) -> Result<Vec<(usize, PanelSpec, Vec<u8>, u64)>, TransportError> {
+        self.open_barrier(token)?;
+        let i = self.pending_pos(token)?;
+        let p = &mut self.pending[i];
+        let mut out = Vec::new();
+        for idx in 0..p.specs.len() {
+            if p.taken[idx] || p.got[idx].is_none() {
+                continue;
+            }
+            p.taken[idx] = true;
+            out.push((idx, p.specs[idx], p.got[idx].take().unwrap(), p.delivered_seq[idx]));
+        }
+        Ok(out)
+    }
+
+    /// Drain until every slot of `token`'s round has arrived, with the
+    /// same bounded resend-with-backoff the synchronous exchange always
+    /// used; emit the round's `BarrierStart` if the async path has not
+    /// already, retire the round from the in-flight set, and return
+    /// every slot not previously handed out by [`Self::take_ready`], in
+    /// spec order.
+    pub fn collect(
+        &mut self,
+        token: RoundToken,
+    ) -> Result<Vec<(usize, PanelSpec, Vec<u8>, u64)>, TransportError> {
+        let i = self.pending_pos(token)?;
+        if self.pending[i].specs.is_empty() {
+            self.pending.remove(i);
+            return Ok(Vec::new());
+        }
+        self.open_barrier(token)?;
+        self.drain_all()?;
         let mut attempt = 0usize;
-        while got.iter().any(|g| g.is_none()) {
+        while self.pending[self.pending_pos(token)?].missing() > 0 {
             attempt += 1;
             if attempt > self.policy.max_attempts {
-                let missing = got.iter().filter(|g| g.is_none()).count();
+                let missing = self.pending[self.pending_pos(token)?].missing();
                 if let Some(device) = self.transport.failed_device() {
                     return Err(TransportError::DeviceDead { device });
                 }
@@ -938,27 +1242,52 @@ impl Exchanger {
             for _ in 0..ticks {
                 self.transport.tick();
             }
-            self.drain(epoch, round, panels, &frames, &mut got, &mut last_seq, &mut delivered_seq)?;
-            if got.iter().all(|g| g.is_some()) {
+            self.drain_all()?;
+            let pi = self.pending_pos(token)?;
+            if self.pending[pi].missing() == 0 {
                 break;
             }
-            // Still missing after the release window: resend (idempotent
-            // — the receiver matches panels by slot and dedups by seq).
-            for (idx, f) in frames.iter().enumerate() {
-                if got[idx].is_none() {
-                    self.stats.retries += 1;
-                    self.send_frame(f, epoch, round)?;
-                }
+            // Still missing after the release window: resend the issued
+            // stragglers (idempotent — the receiver matches panels by
+            // slot and dedups by seq).
+            let (epoch, round) = (self.pending[pi].epoch, self.pending[pi].round);
+            let resend: Vec<Frame> = {
+                let p = &self.pending[pi];
+                (0..p.frames.len())
+                    .filter(|&idx| p.issued[idx] && p.got[idx].is_none() && !p.taken[idx])
+                    .map(|idx| p.frames[idx].clone())
+                    .collect()
+            };
+            for f in &resend {
+                self.stats.retries += 1;
+                self.send_frame(f, epoch, round)?;
             }
-            self.drain(epoch, round, panels, &frames, &mut got, &mut last_seq, &mut delivered_seq)?;
+            self.drain_all()?;
         }
-
-        Ok(panels
+        let i = self.pending_pos(token)?;
+        let p = self.pending.remove(i);
+        let mut out = Vec::new();
+        for (idx, ((spec, got), (seq, taken))) in p
+            .specs
             .iter()
-            .zip(got)
-            .zip(delivered_seq)
-            .map(|(((spec, _), payload), seq)| (*spec, payload.unwrap(), seq))
-            .collect())
+            .zip(p.got)
+            .zip(p.delivered_seq.iter().zip(p.taken))
+            .enumerate()
+        {
+            if taken {
+                continue;
+            }
+            out.push((idx, *spec, got.expect("complete round has every slot"), *seq));
+        }
+        Ok(out)
+    }
+
+    fn pending_pos(&self, token: RoundToken) -> Result<usize, TransportError> {
+        self.pending.iter().position(|p| p.token == token.0).ok_or_else(|| {
+            TransportError::Malformed {
+                detail: format!("round token {} is not in flight", token.0),
+            }
+        })
     }
 
     fn send_frame(&mut self, f: &Frame, epoch: usize, round: usize) -> Result<(), TransportError> {
@@ -980,48 +1309,66 @@ impl Exchanger {
         Ok(())
     }
 
-    /// Empty every mailbox, validating and slotting frames. Damaged
-    /// frames are discarded (recovered by resend); protocol violations
-    /// abort.
-    #[allow(clippy::too_many_arguments)]
-    fn drain(
-        &mut self,
-        epoch: usize,
-        round: usize,
-        panels: &[(PanelSpec, Vec<u8>)],
-        frames: &[Frame],
-        got: &mut [Option<Vec<u8>>],
-        last_seq: &mut [Option<u64>],
-        delivered_seq: &mut [u64],
-    ) -> Result<(), TransportError> {
-        for dst in 0..self.transport.devices() {
-            while let Some(bytes) = self.transport.recv(dst) {
+    /// Empty every mailbox, validating, deduping, and routing frames to
+    /// their in-flight rounds (under async prefetch several rounds are
+    /// open at once). Damaged frames are discarded (recovered by
+    /// resend); protocol violations abort.
+    fn drain_all(&mut self) -> Result<(), TransportError> {
+        let Exchanger {
+            transport,
+            pending,
+            satisfied,
+            floor,
+            delivered_high,
+            dedup_window,
+            stats,
+            events,
+            record_events,
+            ..
+        } = self;
+        for dst in 0..transport.devices() {
+            while let Some(bytes) = transport.recv(dst) {
                 let frame = match Frame::decode(&bytes) {
                     Ok(f) => f,
                     Err(e @ (TransportError::ChecksumMismatch { .. }
                     | TransportError::Malformed { .. })) => {
-                        self.stats.checksum_failures += 1;
+                        stats.checksum_failures += 1;
                         log_warn!("transport: discarding damaged frame ({e})");
                         continue;
                     }
                     Err(e) => return Err(e),
                 };
-                // Idempotent dedup: duplicates and stale late arrivals
-                // of already-satisfied panels are dropped, never applied.
-                if self.satisfied.contains(&frame.seq) {
-                    self.stats.duplicates_dropped += 1;
+                // Below-floor arrivals are stale duplicates whose seqs
+                // were pruned from the window: dropped before any
+                // routing (ISSUE 8 bugfix — the old single-round drain
+                // could only hard-error on them).
+                if frame.seq < floor[dst] {
+                    stats.duplicates_dropped += 1;
                     continue;
                 }
-                if frame.epoch as usize != epoch || frame.round as usize != round {
+                // Idempotent dedup: duplicates and stale late arrivals
+                // of already-satisfied panels are dropped, never applied.
+                if satisfied[dst].contains(&frame.seq) {
+                    stats.duplicates_dropped += 1;
+                    continue;
+                }
+                // Route to the in-flight round carrying this barrier.
+                let Some(pi) = pending
+                    .iter()
+                    .position(|p| p.epoch == frame.epoch as usize && p.round == frame.round as usize)
+                else {
+                    let (ee, er) =
+                        pending.iter().map(|p| (p.epoch, p.round)).min().unwrap_or((0, 0));
                     return Err(TransportError::EpochRoundMismatch {
-                        expected_epoch: epoch,
-                        expected_round: round,
+                        expected_epoch: ee,
+                        expected_round: er,
                         epoch: frame.epoch as usize,
                         round: frame.round as usize,
                         seq: frame.seq,
                     });
-                }
-                let idx = frames.iter().position(|f| {
+                };
+                let p = &mut pending[pi];
+                let idx = p.frames.iter().position(|f| {
                     f.dst as usize == dst
                         && f.kind == frame.kind
                         && f.mode == frame.mode
@@ -1035,11 +1382,21 @@ impl Exchanger {
                         seq: frame.seq,
                     });
                 };
-                let expect = &frames[idx];
+                if !p.issued[idx] {
+                    // A frame for a slot whose payload was never handed
+                    // to the transport cannot be legitimate traffic.
+                    return Err(TransportError::UnexpectedPanel {
+                        dst,
+                        mode: frame.mode as usize,
+                        chunk: frame.chunk as usize,
+                        seq: frame.seq,
+                    });
+                }
+                let expect = &p.frames[idx];
                 if frame.src != expect.src
                     || frame.row_start != expect.row_start
                     || frame.n_rows != expect.n_rows
-                    || frame.payload.len() != panels[idx].1.len()
+                    || frame.payload.len() != expect.payload.len()
                 {
                     return Err(TransportError::Malformed {
                         detail: format!(
@@ -1053,42 +1410,83 @@ impl Exchanger {
                             expect.src,
                             expect.row_start,
                             expect.n_rows,
-                            panels[idx].1.len()
+                            expect.payload.len()
                         ),
                     });
                 }
-                if got[idx].is_some() {
+                if p.got[idx].is_some() || p.taken[idx] {
                     // A resend's copy arriving after the original (or
                     // vice versa) under a different seq.
-                    self.stats.duplicates_dropped += 1;
+                    stats.duplicates_dropped += 1;
                     continue;
                 }
-                // Reorder observation: this destination saw a
-                // higher-sequence frame earlier.
-                if let Some(prev) = last_seq[dst] {
+                // Reorder observation: this (dst, src) pair saw a
+                // higher-sequence frame earlier this round.
+                let src = frame.src as usize;
+                if let Some(&prev) = p.last_seq.get(&(dst, src)) {
                     if frame.seq < prev {
-                        self.stats.reorders += 1;
+                        stats.reorders += 1;
                     }
                 }
-                last_seq[dst] = Some(last_seq[dst].map_or(frame.seq, |p| p.max(frame.seq)));
-                self.satisfied.insert(frame.seq);
-                self.stats.frames_delivered += 1;
-                if self.record_events {
-                    self.events.push(ExchangeEvent::Delivered {
-                        epoch,
-                        round,
-                        src: frame.src as usize,
+                let entry = p.last_seq.entry((dst, src)).or_insert(frame.seq);
+                *entry = (*entry).max(frame.seq);
+                satisfied[dst].insert(frame.seq);
+                delivered_high[dst] = delivered_high[dst].max(frame.seq);
+                stats.frames_delivered += 1;
+                if *record_events {
+                    events.push(ExchangeEvent::Delivered {
+                        epoch: p.epoch,
+                        round: p.round,
+                        src,
                         dst,
                         mode: frame.mode as usize,
                         chunk: frame.chunk as usize,
                         seq: frame.seq,
                     });
                 }
-                delivered_seq[idx] = frame.seq;
-                got[idx] = Some(frame.payload);
+                p.delivered_seq[idx] = frame.seq;
+                p.got[idx] = Some(frame.payload);
+                prune_dedup(
+                    &mut satisfied[dst],
+                    &mut floor[dst],
+                    delivered_high[dst],
+                    *dedup_window,
+                    pending,
+                    dst,
+                );
             }
         }
         Ok(())
+    }
+}
+
+/// Bound `satisfied[dst]` to the dedup window, keyed on **delivered**
+/// seqs: raise the floor to half a window below the highest delivery
+/// this destination has seen, but never past a seq still in flight (an
+/// outstanding panel's resend must not be mistaken for a stale
+/// duplicate), and never downward.
+fn prune_dedup(
+    satisfied: &mut HashSet<u64>,
+    floor: &mut u64,
+    delivered_high: u64,
+    dedup_window: usize,
+    pending: &[PendingRound],
+    dst: usize,
+) {
+    if satisfied.len() <= dedup_window {
+        return;
+    }
+    let mut new_floor = delivered_high.saturating_sub((dedup_window / 2) as u64);
+    for p in pending {
+        for (idx, f) in p.frames.iter().enumerate() {
+            if f.dst as usize == dst && p.got[idx].is_none() && !p.taken[idx] {
+                new_floor = new_floor.min(f.seq);
+            }
+        }
+    }
+    if new_floor > *floor {
+        *floor = new_floor;
+        satisfied.retain(|&s| s >= new_floor);
     }
 }
 
@@ -1391,5 +1789,210 @@ mod tests {
         assert_eq!(TransportKind::parse("tcp"), None);
         assert_eq!(TransportKind::Direct.resolve(), TransportKind::Direct);
         assert_eq!(TransportKind::Channel.resolve(), TransportKind::Channel);
+    }
+
+    #[test]
+    fn prefetch_mode_parses() {
+        assert_eq!(PrefetchMode::parse("off"), Some(PrefetchMode::Off));
+        assert_eq!(PrefetchMode::parse("Async"), Some(PrefetchMode::Async));
+        assert_eq!(PrefetchMode::parse("auto"), Some(PrefetchMode::Auto));
+        assert_eq!(PrefetchMode::parse("eager"), None);
+        assert_eq!(PrefetchMode::Off.resolve(), PrefetchMode::Off);
+        assert_eq!(PrefetchMode::Async.resolve(), PrefetchMode::Async);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn frame_overflow_is_typed_never_wrapped() {
+        let mut ex = Exchanger::new(2, None);
+        let huge = u32::MAX as usize + 1;
+        let mut spec = row_panels()[0].0;
+        spec.row_start = huge;
+        assert_eq!(
+            ex.begin_round(0, 1, &[spec]).unwrap_err(),
+            TransportError::FrameOverflow { field: "row_start", value: huge }
+        );
+        let mut spec = row_panels()[0].0;
+        spec.n_rows = huge;
+        assert!(matches!(
+            ex.begin_round(0, 1, &[spec]).unwrap_err(),
+            TransportError::FrameOverflow { field: "n_rows", .. }
+        ));
+        // epoch/round narrow through the same checked path, and the
+        // synchronous exchange surfaces the identical typed error.
+        let panels = row_panels();
+        assert!(matches!(
+            ex.exchange(huge, 0, &panels).unwrap_err(),
+            TransportError::FrameOverflow { field: "epoch", .. }
+        ));
+        assert!(matches!(
+            ex.exchange(0, huge, &panels).unwrap_err(),
+            TransportError::FrameOverflow { field: "round", .. }
+        ));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn non_unicode_fault_env_is_loud() {
+        use std::os::unix::ffi::OsStringExt;
+        assert_eq!(env_value(FAULT_SEED_VAR, None).unwrap(), None);
+        assert_eq!(env_value(FAULT_SEED_VAR, Some("7".into())).unwrap().as_deref(), Some("7"));
+        // A set-but-non-unicode value is a typed error, not a silently
+        // disabled fault plan (the old `env::var(..).ok()` behavior).
+        let bad = std::ffi::OsString::from_vec(vec![b'4', 0x80, 0xfe]);
+        assert!(matches!(
+            env_value(FAULT_SEED_VAR, Some(bad)).unwrap_err(),
+            TransportError::InvalidFaultEnv { .. }
+        ));
+    }
+
+    /// Captures the first frame it ever carries and re-injects queued
+    /// frames ahead of real traffic — the "late duplicate from far in
+    /// the past" scenario the dedup-window bugfix exists for.
+    struct ReplayTransport {
+        inner: InProcTransport,
+        first: std::sync::Arc<std::sync::Mutex<Option<(usize, Vec<u8>)>>>,
+        inject: std::sync::Arc<std::sync::Mutex<Vec<(usize, Vec<u8>)>>>,
+    }
+
+    impl Transport for ReplayTransport {
+        fn devices(&self) -> usize {
+            self.inner.devices()
+        }
+
+        fn send(&mut self, dst: usize, bytes: Vec<u8>) -> Result<(), TransportError> {
+            let mut first = self.first.lock().unwrap();
+            if first.is_none() {
+                *first = Some((dst, bytes.clone()));
+            }
+            drop(first);
+            self.inner.send(dst, bytes)
+        }
+
+        fn recv(&mut self, dst: usize) -> Option<Vec<u8>> {
+            {
+                let mut inject = self.inject.lock().unwrap();
+                if let Some(pos) = inject.iter().position(|(d, _)| *d == dst) {
+                    return Some(inject.remove(pos).1);
+                }
+            }
+            self.inner.recv(dst)
+        }
+
+        fn tick(&mut self) {
+            self.inner.tick();
+        }
+    }
+
+    #[test]
+    fn late_duplicate_older_than_pruned_window_is_dropped_not_reapplied() {
+        let first = std::sync::Arc::new(std::sync::Mutex::new(None));
+        let inject = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let transport = ReplayTransport {
+            inner: InProcTransport::new(2),
+            first: first.clone(),
+            inject: inject.clone(),
+        };
+        let mut ex = Exchanger::with_transport(Box::new(transport));
+        // Cross the real DEDUP_WINDOW threshold: row_panels() delivers
+        // 2 frames to device 0 per barrier, so ~4300 barriers push
+        // device 0's satisfied set past 8192 and force a prune.
+        let panels = row_panels();
+        let barriers = DEDUP_WINDOW / 2 + 200;
+        for round in 0..barriers {
+            ex.exchange(0, round, &panels).unwrap();
+        }
+        let before = ex.drain_stats();
+        assert_eq!(before.duplicates_dropped, 0, "healthy run must not count dups");
+        // Re-deliver the very first frame (seq 0): a stale duplicate
+        // from beyond the pruned window. The old prune floored the set
+        // at sender-side `next_seq - 4096`, so the seq was forgotten and
+        // the frame hard-errored as an EpochRoundMismatch; the
+        // delivered-keyed floor drops it as the duplicate it is.
+        inject.lock().unwrap().push(first.lock().unwrap().clone().unwrap());
+        let out = ex.exchange(0, barriers, &panels).unwrap();
+        assert_eq!(out.len(), panels.len());
+        for ((_, payload), (_, opayload, _)) in panels.iter().zip(&out) {
+            assert_eq!(payload, opayload);
+        }
+        let stats = ex.drain_stats();
+        assert_eq!(stats.duplicates_dropped, 1, "{stats:?}");
+        assert_eq!(stats.checksum_failures, 0);
+    }
+
+    #[test]
+    fn async_rounds_pipeline_without_interference() {
+        let mut ex = Exchanger::new(2, None);
+        ex.enable_event_log();
+        let panels = row_panels();
+        let specs: Vec<PanelSpec> = panels.iter().map(|(s, _)| *s).collect();
+        let flipped: Vec<Vec<u8>> =
+            panels.iter().map(|(_, p)| p.iter().map(|b| b ^ 0xff).collect()).collect();
+        // Round 2 is opened and fully issued *before* round 1 collects —
+        // the double-buffered prefetch shape.
+        let t1 = ex.begin_round(0, 1, &specs).unwrap();
+        let t2 = ex.begin_round(0, 2, &specs).unwrap();
+        for (idx, (_, payload)) in panels.iter().enumerate() {
+            ex.issue(t1, idx, payload.clone()).unwrap();
+        }
+        for (idx, payload) in flipped.iter().enumerate() {
+            ex.issue(t2, idx, payload.clone()).unwrap();
+        }
+        let out1 = ex.collect(t1).unwrap();
+        assert_eq!(out1.len(), 3);
+        for ((spec, payload), (_, ospec, opayload, _)) in panels.iter().zip(&out1) {
+            assert_eq!(spec, ospec);
+            assert_eq!(payload, opayload);
+        }
+        // A collected token is spent.
+        assert!(ex.collect(t1).is_err());
+        let out2 = ex.collect(t2).unwrap();
+        assert_eq!(out2.len(), 3);
+        for (i, (_, ospec, opayload, _)) in out2.iter().enumerate() {
+            assert_eq!(&specs[i], ospec);
+            assert_eq!(&flipped[i], opayload);
+        }
+        let stats = ex.drain_stats();
+        assert_eq!(stats.frames_sent, 6);
+        assert_eq!(stats.frames_delivered, 6);
+        assert_eq!(stats.faults_detected(), 0, "{stats:?}");
+    }
+
+    #[test]
+    fn take_ready_defers_stragglers_and_collect_forces_them() {
+        // Healthy: everything is ready at the barrier; collect retires
+        // the round with nothing left over.
+        let mut ex = Exchanger::new(2, None);
+        let panels = row_panels();
+        let specs: Vec<PanelSpec> = panels.iter().map(|(s, _)| *s).collect();
+        let t = ex.begin_round(0, 1, &specs).unwrap();
+        for (idx, (_, payload)) in panels.iter().enumerate() {
+            ex.issue(t, idx, payload.clone()).unwrap();
+        }
+        ex.poll().unwrap();
+        let ready = ex.take_ready(t).unwrap();
+        assert_eq!(ready.len(), 3);
+        assert!(ex.take_ready(t).unwrap().is_empty(), "slots hand out once");
+        assert!(ex.collect(t).unwrap().is_empty());
+        // All-delayed: nothing is ready at the barrier; the forced
+        // collect ticks the held frames free and returns every slot.
+        let plan = FaultPlan {
+            seed: 8,
+            rate: 1.0,
+            kinds: FaultKinds::single(FaultKind::Delay),
+            kill: None,
+        };
+        let mut ex = Exchanger::new(2, Some(plan));
+        let t = ex.begin_round(0, 1, &specs).unwrap();
+        for (idx, (_, payload)) in panels.iter().enumerate() {
+            ex.issue(t, idx, payload.clone()).unwrap();
+        }
+        ex.poll().unwrap();
+        assert!(ex.take_ready(t).unwrap().is_empty());
+        let out = ex.collect(t).unwrap();
+        assert_eq!(out.len(), 3);
+        for ((_, payload), (_, _, opayload, _)) in panels.iter().zip(&out) {
+            assert_eq!(payload, opayload);
+        }
     }
 }

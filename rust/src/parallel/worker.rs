@@ -18,6 +18,8 @@
 //!    in exact mode and fault-tolerant (retry/dedup/reorder-buffering)
 //!    under injection.
 
+use std::collections::VecDeque;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
@@ -31,7 +33,8 @@ use crate::model::{CoreRepr, TuckerModel};
 use crate::parallel::device::{DeviceCount, DeviceGrid};
 use crate::parallel::shared::{dispatch_plan, SharedFactors};
 use crate::parallel::transport::{
-    ExchangeEvent, Exchanger, FaultPlan, PanelKind, PanelSpec, TransportKind,
+    ExchangeEvent, Exchanger, FaultPlan, PanelKind, PanelSpec, PrefetchMode, RoundToken,
+    TransportError, TransportKind,
 };
 use crate::parallel::{BlockPartition, LatinSchedule};
 use crate::tensor::SparseTensor;
@@ -126,6 +129,31 @@ pub struct ParallelOptions {
     /// plan configured while `transport` resolves to `Direct` cannot
     /// engage — that run is marked degraded, never silently clean.
     pub fault: Option<FaultPlan>,
+    /// Async boundary prefetch (ISSUE 8 tentpole): `Async` double-buffers
+    /// the round exchange — round r+1's outgoing panels enter the
+    /// transport the moment each owning worker finishes its round-r pass
+    /// (legal: the Latin schedule gives it exclusive chunk ownership all
+    /// round), and are collected + applied at round r+1's barrier,
+    /// hiding the transfer behind compute. Because the **apply** never
+    /// moves off the barrier, exact mode stays bitwise-identical to the
+    /// synchronous path at every `(D, threads, split, transport)`
+    /// setting. Requires the channel transport: `Async` over a resolved
+    /// `Direct` transport cannot engage and marks the run degraded.
+    /// `Auto` = `FASTTUCKER_PREFETCH` or off.
+    pub prefetch: PrefetchMode,
+    /// Bounded staleness for relaxed-mode prefetch (ISSUE 8): boundary
+    /// rows may be applied up to this many rounds late. At each barrier
+    /// the engine applies whatever has arrived and defers stragglers,
+    /// forcing a blocking collect only when a panel's age reaches the
+    /// bound (and at epoch end). `0` — the default, and the only value
+    /// exact mode accepts — applies every panel at its own barrier.
+    /// `staleness > 0` without relaxed exactness *and* engaged async
+    /// prefetch cannot engage and marks the run degraded.
+    pub staleness: usize,
+    /// Test/tuning override of the transport's delivered-sequence dedup
+    /// window (min 2; `None` keeps the transport default). Small windows
+    /// let the soak tests cross the prune threshold in a few epochs.
+    pub dedup_window: Option<usize>,
 }
 
 impl Default for ParallelOptions {
@@ -143,6 +171,9 @@ impl Default for ParallelOptions {
             devices: DeviceCount::Auto,
             transport: TransportKind::Auto,
             fault: None,
+            prefetch: PrefetchMode::Auto,
+            staleness: 0,
+            dedup_window: None,
         }
     }
 }
@@ -202,6 +233,13 @@ pub struct ParallelFastTucker {
     /// stays dead until the engine is rebuilt (the elastic-recovery
     /// path: reload the checkpoint into a fresh engine).
     exchanger: Option<Exchanger>,
+    /// Resolved prefetch engagement (decided with the exchanger in
+    /// `ensure_state`): true only when async prefetch is requested AND
+    /// the channel transport is live.
+    prefetch_async: bool,
+    /// Effective staleness bound (0 unless relaxed exactness + engaged
+    /// prefetch; see [`ParallelOptions::staleness`]).
+    staleness: usize,
     /// Communication ledger accumulated across epochs.
     pub ledger: CommLedger,
     /// Plan observability accumulated across epochs (one record per
@@ -219,6 +257,8 @@ impl ParallelFastTucker {
             grid: None,
             grid_degraded: false,
             exchanger: None,
+            prefetch_async: false,
+            staleness: 0,
             pools: Vec::new(),
             mode0_counts: Vec::new(),
             device_params: Vec::new(),
@@ -298,6 +338,43 @@ impl ParallelFastTucker {
                     }
                     None
                 }
+            };
+            if let (Some(ex), Some(w)) = (self.exchanger.as_mut(), self.opts.dedup_window) {
+                ex.set_dedup_window(w);
+            }
+            // ISSUE 8: async prefetch engages only on the channel
+            // transport — the direct handover has no transfer to hide. A
+            // requested async that cannot engage is a degraded run, the
+            // same rule as the fault plan above.
+            self.prefetch_async =
+                match (self.opts.prefetch.resolve(), self.exchanger.is_some()) {
+                    (PrefetchMode::Async, true) => true,
+                    (PrefetchMode::Async, false) => {
+                        log_warn!(
+                            "async prefetch is configured but the transport resolves \
+                             to direct — there is no transfer to overlap (recorded \
+                             in PlanStats::degraded)"
+                        );
+                        degraded = true;
+                        false
+                    }
+                    _ => false,
+                };
+            // Bounded staleness is the relaxed-mode prefetch variant;
+            // exact mode owes every panel to its own barrier.
+            self.staleness = if self.opts.staleness == 0 {
+                0
+            } else if self.prefetch_async && self.opts.exactness == Exactness::Relaxed {
+                self.opts.staleness
+            } else {
+                log_warn!(
+                    "staleness = {} requires relaxed exactness and engaged async \
+                     prefetch — applying panels at their own barriers instead \
+                     (recorded in PlanStats::degraded)",
+                    self.opts.staleness
+                );
+                degraded = true;
+                0
             };
             self.grid_degraded = degraded;
             self.grid = Some(grid);
@@ -433,7 +510,6 @@ impl ParallelFastTucker {
         let grid = self.grid.as_ref().unwrap();
         let grid_degraded = self.grid_degraded;
         let n_devices = grid.devices();
-        let dims = model.factors.dims();
 
         // Per-worker RNG streams, forked deterministically (in global
         // worker order, independent of the device grouping — part of the
@@ -452,60 +528,188 @@ impl ParallelFastTucker {
         let mut device_samples = vec![0u64; n_devices];
         let mut comm_rows = 0u64;
         let mut comm_bytes = 0u64;
+        // ISSUE 8 overlap accounting: panels issued ahead of their
+        // barrier, exchange seconds hidden behind compute (worker-side
+        // serialize/issue/poll) vs exposed (coordinator blocking at a
+        // barrier).
+        let use_async = self.prefetch_async && self.exchanger.is_some();
+        let staleness = self.staleness;
+        let mut prefetch_issued = 0u64;
+        let mut hidden_secs = 0.0f64;
+        let mut exposed_secs = 0.0f64;
+        // The per-epoch core-merge token when the merge is pipelined
+        // (opened at the last round's barrier, collected after the loop).
+        let mut merge_token: Option<RoundToken> = None;
+        let mut epoch_err: Option<TransportError> = None;
         #[cfg(feature = "shadow-ledger")]
         crate::analysis::shadow::set_epoch(epoch);
         {
             let shared = SharedFactors::new(&mut model.factors);
+            // Under async prefetch the exchanger leaves `self` for the
+            // round loop so worker threads can issue outgoing panels
+            // through a shared lock the moment their pass ends; the
+            // coordinator keeps using it at the barriers via the same
+            // lock, and it returns to `self` for the core merge below.
+            let ex_mutex: Option<Mutex<Exchanger>> =
+                if use_async { self.exchanger.take().map(Mutex::new) } else { None };
+            // Rows panels in flight ahead of their barrier, oldest
+            // first: `(token, round, slots outstanding)`. Exact mode
+            // never holds more than one (forced collect at age 0);
+            // relaxed holds up to `staleness + 1`.
+            let mut inflight: VecDeque<(RoundToken, usize, usize)> = VecDeque::new();
             for round in 0..schedule.rounds() {
                 #[cfg(feature = "shadow-ledger")]
                 crate::analysis::shadow::set_round(round);
                 let assignments = schedule.round_assignments(round);
                 // Parameter-exchange bookkeeping at the round boundary,
-                // in fixed device order. The per-worker ledger keeps the
+                // in fixed (dst worker, mode) order — the apply order of
+                // both exchange paths. The per-worker ledger keeps the
                 // historical "each worker is a GPU" accounting; the
-                // inter-device counters additionally locate each chunk's
-                // previous owner and count only rows that actually cross
-                // a device boundary (intra-device handovers are free).
-                let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
-                for g in 0..m {
-                    for (mode, chunk) in schedule.incoming_chunks(round, g) {
-                        let (s, e) = BlockPartition::chunk_range(chunk, dims[mode], m);
-                        self.ledger
-                            .record_factor_exchange(((e - s) * j * 4) as u64);
-                        let src = schedule.owner_of(round - 1, mode, chunk);
-                        if grid.device_of(src) != grid.device_of(g) {
-                            comm_rows += (e - s) as u64;
-                            comm_bytes += ((e - s) * j * 4) as u64;
-                            if self.exchanger.is_some() {
-                                let spec = PanelSpec {
-                                    kind: PanelKind::Rows,
-                                    src_dev: grid.device_of(src),
-                                    dst_dev: grid.device_of(g),
-                                    mode,
-                                    chunk,
-                                    row_start: s,
-                                    n_rows: e - s,
-                                };
-                                panels.push((spec, rows_payload(&shared, mode, s, e, j)));
+                // inter-device counters count only rows that actually
+                // cross a device boundary (intra-device handovers are
+                // free).
+                let handovers = grid.round_handovers(&schedule, round);
+                for ho in &handovers {
+                    self.ledger.record_factor_exchange((ho.n_rows * j * 4) as u64);
+                    if ho.crosses {
+                        comm_rows += ho.n_rows as u64;
+                        comm_bytes += (ho.n_rows * j * 4) as u64;
+                    }
+                }
+                let mut prefetch_round: Option<PrefetchRound> = None;
+                if let Some(mx) = &ex_mutex {
+                    // Async barrier: apply this round's prefetched
+                    // panels (issued while the previous round computed)
+                    // plus any relaxed-mode stragglers whose staleness
+                    // bound is due. The transfer moved early; the apply
+                    // itself never leaves the barrier, and the
+                    // coordinator is the only live actor here, so the
+                    // writes cannot race.
+                    let ex = &mut *mx.lock().unwrap();
+                    if let Err(e) = drain_due_prefetch(
+                        ex,
+                        &shared,
+                        &mut inflight,
+                        epoch,
+                        round,
+                        staleness,
+                        j,
+                        &mut exposed_secs,
+                    ) {
+                        epoch_err = Some(e);
+                        break;
+                    }
+                    ex.note_compute_start(epoch, round);
+                    // Open the next barrier's panels before this round
+                    // computes: headers + deterministic sequence numbers
+                    // now (in spec order), payloads issued post-pass by
+                    // their owning workers. The last round opens the
+                    // per-epoch core-merge panels instead — each
+                    // worker's Eq. 17 gradient is final after its last
+                    // pass.
+                    let next = round + 1;
+                    let mut specs: Vec<PanelSpec> = Vec::new();
+                    let mut jobs: Vec<Vec<PrefetchSlot>> = vec![Vec::new(); m];
+                    if next < schedule.rounds() {
+                        for ho in grid.round_handovers(&schedule, next) {
+                            if !ho.crosses {
+                                continue;
+                            }
+                            jobs[ho.src_worker].push(PrefetchSlot::Rows {
+                                idx: specs.len(),
+                                mode: ho.mode,
+                                row_start: ho.row_start,
+                                n_rows: ho.n_rows,
+                            });
+                            specs.push(PanelSpec {
+                                kind: PanelKind::Rows,
+                                src_dev: grid.device_of(ho.src_worker),
+                                dst_dev: grid.device_of(ho.dst_worker),
+                                mode: ho.mode,
+                                chunk: ho.chunk,
+                                row_start: ho.row_start,
+                                n_rows: ho.n_rows,
+                            });
+                        }
+                    } else if h.update_core
+                        && self.opts.exactness == Exactness::Exact
+                        && n_devices > 1
+                    {
+                        let root_end = grid.workers_of(0).end;
+                        for g in root_end..m {
+                            jobs[g].push(PrefetchSlot::CoreGrad { idx: specs.len() });
+                            specs.push(PanelSpec {
+                                kind: PanelKind::CoreGrad,
+                                src_dev: grid.device_of(g),
+                                dst_dev: 0,
+                                mode: 0,
+                                chunk: g,
+                                row_start: 0,
+                                n_rows: 0,
+                            });
+                        }
+                    }
+                    if !specs.is_empty() {
+                        match ex.begin_round(epoch, next, &specs) {
+                            Ok(token) => {
+                                if next < schedule.rounds() {
+                                    inflight.push_back((token, next, specs.len()));
+                                } else {
+                                    merge_token = Some(token);
+                                }
+                                prefetch_round = Some(PrefetchRound { token, jobs, j });
+                            }
+                            Err(e) => {
+                                epoch_err = Some(e);
+                                break;
                             }
                         }
                     }
-                }
-                // Channel transport: the boundary rows actually travel
-                // as framed, checksummed messages and are written back
-                // from the *validated* payloads — a bitwise no-op when
-                // healthy (exact little-endian f32 round-trip), a typed
-                // error when unrecoverable. The coordinator is the only
-                // live actor at the barrier, so the writes cannot race.
-                if let Some(ex) = self.exchanger.as_mut() {
+                } else if self.exchanger.is_some() {
+                    // Synchronous channel exchange: the boundary rows
+                    // travel as framed, checksummed messages and are
+                    // written back from the *validated* payloads — a
+                    // bitwise no-op when healthy (exact little-endian
+                    // f32 round-trip), a typed error when unrecoverable.
+                    // The coordinator is the only live actor at the
+                    // barrier, so the writes cannot race.
+                    let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
+                    for ho in &handovers {
+                        if !ho.crosses {
+                            continue;
+                        }
+                        let spec = PanelSpec {
+                            kind: PanelKind::Rows,
+                            src_dev: grid.device_of(ho.src_worker),
+                            dst_dev: grid.device_of(ho.dst_worker),
+                            mode: ho.mode,
+                            chunk: ho.chunk,
+                            row_start: ho.row_start,
+                            n_rows: ho.n_rows,
+                        };
+                        let payload = rows_payload(
+                            &shared,
+                            ho.mode,
+                            ho.row_start,
+                            ho.row_start + ho.n_rows,
+                            j,
+                        );
+                        panels.push((spec, payload));
+                    }
+                    let ex = self.exchanger.as_mut().unwrap();
+                    let tx = Instant::now();
                     let delivered = ex.exchange(epoch, round, &panels)?;
+                    if !panels.is_empty() {
+                        exposed_secs += tx.elapsed().as_secs_f64();
+                    }
                     for (spec, payload, seq) in &delivered {
                         apply_rows_payload(&shared, spec, payload, j);
                         ex.note_applied(epoch, round, spec, *seq);
                     }
                     ex.note_compute_start(epoch, round);
                 }
-                let (count, round_secs, round_plans) = match execution {
+                let prefetch_ctx = ex_mutex.as_ref().zip(prefetch_round.as_ref());
+                let (count, round_secs, round_plans, pf) = match execution {
                     Execution::Threads => run_round_threads(
                         &shared,
                         &core,
@@ -522,6 +726,7 @@ impl ParallelFastTucker {
                         &self.device_params,
                         grid_degraded,
                         &mut device_samples,
+                        prefetch_ctx,
                     ),
                     Execution::Simulated => run_round_simulated(
                         &shared,
@@ -539,12 +744,46 @@ impl ParallelFastTucker {
                         &self.device_params,
                         grid_degraded,
                         &mut device_samples,
+                        prefetch_ctx,
                     ),
                 };
                 samples += count;
                 simulated_secs += round_secs;
                 self.plan_accum.merge(&round_plans);
+                prefetch_issued += pf.issued;
+                hidden_secs += pf.hidden_secs;
+                if let Some(e) = pf.err {
+                    epoch_err = Some(e);
+                    break;
+                }
             }
+            // Epoch-end barrier: anything still deferred by the relaxed
+            // staleness bound is due now — epochs stay self-contained
+            // (staleness never crosses an epoch, and every audit window
+            // closes before the event log is read).
+            if epoch_err.is_none() {
+                if let Some(mx) = &ex_mutex {
+                    let ex = &mut *mx.lock().unwrap();
+                    if let Err(e) = drain_due_prefetch(
+                        ex,
+                        &shared,
+                        &mut inflight,
+                        epoch,
+                        schedule.rounds(),
+                        0,
+                        j,
+                        &mut exposed_secs,
+                    ) {
+                        epoch_err = Some(e);
+                    }
+                }
+            }
+            if let Some(mx) = ex_mutex {
+                self.exchanger = Some(mx.into_inner().unwrap());
+            }
+        }
+        if let Some(e) = epoch_err {
+            return Err(AlgoError::Transport(e));
         }
         // Threads mode reports wall time; Simulated mode reports the
         // discrete-event parallel time (sum over rounds of the slowest
@@ -580,28 +819,47 @@ impl ParallelFastTucker {
                             crate::kernel::batched::merge_core_grad(grad0, count0, grad, count);
                         }
                         let merge_round = schedule.rounds();
-                        let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
-                        for (off, ws) in tail.iter_mut().enumerate() {
-                            let g = root_end + off;
-                            let (grad, count) = ws.core_grad_mut();
-                            panels.push((
-                                PanelSpec {
-                                    kind: PanelKind::CoreGrad,
-                                    src_dev: grid.device_of(g),
-                                    dst_dev: 0,
-                                    mode: 0,
-                                    chunk: g,
-                                    row_start: 0,
-                                    n_rows: 0,
-                                },
-                                core_grad_payload(grad, *count),
-                            ));
-                            // Mirror merge_core_grad's source-zeroing:
-                            // the panel now owns the gradient.
-                            grad.fill(0.0);
-                            *count = 0;
-                        }
-                        let delivered = ex.exchange(epoch, merge_round, &panels)?;
+                        let t2 = Instant::now();
+                        let delivered: Vec<(PanelSpec, Vec<u8>, u64)> =
+                            if let Some(token) = merge_token.take() {
+                                // Pipelined merge (ISSUE 8): the off-root
+                                // gradients entered the transport as each
+                                // worker's last pass ended (which also
+                                // zeroed its pool's gradient, mirroring
+                                // merge_core_grad's source-zeroing);
+                                // collect and fold here in spec (= global
+                                // worker) order — the same flat fold, the
+                                // same bits as the synchronous panels.
+                                ex.collect(token)?
+                                    .into_iter()
+                                    .map(|(_, spec, payload, seq)| (spec, payload, seq))
+                                    .collect()
+                            } else {
+                                let mut panels: Vec<(PanelSpec, Vec<u8>)> = Vec::new();
+                                for (off, ws) in tail.iter_mut().enumerate() {
+                                    let g = root_end + off;
+                                    let (grad, count) = ws.core_grad_mut();
+                                    panels.push((
+                                        PanelSpec {
+                                            kind: PanelKind::CoreGrad,
+                                            src_dev: grid.device_of(g),
+                                            dst_dev: 0,
+                                            mode: 0,
+                                            chunk: g,
+                                            row_start: 0,
+                                            n_rows: 0,
+                                        },
+                                        core_grad_payload(grad, *count),
+                                    ));
+                                    // Mirror merge_core_grad's
+                                    // source-zeroing: the panel now owns
+                                    // the gradient.
+                                    grad.fill(0.0);
+                                    *count = 0;
+                                }
+                                ex.exchange(epoch, merge_round, &panels)?
+                            };
+                        exposed_secs += t2.elapsed().as_secs_f64();
                         let mut scratch = vec![0.0f32; grad0.len()];
                         for (spec, payload, seq) in &delivered {
                             let mut cnt = read_core_grad_payload(payload, &mut scratch);
@@ -675,7 +933,9 @@ impl ParallelFastTucker {
                                 grad.fill(0.0);
                                 *count = 0;
                             }
+                            let t2 = Instant::now();
                             let delivered = ex.exchange(epoch, merge_round, &panels)?;
+                            exposed_secs += t2.elapsed().as_secs_f64();
                             let (grad0, count0) = self.pools[0].core_grad_mut();
                             let mut scratch = vec![0.0f32; grad0.len()];
                             for (spec, payload, seq) in &delivered {
@@ -735,6 +995,11 @@ impl ParallelFastTucker {
         // stays reserved for geometry/config trouble (a transparently
         // recovered exchange is still a correct exchange).
         if let Some(ex) = self.exchanger.as_mut() {
+            // Overlap observability (ISSUE 8): how much of the exchange
+            // cost compute hid this epoch. A synchronous channel run
+            // records only exposed seconds (efficiency 0); an async run
+            // with healthy delivery hides nearly everything.
+            self.plan_accum.record_overlap(prefetch_issued, hidden_secs, exposed_secs);
             let ts = ex.drain_stats();
             self.plan_accum.record_transport(&ts);
             if ts.faults_detected() > 0 {
@@ -750,9 +1015,11 @@ impl ParallelFastTucker {
             }
             // strict-audit: independently re-verify the in-flight
             // exchange protocol (every delivered panel applied exactly
-            // once, inside its own round window) from the event stream.
+            // once, within its staleness bound — 0 in exact mode, where
+            // every apply lands at its own barrier even under async
+            // prefetch) from the event stream.
             #[cfg(feature = "strict-audit")]
-            crate::analysis::audit_exchange(ex.events())
+            crate::analysis::audit_exchange_with_staleness(ex.events(), self.staleness)
                 .assert_clean("in-flight exchange protocol");
         }
 
@@ -767,10 +1034,101 @@ impl ParallelFastTucker {
     }
 }
 
+/// One round's prefetch work order (ISSUE 8): the token opened at the
+/// round's barrier for panels due at a *later* barrier, plus, per
+/// worker, the slots that worker must serialize and issue into the
+/// exchanger the moment its pass ends.
+struct PrefetchRound {
+    token: RoundToken,
+    /// Per-worker slot lists (indexed by global Latin worker id).
+    jobs: Vec<Vec<PrefetchSlot>>,
+    /// Columns per factor row (payload geometry for `Rows` slots).
+    j: usize,
+}
+
+/// One prefetch slot; `idx` is the slot's position in its round's spec
+/// order — the exchanger's issue key.
+#[derive(Clone, Copy, Debug)]
+enum PrefetchSlot {
+    /// Boundary rows `row_start .. row_start + n_rows` of `mode`, owned
+    /// (and last written) by the issuing worker this round.
+    Rows { idx: usize, mode: usize, row_start: usize, n_rows: usize },
+    /// The worker's complete Eq. 17 core-gradient block — issued only
+    /// after the worker's *last* round pass, when the gradient is final
+    /// (the issue zeroes the pool's gradient, like `merge_core_grad`).
+    CoreGrad { idx: usize },
+}
+
+/// What a round runner observed of the prefetch path: slots issued,
+/// seconds of exchange work hidden behind compute, and the first
+/// transport error a worker hit while issuing (surfaced after the
+/// round — the barrier would otherwise time out on the missing frames).
+#[derive(Default)]
+struct PrefetchOutcome {
+    issued: u64,
+    hidden_secs: f64,
+    err: Option<TransportError>,
+}
+
+/// Post-pass prefetch issue (ISSUE 8): serialize and send this worker's
+/// outgoing slots. Runs on the worker's own thread while other workers
+/// may still be computing — sound because the Latin schedule gives the
+/// worker exclusive ownership of every row it serializes for the whole
+/// round (see `SharedFactors::row_exchange`'s contract), and the
+/// exchanger is behind the shared lock.
+fn issue_prefetch_slots(
+    ex: &Mutex<Exchanger>,
+    pr: &PrefetchRound,
+    slots: &[PrefetchSlot],
+    shared: &SharedFactors,
+    pool: &mut DispatchPool,
+) -> (u64, f64, Option<TransportError>) {
+    if slots.is_empty() {
+        return (0, 0.0, None);
+    }
+    let t0 = Instant::now();
+    let mut issued = 0u64;
+    let mut err = None;
+    let mut ex = ex.lock().unwrap();
+    for slot in slots {
+        let (idx, payload) = match *slot {
+            PrefetchSlot::Rows { idx, mode, row_start, n_rows } => {
+                (idx, rows_payload(shared, mode, row_start, row_start + n_rows, pr.j))
+            }
+            PrefetchSlot::CoreGrad { idx } => {
+                let (grad, count) = pool.core_grad_mut();
+                let payload = core_grad_payload(grad, *count);
+                // Mirror merge_core_grad's source-zeroing: the panel
+                // now owns the gradient.
+                grad.fill(0.0);
+                *count = 0;
+                (idx, payload)
+            }
+        };
+        if let Err(e) = ex.issue(pr.token, idx, payload) {
+            err = Some(e);
+            break;
+        }
+        issued += 1;
+    }
+    // Drain whatever already arrived inside the hidden window, so the
+    // next barrier finds its completion set as full as possible.
+    if err.is_none() {
+        if let Err(e) = ex.poll() {
+            err = Some(e);
+        }
+    }
+    (issued, t0.elapsed().as_secs_f64(), err)
+}
+
 /// Execute one scheduling round on real threads; returns (samples, wall
-/// secs of the round, merged plan stats). Workers spawn individually
-/// (the Latin level makes them row-disjoint regardless of their device),
-/// the device grid only attributes each pass to its device.
+/// secs of the round, merged plan stats, prefetch outcome). Workers
+/// spawn individually (the Latin level makes them row-disjoint
+/// regardless of their device), the device grid only attributes each
+/// pass to its device. With a prefetch context, each worker issues its
+/// outgoing next-round panels right after its own pass — while the
+/// other workers are still computing, which is where the hidden-comm
+/// overlap comes from.
 #[allow(clippy::too_many_arguments)]
 fn run_round_threads(
     shared: &SharedFactors,
@@ -788,10 +1146,12 @@ fn run_round_threads(
     device_params: &[PlanParams],
     grid_degraded: bool,
     device_samples: &mut [u64],
-) -> (usize, f64, PlanAccum) {
+    prefetch: Option<(&Mutex<Exchanger>, &PrefetchRound)>,
+) -> (usize, f64, PlanAccum, PrefetchOutcome) {
     let t0 = Instant::now();
     let mut samples = 0usize;
     let mut plans = PlanAccum::new();
+    let mut outcome = PrefetchOutcome::default();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for ((g, pool), wrng) in (0..assignments.len())
@@ -800,17 +1160,23 @@ fn run_round_threads(
         {
             let block = partition.block(&assignments[g]);
             let params = device_params[grid.device_of(g)];
+            let job = prefetch.map(|(mx, pr)| (mx, pr, pr.jobs[g].as_slice()));
             let handle = scope.spawn(move || {
                 #[cfg(feature = "shadow-ledger")]
                 crate::analysis::shadow::set_worker(g);
-                worker_pass(
+                let (count, stats) = worker_pass(
                     shared, core, strided, layout, train, block, pool, wrng, lr_f, h, params,
-                )
+                );
+                let (issued, hidden, err) = match job {
+                    Some((mx, pr, slots)) => issue_prefetch_slots(mx, pr, slots, shared, pool),
+                    None => (0, 0.0, None),
+                };
+                (count, stats, issued, hidden, err)
             });
             handles.push(handle);
         }
         for (g, hdl) in handles.into_iter().enumerate() {
-            let (count, stats) = hdl.join().expect("worker panicked");
+            let (count, stats, issued, hidden, err) = hdl.join().expect("worker panicked");
             samples += count;
             let dev = grid.device_of(g);
             device_samples[dev] += count as u64;
@@ -819,9 +1185,14 @@ fn run_round_threads(
                 s.degraded |= grid_degraded;
                 plans.record(&s);
             }
+            outcome.issued += issued;
+            outcome.hidden_secs += hidden;
+            if outcome.err.is_none() {
+                outcome.err = err;
+            }
         }
     });
-    (samples, t0.elapsed().as_secs_f64(), plans)
+    (samples, t0.elapsed().as_secs_f64(), plans, outcome)
 }
 
 /// Execute one round as a discrete-event simulation: workers run
@@ -846,9 +1217,11 @@ fn run_round_simulated(
     device_params: &[PlanParams],
     grid_degraded: bool,
     device_samples: &mut [u64],
-) -> (usize, f64, PlanAccum) {
+    prefetch: Option<(&Mutex<Exchanger>, &PrefetchRound)>,
+) -> (usize, f64, PlanAccum, PrefetchOutcome) {
     let mut samples = 0usize;
     let mut plans = PlanAccum::new();
+    let mut outcome = PrefetchOutcome::default();
     let mut device_secs = vec![0.0f64; grid.devices()];
     for ((g, pool), wrng) in (0..assignments.len())
         .zip(pools.iter_mut())
@@ -864,6 +1237,19 @@ fn run_round_simulated(
             device_params[dev],
         );
         device_secs[dev] += t0.elapsed().as_secs_f64();
+        // Post-pass prefetch issue, outside the simulated compute clock:
+        // on the modeled hardware the transfer overlaps the remaining
+        // devices' compute (that is the point), so its cost lands in the
+        // hidden-comm counter instead of the round's device time.
+        if let Some((mx, pr)) = prefetch {
+            let (issued, hidden, err) =
+                issue_prefetch_slots(mx, pr, &pr.jobs[g], shared, pool);
+            outcome.issued += issued;
+            outcome.hidden_secs += hidden;
+            if outcome.err.is_none() {
+                outcome.err = err;
+            }
+        }
         samples += count;
         device_samples[dev] += count as u64;
         if let Some(mut s) = stats {
@@ -873,7 +1259,7 @@ fn run_round_simulated(
         }
     }
     let slowest = device_secs.iter().copied().fold(0.0f64, f64::max);
-    (samples, slowest, plans)
+    (samples, slowest, plans, outcome)
 }
 
 /// Serialize a contiguous factor-row panel (rows `s..e` of `mode`, `j`
@@ -885,9 +1271,11 @@ fn run_round_simulated(
 fn rows_payload(shared: &SharedFactors, mode: usize, s: usize, e: usize, j: usize) -> Vec<u8> {
     let mut out = Vec::with_capacity((e - s) * j * 4);
     for i in s..e {
-        // SAFETY: the exchange runs coordinator-serial at the round
-        // barrier — no worker threads are live — so this read cannot
-        // race (see `SharedFactors::row_exchange`).
+        // SAFETY: the caller is one of `row_exchange`'s two exclusive
+        // readers — the coordinator at the round barrier (no worker
+        // threads live; the synchronous path), or the worker owning
+        // these rows' chunk this round, after its own pass (the async
+        // prefetch path) — so this read cannot race.
         let row = unsafe { shared.row_exchange(mode, i) };
         for &v in row {
             out.extend_from_slice(&v.to_le_bytes());
@@ -912,6 +1300,66 @@ fn apply_rows_payload(shared: &SharedFactors, spec: &PanelSpec, payload: &[u8], 
             *item = f32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
         }
     }
+}
+
+/// Barrier-side half of the prefetch pipeline (ISSUE 8): collect and
+/// apply every in-flight rows round whose staleness bound is due at
+/// `barrier_round` (with `staleness = 0` — exact mode and the epoch-end
+/// drain — that is all of them), then, for the rounds still inside the
+/// bound, apply whatever has already arrived without blocking and
+/// retire rounds that complete early. Applies always run here, on the
+/// coordinator at the barrier, in spec order — the bitwise contract's
+/// apply order. Blocking time lands in `exposed_secs`; the hidden cost
+/// was already paid worker-side.
+#[allow(clippy::too_many_arguments)]
+fn drain_due_prefetch(
+    ex: &mut Exchanger,
+    shared: &SharedFactors,
+    inflight: &mut VecDeque<(RoundToken, usize, usize)>,
+    epoch: usize,
+    barrier_round: usize,
+    staleness: usize,
+    j: usize,
+    exposed_secs: &mut f64,
+) -> Result<(), TransportError> {
+    while let Some(&(token, round, _)) = inflight.front() {
+        if barrier_round - round < staleness {
+            break;
+        }
+        inflight.pop_front();
+        let t0 = Instant::now();
+        let delivered = ex.collect(token)?;
+        *exposed_secs += t0.elapsed().as_secs_f64();
+        for (_, spec, payload, seq) in &delivered {
+            apply_rows_payload(shared, spec, payload, j);
+            ex.note_applied(epoch, round, spec, *seq);
+        }
+    }
+    if inflight.is_empty() {
+        return Ok(());
+    }
+    // Relaxed slack: the remaining rounds are younger than the bound —
+    // apply their arrived panels opportunistically and defer the rest.
+    ex.poll()?;
+    let mut still = VecDeque::with_capacity(inflight.len());
+    while let Some((token, round, mut remaining)) = inflight.pop_front() {
+        let ready = ex.take_ready(token)?;
+        for (_, spec, payload, seq) in &ready {
+            apply_rows_payload(shared, spec, payload, j);
+            ex.note_applied(epoch, round, spec, *seq);
+        }
+        remaining -= ready.len();
+        if remaining == 0 {
+            // Every slot applied — retire the round in the exchanger
+            // (instant: nothing is missing, so collect cannot block).
+            let leftover = ex.collect(token)?;
+            debug_assert!(leftover.is_empty(), "retired round returned panels");
+        } else {
+            still.push_back((token, round, remaining));
+        }
+    }
+    *inflight = still;
+    Ok(())
 }
 
 /// Serialize one pool's Eq. 17 gradient block as a `CoreGrad` payload:
@@ -1526,6 +1974,223 @@ mod tests {
             ),
             "wrong error: {err}"
         );
+    }
+
+    #[test]
+    fn async_prefetch_is_bitwise_neutral_in_exact_mode() {
+        // ISSUE 8 tentpole, engine level: double-buffering the boundary
+        // exchange (transfer moves early, apply stays at the barrier)
+        // must leave the trained model — factors AND core — bitwise
+        // identical to both the synchronous channel exchange and the
+        // direct handover, in both execution modes, while actually
+        // hiding exchange work behind compute.
+        let (p, spec) = planted(171);
+        for execution in [Execution::Threads, Execution::Simulated] {
+            let run = |transport, prefetch| {
+                let mut rng = Rng::new(172);
+                let mut model =
+                    TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+                let mut opts = ParallelOptions::default();
+                opts.workers = 4;
+                opts.devices = crate::parallel::DeviceCount::Fixed(2);
+                opts.execution = execution;
+                opts.transport = transport;
+                opts.prefetch = prefetch;
+                let mut engine = ParallelFastTucker::new(opts);
+                let mut rng2 = Rng::new(173);
+                for epoch in 0..2 {
+                    engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+                }
+                (model, engine)
+            };
+            let (direct, _) = run(TransportKind::Direct, PrefetchMode::Off);
+            let (sync, sync_engine) = run(TransportKind::Channel, PrefetchMode::Off);
+            let (async_m, async_engine) = run(TransportKind::Channel, PrefetchMode::Async);
+            // The async run moved real panels ahead of their barriers
+            // and hid real exchange seconds behind compute.
+            let acc = &async_engine.plan_accum;
+            assert!(acc.prefetch_issued > 0, "{execution:?}: nothing prefetched: {acc:?}");
+            assert!(acc.comm_hidden_secs > 0.0, "{execution:?}: no hidden comm: {acc:?}");
+            assert!(
+                acc.overlap_efficiency().unwrap_or(0.0) > 0.0,
+                "{execution:?}: zero overlap efficiency: {acc:?}"
+            );
+            assert_eq!(acc.degraded, 0, "{execution:?}: async run degraded: {acc:?}");
+            assert_eq!(
+                acc.transport_faults(),
+                0,
+                "{execution:?}: healthy async channel reported faults: {acc:?}"
+            );
+            // The synchronous run prefetches nothing (its exchange cost
+            // is all exposed).
+            assert_eq!(sync_engine.plan_accum.prefetch_issued, 0);
+            assert_eq!(sync_engine.plan_accum.comm_hidden_secs, 0.0);
+            for n in 0..3 {
+                let (d, s, a) = (
+                    direct.factors.mat(n).data(),
+                    sync.factors.mat(n).data(),
+                    async_m.factors.mat(n).data(),
+                );
+                for ((x, y), z) in d.iter().zip(s.iter()).zip(a.iter()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{execution:?}: mode {n} sync channel diverged from direct"
+                    );
+                    assert_eq!(
+                        x.to_bits(),
+                        z.to_bits(),
+                        "{execution:?}: mode {n} async prefetch diverged from direct"
+                    );
+                }
+            }
+            let (dk, sk, ak) = match (&direct.core, &sync.core, &async_m.core) {
+                (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b), CoreRepr::Kruskal(c)) => (a, b, c),
+                _ => unreachable!(),
+            };
+            for n in 0..3 {
+                for ((x, y), z) in dk
+                    .factor(n)
+                    .data()
+                    .iter()
+                    .zip(sk.factor(n).data().iter())
+                    .zip(ak.factor(n).data().iter())
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{execution:?}: core mode {n} (sync)");
+                    assert_eq!(x.to_bits(), z.to_bits(), "{execution:?}: core mode {n} (async)");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_prefetch_on_direct_transport_degrades_loudly() {
+        // Async prefetch needs a transfer to hide; on the direct
+        // handover the request cannot engage and must be surfaced as a
+        // degraded run (same rule as an unengageable FaultPlan), while
+        // training proceeds unharmed.
+        let (p, spec) = planted(181);
+        let mut rng = Rng::new(182);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 2;
+        opts.transport = TransportKind::Direct;
+        opts.prefetch = PrefetchMode::Async;
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "unengageable async prefetch not marked degraded: {:?}",
+            engine.plan_accum
+        );
+        assert_eq!(engine.plan_accum.prefetch_issued, 0);
+    }
+
+    #[test]
+    fn staleness_without_relaxed_async_degrades_and_clamps() {
+        // A staleness bound only means something when the apply may
+        // leave its barrier — relaxed exactness with engaged async
+        // prefetch. Anywhere else it clamps to 0 (every panel at its own
+        // barrier), loudly, and the run stays bitwise exact.
+        let (p, spec) = planted(191);
+        let run = |transport, prefetch, staleness: usize| {
+            let mut rng = Rng::new(192);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = crate::parallel::DeviceCount::Fixed(2);
+            opts.transport = transport;
+            opts.prefetch = prefetch;
+            opts.staleness = staleness;
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = Rng::new(193);
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            (model, engine)
+        };
+        let (direct, _) = run(TransportKind::Direct, PrefetchMode::Off, 0);
+        // Exact mode: staleness must clamp (exact owes every panel to
+        // its own barrier) and the model must stay bitwise identical.
+        let (clamped, engine) = run(TransportKind::Channel, PrefetchMode::Async, 2);
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "exact-mode staleness not marked degraded: {:?}",
+            engine.plan_accum
+        );
+        for n in 0..3 {
+            for (a, b) in direct
+                .factors
+                .mat(n)
+                .data()
+                .iter()
+                .zip(clamped.factors.mat(n).data().iter())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {n} diverged under clamped staleness");
+            }
+        }
+        // No async prefetch (sync channel): same clamp rule even in
+        // relaxed mode — there is no in-flight panel to defer.
+        let mut rng = Rng::new(194);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = crate::parallel::DeviceCount::Fixed(2);
+        opts.transport = TransportKind::Channel;
+        opts.exactness = Exactness::Relaxed;
+        opts.prefetch = PrefetchMode::Off;
+        opts.staleness = 1;
+        let mut engine = ParallelFastTucker::new(opts);
+        engine.train_epoch(&mut model, &p.tensor, 0, &mut rng).unwrap();
+        assert!(
+            engine.plan_accum.degraded > 0,
+            "staleness without prefetch not marked degraded: {:?}",
+            engine.plan_accum
+        );
+    }
+
+    #[test]
+    fn relaxed_bounded_staleness_trains_and_audits_clean() {
+        // The relaxed-mode prefetch variant: panels may be applied up to
+        // S rounds late. Covered by the accuracy envelope (convergence),
+        // not the bitwise contract — and the event log must satisfy the
+        // staleness-aware auditor, not the strict S = 0 one.
+        let (p, spec) = planted(201);
+        for staleness in [1usize, 2] {
+            let mut rng = Rng::new(202);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = crate::parallel::DeviceCount::Fixed(2);
+            opts.exactness = Exactness::Relaxed;
+            opts.transport = TransportKind::Channel;
+            opts.prefetch = PrefetchMode::Async;
+            opts.staleness = staleness;
+            opts.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+            opts.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+            let mut engine = ParallelFastTucker::new(opts);
+            let before = rmse(&model, &p.tensor);
+            for epoch in 0..15 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng).unwrap();
+                let report = crate::analysis::audit_exchange_with_staleness(
+                    engine.exchange_events(),
+                    staleness,
+                );
+                assert!(report.ok(), "S={staleness} epoch {epoch} audit: {report}");
+            }
+            assert_eq!(
+                engine.plan_accum.degraded, 0,
+                "engaged bounded staleness wrongly degraded: {:?}",
+                engine.plan_accum
+            );
+            let after = rmse(&model, &p.tensor);
+            assert!(
+                after < 0.6 * before,
+                "S={staleness}: rmse {before} -> {after} (outside the relaxed envelope)"
+            );
+        }
     }
 
     #[test]

@@ -1051,6 +1051,224 @@ fn prop_channel_transport_exact_bitwise_matches_direct() {
 }
 
 #[test]
+// Name note: contains "async_prefetch_is_bitwise_neutral" so the chaos CI
+// leg's existing --skip substring covers it (it asserts a fault-free run).
+fn prop_async_prefetch_is_bitwise_neutral_across_devices_and_splits() {
+    // ISSUE 8 tentpole acceptance: double-buffering the exchange (round
+    // r+1's panels issued while round r computes, the per-epoch core
+    // merge pipelined behind the last round) is bitwise-neutral in
+    // exact mode — for D ∈ {1, 2, 3, 4} × split ∈ {1, 2}, on both the
+    // tall and the hollow workload, factors, core factors, and the
+    // per-epoch residual trajectory match both the synchronous channel
+    // exchange and the direct handover exactly. D > 1 must actually
+    // prefetch (and hide real exchange seconds); D = 1 has nothing in
+    // flight.
+    use fasttucker::algo::SgdHyper;
+    use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+    use fasttucker::kruskal::reconstruct::rmse;
+    use fasttucker::parallel::{
+        DeviceCount, ParallelFastTucker, ParallelOptions, PrefetchMode, TransportKind,
+    };
+
+    let workloads = [
+        ("tall", PlantedSpec {
+            dims: vec![40, 40, 40],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+        ("hollow", PlantedSpec {
+            dims: vec![2000, 400, 400],
+            nnz: 6000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }),
+    ];
+    for (wname, spec) in &workloads {
+        let mut prng = fasttucker::util::Rng::new(0xA51C);
+        let p = planted_tucker(&mut prng, spec);
+        let run = |transport: TransportKind, prefetch: PrefetchMode, devices: usize, split: usize| {
+            let mut rng = fasttucker::util::Rng::new(8001);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut opts = ParallelOptions::default();
+            opts.workers = 4;
+            opts.devices = DeviceCount::Fixed(devices);
+            opts.transport = transport;
+            opts.prefetch = prefetch;
+            opts.split = split;
+            opts.hyper = SgdHyper::default();
+            let mut engine = ParallelFastTucker::new(opts);
+            let mut rng2 = fasttucker::util::Rng::new(8002);
+            let mut trajectory = Vec::new();
+            for epoch in 0..2 {
+                engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+                trajectory.push(rmse(&model, &p.tensor));
+            }
+            (model, trajectory, engine.plan_accum)
+        };
+        for devices in [1usize, 2, 3, 4] {
+            for split in [1usize, 2] {
+                let (direct, dtraj, _) =
+                    run(TransportKind::Direct, PrefetchMode::Off, devices, split);
+                let (sync, straj, _) =
+                    run(TransportKind::Channel, PrefetchMode::Off, devices, split);
+                let (asy, atraj, acc) =
+                    run(TransportKind::Channel, PrefetchMode::Async, devices, split);
+                if devices > 1 {
+                    assert!(
+                        acc.prefetch_issued > 0,
+                        "{wname} D={devices} split={split}: nothing prefetched"
+                    );
+                    assert!(
+                        acc.comm_hidden_secs > 0.0,
+                        "{wname} D={devices} split={split}: no exchange cost hidden"
+                    );
+                } else {
+                    assert_eq!(
+                        acc.prefetch_issued, 0,
+                        "{wname} split={split}: D=1 must have nothing in flight"
+                    );
+                }
+                assert_eq!(
+                    acc.transport_faults(),
+                    0,
+                    "{wname} D={devices} split={split}: healthy async channel reported faults"
+                );
+                assert_eq!(acc.degraded, 0, "{wname} D={devices} split={split}: degraded");
+                for (e, ((a, b), c)) in
+                    dtraj.iter().zip(straj.iter()).zip(atraj.iter()).enumerate()
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{wname} D={devices} split={split}: epoch {e} sync trajectory diverged"
+                    );
+                    assert_eq!(
+                        a.to_bits(),
+                        c.to_bits(),
+                        "{wname} D={devices} split={split}: epoch {e} async trajectory diverged"
+                    );
+                }
+                for n in 0..3 {
+                    let d = direct.factors.mat(n).data();
+                    let s = sync.factors.mat(n).data();
+                    let a = asy.factors.mat(n).data();
+                    for ((x, y), z) in d.iter().zip(s.iter()).zip(a.iter()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{wname} D={devices} split={split}: mode {n} sync diverged"
+                        );
+                        assert_eq!(
+                            x.to_bits(),
+                            z.to_bits(),
+                            "{wname} D={devices} split={split}: mode {n} async diverged"
+                        );
+                    }
+                }
+                let (dk, sk, ak) = match (&direct.core, &sync.core, &asy.core) {
+                    (CoreRepr::Kruskal(a), CoreRepr::Kruskal(b), CoreRepr::Kruskal(c)) => {
+                        (a, b, c)
+                    }
+                    _ => unreachable!(),
+                };
+                for n in 0..3 {
+                    for ((x, y), z) in dk
+                        .factor(n)
+                        .data()
+                        .iter()
+                        .zip(sk.factor(n).data().iter())
+                        .zip(ak.factor(n).data().iter())
+                    {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{wname} D={devices} split={split}: core mode {n} sync diverged"
+                        );
+                        assert_eq!(
+                            x.to_bits(),
+                            z.to_bits(),
+                            "{wname} D={devices} split={split}: core mode {n} async diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_relaxed_bounded_staleness_stays_in_envelope_and_audits_clean() {
+    // ISSUE 8 relaxed-mode acceptance: with staleness S ∈ {1, 2} a
+    // boundary panel may be applied up to S rounds late. The run must
+    // (a) train to the same quality neighborhood as the synchronous
+    // relaxed run (the hogwild-style accuracy envelope), (b) produce an
+    // event log the staleness-aware auditor accepts at its own bound —
+    // and that the strict S = 0 auditor accepts at staleness 0 is
+    // already covered by the exact-mode property above.
+    use fasttucker::algo::SgdHyper;
+    use fasttucker::analysis::audit_exchange_with_staleness;
+    use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+    use fasttucker::kernel::Exactness;
+    use fasttucker::kruskal::reconstruct::rmse;
+    use fasttucker::parallel::{
+        DeviceCount, ParallelFastTucker, ParallelOptions, PrefetchMode, TransportKind,
+    };
+
+    let spec = PlantedSpec {
+        dims: vec![40, 40, 40],
+        nnz: 6000,
+        j: 4,
+        r_core: 4,
+        noise: 0.05,
+        clamp: None,
+    };
+    let mut prng = fasttucker::util::Rng::new(0x51A1);
+    let p = planted_tucker(&mut prng, &spec);
+    let run = |staleness: usize| {
+        let mut rng = fasttucker::util::Rng::new(8101);
+        let mut model = TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+        let mut opts = ParallelOptions::default();
+        opts.workers = 4;
+        opts.devices = DeviceCount::Fixed(2);
+        opts.exactness = Exactness::Relaxed;
+        opts.transport = TransportKind::Channel;
+        opts.prefetch = if staleness > 0 { PrefetchMode::Async } else { PrefetchMode::Off };
+        opts.staleness = staleness;
+        opts.hyper = SgdHyper::default();
+        let mut engine = ParallelFastTucker::new(opts);
+        let mut rng2 = fasttucker::util::Rng::new(8102);
+        for epoch in 0..8 {
+            engine.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            let report =
+                audit_exchange_with_staleness(engine.exchange_events(), staleness);
+            assert!(report.ok(), "S={staleness} epoch {epoch}: {report}");
+        }
+        assert_eq!(
+            engine.plan_accum.degraded, 0,
+            "S={staleness}: engaged bounded staleness wrongly degraded"
+        );
+        rmse(&model, &p.tensor)
+    };
+    let baseline = run(0);
+    for staleness in [1usize, 2] {
+        let stale_rmse = run(staleness);
+        // Stale applies perturb individual SGD steps, not convergence:
+        // the final quality must stay in the synchronous run's
+        // neighborhood (generous bound — the envelope, not bitwise).
+        assert!(
+            stale_rmse < baseline * 1.5 + 0.05,
+            "S={staleness}: rmse {stale_rmse} left the envelope (sync relaxed: {baseline})"
+        );
+    }
+}
+
+#[test]
 fn prop_fault_matrix_recovers_bitwise_or_fails_named() {
     // ISSUE 7 acceptance: for every fault class × injection rate × seed,
     // a faulty channel run either (a) completes AND is bitwise-equal to
