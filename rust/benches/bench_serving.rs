@@ -1,0 +1,319 @@
+//! Serving-layer bench (ISSUE 9): batched top-k scoring throughput vs
+//! the pointwise `predict` loop, with and without the hot-row cache.
+//!
+//! Reported per path: predictions/sec, cache hit rate, and
+//! `speedup_vs_scalar` normalized against the same run's pointwise pass
+//! (the serving "scalar"), so the gated metric transfers across CI
+//! runners. The batch path is bitwise-identical to pointwise (pinned in
+//! `kruskal::predict` and `serve::score`, and spot-checked here before
+//! timing) — this bench exists to pin that the *faster* path stays
+//! faster.
+//!
+//! Flags (after `--` with `cargo bench --bench bench_serving`):
+//! * `--quick` — CI smoke mode: reduced query count.
+//! * `--json PATH` — write the sweep as a `BENCH_serving.json` snapshot.
+//! * `--check PATH` — bench-regression gate against the committed
+//!   `BENCH_baseline.json` (shared with the kernel bench: unmatched
+//!   kernel entries are non-fatal notes; the serving entries gate).
+
+use std::time::Instant;
+
+use fasttucker::bench_support::{bench_scale, regression, Table};
+use fasttucker::model::TuckerModel;
+use fasttucker::serve::{Query, Scorer};
+use fasttucker::util::Rng;
+
+struct PathResult {
+    path: String,
+    cap: usize,
+    secs: f64,
+    predictions_per_sec: f64,
+    cache_hit_rate: f64,
+    speedup_vs_scalar: f64,
+}
+
+struct ServingResult {
+    name: String,
+    dims: Vec<usize>,
+    queries: usize,
+    candidates: usize,
+    paths: Vec<PathResult>,
+}
+
+/// Deterministic query stream: a pool of repeat users (so the cached
+/// path sees hits, like production serving traffic) with fresh random
+/// candidate panels per query.
+fn make_queries(
+    rng: &mut Rng,
+    dims: &[usize],
+    n_queries: usize,
+    pool: usize,
+    candidates: usize,
+    mode: usize,
+) -> Vec<Query> {
+    let users: Vec<Vec<u32>> = (0..pool)
+        .map(|_| dims.iter().map(|&d| rng.gen_range(d) as u32).collect())
+        .collect();
+    (0..n_queries)
+        .map(|i| Query {
+            coords: users[i % pool].clone(),
+            candidate_mode: mode,
+            candidates: (0..candidates)
+                .map(|_| rng.gen_range(dims[mode]) as u32)
+                .collect(),
+        })
+        .collect()
+}
+
+/// Pointwise top-k: the oracle loop the batch path must match bitwise
+/// and beat on throughput.
+fn pointwise_topk(model: &TuckerModel, q: &Query, k: usize) -> Vec<(u32, f32)> {
+    let mut full = q.coords.clone();
+    let mut ranked: Vec<(u32, f32)> = q
+        .candidates
+        .iter()
+        .map(|&c| {
+            full[q.candidate_mode] = c;
+            (c, model.predict(&full))
+        })
+        .collect();
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    ranked.truncate(k);
+    ranked
+}
+
+fn run_serving(quick: bool) -> ServingResult {
+    let scale = if quick && std::env::var("FASTTUCKER_BENCH_SCALE").is_err() {
+        0.25
+    } else {
+        bench_scale()
+    };
+    let reps = if quick { 2 } else { 3 };
+    let dims = vec![3000usize, 2000, 150];
+    let (j, r) = (8usize, 8usize);
+    let candidates = 256usize;
+    let topk = 10usize;
+    let n_queries = ((400.0 * scale) as usize).max(40);
+    let pool = (n_queries / 8).max(1);
+    println!(
+        "\n== serving: batched top-k vs pointwise predict (dims {dims:?}, J={j}, R={r}, \
+         {n_queries} queries x {candidates} candidates, pool {pool}) =="
+    );
+
+    let mut rng = Rng::new(13);
+    let model = TuckerModel::init_kruskal(&mut rng, &dims, j, r);
+    let queries = make_queries(&mut rng, &dims, n_queries, pool, candidates, 1);
+
+    // Bitwise sanity before timing: the batch path must reproduce the
+    // pointwise oracle exactly on a real query.
+    {
+        let mut scorer = Scorer::new(0);
+        let scores = scorer.score(&model, 1, &queries[0]);
+        let mut full = queries[0].coords.clone();
+        for (i, &c) in queries[0].candidates.iter().enumerate() {
+            full[1] = c;
+            assert_eq!(
+                scores[i].to_bits(),
+                model.predict(&full).to_bits(),
+                "batch scorer diverged from the pointwise oracle"
+            );
+        }
+    }
+
+    let mut table = Table::new(&["path", "cap", "secs", "preds/sec", "hit rate", "speedup"]);
+    let mut result = ServingResult {
+        name: "serving".into(),
+        dims,
+        queries: n_queries,
+        candidates,
+        paths: Vec::new(),
+    };
+    let total_preds = (n_queries * candidates) as f64;
+
+    // Pointwise baseline (the serving "scalar").
+    let pointwise_secs = {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let mut acc = 0u64;
+            for q in &queries {
+                for (item, score) in pointwise_topk(&model, q, topk) {
+                    acc = acc.wrapping_add(u64::from(item)) ^ u64::from(score.to_bits());
+                }
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(acc);
+        }
+        best
+    };
+    table.row(&[
+        "pointwise".into(),
+        candidates.to_string(),
+        format!("{pointwise_secs:.4}"),
+        format!("{:.0}", total_preds / pointwise_secs),
+        "-".into(),
+        "1.00x".into(),
+    ]);
+    result.paths.push(PathResult {
+        path: "pointwise".into(),
+        cap: candidates,
+        secs: pointwise_secs,
+        predictions_per_sec: total_preds / pointwise_secs,
+        cache_hit_rate: 0.0,
+        speedup_vs_scalar: 1.0,
+    });
+
+    // Batched panel scorer, uncached and cached.
+    for (label, capacity) in [("batch-topk", 0usize), ("batch-topk-cached", 2 * pool)] {
+        let mut best = f64::INFINITY;
+        let mut hit_rate = 0.0;
+        for _ in 0..reps {
+            let mut scorer = Scorer::new(capacity);
+            let t0 = Instant::now();
+            let mut acc = 0u64;
+            for q in &queries {
+                for s in scorer.top_k(&model, 1, q, topk) {
+                    acc = acc.wrapping_add(u64::from(s.item)) ^ u64::from(s.score.to_bits());
+                }
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(acc);
+            hit_rate = scorer.cache_counters().hit_rate();
+        }
+        table.row(&[
+            label.into(),
+            candidates.to_string(),
+            format!("{best:.4}"),
+            format!("{:.0}", total_preds / best),
+            format!("{hit_rate:.3}"),
+            format!("{:.2}x", pointwise_secs / best),
+        ]);
+        result.paths.push(PathResult {
+            path: label.into(),
+            cap: candidates,
+            secs: best,
+            predictions_per_sec: total_preds / best,
+            cache_hit_rate: hit_rate,
+            speedup_vs_scalar: pointwise_secs / best,
+        });
+    }
+    table.print();
+    result
+}
+
+/// Hand-rolled JSON (offline build: no serde), in the snapshot shape
+/// `bench_support::regression::parse_entries` scans — one `"name"` line
+/// per workload, one `"path"`/`"cap"`/`"speedup_vs_scalar"` line per
+/// gated entry; the serving extras (predictions_per_sec,
+/// cache_hit_rate) ride along un-gated.
+fn render_json(w: &ServingResult) -> String {
+    let mut s = String::from("{\n  \"bench\": \"serving\",\n  \"workloads\": [\n");
+    s.push_str(&format!(
+        "    {{\"name\": \"{}\", \"dims\": {:?}, \"queries\": {}, \"candidates\": {}, \"paths\": [\n",
+        w.name, w.dims, w.queries, w.candidates
+    ));
+    for (pi, p) in w.paths.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"path\": \"{}\", \"cap\": {}, \"secs\": {:.6}, \
+             \"predictions_per_sec\": {:.2}, \"cache_hit_rate\": {:.4}, \
+             \"speedup_vs_scalar\": {:.4}}}{}\n",
+            p.path,
+            p.cap,
+            p.secs,
+            p.predictions_per_sec,
+            p.cache_hit_rate,
+            p.speedup_vs_scalar,
+            if pi + 1 == w.paths.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    ]}\n  ]\n}\n");
+    s
+}
+
+fn emit_json(path: &str, json: &str) {
+    if let Err(e) = std::fs::write(path, json) {
+        eprintln!("failed to write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote {path}");
+}
+
+/// The bench-regression gate (same machinery as bench_kernels): compare
+/// this run's `speedup_vs_scalar` per `(workload, path, cap)` against
+/// the committed baseline; baseline entries this bench doesn't produce
+/// (the kernel workloads) are non-fatal notes.
+fn check_baseline(baseline_path: &str, json: &str) {
+    let baseline_text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("failed to read baseline {baseline_path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let baseline = regression::parse_entries(&baseline_text);
+    if baseline.is_empty() {
+        eprintln!("baseline {baseline_path} contains no gated entries");
+        std::process::exit(1);
+    }
+    let current = regression::parse_entries(json);
+    let tolerance = regression::tolerance_from_env();
+    let report = regression::check(&current, &baseline, tolerance);
+    println!(
+        "\n== bench-regression gate vs {baseline_path} (tolerance {:.0}%) ==",
+        tolerance * 100.0
+    );
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    if report.passed() {
+        println!(
+            "gate passed: {} of {} pinned entries compared",
+            report.matched,
+            baseline.len()
+        );
+    } else {
+        if report.matched == 0 {
+            eprintln!(
+                "gate compared NOTHING: no (workload, path, cap) key of the current run \
+                 matches the baseline — snapshot format drift or a total rename"
+            );
+        }
+        for r in &report.regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        eprintln!(
+            "bench-regression gate failed; if intentional, refresh the serving floors in \
+             {baseline_path} from this run's --json snapshot"
+        );
+        std::process::exit(1);
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let baseline_path = args
+        .iter()
+        .position(|a| a == "--check")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let result = run_serving(quick);
+    let json = render_json(&result);
+    if let Some(path) = json_path {
+        emit_json(&path, &json);
+    }
+    // The gate runs last so the snapshot is written (and uploaded by CI)
+    // even when the gate fails.
+    if let Some(path) = baseline_path {
+        check_baseline(&path, &json);
+    }
+}

@@ -111,14 +111,19 @@ pub struct FastTucker {
     pool: Option<DispatchPool>,
     strided: Vec<Vec<f32>>,
     /// Planner decision cached per workload + model fingerprint
-    /// `(nnz, dims, sample count, order, r_core, j, exactness, lanes,
-    /// split)` — every input the cost model reads, so mutating `config`
-    /// or switching models invalidates it.
+    /// `(revision, nnz, dims, sample count, order, r_core, j, exactness,
+    /// lanes, split)` — every input the cost model reads, so mutating
+    /// `config`, switching models, or feeding different nonzeros (the
+    /// content revision — even at identical `(nnz, dims)`) invalidates
+    /// it.
     #[allow(clippy::type_complexity)]
     auto_cache: Option<(
-        (usize, Vec<usize>, usize, usize, usize, usize, Exactness, Lanes, usize),
+        (u64, usize, Vec<usize>, usize, usize, usize, usize, Exactness, Lanes, usize),
         PlanParams,
     )>,
+    /// Lifetime count of planner re-decisions (cache-invalidation
+    /// observability, ISSUE 9).
+    planner_rebuilds: u64,
     /// Plan of the most recent batched epoch (observability).
     last_plan_stats: Option<PlanStats>,
     /// One-shot guard for the degenerate `devices > 1` warning.
@@ -133,9 +138,17 @@ impl FastTucker {
             pool: None,
             strided: Vec::new(),
             auto_cache: None,
+            planner_rebuilds: 0,
             last_plan_stats: None,
             warned_devices: false,
         }
+    }
+
+    /// How many times the planner cache missed and re-decided (0 until
+    /// the first `Auto` epoch; stays flat while the workload fingerprint
+    /// — including the tensor's content revision — is unchanged).
+    pub fn planner_rebuilds(&self) -> u64 {
+        self.planner_rebuilds
     }
 
     /// The serial engine is one device: a fixed multi-device request is
@@ -201,6 +214,7 @@ impl FastTucker {
             ),
             BatchSizing::Auto => {
                 let key = (
+                    train.revision(),
                     train.nnz(),
                     train.dims().to_vec(),
                     m,
@@ -216,6 +230,7 @@ impl FastTucker {
                         return Some(*params);
                     }
                 }
+                self.planner_rebuilds += 1;
                 let params = self
                     .config
                     .batch

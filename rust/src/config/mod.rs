@@ -84,6 +84,9 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     pub checkpoint: Option<String>,
     pub eval_every: usize,
+    /// Evaluation thread count for the parallel RMSE/MAE pass (≥ 1).
+    /// TOML: `eval_threads = 4`.
+    pub eval_threads: usize,
     /// Cap on the PJRT artifact batch size (None = planner-sized from
     /// the training nnz when the launcher knows it, else the largest
     /// compiled variant).
@@ -156,6 +159,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             checkpoint: None,
             eval_every: 1,
+            eval_threads: 4,
             pjrt_batch_cap: None,
             batch: BatchSizing::Auto,
             exactness: Exactness::Exact,
@@ -191,6 +195,7 @@ impl TrainConfig {
     /// seed = 42
     /// test_frac = 0.1
     /// eval_every = 1
+    /// eval_threads = 4
     /// artifacts_dir = "artifacts"
     /// checkpoint = "model.ftck"
     /// batch = "auto"        # or an integer group cap (0/1 = scalar kernel)
@@ -248,6 +253,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("", "eval_every") {
             cfg.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("", "eval_threads") {
+            cfg.eval_threads = v.as_usize()?;
         }
         if let Some(v) = doc.get("", "artifacts_dir") {
             cfg.artifacts_dir = v.as_str()?.to_string();
@@ -337,6 +345,12 @@ impl TrainConfig {
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1 (1 = evaluate after every epoch)");
+        }
+        if self.eval_threads == 0 {
+            bail!("eval_threads must be >= 1 (1 = sequential evaluation)");
         }
         if self.split == 0 {
             bail!("split must be >= 1 (1 = split-group execution off)");
@@ -684,6 +698,16 @@ update_core = false
         assert!((cfg.hyper.lambda_factor - 0.02).abs() < 1e-9);
         assert!((cfg.hyper.sample_frac - 0.5).abs() < 1e-12);
         assert!(!cfg.hyper.update_core);
+    }
+
+    #[test]
+    fn parses_eval_knobs_and_rejects_zero() {
+        let cfg = TrainConfig::from_toml_str("eval_every = 3\neval_threads = 2\n").unwrap();
+        assert_eq!(cfg.eval_every, 3);
+        assert_eq!(cfg.eval_threads, 2);
+        // Zero is a loud config error, not a silent clamp to 1.
+        assert!(TrainConfig::from_toml_str("eval_every = 0").is_err());
+        assert!(TrainConfig::from_toml_str("eval_threads = 0").is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Multi-threaded evaluation: RMSE/MAE over the test set Γ, parallelized
 //! over nonzeros (read-only, embarrassingly parallel).
 
-use crate::model::{CoreRepr, TuckerModel};
+use crate::model::TuckerModel;
 use crate::tensor::SparseTensor;
 
 /// RMSE and MAE of `model` on `test`, computed with `threads` workers.
@@ -22,26 +22,14 @@ pub fn rmse_mae_parallel(model: &TuckerModel, test: &SparseTensor, threads: usiz
             let end = ((t + 1) * chunk).min(test.nnz());
             handles.push(scope.spawn(move || {
                 let (mut se, mut ae) = (0.0f64, 0.0f64);
-                match &model.core {
-                    CoreRepr::Kruskal(core) => {
-                        for k in start..end {
-                            let e = (crate::data::synth::predict_planted(
-                                &model.factors,
-                                core,
-                                test.index(k),
-                            ) - test.value(k)) as f64;
-                            se += e * e;
-                            ae += e.abs();
-                        }
-                    }
-                    CoreRepr::Dense(core) => {
-                        for k in start..end {
-                            let e = (core.predict(&model.factors, test.index(k))
-                                - test.value(k)) as f64;
-                            se += e * e;
-                            ae += e.abs();
-                        }
-                    }
+                for k in start..end {
+                    let e = (crate::kruskal::predict::predict(
+                        &model.factors,
+                        &model.core,
+                        test.index(k),
+                    ) - test.value(k)) as f64;
+                    se += e * e;
+                    ae += e.abs();
                 }
                 (se, ae)
             }));

@@ -1,10 +1,28 @@
 //! The L3 coordinator: ties datasets, algorithms, engines (native /
-//! multi-device / PJRT), evaluation, and checkpointing into the training
-//! loop the CLI and the experiment drivers invoke.
+//! multi-device / PJRT), evaluation, checkpointing, and long-lived
+//! sessions into the training loop the CLI and the experiment drivers
+//! invoke.
+//!
+//! Two entry shapes:
+//!
+//! * **One-shot** ([`Trainer`]) — build engine + model from a
+//!   [`TrainConfig`](crate::config::TrainConfig), run the epoch loop,
+//!   return the history. The launcher (`train` subcommand) and the
+//!   experiment drivers use this.
+//! * **Long-lived** ([`session::Session`]) — the trainer plus ownership
+//!   of the training tensor and a serving scorer, for the streaming
+//!   loop: serve top-k, append arrival batches between epochs,
+//!   warm-start more epochs from the live factors. The session is where
+//!   the cache-invalidation contract lives (appends touch the engines'
+//!   data-keyed caches, training touches the model-keyed serving
+//!   cache — each exactly, nothing else). The `serve` subcommand and
+//!   `bench_serving` use this.
 
 pub mod engine;
 pub mod trainer;
 pub mod eval;
+pub mod session;
 
 pub use engine::{Engine, PjrtEngine};
+pub use session::Session;
 pub use trainer::{EpochRecord, TrainOptions, TrainReport, Trainer};

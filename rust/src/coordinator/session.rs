@@ -1,0 +1,297 @@
+//! Long-lived engine sessions: train, serve, append, warm-start — one
+//! owner for the model, the engine, and the (growing) training data.
+//!
+//! A [`Session`] is the unit of the streaming story (ISSUE 9). It owns
+//! the pieces the one-shot launcher wires up and then discards, and it
+//! enforces the boundary that keeps exact-mode training bitwise:
+//!
+//! * **Appends land between epochs.** [`Session::append`] grows the
+//!   training tensor (checked, all-or-nothing) and bumps its content
+//!   revision; the engines' partition/planner caches key on that
+//!   revision, so *exactly* the data-derived caches rebuild on the next
+//!   epoch — nothing mid-epoch ever changes, and the post-append epoch
+//!   is bitwise-identical to a fresh engine run on the merged tensor.
+//! * **Training bumps the model revision.** [`Session::train_epochs`]
+//!   resumes from the live factors (warm start — epoch numbering
+//!   continues, so schedules see the true epoch index) and bumps the
+//!   session's model revision; the serving scorer's
+//!   [`HotRowCache`](crate::serve::HotRowCache) fingerprints on it, so
+//!   *exactly* the model-derived cache drops. Appends alone leave the
+//!   hot-row cache untouched (staged rows are cut from factors, not
+//!   data) and training alone leaves the partition caches untouched —
+//!   each mutation invalidates what it dirtied and nothing else.
+//! * **Serving is the bitwise batch path.** [`Session::top_k`] /
+//!   [`Session::score`] go through [`serve::Scorer`](crate::serve::Scorer),
+//!   pinned bitwise against the pointwise
+//!   [`predict`](crate::model::TuckerModel::predict) oracle.
+
+use crate::algo::EpochStats;
+use crate::config::TrainConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::eval::rmse_mae_parallel;
+use crate::coordinator::trainer::{EpochRecord, TrainReport, Trainer};
+use crate::log_info;
+use crate::model::TuckerModel;
+use crate::parallel::EngineRebuilds;
+use crate::serve::{CacheCounters, Query, ScoredItem, Scorer};
+use crate::tensor::SparseTensor;
+use crate::util::error::Result;
+use crate::util::Rng;
+
+/// A live training/serving session. See the module docs for the
+/// invalidation contract.
+pub struct Session {
+    trainer: Trainer,
+    model: TuckerModel,
+    train: SparseTensor,
+    test: SparseTensor,
+    rng: Rng,
+    scorer: Scorer,
+    /// Monotone fingerprint of the factor state; bumped by every
+    /// [`train_epochs`](Session::train_epochs) call that ran ≥ 1 epoch.
+    model_revision: u64,
+    /// Total epochs run over the session's lifetime (continues across
+    /// appends — warm-start epochs see the true epoch index).
+    epochs_run: usize,
+}
+
+impl Session {
+    /// Build a session from a config and the initial train/test split.
+    /// `cache_capacity` bounds the serving hot-row cache (0 = uncached).
+    pub fn new(
+        cfg: &TrainConfig,
+        train: SparseTensor,
+        test: SparseTensor,
+        cache_capacity: usize,
+        rng: &mut Rng,
+    ) -> Result<Session> {
+        let dims = train.dims().to_vec();
+        let (trainer, model) = Trainer::from_config_for(cfg, &dims, Some(train.nnz()), rng)?;
+        Ok(Session {
+            trainer,
+            model,
+            train,
+            test,
+            rng: rng.fork(),
+            scorer: Scorer::new(cache_capacity),
+            model_revision: 1,
+            epochs_run: 0,
+        })
+    }
+
+    pub fn model(&self) -> &TuckerModel {
+        &self.model
+    }
+
+    pub fn train_tensor(&self) -> &SparseTensor {
+        &self.train
+    }
+
+    pub fn model_revision(&self) -> u64 {
+        self.model_revision
+    }
+
+    pub fn epochs_run(&self) -> usize {
+        self.epochs_run
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.trainer.engine.name()
+    }
+
+    pub fn cache_counters(&self) -> CacheCounters {
+        self.scorer.cache_counters()
+    }
+
+    /// Engine-side rebuild counters (partition/planner cache misses) —
+    /// the observable half of the append-invalidation contract. `None`
+    /// for engines without decision caches at this layer.
+    pub fn engine_rebuilds(&self) -> Option<EngineRebuilds> {
+        match &self.trainer.engine {
+            Engine::Parallel(p) => Some(p.rebuilds()),
+            _ => None,
+        }
+    }
+
+    pub fn set_verbose(&mut self, verbose: bool) {
+        self.trainer.opts.verbose = verbose;
+    }
+
+    /// Evaluate the live model on the held-out split: `(rmse, mae)`.
+    pub fn evaluate(&self) -> (f64, f64) {
+        rmse_mae_parallel(&self.model, &self.test, self.trainer.opts.eval_threads)
+    }
+
+    /// Append an arrival batch to the training tensor (checked,
+    /// all-or-nothing; dims must match). Runs at the session boundary —
+    /// never mid-epoch — so exact-mode training stays bitwise. The
+    /// tensor's content revision bumps, which is what invalidates the
+    /// engine's partition/planner caches on the next epoch; the serving
+    /// cache is deliberately *not* touched (the model didn't move).
+    pub fn append(&mut self, batch: &SparseTensor) -> Result<()> {
+        self.train.append_tensor(batch)
+    }
+
+    /// Run `epochs` more training epochs from the live factors (warm
+    /// start), evaluating per `eval_every`. Epoch numbering continues
+    /// from the session total. Bumps the model revision afterward so
+    /// the serving cache re-stages against the updated factors.
+    pub fn train_epochs(&mut self, epochs: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        let mut cum = EpochStats::default();
+        let start = self.epochs_run;
+        for k in 0..epochs {
+            let epoch = start + k;
+            let stats =
+                self.trainer
+                    .engine
+                    .train_epoch(&mut self.model, &self.train, epoch, &mut self.rng)?;
+            cum.merge(&stats);
+            if (k + 1) % self.trainer.opts.eval_every == 0 || k + 1 == epochs {
+                let (rmse, mae) =
+                    rmse_mae_parallel(&self.model, &self.test, self.trainer.opts.eval_threads);
+                report.history.push(EpochRecord {
+                    epoch: epoch + 1,
+                    rmse,
+                    mae,
+                    train_secs: cum.total_secs(),
+                    factor_secs: cum.factor_secs,
+                    core_secs: cum.core_secs,
+                });
+                if self.trainer.opts.verbose {
+                    log_info!(
+                        "session epoch {}: rmse={rmse:.5} mae={mae:.5} t={:.3}s ({})",
+                        epoch + 1,
+                        cum.total_secs(),
+                        self.trainer.engine.name()
+                    );
+                }
+            }
+        }
+        self.epochs_run += epochs;
+        if epochs > 0 {
+            self.model_revision += 1;
+        }
+        report.total_stats = cum;
+        Ok(report)
+    }
+
+    /// Batch-score one query's candidate panel (bitwise-equal to the
+    /// pointwise oracle).
+    pub fn score(&mut self, query: &Query) -> Vec<f32> {
+        self.scorer.score(&self.model, self.model_revision, query)
+    }
+
+    /// Rank one query's candidates: top-k by `(score desc, item asc)`.
+    pub fn top_k(&mut self, query: &Query, k: usize) -> Vec<ScoredItem> {
+        self.scorer.top_k(&self.model, self.model_revision, query, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, TrainConfig};
+    use crate::data::split::train_test_split;
+    use crate::data::stream::ArrivalSim;
+    use crate::data::synth::{planted_tucker, Planted, PlantedSpec};
+
+    fn spec() -> PlantedSpec {
+        PlantedSpec {
+            dims: vec![25, 25, 25],
+            nnz: 4000,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: None,
+        }
+    }
+
+    fn quick_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.j = 4;
+        cfg.r_core = 4;
+        cfg.hyper.lr_factor = crate::sched::LrSchedule::constant(0.02);
+        cfg.hyper.lr_core = crate::sched::LrSchedule::constant(0.01);
+        cfg
+    }
+
+    fn planted_session(seed: u64, cfg: &TrainConfig) -> (Session, Planted) {
+        let mut rng = Rng::new(seed);
+        let p = planted_tucker(&mut rng, &spec());
+        let (train, test) = train_test_split(&p.tensor, 0.1, &mut rng);
+        let mut s = Session::new(cfg, train, test, 32, &mut rng).unwrap();
+        s.set_verbose(false);
+        (s, p)
+    }
+
+    #[test]
+    fn session_trains_and_serves() {
+        let (mut s, _) = planted_session(1, &quick_cfg());
+        let (rmse0, _) = s.evaluate();
+        s.train_epochs(4).unwrap();
+        let (rmse1, _) = s.evaluate();
+        assert!(rmse1 < rmse0, "rmse {rmse0} -> {rmse1} did not descend");
+        assert_eq!(s.epochs_run(), 4);
+        let q = Query { coords: vec![3, 0, 7], candidate_mode: 1, candidates: (0..25).collect() };
+        let top = s.top_k(&q, 5);
+        assert_eq!(top.len(), 5);
+        // Bitwise against the pointwise oracle through the session API.
+        let scores = s.score(&q);
+        let mut full = q.coords.clone();
+        for (i, &c) in q.candidates.iter().enumerate() {
+            full[1] = c;
+            assert_eq!(scores[i].to_bits(), s.model().predict(&full).to_bits());
+        }
+    }
+
+    #[test]
+    fn training_invalidates_serving_cache_and_appends_do_not() {
+        let (mut s, p) = planted_session(2, &quick_cfg());
+        s.train_epochs(1).unwrap();
+        let q = Query { coords: vec![5, 0, 2], candidate_mode: 1, candidates: (0..25).collect() };
+        s.top_k(&q, 3);
+        s.top_k(&q, 3);
+        let c = s.cache_counters();
+        assert_eq!((c.hits, c.misses, c.invalidations), (1, 1, 0));
+
+        // Append: model untouched, staged rows stay valid.
+        let mut sim = ArrivalSim::from_planted(&p, &spec());
+        let mut rng = Rng::new(99);
+        let batch = sim.next_batch(&mut rng, 100);
+        let nnz0 = s.train_tensor().nnz();
+        s.append(&batch).unwrap();
+        assert_eq!(s.train_tensor().nnz(), nnz0 + 100);
+        s.top_k(&q, 3);
+        let c = s.cache_counters();
+        assert_eq!((c.hits, c.invalidations), (2, 0));
+
+        // Warm-start training: model moved, cache must drop.
+        s.train_epochs(1).unwrap();
+        s.top_k(&q, 3);
+        let c = s.cache_counters();
+        assert_eq!(c.invalidations, 1);
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn parallel_engine_rebuild_counters_track_appends() {
+        let mut cfg = quick_cfg();
+        cfg.engine = EngineKind::Parallel;
+        cfg.workers = 2;
+        let (mut s, p) = planted_session(3, &cfg);
+        s.train_epochs(2).unwrap();
+        let r0 = s.engine_rebuilds().unwrap();
+        // Two epochs over unchanged data: one partition build, reused.
+        assert_eq!(r0.partition, 1);
+        let mut sim = ArrivalSim::from_planted(&p, &spec());
+        let mut rng = Rng::new(42);
+        s.append(&sim.next_batch(&mut rng, 200)).unwrap();
+        s.train_epochs(1).unwrap();
+        let r1 = s.engine_rebuilds().unwrap();
+        assert_eq!(r1.partition, 2, "append must force exactly one partition rebuild");
+        // And no further rebuilds while the data stays put.
+        s.train_epochs(1).unwrap();
+        assert_eq!(s.engine_rebuilds().unwrap().partition, 2);
+    }
+}

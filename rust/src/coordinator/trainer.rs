@@ -151,10 +151,11 @@ impl Trainer {
                 Engine::Pjrt(engine)
             }
         };
+        // `validate()` already rejected zeros loudly — no silent clamps.
         let opts = TrainOptions {
             epochs: cfg.epochs,
-            eval_every: cfg.eval_every.max(1),
-            eval_threads: 4,
+            eval_every: cfg.eval_every,
+            eval_threads: cfg.eval_threads,
             verbose: true,
         };
         Ok((Trainer { engine, opts }, model))

@@ -9,6 +9,7 @@
 //! substitution preserves the evaluation's comparative claims.
 
 pub mod synth;
+pub mod stream;
 pub mod io;
 pub mod split;
 pub mod registry;

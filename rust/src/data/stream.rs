@@ -1,0 +1,149 @@
+//! Streaming COO ingest simulation: arrival batches drawn from the same
+//! planted ground truth as the base tensor.
+//!
+//! Real recommender logs grow between retraining runs; the serving
+//! session (ISSUE 9) models that as *arrival batches* appended to the
+//! training [`SparseTensor`](crate::tensor::SparseTensor) between
+//! epochs, at the session boundary. [`ArrivalSim`] holds a clone of a
+//! [`Planted`] generator's ground truth and draws fresh observations
+//! from it — same signal, same noise floor — so a warm-start epoch over
+//! the grown tensor has a recoverable target and the
+//! warm-start-beats-cold claim is measurable rather than assumed.
+//!
+//! Simplification, on purpose: clamped (ratings-style) arrivals clamp
+//! the raw planted signal without the empirical offset/gain recentering
+//! [`planted_tucker`](crate::data::synth::planted_tucker) applies to the
+//! base tensor — the recentering constants are private to the one-shot
+//! generator, and a mild distribution shift between the base data and
+//! arrivals is itself realistic. Unclamped arrivals are drawn from the
+//! identical distribution as the base tensor.
+
+use crate::data::synth::{predict_planted, Planted, PlantedSpec};
+use crate::kruskal::KruskalCore;
+use crate::model::factors::FactorMatrices;
+use crate::tensor::SparseTensor;
+use crate::util::Rng;
+
+/// Draws arrival batches from a planted ground truth.
+#[derive(Clone, Debug)]
+pub struct ArrivalSim {
+    dims: Vec<usize>,
+    truth_factors: FactorMatrices,
+    truth_core: KruskalCore,
+    noise: f32,
+    clamp: Option<(f32, f32)>,
+    /// Total nonzeros generated so far, across all batches.
+    generated: usize,
+}
+
+impl ArrivalSim {
+    /// Build a simulator over `planted`'s ground truth, reusing the
+    /// generator spec's noise level and clamp range.
+    pub fn from_planted(planted: &Planted, spec: &PlantedSpec) -> Self {
+        ArrivalSim {
+            dims: spec.dims.clone(),
+            truth_factors: planted.truth_factors.clone(),
+            truth_core: planted.truth_core.clone(),
+            noise: spec.noise,
+            clamp: spec.clamp,
+            generated: 0,
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total nonzeros produced so far.
+    pub fn generated(&self) -> usize {
+        self.generated
+    }
+
+    /// Draw one arrival batch of `nnz` fresh observations as its own
+    /// tensor (append it with
+    /// [`SparseTensor::append_tensor`](crate::tensor::SparseTensor::append_tensor)).
+    pub fn next_batch(&mut self, rng: &mut Rng, nnz: usize) -> SparseTensor {
+        let order = self.dims.len();
+        let mut indices = Vec::with_capacity(nnz * order);
+        let mut values = Vec::with_capacity(nnz);
+        let mut coords = vec![0u32; order];
+        for _ in 0..nnz {
+            for (n, &d) in self.dims.iter().enumerate() {
+                coords[n] = rng.gen_range(d) as u32;
+            }
+            let mut x = predict_planted(&self.truth_factors, &self.truth_core, &coords);
+            x += self.noise * rng.normal();
+            if let Some((lo, hi)) = self.clamp {
+                x = x.clamp(lo, hi);
+            }
+            indices.extend_from_slice(&coords);
+            values.push(x);
+        }
+        self.generated += nnz;
+        SparseTensor::new_unchecked(self.dims.clone(), indices, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::planted_tucker;
+
+    fn setup(noise: f32, clamp: Option<(f32, f32)>) -> (Planted, PlantedSpec, Rng) {
+        let spec = PlantedSpec {
+            dims: vec![15, 12, 10],
+            nnz: 200,
+            j: 4,
+            r_core: 3,
+            noise,
+            clamp,
+        };
+        let mut rng = Rng::new(11);
+        let p = planted_tucker(&mut rng, &spec);
+        (p, spec, rng)
+    }
+
+    #[test]
+    fn batches_have_requested_shape_and_track_totals() {
+        let (p, spec, mut rng) = setup(0.1, None);
+        let mut sim = ArrivalSim::from_planted(&p, &spec);
+        let a = sim.next_batch(&mut rng, 40);
+        let b = sim.next_batch(&mut rng, 25);
+        assert_eq!(a.nnz(), 40);
+        assert_eq!(b.nnz(), 25);
+        assert_eq!(a.dims(), p.tensor.dims());
+        assert_eq!(sim.generated(), 65);
+        assert!(a.values().iter().chain(b.values()).all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn noiseless_arrivals_match_truth() {
+        let (p, spec, mut rng) = setup(0.0, None);
+        let mut sim = ArrivalSim::from_planted(&p, &spec);
+        let batch = sim.next_batch(&mut rng, 50);
+        for k in 0..batch.nnz() {
+            let want = predict_planted(&p.truth_factors, &p.truth_core, batch.index(k));
+            assert!((batch.value(k) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clamped_arrivals_stay_in_range() {
+        let (p, spec, mut rng) = setup(2.0, Some((1.0, 5.0)));
+        let mut sim = ArrivalSim::from_planted(&p, &spec);
+        let batch = sim.next_batch(&mut rng, 100);
+        assert!(batch.values().iter().all(|v| (1.0..=5.0).contains(v)));
+    }
+
+    #[test]
+    fn appending_batches_grows_the_base_tensor() {
+        let (p, spec, mut rng) = setup(0.1, None);
+        let mut sim = ArrivalSim::from_planted(&p, &spec);
+        let mut train = p.tensor;
+        let rev0 = train.revision();
+        let batch = sim.next_batch(&mut rng, 30);
+        train.append_tensor(&batch).unwrap();
+        assert_eq!(train.nnz(), 230);
+        assert_ne!(train.revision(), rev0);
+    }
+}

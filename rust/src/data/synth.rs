@@ -130,20 +130,11 @@ pub fn planted_tucker(rng: &mut Rng, spec: &PlantedSpec) -> Planted {
 }
 
 /// Ground-truth prediction for one coordinate (linear Thm-1 path).
-pub fn predict_planted(factors: &FactorMatrices, core: &KruskalCore, coords: &[u32]) -> f32 {
-    let r_core = core.rank();
-    let mut acc = 0.0f32;
-    for r in 0..r_core {
-        let mut prod = 1.0f32;
-        for n in 0..factors.order() {
-            let a_row = factors.row(n, coords[n] as usize);
-            let b_row = core.row(n, r);
-            prod *= crate::util::linalg::dot(a_row, b_row);
-        }
-        acc += prod;
-    }
-    acc
-}
+///
+/// Compat re-export: the oracle now lives in [`crate::kruskal::predict`]
+/// (the generator *calls* the model layer, never the reverse — ISSUE 9
+/// layering fix); historical imports keep working through this alias.
+pub use crate::kruskal::predict::predict_one as predict_planted;
 
 #[cfg(test)]
 mod tests {

@@ -3,6 +3,7 @@
 
 pub mod core;
 pub mod dense_core;
+pub mod predict;
 pub mod reconstruct;
 
 pub use core::KruskalCore;

@@ -1,0 +1,311 @@
+//! Prediction over the Kruskal-factored model — the one oracle-pinned
+//! path every layer scores through (ISSUE 9 tentpole, move 1).
+//!
+//! Three tiers, each bitwise-identical to the one below it:
+//!
+//! * [`predict_one`] — the pointwise oracle (Eq. 9 / Theorem 1):
+//!   `x̂ = Σ_r Π_n (a^(n)_{i_n} · b^(n)_r)`, every dot through
+//!   [`crate::util::linalg::dot`]. This is the function that *defines*
+//!   the model's value at a coordinate; the planted-data generator, the
+//!   evaluators, and the dense reconstruction oracle all call it.
+//! * [`predict`] — the [`CoreRepr`] dispatch (Kruskal fast path / dense
+//!   baseline core), deduplicating the match that was hand-copied into
+//!   `model/mod.rs`, `coordinator/eval.rs`, and `kruskal/reconstruct.rs`.
+//! * [`StagedQuery`] + [`score_panel`] — the batched serving scorer: a
+//!   user's fixed coordinates are staged **once** (per-rank prefix
+//!   products over the modes before the candidate mode, plus the
+//!   individual suffix dots after it), then a whole candidate panel is
+//!   scored at `O(R·J)` per candidate instead of `O(N·R·J)`, with the
+//!   candidate-mode dots computed in lane blocks of four ranks
+//!   ([`candidate_dot_panel`], the `kernel/panel.rs` shape over the
+//!   core's transposed `R_core × J` factor).
+//!
+//! # Why the panel scorer is bitwise against the pointwise oracle
+//!
+//! f32 addition and multiplication are deterministic; only *association*
+//! can diverge. [`predict_one`] evaluates, for each rank `r`,
+//! `((1.0 · d_0) · d_1) ⋯ · d_{N-1}` and accumulates ranks sequentially.
+//! [`stage_query`] computes `pre[r] = ((1.0 · d_0) ⋯) · d_{m-1}` with the
+//! same left fold and stores each suffix dot `d_n` (`n > m`) unreduced;
+//! [`score_panel`] continues the fold `((pre[r] · d_m) · d_{m+1}) ⋯` in
+//! mode order and accumulates ranks in the same sequence. Every `d_n` is
+//! produced by `dot`'s own association (the lane-blocked panel keeps four
+//! partial sums per rank and reduces `(acc0 + acc1) + (acc2 + acc3) +
+//! tail`, exactly `dot`), so every intermediate is bit-equal and the
+//! final scores match `predict_one` bitwise — property-pinned below over
+//! layouts, orders, and candidate counts.
+
+use crate::kruskal::KruskalCore;
+use crate::model::factors::FactorMatrices;
+use crate::model::CoreRepr;
+use crate::util::linalg::dot;
+
+/// Pointwise prediction for one coordinate through the Kruskal core
+/// (Eq. 9, the linear Theorem-1 path). The crate's prediction oracle.
+pub fn predict_one(factors: &FactorMatrices, core: &KruskalCore, coords: &[u32]) -> f32 {
+    let r_core = core.rank();
+    let mut acc = 0.0f32;
+    for r in 0..r_core {
+        let mut prod = 1.0f32;
+        for n in 0..factors.order() {
+            let a_row = factors.row(n, coords[n] as usize);
+            let b_row = core.row(n, r);
+            prod *= dot(a_row, b_row);
+        }
+        acc += prod;
+    }
+    acc
+}
+
+/// Predict one entry through whichever core representation is held —
+/// the single Kruskal/Dense dispatch (formerly triplicated).
+pub fn predict(factors: &FactorMatrices, core: &CoreRepr, coords: &[u32]) -> f32 {
+    match core {
+        CoreRepr::Kruskal(k) => predict_one(factors, k, coords),
+        CoreRepr::Dense(d) => d.predict(factors, coords),
+    }
+}
+
+/// A staged serving query: the per-rank state of [`predict_one`]'s fold
+/// with one mode (the candidate mode) left open. Built once per user,
+/// reused for every candidate — and cached across requests by
+/// [`crate::serve::HotRowCache`].
+#[derive(Clone, Debug)]
+pub struct StagedQuery {
+    /// The open (candidate) mode `m`.
+    mode: usize,
+    /// `pre[r] = ((1.0 · d_0) · d_1) ⋯ · d_{m-1}` — the oracle's fold up
+    /// to the candidate mode.
+    pre: Vec<f32>,
+    /// Suffix dots `d_n` for `n > m`, unreduced (rank-major:
+    /// `suf[r * n_suf + (n - m - 1)]`); multiplied into the fold in mode
+    /// order per candidate.
+    suf: Vec<f32>,
+    n_suf: usize,
+}
+
+impl StagedQuery {
+    pub fn mode(&self) -> usize {
+        self.mode
+    }
+
+    /// Bytes held (cache accounting).
+    pub fn footprint_bytes(&self) -> usize {
+        (self.pre.len() + self.suf.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Stage a user's fixed coordinates, leaving `mode` open for candidates.
+/// `coords[mode]` is ignored. Cost: one `O(N·R·J)` pass — the same work
+/// [`predict_one`] would spend on a *single* candidate.
+pub fn stage_query(
+    factors: &FactorMatrices,
+    core: &KruskalCore,
+    coords: &[u32],
+    mode: usize,
+) -> StagedQuery {
+    let order = factors.order();
+    assert!(mode < order, "candidate mode {mode} out of range for order {order}");
+    let r_core = core.rank();
+    let n_suf = order - mode - 1;
+    let mut pre = Vec::with_capacity(r_core);
+    let mut suf = vec![0.0f32; r_core * n_suf];
+    for r in 0..r_core {
+        let mut prod = 1.0f32;
+        for n in 0..mode {
+            prod *= dot(factors.row(n, coords[n] as usize), core.row(n, r));
+        }
+        pre.push(prod);
+        for n in mode + 1..order {
+            suf[r * n_suf + (n - mode - 1)] =
+                dot(factors.row(n, coords[n] as usize), core.row(n, r));
+        }
+    }
+    StagedQuery { mode, pre, suf, n_suf }
+}
+
+/// Candidate-mode dot panel: `out[r] = a · b^(m)_r` for every rank, in
+/// lane blocks of four ranks over the core factor's contiguous
+/// `R_core × J` rows (the `kernel/panel.rs` block shape). Each rank's
+/// reduction keeps `dot`'s exact association — four partial sums over
+/// `j`-quads, reduced `(p0 + p1) + (p2 + p3) + tail` — so the panel is
+/// bitwise-identical to calling [`dot`] per rank.
+fn candidate_dot_panel(core: &KruskalCore, mode: usize, a_row: &[f32], out: &mut [f32]) {
+    let r_core = core.rank();
+    let j = core.j(mode);
+    debug_assert_eq!(out.len(), r_core);
+    debug_assert_eq!(a_row.len(), j);
+    let bm = core.factor(mode).data();
+    let quads = j / 4;
+    let mut r = 0;
+    while r + 4 <= r_core {
+        // Four ranks per block, four partial lanes per rank.
+        let mut acc = [[0.0f32; 4]; 4];
+        for q in 0..quads {
+            let base = q * 4;
+            for (w, accw) in acc.iter_mut().enumerate() {
+                let b_row = &bm[(r + w) * j + base..(r + w) * j + base + 4];
+                accw[0] += a_row[base] * b_row[0];
+                accw[1] += a_row[base + 1] * b_row[1];
+                accw[2] += a_row[base + 2] * b_row[2];
+                accw[3] += a_row[base + 3] * b_row[3];
+            }
+        }
+        for (w, accw) in acc.iter().enumerate() {
+            let mut tail = 0.0f32;
+            for i in quads * 4..j {
+                tail += a_row[i] * bm[(r + w) * j + i];
+            }
+            out[r + w] = (accw[0] + accw[1]) + (accw[2] + accw[3]) + tail;
+        }
+        r += 4;
+    }
+    // Rank tail: plain `dot` (the same association by definition).
+    for w in r..r_core {
+        out[w] = dot(a_row, core.row(mode, w));
+    }
+}
+
+/// Score one candidate against a staged query. Bitwise-identical to
+/// [`predict_one`] with the candidate substituted into the open mode.
+pub fn score_one(
+    staged: &StagedQuery,
+    factors: &FactorMatrices,
+    core: &KruskalCore,
+    candidate: u32,
+) -> f32 {
+    let a_row = factors.row(staged.mode, candidate as usize);
+    let r_core = core.rank();
+    let mut acc = 0.0f32;
+    for r in 0..r_core {
+        let mut prod = staged.pre[r] * dot(a_row, core.row(staged.mode, r));
+        for i in 0..staged.n_suf {
+            prod *= staged.suf[r * staged.n_suf + i];
+        }
+        acc += prod;
+    }
+    acc
+}
+
+/// Score a whole candidate panel against a staged query, writing
+/// `out[s] = x̂(coords with candidates[s])`. The hot serving loop: the
+/// candidate-mode dots come from the lane-blocked
+/// [`candidate_dot_panel`]; the fold and rank accumulation replay
+/// [`predict_one`]'s association, so every score is bitwise-identical to
+/// the pointwise oracle.
+pub fn score_panel(
+    staged: &StagedQuery,
+    factors: &FactorMatrices,
+    core: &KruskalCore,
+    candidates: &[u32],
+    out: &mut Vec<f32>,
+) {
+    let r_core = core.rank();
+    out.clear();
+    out.reserve(candidates.len());
+    let mut dots = vec![0.0f32; r_core];
+    for &c in candidates {
+        let a_row = factors.row(staged.mode, c as usize);
+        candidate_dot_panel(core, staged.mode, a_row, &mut dots);
+        let mut acc = 0.0f32;
+        for r in 0..r_core {
+            let mut prod = staged.pre[r] * dots[r];
+            for i in 0..staged.n_suf {
+                prod *= staged.suf[r * staged.n_suf + i];
+            }
+            acc += prod;
+        }
+        out.push(acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TuckerModel;
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    fn kruskal_parts(model: &TuckerModel) -> &KruskalCore {
+        match &model.core {
+            CoreRepr::Kruskal(k) => k,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn predict_dispatches_both_reprs() {
+        let mut rng = Rng::new(1);
+        let m = TuckerModel::init_kruskal(&mut rng, &[8, 9, 10], 4, 4);
+        let k = kruskal_parts(&m).clone();
+        let dense = k.to_dense();
+        let md = TuckerModel { factors: m.factors.clone(), core: CoreRepr::Dense(dense) };
+        let coords = [3u32, 4, 5];
+        let a = predict(&m.factors, &m.core, &coords);
+        let b = predict(&md.factors, &md.core, &coords);
+        assert!((a - b).abs() < 1e-4);
+        assert_eq!(a.to_bits(), predict_one(&m.factors, kruskal_parts(&m), &coords).to_bits());
+    }
+
+    #[test]
+    fn score_one_is_bitwise_predict_one() {
+        let mut rng = Rng::new(2);
+        let m = TuckerModel::init_kruskal(&mut rng, &[12, 30, 9], 8, 8);
+        let core = kruskal_parts(&m);
+        let staged = stage_query(&m.factors, core, &[5, 0, 7], 1);
+        for c in 0..30u32 {
+            let want = predict_one(&m.factors, core, &[5, c, 7]);
+            let got = score_one(&staged, &m.factors, core, c);
+            assert_eq!(got.to_bits(), want.to_bits(), "candidate {c}");
+        }
+    }
+
+    #[test]
+    fn prop_panel_scorer_bitwise_over_layouts() {
+        // The acceptance pin: panel scores == pointwise oracle, bit for
+        // bit, over random orders, mode sizes, J / R_core (hitting both
+        // the 4-rank lane blocks and the rank/quad tails), candidate
+        // modes, and candidate counts (with repeats).
+        forall("batch panel scorer bitwise vs predict_one", 40, |rng| {
+            let order = 2 + rng.gen_range(4); // 2..=5
+            let dims: Vec<usize> = (0..order).map(|_| 3 + rng.gen_range(20)).collect();
+            let j = 1 + rng.gen_range(12); // exercises quad tails
+            let r_core = 1 + rng.gen_range(11); // exercises rank tails
+            let mut r2 = Rng::new(rng.next_u64());
+            let model = TuckerModel::init_kruskal(&mut r2, &dims, j, r_core);
+            let core = kruskal_parts(&model);
+            let mode = rng.gen_range(order);
+            let coords: Vec<u32> = dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+            let n_cand = 1 + rng.gen_range(2 * dims[mode]); // duplicates allowed
+            let candidates: Vec<u32> =
+                (0..n_cand).map(|_| rng.gen_range(dims[mode]) as u32).collect();
+
+            let staged = stage_query(&model.factors, core, &coords, mode);
+            let mut scores = Vec::new();
+            score_panel(&staged, &model.factors, core, &candidates, &mut scores);
+            assert_eq!(scores.len(), candidates.len());
+            let mut full = coords.clone();
+            for (s, &c) in candidates.iter().enumerate() {
+                full[mode] = c;
+                let want = predict_one(&model.factors, core, &full);
+                assert_eq!(
+                    scores[s].to_bits(),
+                    want.to_bits(),
+                    "order {order} dims {dims:?} j {j} r {r_core} mode {mode} cand {c}"
+                );
+                let one = score_one(&staged, &model.factors, core, c);
+                assert_eq!(one.to_bits(), want.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn staged_footprint_is_small() {
+        let mut rng = Rng::new(3);
+        let m = TuckerModel::init_kruskal(&mut rng, &[10, 10, 10], 4, 6);
+        let staged = stage_query(&m.factors, kruskal_parts(&m), &[1, 0, 2], 1);
+        // pre: R floats; suf: R * (order - mode - 1) floats.
+        assert_eq!(staged.footprint_bytes(), (6 + 6) * 4);
+        assert_eq!(staged.mode(), 1);
+    }
+}

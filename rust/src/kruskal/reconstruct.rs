@@ -3,7 +3,7 @@
 
 use crate::kruskal::KruskalCore;
 use crate::model::factors::FactorMatrices;
-use crate::model::{CoreRepr, TuckerModel};
+use crate::model::TuckerModel;
 use crate::tensor::{indexing, DenseTensor, SparseTensor};
 
 /// Reconstruct the entire dense tensor `X̂ = G ×_1 A^(1) … ×_N A^(N)`
@@ -15,7 +15,7 @@ pub fn reconstruct_dense(factors: &FactorMatrices, core: &KruskalCore) -> DenseT
     let len = out.len();
     for idx in 0..len {
         indexing::dense_coords(idx, &dims, &mut coords);
-        out.data_mut()[idx] = crate::data::synth::predict_planted(factors, core, &coords);
+        out.data_mut()[idx] = crate::kruskal::predict::predict_one(factors, core, &coords);
     }
     out
 }
@@ -51,23 +51,11 @@ pub fn rmse_mae(model: &TuckerModel, test: &SparseTensor) -> (f64, f64) {
         return (0.0, 0.0);
     }
     let (mut se, mut ae) = (0.0f64, 0.0f64);
-    match &model.core {
-        // Fast path: Kruskal prediction is linear-cost.
-        CoreRepr::Kruskal(core) => {
-            for (coords, v) in test.iter() {
-                let e = (crate::data::synth::predict_planted(&model.factors, core, coords)
-                    - v) as f64;
-                se += e * e;
-                ae += e.abs();
-            }
-        }
-        CoreRepr::Dense(core) => {
-            for (coords, v) in test.iter() {
-                let e = (core.predict(&model.factors, coords) - v) as f64;
-                se += e * e;
-                ae += e.abs();
-            }
-        }
+    for (coords, v) in test.iter() {
+        let e = (crate::kruskal::predict::predict(&model.factors, &model.core, coords) - v)
+            as f64;
+        se += e * e;
+        ae += e.abs();
     }
     let n = test.nnz() as f64;
     ((se / n).sqrt(), ae / n)
@@ -76,6 +64,7 @@ pub fn rmse_mae(model: &TuckerModel, test: &SparseTensor) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::CoreRepr;
     use crate::util::Rng;
 
     #[test]

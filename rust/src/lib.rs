@@ -41,6 +41,7 @@ pub mod metrics;
 pub mod config;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod cli;
 pub mod bench_support;
 

@@ -9,6 +9,9 @@
 //!                   [--devices auto|D] [--transport auto|direct|channel]
 //!                   [--prefetch auto|off|async] [--staleness N]
 //!                   [--checkpoint OUT.ftck]
+//! fasttucker serve  [train flags] [--serve-batches N] [--serve-batch-nnz N]
+//!                   [--warm-epochs N] [--queries N] [--candidates N]
+//!                   [--topk K] [--cache-capacity N]
 //! fasttucker eval   MODEL.ftck --dataset NAME [--seed S]
 //! fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
 //! fasttucker partition-plan --workers M --order N
@@ -20,9 +23,12 @@ use fasttucker::util::error::{anyhow, bail, Context, Result};
 
 use fasttucker::cli::Args;
 use fasttucker::config::{AlgoKind, EngineKind, TrainConfig};
-use fasttucker::coordinator::Trainer;
+use fasttucker::coordinator::{Session, Trainer};
+use fasttucker::data::stream::ArrivalSim;
+use fasttucker::data::synth::planted_tucker;
 use fasttucker::data::{split::train_test_split, Dataset};
 use fasttucker::parallel::LatinSchedule;
+use fasttucker::serve::Query;
 use fasttucker::util::Rng;
 
 fn main() {
@@ -35,6 +41,7 @@ fn main() {
     };
     let result = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "gen-data" => cmd_gen_data(&args),
         "partition-plan" => cmd_partition_plan(&args),
@@ -64,6 +71,12 @@ USAGE:
                     [--lanes auto|4|8] [--split N] [--threads auto|N]
                     [--devices auto|D] [--transport auto|direct|channel]
                     [--prefetch auto|off|async] [--staleness N]
+                    [--eval-every N] [--eval-threads N]
+  fasttucker serve  [train flags] [--serve-batches N] [--serve-batch-nnz N]
+                    [--warm-epochs N] [--queries N] [--candidates N]
+                    [--topk K] [--cache-capacity N]
+                    (train, then loop: serve top-k / append arrivals /
+                     warm-start retrain — planted datasets only)
   fasttucker eval   MODEL.ftck --dataset NAME [--seed S] [--scale F]
   fasttucker gen-data --dataset NAME --out FILE.tns [--scale F] [--seed S]
   fasttucker partition-plan --workers M --order N
@@ -146,6 +159,12 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get_usize("staleness")? {
         cfg.staleness = v;
     }
+    if let Some(v) = args.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = args.get_usize("eval-threads")? {
+        cfg.eval_threads = v;
+    }
     if args.has_flag("no-core") {
         cfg.hyper.update_core = false;
     }
@@ -209,6 +228,133 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("checkpoint written to {path}");
     }
     Ok(())
+}
+
+/// The streaming serving loop: train, then alternate top-k serving,
+/// arrival-batch appends, and warm-start retraining in one long-lived
+/// [`Session`]. Planted datasets only — the arrival stream draws from
+/// the same ground truth the base tensor was generated from.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    apply_overrides(&mut cfg, args)?;
+    let serve_batches = args.get_usize("serve-batches")?.unwrap_or(2);
+    let batch_nnz = args.get_usize("serve-batch-nnz")?.unwrap_or(500);
+    let warm_epochs = args.get_usize("warm-epochs")?.unwrap_or(2);
+    let queries = args.get_usize("queries")?.unwrap_or(64);
+    let candidates = args.get_usize("candidates")?.unwrap_or(100);
+    let topk = args.get_usize("topk")?.unwrap_or(10);
+    let cache_capacity = args.get_usize("cache-capacity")?.unwrap_or(256);
+
+    let mut rng = Rng::new(cfg.seed);
+    let spec = match Dataset::by_name(&cfg.dataset, cfg.scale)? {
+        Dataset::Planted(spec) => spec,
+        _ => bail!(
+            "serve needs a planted dataset (its ground truth drives the arrival \
+             stream); pick tiny/small/netflix-like/yahoo-like/amazon-like"
+        ),
+    };
+    let planted = planted_tucker(&mut rng, &spec);
+    let (train, test) = train_test_split(&planted.tensor, cfg.test_frac, &mut rng);
+    println!(
+        "dataset={} dims={:?} train nnz={} test nnz={}",
+        cfg.dataset,
+        spec.dims,
+        train.nnz(),
+        test.nnz()
+    );
+    let mut sim = ArrivalSim::from_planted(&planted, &spec);
+    let mut session = Session::new(&cfg, train, test, cache_capacity, &mut rng)?;
+    println!(
+        "engine={} algo={} J={} R_core={} cache_capacity={cache_capacity}",
+        session.engine_name(),
+        cfg.algo.name(),
+        cfg.j,
+        cfg.r_core
+    );
+
+    let report = session.train_epochs(cfg.epochs)?;
+    println!(
+        "initial train: {} epochs, rmse={:.6}, {:.3}s",
+        cfg.epochs,
+        report.final_rmse(),
+        report.total_train_secs()
+    );
+
+    let mut qrng = rng.fork();
+    serve_round(&mut session, &mut qrng, &spec.dims, queries, candidates, topk, 0);
+    for b in 0..serve_batches {
+        let batch = sim.next_batch(&mut rng, batch_nnz);
+        session.append(&batch)?;
+        let report = session.train_epochs(warm_epochs)?;
+        println!(
+            "append #{}: +{} nnz (total {}), warm-start {} epochs -> rmse={:.6}",
+            b + 1,
+            batch_nnz,
+            session.train_tensor().nnz(),
+            warm_epochs,
+            report.final_rmse()
+        );
+        serve_round(&mut session, &mut qrng, &spec.dims, queries, candidates, topk, b + 1);
+    }
+
+    let c = session.cache_counters();
+    println!(
+        "cache: hits={} misses={} evictions={} invalidations={} hit_rate={:.3}",
+        c.hits, c.misses, c.evictions, c.invalidations, c.hit_rate()
+    );
+    if let Some(r) = session.engine_rebuilds() {
+        println!(
+            "engine rebuilds: partition={} planner={}",
+            r.partition, r.planner
+        );
+    }
+    Ok(())
+}
+
+/// One serving round: `queries` top-k requests over random candidate
+/// panels, drawing users from a small pool so the hot-row cache sees
+/// repeats. Prints predictions/sec for the round.
+fn serve_round(
+    session: &mut Session,
+    rng: &mut Rng,
+    dims: &[usize],
+    queries: usize,
+    candidates: usize,
+    k: usize,
+    round: usize,
+) {
+    let mode = if dims.len() > 1 { 1 } else { 0 };
+    let pool = (queries / 4).max(1);
+    let users: Vec<Vec<u32>> = (0..pool)
+        .map(|_| dims.iter().map(|&d| rng.gen_range(d) as u32).collect())
+        .collect();
+    let start = std::time::Instant::now();
+    let mut checksum = 0u64;
+    for i in 0..queries {
+        let cands: Vec<u32> = (0..candidates)
+            .map(|_| rng.gen_range(dims[mode]) as u32)
+            .collect();
+        let q = Query {
+            coords: users[i % pool].clone(),
+            candidate_mode: mode,
+            candidates: cands,
+        };
+        let top = session.top_k(&q, k);
+        // Fold the results so the serving work cannot be optimized away.
+        for s in &top {
+            checksum = checksum.wrapping_add(u64::from(s.item)) ^ u64::from(s.score.to_bits());
+        }
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    let preds = (queries * candidates) as f64;
+    println!(
+        "serve round {round}: {queries} queries x {candidates} candidates -> \
+         {:.0} predictions/sec (checksum {checksum:#x})",
+        preds / secs
+    );
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

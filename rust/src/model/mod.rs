@@ -50,14 +50,10 @@ impl TuckerModel {
         self.factors.rank()
     }
 
-    /// Predict one entry through whichever core representation is held.
+    /// Predict one entry through whichever core representation is held
+    /// (the [`crate::kruskal::predict`] dispatch — one oracle path).
     pub fn predict(&self, coords: &[u32]) -> f32 {
-        match &self.core {
-            CoreRepr::Kruskal(core) => {
-                crate::data::synth::predict_planted(&self.factors, core, coords)
-            }
-            CoreRepr::Dense(core) => core.predict(&self.factors, coords),
-        }
+        crate::kruskal::predict::predict(&self.factors, &self.core, coords)
     }
 
     /// Parameter count (the paper's space-overhead comparison).

@@ -92,4 +92,4 @@ pub use transport::{
     ExchangeEvent, FaultKind, FaultKinds, FaultPlan, InProcTransport, KillSpec, PanelKind,
     PanelSpec, PrefetchMode, Transport, TransportError, TransportKind, TransportStats,
 };
-pub use worker::{Execution, ParallelFastTucker, ParallelOptions};
+pub use worker::{EngineRebuilds, Execution, ParallelFastTucker, ParallelOptions};

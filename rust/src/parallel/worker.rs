@@ -182,11 +182,13 @@ impl Default for ParallelOptions {
 pub struct ParallelFastTucker {
     pub opts: ParallelOptions,
     partition: Option<BlockPartition>,
-    /// `(nnz, dims, workers, devices)` — dims included so a same-sized
-    /// tensor with a different shape rebuilds the partition AND the grid
-    /// (a stale grid's `owned_rows` would mis-slice the per-device
-    /// stats, or panic on a shrunken mode 0).
-    partition_for: Option<(usize, Vec<usize>, usize, DeviceCount)>,
+    /// `(revision, nnz, dims, workers, devices)` — dims included so a
+    /// same-sized tensor with a different shape rebuilds the partition
+    /// AND the grid (a stale grid's `owned_rows` would mis-slice the
+    /// per-device stats, or panic on a shrunken mode 0); the content
+    /// revision (ISSUE 9) so a long-lived engine fed appended or swapped
+    /// nonzeros — even at identical `(nnz, dims)` — re-derives both.
+    partition_for: Option<(u64, usize, Vec<usize>, usize, DeviceCount)>,
     /// The device-shard grid the workers are grouped onto (rebuilt with
     /// the partition; `D = 1 ..= workers`).
     grid: Option<DeviceGrid>,
@@ -207,14 +209,16 @@ pub struct ParallelFastTucker {
     /// serves the empty-shard degrade check and every device's planner
     /// stats (each shard is a contiguous slice of it).
     mode0_counts: Vec<u32>,
-    /// Fingerprint the decisions were made for: `(nnz, dims, sample
-    /// count, r_core, j, sizing, exactness, lanes, split, workers,
+    /// Fingerprint the decisions were made for: `(revision, nnz, dims,
+    /// sample count, r_core, j, sizing, exactness, lanes, split, workers,
     /// devices)` — every input the cost model reads (dims + workers +
-    /// devices pin the shard geometry `owned_rows` slices by), so the
-    /// per-device resolution runs once per dataset/config, not once per
-    /// epoch.
+    /// devices pin the shard geometry `owned_rows` slices by, the
+    /// revision pins the fiber statistics to the exact nonzero content),
+    /// so the per-device resolution runs once per dataset/config, not
+    /// once per epoch.
     #[allow(clippy::type_complexity)]
     device_params_for: Option<(
+        u64,
         usize,
         Vec<usize>,
         usize,
@@ -245,6 +249,24 @@ pub struct ParallelFastTucker {
     /// Plan observability accumulated across epochs (one record per
     /// worker pass; device occupancy and inter-device comm per epoch).
     pub plan_accum: PlanAccum,
+    /// Cache-invalidation observability (ISSUE 9): how many times each
+    /// fingerprint-guarded state block was (re)derived over this engine's
+    /// lifetime. A long-lived session asserts on these to prove an append
+    /// dropped exactly the touched state — and that epochs on unchanged
+    /// data dropped nothing.
+    rebuilds: EngineRebuilds,
+}
+
+/// Rebuild counters for the fingerprint-guarded engine state (PlanAccum
+/// style: plain monotone `u64`s, snapshot by value).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineRebuilds {
+    /// Partition + device grid + exchanger rebuilds (the
+    /// `(revision, nnz, dims, workers, devices)` fingerprint missed).
+    pub partition: u64,
+    /// Per-device planner re-decisions (the full cost-model fingerprint
+    /// missed).
+    pub planner: u64,
 }
 
 impl ParallelFastTucker {
@@ -265,7 +287,14 @@ impl ParallelFastTucker {
             device_params_for: None,
             ledger: CommLedger::new(),
             plan_accum: PlanAccum::new(),
+            rebuilds: EngineRebuilds::default(),
         }
+    }
+
+    /// Lifetime rebuild counters of the fingerprint-guarded state (see
+    /// [`EngineRebuilds`]).
+    pub fn rebuilds(&self) -> EngineRebuilds {
+        self.rebuilds
     }
 
     fn ensure_state(
@@ -275,8 +304,15 @@ impl ParallelFastTucker {
         r_core: usize,
         j: usize,
     ) -> AlgoResult<()> {
-        let fp = (train.nnz(), train.dims().to_vec(), self.opts.workers, self.opts.devices);
+        let fp = (
+            train.revision(),
+            train.nnz(),
+            train.dims().to_vec(),
+            self.opts.workers,
+            self.opts.devices,
+        );
         if self.partition_for.as_ref() != Some(&fp) {
+            self.rebuilds.partition += 1;
             // Checked build: an overflowing M^N block space surfaces as a
             // typed error before any allocation (ISSUE 4 satellite; the
             // grid constructor carries the same guard).
@@ -394,6 +430,7 @@ impl ParallelFastTucker {
             .round()
             .max(1.0) as usize;
         let params_fp = (
+            train.revision(),
             train.nnz(),
             train.dims().to_vec(),
             m,
@@ -407,6 +444,7 @@ impl ParallelFastTucker {
             grid.devices(),
         );
         if self.device_params_for.as_ref() != Some(&params_fp) {
+            self.rebuilds.planner += 1;
             self.device_params = match self.opts.batch {
                 BatchSizing::Fixed(_) => {
                     let p = self

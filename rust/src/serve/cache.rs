@@ -1,0 +1,243 @@
+//! Hot-row cache for the serving path: staged query contexts
+//! ([`StagedQuery`]) keyed by the user's fixed coordinates and
+//! fingerprinted by the model revision — the same key-plus-fingerprint
+//! discipline the planner caches use for their decisions (`worker.rs`
+//! `partition_for` / `device_params_for`, `algo/fasttucker.rs`
+//! `auto_cache`): a lookup can *miss* and rebuild, it can never return
+//! state derived from a different model.
+//!
+//! Counters follow the [`crate::metrics::PlanAccum`] style: plain
+//! monotone `u64`s snapshot by value, merged nowhere, asserted on by
+//! tests and printed by the `serve` subcommand and `bench_serving`.
+
+use std::collections::HashMap;
+
+use crate::kruskal::predict::StagedQuery;
+
+/// Monotone counters of cache behavior over the cache's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Lookups answered from a live staged entry.
+    pub hits: u64,
+    /// Lookups that had to stage (absent key, or capacity 0).
+    pub misses: u64,
+    /// Entries dropped to make room (capacity pressure, LRU order).
+    pub evictions: u64,
+    /// Whole-cache drops because the model fingerprint moved (training
+    /// updated the factors) — the streaming warm-start invalidation.
+    pub invalidations: u64,
+}
+
+impl CacheCounters {
+    /// Hit fraction of all lookups (0 when the cache was never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A cache key: the candidate mode plus the user's fixed coordinates
+/// (the open slot excluded, so two queries differing only in the ignored
+/// candidate coordinate share an entry).
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct QueryKey {
+    mode: usize,
+    fixed: Vec<u32>,
+}
+
+impl QueryKey {
+    fn new(coords: &[u32], mode: usize) -> QueryKey {
+        let fixed = coords
+            .iter()
+            .enumerate()
+            .filter_map(|(n, &c)| (n != mode).then_some(c))
+            .collect();
+        QueryKey { mode, fixed }
+    }
+}
+
+/// LRU cache of staged query contexts, fingerprinted by model revision.
+#[derive(Debug)]
+pub struct HotRowCache {
+    /// Max live entries; 0 disables caching (every lookup misses).
+    capacity: usize,
+    /// The model revision the live entries were staged from. `None`
+    /// until the first insert after construction or invalidation.
+    staged_for: Option<u64>,
+    entries: HashMap<QueryKey, (u64, StagedQuery)>,
+    /// LRU clock: bumped per lookup, stored per entry on hit/insert.
+    tick: u64,
+    counters: CacheCounters,
+}
+
+impl HotRowCache {
+    pub fn new(capacity: usize) -> Self {
+        HotRowCache {
+            capacity,
+            staged_for: None,
+            entries: HashMap::new(),
+            tick: 0,
+            counters: CacheCounters::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    /// Look up the staged context for `(coords, mode)` under
+    /// `model_revision`, staging through `stage` on a miss. A revision
+    /// mismatch drops every entry first (counted once per transition) —
+    /// the model moved, so nothing staged from it may be served.
+    pub fn get_or_stage<F>(
+        &mut self,
+        coords: &[u32],
+        mode: usize,
+        model_revision: u64,
+        stage: F,
+    ) -> StagedQuery
+    where
+        F: FnOnce() -> StagedQuery,
+    {
+        if self.staged_for.is_some_and(|rev| rev != model_revision) && !self.entries.is_empty()
+        {
+            self.entries.clear();
+            self.counters.invalidations += 1;
+        }
+        self.staged_for = Some(model_revision);
+        self.tick += 1;
+        if self.capacity == 0 {
+            self.counters.misses += 1;
+            return stage();
+        }
+        let key = QueryKey::new(coords, mode);
+        if let Some((tick, staged)) = self.entries.get_mut(&key) {
+            *tick = self.tick;
+            self.counters.hits += 1;
+            return staged.clone();
+        }
+        self.counters.misses += 1;
+        let staged = stage();
+        if self.entries.len() >= self.capacity {
+            // Evict the least-recently-used entry (O(len) scan: serving
+            // caches are small and the scan is branch-predictable; a heap
+            // would pay its overhead on every hit instead).
+            if let Some(oldest) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&oldest);
+                self.counters.evictions += 1;
+            }
+        }
+        self.entries.insert(key, (self.tick, staged.clone()));
+        staged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kruskal::predict::stage_query;
+    use crate::model::{CoreRepr, TuckerModel};
+    use crate::util::Rng;
+
+    fn model() -> TuckerModel {
+        let mut rng = Rng::new(1);
+        TuckerModel::init_kruskal(&mut rng, &[10, 12, 8], 4, 4)
+    }
+
+    fn staged(m: &TuckerModel, coords: &[u32]) -> StagedQuery {
+        match &m.core {
+            CoreRepr::Kruskal(k) => stage_query(&m.factors, k, coords, 1),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn hits_after_first_stage() {
+        let m = model();
+        let mut cache = HotRowCache::new(4);
+        let coords = [3u32, 0, 5];
+        for _ in 0..3 {
+            cache.get_or_stage(&coords, 1, 7, || staged(&m, &coords));
+        }
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses, c.evictions, c.invalidations), (2, 1, 0, 0));
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidate_slot_is_ignored_in_key() {
+        let m = model();
+        let mut cache = HotRowCache::new(4);
+        cache.get_or_stage(&[3, 0, 5], 1, 7, || staged(&m, &[3, 0, 5]));
+        // Same fixed coords, different (ignored) candidate slot: a hit.
+        cache.get_or_stage(&[3, 11, 5], 1, 7, || staged(&m, &[3, 11, 5]));
+        assert_eq!(cache.counters().hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let m = model();
+        let mut cache = HotRowCache::new(2);
+        let users = [[0u32, 0, 0], [1, 0, 0], [2, 0, 0]];
+        for u in &users {
+            cache.get_or_stage(u, 1, 7, || staged(&m, u));
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.counters().evictions, 1);
+        // User 0 was evicted (LRU); user 2 is live.
+        cache.get_or_stage(&users[2], 1, 7, || staged(&m, &users[2]));
+        assert_eq!(cache.counters().hits, 1);
+        cache.get_or_stage(&users[0], 1, 7, || staged(&m, &users[0]));
+        assert_eq!(cache.counters().misses, 4);
+    }
+
+    #[test]
+    fn revision_change_invalidates_everything() {
+        let m = model();
+        let mut cache = HotRowCache::new(4);
+        let coords = [3u32, 0, 5];
+        cache.get_or_stage(&coords, 1, 7, || staged(&m, &coords));
+        cache.get_or_stage(&coords, 1, 8, || staged(&m, &coords));
+        let c = cache.counters();
+        assert_eq!(c.invalidations, 1);
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 2);
+        // Back on the new revision: a hit again.
+        cache.get_or_stage(&coords, 1, 8, || staged(&m, &coords));
+        assert_eq!(cache.counters().hits, 1);
+    }
+
+    #[test]
+    fn zero_capacity_never_caches() {
+        let m = model();
+        let mut cache = HotRowCache::new(0);
+        let coords = [3u32, 0, 5];
+        for _ in 0..3 {
+            cache.get_or_stage(&coords, 1, 7, || staged(&m, &coords));
+        }
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses), (0, 3));
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,43 @@
+//! Serving layer: long-lived scoring over a live model (ISSUE 9).
+//!
+//! Training produces a [`TuckerModel`](crate::model::TuckerModel);
+//! serving answers *queries* against it — "for this user's fixed
+//! coordinates, rank these candidate items" — at a throughput the
+//! pointwise [`predict`](crate::model::TuckerModel::predict) loop
+//! cannot reach, without ever changing a single answer:
+//!
+//! * **[`score`]** — [`Scorer`] stages each query's fixed coordinates
+//!   once through [`crate::kruskal::predict::stage_query`] and scores
+//!   the whole candidate panel with the lane-blocked
+//!   [`score_panel`](crate::kruskal::predict::score_panel). The batch
+//!   path is **bitwise-identical** to the pointwise oracle (the same
+//!   f32 association, property-pinned over random layouts), so serving
+//!   is an optimization, never an approximation. Top-k is deterministic:
+//!   score descending, item id ascending on ties.
+//! * **[`cache`]** — [`HotRowCache`] keeps recent staged contexts keyed
+//!   by `(mode, fixed coords)` and fingerprinted by a **model revision**,
+//!   the same key-plus-fingerprint discipline as the planner decision
+//!   caches: a fingerprint move (any warm-start training in the owning
+//!   [`Session`](crate::coordinator::session::Session)) drops every
+//!   entry before the next lookup, so a staged row can never outlive
+//!   the factors it was cut from. Hit/miss/eviction/invalidation
+//!   counters are plain monotone `u64`s in the
+//!   [`PlanAccum`](crate::metrics::PlanAccum) style.
+//!
+//! The serving loop composes with streaming ingest through
+//! [`coordinator::session`](crate::coordinator::session): appends land
+//! between epochs at the session boundary, warm-start epochs resume
+//! from the live factors, and the session bumps the model revision so
+//! exactly the touched caches (hot rows here, partition/planner
+//! fingerprints in the engines) rebuild. Exact-mode training stays
+//! bitwise because nothing mutates mid-epoch.
+//!
+//! Throughput is measured by `benches/bench_serving.rs`
+//! (predictions/sec, cache hit rate) and gated against
+//! `BENCH_baseline.json` floors in CI alongside the kernel benches.
+
+pub mod cache;
+pub mod score;
+
+pub use cache::{CacheCounters, HotRowCache};
+pub use score::{Query, ScoredItem, Scorer};

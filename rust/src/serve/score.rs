@@ -1,0 +1,250 @@
+//! Batch scoring and per-user top-k over candidate panels.
+//!
+//! The scorer is a thin serving loop over the oracle-pinned prediction
+//! layer ([`crate::kruskal::predict`]): each query's fixed coordinates
+//! are staged once (through the [`HotRowCache`], so repeat users skip
+//! the staging pass entirely), the candidate panel is scored by the
+//! lane-blocked [`score_panel`] — **bitwise-identical to the pointwise
+//! [`TuckerModel::predict`] oracle**, property-pinned in
+//! `kruskal::predict` and re-pinned end-to-end here — and top-k
+//! selection orders by `(score desc, candidate asc)` so ties are
+//! deterministic across runs and layouts.
+//!
+//! Dense-cored baseline models are served too (the dispatch is the same
+//! [`predict`](crate::kruskal::predict::predict) everywhere), but only
+//! the Kruskal path has a staged fast path; dense scoring is the
+//! pointwise oracle per candidate, trivially bitwise.
+
+use crate::kruskal::predict::{predict, score_panel, stage_query};
+use crate::model::{CoreRepr, TuckerModel};
+use crate::serve::cache::{CacheCounters, HotRowCache};
+
+/// One serving request: fixed coordinates with one mode left open, and
+/// the candidate panel to score into that slot. `coords[candidate_mode]`
+/// is ignored.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub coords: Vec<u32>,
+    /// The open mode (items live here; mode 1 in the recommender
+    /// framing, user = mode 0).
+    pub candidate_mode: usize,
+    pub candidates: Vec<u32>,
+}
+
+/// One ranked result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoredItem {
+    pub item: u32,
+    pub score: f32,
+}
+
+/// The serving scorer: the hot-row cache plus scratch buffers.
+#[derive(Debug)]
+pub struct Scorer {
+    cache: HotRowCache,
+    scores: Vec<f32>,
+}
+
+impl Scorer {
+    /// `cache_capacity` bounds the hot-row cache (0 = uncached).
+    pub fn new(cache_capacity: usize) -> Self {
+        Scorer { cache: HotRowCache::new(cache_capacity), scores: Vec::new() }
+    }
+
+    pub fn cache_counters(&self) -> CacheCounters {
+        self.cache.counters()
+    }
+
+    /// Score `query`'s candidate panel under `model` at `model_revision`
+    /// (the session's monotone factor-state counter — any training
+    /// between calls must bump it so staged rows cannot outlive the
+    /// factors they were cut from). Returns one score per candidate,
+    /// bitwise-equal to `model.predict` with the candidate substituted.
+    pub fn score(
+        &mut self,
+        model: &TuckerModel,
+        model_revision: u64,
+        query: &Query,
+    ) -> Vec<f32> {
+        let order = model.order();
+        assert!(
+            query.candidate_mode < order,
+            "candidate mode {} out of range for order {order}",
+            query.candidate_mode
+        );
+        assert_eq!(query.coords.len(), order, "query coords must cover every mode");
+        match &model.core {
+            CoreRepr::Kruskal(core) => {
+                let staged = self.cache.get_or_stage(
+                    &query.coords,
+                    query.candidate_mode,
+                    model_revision,
+                    || stage_query(&model.factors, core, &query.coords, query.candidate_mode),
+                );
+                score_panel(&staged, &model.factors, core, &query.candidates, &mut self.scores);
+                self.scores.clone()
+            }
+            CoreRepr::Dense(_) => {
+                let mut full = query.coords.clone();
+                query
+                    .candidates
+                    .iter()
+                    .map(|&c| {
+                        full[query.candidate_mode] = c;
+                        predict(&model.factors, &model.core, &full)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Top-k over the query's candidates: `(score desc, item asc)`,
+    /// truncated to `k`. Duplicate candidates rank independently.
+    pub fn top_k(
+        &mut self,
+        model: &TuckerModel,
+        model_revision: u64,
+        query: &Query,
+        k: usize,
+    ) -> Vec<ScoredItem> {
+        let scores = self.score(model, model_revision, query);
+        let mut ranked: Vec<ScoredItem> = query
+            .candidates
+            .iter()
+            .zip(scores)
+            .map(|(&item, score)| ScoredItem { item, score })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.item.cmp(&b.item))
+        });
+        ranked.truncate(k);
+        ranked
+    }
+
+    /// Score a batch of queries, returning each query's top-k.
+    pub fn top_k_batch(
+        &mut self,
+        model: &TuckerModel,
+        model_revision: u64,
+        queries: &[Query],
+        k: usize,
+    ) -> Vec<Vec<ScoredItem>> {
+        queries
+            .iter()
+            .map(|q| self.top_k(model, model_revision, q, k))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::Rng;
+
+    fn kruskal_model(rng: &mut Rng, dims: &[usize], j: usize, r: usize) -> TuckerModel {
+        TuckerModel::init_kruskal(rng, dims, j, r)
+    }
+
+    #[test]
+    fn prop_batch_scores_bitwise_equal_pointwise_oracle() {
+        // The serving-layer acceptance pin, end to end through the cache:
+        // batch scores == `model.predict` bit for bit, over random
+        // layouts, candidate modes, candidate counts, and cache states
+        // (repeat queries exercise the hit path).
+        forall("serve batch scoring bitwise vs predict", 25, |rng| {
+            let order = 2 + rng.gen_range(3);
+            let dims: Vec<usize> = (0..order).map(|_| 4 + rng.gen_range(16)).collect();
+            let j = 1 + rng.gen_range(10);
+            let r = 1 + rng.gen_range(10);
+            let mut r2 = Rng::new(rng.next_u64());
+            let model = kruskal_model(&mut r2, &dims, j, r);
+            let mode = rng.gen_range(order);
+            let mut scorer = Scorer::new(1 + rng.gen_range(3));
+            for _ in 0..3 {
+                let coords: Vec<u32> =
+                    dims.iter().map(|&d| rng.gen_range(d) as u32).collect();
+                let candidates: Vec<u32> = (0..1 + rng.gen_range(30))
+                    .map(|_| rng.gen_range(dims[mode]) as u32)
+                    .collect();
+                let q = Query { coords: coords.clone(), candidate_mode: mode, candidates };
+                let scores = scorer.score(&model, 1, &q);
+                let mut full = coords;
+                for (s, &c) in q.candidates.iter().enumerate() {
+                    full[mode] = c;
+                    assert_eq!(
+                        scores[s].to_bits(),
+                        model.predict(&full).to_bits(),
+                        "mode {mode} candidate {c}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn top_k_orders_desc_with_deterministic_ties() {
+        let mut rng = Rng::new(5);
+        let model = kruskal_model(&mut rng, &[6, 20, 5], 4, 4);
+        let q = Query {
+            coords: vec![2, 0, 3],
+            candidate_mode: 1,
+            // Duplicate candidate 7: identical scores, item-id tiebreak.
+            candidates: (0..20).chain([7u32]).collect(),
+        };
+        let mut scorer = Scorer::new(8);
+        let top = scorer.top_k(&model, 1, &q, 5);
+        assert_eq!(top.len(), 5);
+        for w in top.windows(2) {
+            assert!(
+                w[0].score > w[1].score
+                    || (w[0].score == w[1].score && w[0].item <= w[1].item)
+            );
+        }
+        // k larger than the panel: everything comes back, still sorted.
+        let all = scorer.top_k(&model, 1, &q, 100);
+        assert_eq!(all.len(), 21);
+    }
+
+    #[test]
+    fn repeat_users_hit_the_cache() {
+        let mut rng = Rng::new(6);
+        let model = kruskal_model(&mut rng, &[10, 30, 4], 4, 4);
+        let mut scorer = Scorer::new(16);
+        let q = Query {
+            coords: vec![3, 0, 1],
+            candidate_mode: 1,
+            candidates: (0..30).collect(),
+        };
+        scorer.top_k(&model, 1, &q, 10);
+        scorer.top_k(&model, 1, &q, 10);
+        let c = scorer.cache_counters();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        // Training bumps the revision: staged rows must be re-cut.
+        scorer.top_k(&model, 2, &q, 10);
+        let c = scorer.cache_counters();
+        assert_eq!(c.invalidations, 1);
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn dense_core_serves_through_the_same_api() {
+        let mut rng = Rng::new(7);
+        let model = TuckerModel::init_dense(&mut rng, &[8, 12, 6], 4);
+        let mut scorer = Scorer::new(4);
+        let q = Query {
+            coords: vec![1, 0, 2],
+            candidate_mode: 1,
+            candidates: (0..12).collect(),
+        };
+        let scores = scorer.score(&model, 1, &q);
+        let mut full = q.coords.clone();
+        for (s, &c) in q.candidates.iter().enumerate() {
+            full[1] = c;
+            assert_eq!(scores[s].to_bits(), model.predict(&full).to_bits());
+        }
+    }
+}

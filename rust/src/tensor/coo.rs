@@ -5,7 +5,18 @@
 //! which is the coalesced layout the paper uses for the nonzero stream on
 //! GPU: one memory request fetches a whole sample's coordinates.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::error::{bail, Result};
+
+/// Process-global revision counter: every constructed or mutated
+/// [`SparseTensor`] gets a fresh, unique revision (see
+/// [`SparseTensor::revision`]).
+static NEXT_REVISION: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_revision() -> u64 {
+    NEXT_REVISION.fetch_add(1, Ordering::Relaxed)
+}
 
 /// An order-N sparse tensor in coordinate format.
 #[derive(Clone, Debug)]
@@ -14,6 +25,15 @@ pub struct SparseTensor {
     /// Flat `nnz * order` coordinate array, sample-major.
     indices: Vec<u32>,
     values: Vec<f32>,
+    /// Content revision (ISSUE 9): a process-unique id assigned at
+    /// construction and re-assigned by every mutation ([`Self::append`]).
+    /// Engine caches (planner decisions, block partitions, device grids)
+    /// fingerprint on it so a long-lived engine can never reuse state
+    /// derived from different nonzeros — even when `nnz` and `dims`
+    /// coincide. Clones share the revision (identical content); the
+    /// over-approximation is one-sided: a fresh id may force a redundant
+    /// rebuild, never a stale reuse.
+    revision: u64,
 }
 
 impl SparseTensor {
@@ -46,19 +66,81 @@ impl SparseTensor {
                 }
             }
         }
-        Ok(SparseTensor { dims, indices, values })
+        Ok(SparseTensor { dims, indices, values, revision: fresh_revision() })
     }
 
     /// Build without bounds checks (generators that construct indices by
     /// `gen_range(dim)` are safe by construction; skips an O(nnz·N) pass).
     pub fn new_unchecked(dims: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Self {
         debug_assert_eq!(indices.len(), values.len() * dims.len());
-        SparseTensor { dims, indices, values }
+        SparseTensor { dims, indices, values, revision: fresh_revision() }
     }
 
     /// An empty tensor with the given mode sizes.
     pub fn empty(dims: Vec<usize>) -> Self {
-        SparseTensor { dims, indices: Vec::new(), values: Vec::new() }
+        SparseTensor {
+            dims,
+            indices: Vec::new(),
+            values: Vec::new(),
+            revision: fresh_revision(),
+        }
+    }
+
+    /// Content revision: process-unique per construction/mutation, shared
+    /// by clones. Cache fingerprints include it so appended or swapped
+    /// nonzeros invalidate exactly the state derived from them.
+    #[inline]
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Append nonzeros in the flat sample-major layout, validating shape
+    /// and bounds (the streaming-ingest entry point). Dims are fixed at
+    /// construction; `indices.len()` must be `values.len() * order`. On
+    /// success the tensor gets a fresh [`Self::revision`]; on error it is
+    /// untouched.
+    pub fn append(&mut self, indices: &[u32], values: &[f32]) -> Result<()> {
+        let order = self.order();
+        if indices.len() != values.len() * order {
+            bail!(
+                "append: index/value length mismatch: {} indices, {} values, order {}",
+                indices.len(),
+                values.len(),
+                order
+            );
+        }
+        for (k, chunk) in indices.chunks_exact(order).enumerate() {
+            for (n, (&i, &d)) in chunk.iter().zip(self.dims.iter()).enumerate() {
+                if i as usize >= d {
+                    bail!(
+                        "append: nonzero {k}: index {i} out of bounds for mode {n} (dim {d})"
+                    );
+                }
+            }
+        }
+        self.indices.extend_from_slice(indices);
+        self.values.extend_from_slice(values);
+        self.revision = fresh_revision();
+        Ok(())
+    }
+
+    /// Append every nonzero of `other` (an arrival batch). The dims must
+    /// match exactly — a batch shaped for a different tensor is an error,
+    /// not a silent re-index.
+    pub fn append_tensor(&mut self, other: &SparseTensor) -> Result<()> {
+        if self.dims != other.dims {
+            bail!(
+                "append_tensor: dims mismatch: {:?} vs batch {:?}",
+                self.dims,
+                other.dims
+            );
+        }
+        // Bounds already validated against identical dims at `other`'s
+        // construction; skip the O(nnz·N) re-check.
+        self.indices.extend_from_slice(&other.indices);
+        self.values.extend_from_slice(&other.values);
+        self.revision = fresh_revision();
+        Ok(())
     }
 
     pub fn order(&self) -> usize {
@@ -126,7 +208,12 @@ impl SparseTensor {
             indices.extend_from_slice(self.index(k));
             values.push(self.values[k]);
         }
-        SparseTensor { dims: self.dims.clone(), indices, values }
+        SparseTensor {
+            dims: self.dims.clone(),
+            indices,
+            values,
+            revision: fresh_revision(),
+        }
     }
 
     /// A copy with `delta` added to every value (mean-centering for
@@ -136,6 +223,7 @@ impl SparseTensor {
             dims: self.dims.clone(),
             indices: self.indices.clone(),
             values: self.values.iter().map(|&v| v + delta).collect(),
+            revision: fresh_revision(),
         }
     }
 
@@ -219,5 +307,52 @@ mod tests {
     fn footprint_counts_indices_and_values() {
         let t = tiny();
         assert_eq!(t.footprint_bytes(), 9 * 4 + 3 * 4);
+    }
+
+    #[test]
+    fn revisions_are_unique_per_construction_and_shared_by_clones() {
+        let a = tiny();
+        let b = tiny();
+        assert_ne!(a.revision(), b.revision());
+        let c = a.clone();
+        assert_eq!(a.revision(), c.revision());
+        // Derived tensors have different content -> fresh revisions.
+        assert_ne!(a.gather(&[0]).revision(), a.revision());
+        assert_ne!(a.with_shifted_values(1.0).revision(), a.revision());
+    }
+
+    #[test]
+    fn append_grows_and_bumps_revision() {
+        let mut t = tiny();
+        let r0 = t.revision();
+        t.append(&[1, 1, 1, 2, 2, 2], &[4.0, 5.0]).unwrap();
+        assert_eq!(t.nnz(), 5);
+        assert_eq!(t.index(3), &[1, 1, 1]);
+        assert_eq!(t.value(4), 5.0);
+        assert_ne!(t.revision(), r0);
+    }
+
+    #[test]
+    fn append_rejects_bad_batches_untouched() {
+        let mut t = tiny();
+        let r0 = t.revision();
+        // Length mismatch.
+        assert!(t.append(&[0, 0], &[1.0]).is_err());
+        // Out-of-bounds coordinate (mode 0 has dim 3).
+        assert!(t.append(&[3, 0, 0], &[1.0]).is_err());
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.revision(), r0);
+    }
+
+    #[test]
+    fn append_tensor_merges_and_checks_dims() {
+        let mut t = tiny();
+        let batch =
+            SparseTensor::new(vec![3, 4, 5], vec![2, 0, 1], vec![9.0]).unwrap();
+        t.append_tensor(&batch).unwrap();
+        assert_eq!(t.nnz(), 4);
+        assert_eq!(t.index(3), &[2, 0, 1]);
+        let wrong = SparseTensor::empty(vec![3, 4]);
+        assert!(t.append_tensor(&wrong).is_err());
     }
 }

@@ -1,0 +1,233 @@
+//! Long-lived session integration tests (ISSUE 9): engine-state reuse
+//! across tensors, streaming append correctness (bitwise vs a fresh
+//! engine on the merged tensor), and warm-start-beats-cold retraining
+//! with the cache-invalidation counters observed end to end.
+
+use fasttucker::config::{EngineKind, TrainConfig};
+use fasttucker::coordinator::Session;
+use fasttucker::data::split::train_test_split;
+use fasttucker::data::stream::ArrivalSim;
+use fasttucker::data::synth::{planted_tucker, PlantedSpec};
+use fasttucker::model::{CoreRepr, TuckerModel};
+use fasttucker::parallel::{ParallelFastTucker, ParallelOptions};
+use fasttucker::sched::LrSchedule;
+use fasttucker::serve::Query;
+use fasttucker::util::Rng;
+use fasttucker::SparseTensor;
+
+fn assert_models_bitwise(a: &TuckerModel, b: &TuckerModel, what: &str) {
+    for (n, (ma, mb)) in a.factors.mats().iter().zip(b.factors.mats()).enumerate() {
+        for (k, (x, y)) in ma.data().iter().zip(mb.data()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: factor {n} entry {k}: {x} != {y}"
+            );
+        }
+    }
+    match (&a.core, &b.core) {
+        (CoreRepr::Kruskal(ka), CoreRepr::Kruskal(kb)) => {
+            for n in 0..ka.order() {
+                for (k, (x, y)) in ka
+                    .factor(n)
+                    .data()
+                    .iter()
+                    .zip(kb.factor(n).data())
+                    .enumerate()
+                {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: core factor {n} entry {k}: {x} != {y}"
+                    );
+                }
+            }
+        }
+        _ => panic!("{what}: expected kruskal cores"),
+    }
+}
+
+fn engine_opts() -> ParallelOptions {
+    let mut opts = ParallelOptions::default();
+    opts.workers = 2;
+    opts.hyper.lr_factor = LrSchedule::constant(0.02);
+    opts.hyper.lr_core = LrSchedule::constant(0.01);
+    opts
+}
+
+fn planted(seed: u64, dims: Vec<usize>, nnz: usize) -> SparseTensor {
+    let spec = PlantedSpec { dims, nnz, j: 4, r_core: 4, noise: 0.05, clamp: None };
+    let mut rng = Rng::new(seed);
+    planted_tucker(&mut rng, &spec).tensor
+}
+
+/// One engine reused across tensors of different shapes: the
+/// revision-keyed caches must rebuild for each switch (stale reuse is
+/// impossible), and switching back still works.
+#[test]
+fn engine_reuse_across_different_tensors_rebuilds_state() {
+    let a = planted(1, vec![24, 20, 16], 3000);
+    let b = planted(2, vec![30, 18, 12], 3000); // different dims, same nnz
+    let c = planted(3, vec![24, 20, 16], 4500); // A's dims, different nnz
+
+    let mut engine = ParallelFastTucker::new(engine_opts());
+    let mut rng = Rng::new(7);
+    let mut model_a = TuckerModel::init_kruskal(&mut rng, a.dims(), 4, 4);
+    let mut model_b = TuckerModel::init_kruskal(&mut rng, b.dims(), 4, 4);
+    let mut model_c = TuckerModel::init_kruskal(&mut rng, c.dims(), 4, 4);
+
+    engine.train_epoch(&mut model_a, &a, 0, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 1);
+    engine.train_epoch(&mut model_b, &b, 0, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 2, "dims change must rebuild");
+    engine.train_epoch(&mut model_c, &c, 0, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 3, "nnz change must rebuild");
+    // Back to A: the cache holds only the latest state, so this is a
+    // rebuild too — but correctness never depended on a hit.
+    engine.train_epoch(&mut model_a, &a, 1, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 4);
+}
+
+/// Same dims, same nnz, different content: the old (dims, nnz)-shaped
+/// fingerprint would silently reuse the stale partition; the content
+/// revision makes that impossible.
+#[test]
+fn same_shape_different_content_cannot_reuse_stale_state() {
+    let a = planted(4, vec![20, 20, 20], 2500);
+    let b = planted(5, vec![20, 20, 20], 2500); // identical shape, new content
+
+    let mut engine = ParallelFastTucker::new(engine_opts());
+    let mut rng = Rng::new(8);
+    let mut model = TuckerModel::init_kruskal(&mut rng, a.dims(), 4, 4);
+    engine.train_epoch(&mut model, &a, 0, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 1);
+    engine.train_epoch(&mut model, &b, 1, &mut rng).unwrap();
+    assert_eq!(
+        engine.rebuilds().partition,
+        2,
+        "fresh tensor with identical (dims, nnz) must still rebuild"
+    );
+    // Re-running on the same tensor object reuses cleanly.
+    engine.train_epoch(&mut model, &b, 2, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 2);
+}
+
+/// The streaming acceptance pin: after an append, the next exact-mode
+/// epoch through the long-lived engine is bitwise-identical to a fresh
+/// engine run on the merged tensor (same model snapshot, same rng, same
+/// epoch index) — the revision-keyed caches leave no stale state behind.
+#[test]
+fn post_append_epoch_is_bitwise_identical_to_fresh_engine_on_merged_tensor() {
+    let spec = PlantedSpec {
+        dims: vec![25, 22, 18],
+        nnz: 4000,
+        j: 4,
+        r_core: 4,
+        noise: 0.05,
+        clamp: None,
+    };
+    let mut gen_rng = Rng::new(11);
+    let p = planted_tucker(&mut gen_rng, &spec);
+    let mut sim = ArrivalSim::from_planted(&p, &spec);
+    let mut train = p.tensor.clone();
+
+    let mut engine = ParallelFastTucker::new(engine_opts());
+    let mut rng = Rng::new(12);
+    let mut model = TuckerModel::init_kruskal(&mut rng, train.dims(), 4, 4);
+    engine.train_epoch(&mut model, &train, 0, &mut rng).unwrap();
+
+    // Append at the epoch boundary.
+    let batch = sim.next_batch(&mut gen_rng, 600);
+    train.append_tensor(&batch).unwrap();
+
+    // Snapshot, then run the post-append epoch through the live engine.
+    let mut model_fresh = model.clone();
+    let mut rng_fresh = rng.clone();
+    engine.train_epoch(&mut model, &train, 1, &mut rng).unwrap();
+    assert_eq!(engine.rebuilds().partition, 2, "append must rebuild the partition");
+
+    // A brand-new engine over the merged tensor must land on the same bits.
+    let mut fresh = ParallelFastTucker::new(engine_opts());
+    fresh
+        .train_epoch(&mut model_fresh, &train, 1, &mut rng_fresh)
+        .unwrap();
+    assert_models_bitwise(&model, &model_fresh, "post-append epoch");
+}
+
+/// Warm-start beats cold: after an append, resuming from the live
+/// factors reaches the cold-retrain RMSE in fewer epochs than the cold
+/// run took — and the serving cache invalidates exactly once per
+/// train_epochs call, never on append.
+#[test]
+fn warm_start_reaches_cold_rmse_in_fewer_epochs() {
+    let spec = PlantedSpec {
+        dims: vec![30, 26, 22],
+        nnz: 8000,
+        j: 4,
+        r_core: 4,
+        noise: 0.05,
+        clamp: None,
+    };
+    let mut cfg = TrainConfig::default();
+    cfg.engine = EngineKind::Parallel;
+    cfg.workers = 2;
+    cfg.j = 4;
+    cfg.r_core = 4;
+    cfg.hyper.lr_factor = LrSchedule::constant(0.02);
+    cfg.hyper.lr_core = LrSchedule::constant(0.01);
+
+    let mut rng = Rng::new(21);
+    let p = planted_tucker(&mut rng, &spec);
+    let (base_train, test) = train_test_split(&p.tensor, 0.1, &mut rng);
+    let mut sim = ArrivalSim::from_planted(&p, &spec);
+
+    // Warm session: train on the base data, serve, then stream appends.
+    let mut warm = Session::new(&cfg, base_train, test.clone(), 16, &mut rng).unwrap();
+    warm.set_verbose(false);
+    let base_epochs = 10usize;
+    warm.train_epochs(base_epochs).unwrap();
+    let q = Query { coords: vec![3, 0, 5], candidate_mode: 1, candidates: (0..26).collect() };
+    warm.top_k(&q, 5);
+    warm.top_k(&q, 5);
+    let c0 = warm.cache_counters();
+    assert_eq!((c0.hits, c0.misses, c0.invalidations), (1, 1, 0));
+
+    let mut arrival_rng = Rng::new(22);
+    for _ in 0..2 {
+        let batch = sim.next_batch(&mut arrival_rng, 400);
+        warm.append(&batch).unwrap();
+    }
+    // Appends alone must not touch the serving cache.
+    warm.top_k(&q, 5);
+    assert_eq!(warm.cache_counters().invalidations, 0);
+
+    // Cold baseline: a fresh session over the merged tensor, trained
+    // from scratch for the same budget as the warm session's base run.
+    let merged = warm.train_tensor().clone();
+    let mut cold_rng = Rng::new(23);
+    let mut cold = Session::new(&cfg, merged, test, 16, &mut cold_rng).unwrap();
+    cold.set_verbose(false);
+    cold.train_epochs(base_epochs).unwrap();
+    let (cold_rmse, _) = cold.evaluate();
+
+    // Warm start: resume from the live factors, one epoch at a time.
+    let mut warm_epochs = 0usize;
+    while warm_epochs < base_epochs {
+        warm.train_epochs(1).unwrap();
+        warm_epochs += 1;
+        if warm.evaluate().0 <= cold_rmse {
+            break;
+        }
+    }
+    assert!(
+        warm_epochs < base_epochs,
+        "warm start took {warm_epochs} epochs to reach cold rmse {cold_rmse:.5} \
+         (cold took {base_epochs})"
+    );
+    // Each train_epochs call moved the model: the serving cache must
+    // have invalidated on the first post-training lookup each time.
+    warm.top_k(&q, 5);
+    let c1 = warm.cache_counters();
+    assert_eq!(c1.invalidations, 1, "one invalidation per model move observed");
+    assert_eq!(warm.epochs_run(), base_epochs + warm_epochs);
+}
