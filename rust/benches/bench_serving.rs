@@ -19,6 +19,8 @@
 use std::time::Instant;
 
 use fasttucker::bench_support::{bench_scale, regression, Table};
+use fasttucker::data::stream::{ArrivalModel, ArrivalSim};
+use fasttucker::data::synth::{planted_tucker, PlantedSpec};
 use fasttucker::model::TuckerModel;
 use fasttucker::serve::{Query, Scorer};
 use fasttucker::util::Rng;
@@ -77,10 +79,14 @@ fn pointwise_topk(model: &TuckerModel, q: &Query, k: usize) -> Vec<(u32, f32)> {
             (c, model.predict(&full))
         })
         .collect();
-    ranked.sort_by(|a, b| {
-        b.1.partial_cmp(&a.1)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.0.cmp(&b.0))
+    // NaN-last total order, mirroring `Scorer::top_k` (the old
+    // `partial_cmp(..).unwrap_or(Equal)` was not a total order and could
+    // rank NaN anywhere; `total_cmp` alone sorts +NaN above +inf).
+    ranked.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+        (true, true) => a.0.cmp(&b.0),
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
     });
     ranked.truncate(k);
     ranked
@@ -202,7 +208,54 @@ fn run_serving(quick: bool) -> ServingResult {
         });
     }
     table.print();
+    check_arrival_locality(&model, n_queries);
     result
+}
+
+/// ISSUE 10 satellite check: production-shaped (Zipf-skewed) arrival
+/// traffic must raise the `HotRowCache` hit rate over uniform arrivals.
+/// Query coordinates are drawn through `ArrivalSim` itself, so this also
+/// exercises the Zipf sampler end to end. Everything is seeded, so the
+/// assertion is deterministic — a failure means the arrival model or the
+/// cache keying regressed, not bad luck.
+fn check_arrival_locality(model: &TuckerModel, n_queries: usize) {
+    let dims: Vec<usize> = model.factors.mats().iter().map(|m| m.rows()).collect();
+    let candidates: Vec<u32> = (0..64u32).collect();
+    let hit_rate = |arrivals: ArrivalModel| -> f64 {
+        let spec = PlantedSpec {
+            dims: dims.clone(),
+            nnz: 16,
+            j: 2,
+            r_core: 2,
+            noise: 0.0,
+            clamp: None,
+        };
+        let mut rng = Rng::new(21);
+        let planted = planted_tucker(&mut rng, &spec);
+        let mut sim = ArrivalSim::from_planted(&planted, &spec).with_arrival_model(arrivals);
+        let batch = sim.next_batch(&mut rng, n_queries);
+        let mut scorer = Scorer::new(256);
+        for k in 0..batch.nnz() {
+            let q = Query {
+                coords: batch.index(k).to_vec(),
+                candidate_mode: 1,
+                candidates: candidates.clone(),
+            };
+            scorer.top_k(model, 1, &q, 10);
+        }
+        scorer.cache_counters().hit_rate()
+    };
+    let uniform = hit_rate(ArrivalModel::Uniform);
+    let zipf = hit_rate(ArrivalModel::Zipf { exponent: 1.5 });
+    println!(
+        "\n== arrival locality: hot-row cache hit rate, uniform {uniform:.3} vs \
+         zipf(1.5) {zipf:.3} over {n_queries} queries =="
+    );
+    assert!(
+        zipf > uniform,
+        "zipf-skewed arrivals must beat uniform on cache hit rate \
+         (zipf {zipf:.4} <= uniform {uniform:.4})"
+    );
 }
 
 /// Hand-rolled JSON (offline build: no serde), in the snapshot shape

@@ -27,7 +27,7 @@ use std::time::Instant;
 use crate::algo::{AlgoError, AlgoResult, Decomposer, EpochStats, SgdHyper};
 use crate::kernel::{
     apply_core_grad_raw, planner, scalar, BatchPlan, BatchSizing, DispatchPool, Exactness,
-    Lanes, PlanParams, ThreadCount,
+    Lanes, PlanParams, SimdLevel, ThreadCount,
 };
 use crate::log_warn;
 use crate::parallel::shared::{dispatch_plan, SharedFactors};
@@ -64,6 +64,16 @@ pub struct FastTuckerConfig {
     /// (planner picks from `R_core`, the default) or an explicit 4/8.
     /// Ignored on the scalar path; bitwise-neutral in exact mode.
     pub lanes: Lanes,
+    /// Panel-microkernel instruction set ([`SimdLevel`]): `Auto` (runtime
+    /// detection, overridable via `FASTTUCKER_SIMD`), `Scalar`, `V128`, or
+    /// `V256`. Every level is bitwise-identical, so this is a pure
+    /// performance knob. Ignored on the scalar path.
+    pub simd: SimdLevel,
+    /// Mixed-precision accumulation (ISSUE 10): store factors in f32 but
+    /// accumulate the per-sample contractions in f64 on the relaxed path.
+    /// Rejected with `Exact` (it changes the bit pattern by design);
+    /// forces sequential execution (the wide path has no panel kernels).
+    pub wide_accum: bool,
     /// Split-group factor (≥ 1, default 1 = off): long groups are cut at
     /// fiber sub-run boundaries (exact; bitwise-neutral) or anywhere
     /// (relaxed) into `split` sub-groups — the dispatch unit for
@@ -95,6 +105,8 @@ impl Default for FastTuckerConfig {
             batch: BatchSizing::Fixed(0),
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
+            simd: SimdLevel::Auto,
+            wide_accum: false,
             split: 1,
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
@@ -112,13 +124,14 @@ pub struct FastTucker {
     strided: Vec<Vec<f32>>,
     /// Planner decision cached per workload + model fingerprint
     /// `(revision, nnz, dims, sample count, order, r_core, j, exactness,
-    /// lanes, split)` — every input the cost model reads, so mutating
+    /// lanes, simd, wide_accum, split)` — every input the cost model
+    /// reads, so mutating
     /// `config`, switching models, or feeding different nonzeros (the
     /// content revision — even at identical `(nnz, dims)`) invalidates
     /// it.
     #[allow(clippy::type_complexity)]
     auto_cache: Option<(
-        (u64, usize, Vec<usize>, usize, usize, usize, usize, Exactness, Lanes, usize),
+        (u64, usize, Vec<usize>, usize, usize, usize, usize, Exactness, Lanes, SimdLevel, bool, usize),
         PlanParams,
     )>,
     /// Lifetime count of planner re-decisions (cache-invalidation
@@ -202,16 +215,21 @@ impl FastTucker {
         j: usize,
     ) -> Option<PlanParams> {
         match self.config.batch {
-            BatchSizing::Fixed(_) => self.config.batch.resolve(
-                train,
-                m,
-                order,
-                r_core,
-                j,
-                self.config.exactness,
-                self.config.lanes,
-                self.config.split,
-            ),
+            BatchSizing::Fixed(_) => self
+                .config
+                .batch
+                .resolve(
+                    train,
+                    m,
+                    order,
+                    r_core,
+                    j,
+                    self.config.exactness,
+                    self.config.lanes,
+                    self.config.simd,
+                    self.config.split,
+                )
+                .map(|p| p.with_wide_accum(self.config.wide_accum)),
             BatchSizing::Auto => {
                 let key = (
                     train.revision(),
@@ -223,6 +241,8 @@ impl FastTucker {
                     j,
                     self.config.exactness,
                     self.config.lanes,
+                    self.config.simd,
+                    self.config.wide_accum,
                     self.config.split,
                 );
                 if let Some((cached_key, params)) = &self.auto_cache {
@@ -242,9 +262,11 @@ impl FastTucker {
                         j,
                         self.config.exactness,
                         self.config.lanes,
+                        self.config.simd,
                         self.config.split,
                     )
-                    .expect("Auto sizing always resolves");
+                    .expect("Auto sizing always resolves")
+                    .with_wide_accum(self.config.wide_accum);
                 self.auto_cache = Some((key, params));
                 Some(params)
             }
@@ -254,7 +276,7 @@ impl FastTucker {
     fn ensure_ws(&mut self, order: usize, r_core: usize, j: usize, params: Option<PlanParams>) {
         if let Some(p) = params {
             let cap = p.max_batch;
-            let threads = planner::resolve_threads(self.config.threads);
+            let threads = planner::resolve_threads(self.config.threads, self.config.exactness);
             let stale = match &self.pool {
                 Some(w) => w.shape() != (order, r_core, j, cap) || w.threads() != threads,
                 None => true,
@@ -614,6 +636,48 @@ mod tests {
         assert!(
             relaxed_split_rmse <= exact_rmse * 1.02 + 1e-4,
             "relaxed+split RMSE {relaxed_split_rmse} not within 2% of exact {exact_rmse}"
+        );
+    }
+
+    #[test]
+    fn wide_accum_relaxed_stays_in_rmse_envelope() {
+        // ISSUE 10 acceptance: f32 factor storage with f64 accumulation
+        // on the relaxed path must land within the same 2% RMSE envelope
+        // of the exact batched path that plain relaxed execution owes
+        // (the `relaxed_reaches_exact_quality` contract).
+        let spec = PlantedSpec {
+            dims: vec![2400, 100, 100],
+            nnz: 7200,
+            j: 4,
+            r_core: 4,
+            noise: 0.05,
+            clamp: Some((1.0, 5.0)),
+        };
+        let mut rng = Rng::new(45);
+        let p = planted_tucker(&mut rng, &spec);
+        let run = |exactness: crate::kernel::Exactness, wide: bool| {
+            let mut rng = Rng::new(46);
+            let mut model =
+                TuckerModel::init_kruskal(&mut rng, &spec.dims, spec.j, spec.r_core);
+            let mut algo = FastTucker::new(FastTuckerConfig {
+                batch: crate::kernel::BatchSizing::Auto,
+                exactness,
+                wide_accum: wide,
+                ..Default::default()
+            });
+            algo.config.hyper.lr_factor = crate::sched::LrSchedule::constant(0.01);
+            algo.config.hyper.lr_core = crate::sched::LrSchedule::constant(0.005);
+            let mut rng2 = Rng::new(47);
+            for epoch in 0..30 {
+                algo.train_epoch(&mut model, &p.tensor, epoch, &mut rng2).unwrap();
+            }
+            rmse(&model, &p.tensor)
+        };
+        let exact_rmse = run(crate::kernel::Exactness::Exact, false);
+        let wide_rmse = run(crate::kernel::Exactness::Relaxed, true);
+        assert!(
+            wide_rmse <= exact_rmse * 1.02 + 1e-4,
+            "wide relaxed RMSE {wide_rmse} not within 2% of exact {exact_rmse}"
         );
     }
 

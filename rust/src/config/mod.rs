@@ -8,7 +8,7 @@ pub use toml::{TomlDoc, TomlValue};
 use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::algo::SgdHyper;
-use crate::kernel::{BatchSizing, Exactness, Lanes, ThreadCount};
+use crate::kernel::{BatchSizing, Exactness, Lanes, SimdLevel, ThreadCount};
 use crate::parallel::{DeviceCount, PrefetchMode, TransportKind};
 use crate::sched::LrSchedule;
 
@@ -101,6 +101,18 @@ pub struct TrainConfig {
     /// Panel-microkernel lane width. TOML: `lanes = "auto"` (planner
     /// picks from `R_core`) or `lanes = 4` / `lanes = 8`.
     pub lanes: Lanes,
+    /// Panel-microkernel instruction set. TOML: `simd = "auto"` (runtime
+    /// detection, overridable via `FASTTUCKER_SIMD`), `"scalar"`,
+    /// `"v128"` (SSE2/NEON), or `"v256"` (AVX2, clamped to the host's
+    /// best level). Every level is bitwise-identical — a pure
+    /// performance knob.
+    pub simd: SimdLevel,
+    /// Mixed-precision accumulation. TOML: `wide_accum = true` stores
+    /// factors in f32 but accumulates contractions in f64 on the relaxed
+    /// path (sequential; no panel kernels). Needs
+    /// `exactness = "relaxed"` — exact mode owes a bitwise match to the
+    /// f32 scalar oracle, which f64 accumulation breaks by design.
+    pub wide_accum: bool,
     /// Split-group factor (≥ 1). TOML: `split = 4`. Exact-mode splits
     /// land on fiber sub-run boundaries and are bitwise-neutral;
     /// relaxed-mode splits may land anywhere.
@@ -164,6 +176,8 @@ impl Default for TrainConfig {
             batch: BatchSizing::Auto,
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
+            simd: SimdLevel::Auto,
+            wide_accum: false,
             split: 1,
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
@@ -201,6 +215,8 @@ impl TrainConfig {
     /// batch = "auto"        # or an integer group cap (0/1 = scalar kernel)
     /// exactness = "exact"   # or "relaxed" (hogwild batched plans)
     /// lanes = "auto"        # or 4 / 8 (panel-microkernel lane width)
+    /// simd = "auto"         # or "scalar" / "v128" / "v256" (panel instruction set)
+    /// wide_accum = false    # f64 accumulation on the relaxed path (f32 storage)
     /// split = 1             # split-group factor (>= 1)
     /// threads = "auto"      # or N >= 1 (in-group thread pool width)
     /// devices = "auto"      # or N >= 1 (device-shard grid width)
@@ -275,6 +291,12 @@ impl TrainConfig {
         if let Some(v) = doc.get("", "lanes") {
             cfg.lanes = parse_lanes(v)?;
         }
+        if let Some(v) = doc.get("", "simd") {
+            cfg.simd = parse_simd(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("", "wide_accum") {
+            cfg.wide_accum = v.as_bool()?;
+        }
         if let Some(v) = doc.get("", "split") {
             cfg.split = v.as_usize()?;
         }
@@ -336,6 +358,23 @@ impl TrainConfig {
                     bail!(
                         "exactness = \"relaxed\" needs a batched kernel: set batch = \"auto\" \
                          or batch >= 2 (got {b})"
+                    );
+                }
+            }
+        }
+        if self.wide_accum {
+            if self.exactness != Exactness::Relaxed {
+                bail!(
+                    "wide_accum = true needs exactness = \"relaxed\": exact mode owes a \
+                     bitwise match to the f32 scalar oracle, which f64 accumulation breaks \
+                     by design"
+                );
+            }
+            if let BatchSizing::Fixed(b) = self.batch {
+                if b < 2 {
+                    bail!(
+                        "wide_accum = true needs a batched kernel: set batch = \"auto\" or \
+                         batch >= 2 (got {b})"
                     );
                 }
             }
@@ -505,6 +544,12 @@ fn parse_prefetch(v: &TomlValue) -> Result<PrefetchMode> {
     })
 }
 
+fn parse_simd(s: &str) -> Result<SimdLevel> {
+    SimdLevel::parse(s).ok_or_else(|| {
+        anyhow!("unknown simd {s:?} (expected \"auto\", \"scalar\", \"v128\", or \"v256\")")
+    })
+}
+
 fn parse_lanes(v: &TomlValue) -> Result<Lanes> {
     let spelled = match v {
         TomlValue::Str(s) => s.clone(),
@@ -600,6 +645,35 @@ mod tests {
         // Split-group execution needs a batched kernel.
         assert!(TrainConfig::from_toml_str("batch = 0\nsplit = 2").is_err());
         assert!(TrainConfig::from_toml_str("batch = \"auto\"\nsplit = 2").is_ok());
+    }
+
+    #[test]
+    fn parses_simd_and_wide_accum() {
+        let cfg = TrainConfig::from_toml_str("simd = \"auto\"\n").unwrap();
+        assert_eq!(cfg.simd, SimdLevel::Auto);
+        let cfg = TrainConfig::from_toml_str("simd = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.simd, SimdLevel::Scalar);
+        let cfg = TrainConfig::from_toml_str("simd = \"v128\"\n").unwrap();
+        assert_eq!(cfg.simd, SimdLevel::V128);
+        let cfg = TrainConfig::from_toml_str("simd = \"v256\"\n").unwrap();
+        assert_eq!(cfg.simd, SimdLevel::V256);
+        assert!(TrainConfig::from_toml_str("simd = \"avx512\"").is_err());
+        assert!(TrainConfig::from_toml_str("simd = 8").is_err());
+
+        let cfg = TrainConfig::from_toml_str(
+            "wide_accum = true\nexactness = \"relaxed\"\nbatch = \"auto\"\n",
+        )
+        .unwrap();
+        assert!(cfg.wide_accum);
+        // Wide accumulation changes the bit pattern by design: exact mode
+        // (implicit or explicit) must reject it loudly, as must the
+        // scalar kernel.
+        assert!(TrainConfig::from_toml_str("wide_accum = true").is_err());
+        assert!(TrainConfig::from_toml_str("wide_accum = true\nexactness = \"exact\"").is_err());
+        assert!(TrainConfig::from_toml_str(
+            "wide_accum = true\nexactness = \"relaxed\"\nbatch = 0"
+        )
+        .is_err());
     }
 
     #[test]

@@ -100,6 +100,8 @@ impl Trainer {
                             batch: cfg.batch,
                             exactness: cfg.exactness,
                             lanes: cfg.lanes,
+                            simd: cfg.simd,
+                            wide_accum: cfg.wide_accum,
                             split: cfg.split,
                             threads: cfg.threads,
                             devices: cfg.devices,
@@ -124,6 +126,8 @@ impl Trainer {
                     batch: cfg.batch,
                     exactness: cfg.exactness,
                     lanes: cfg.lanes,
+                    simd: cfg.simd,
+                    wide_accum: cfg.wide_accum,
                     split: cfg.split,
                     threads: cfg.threads,
                     devices: cfg.devices,

@@ -17,12 +17,65 @@
 //! generator, and a mild distribution shift between the base data and
 //! arrivals is itself realistic. Unclamped arrivals are drawn from the
 //! identical distribution as the base tensor.
+//!
+//! Coordinates default to uniform per mode; [`ArrivalModel::Zipf`]
+//! (ISSUE 10) skews them toward low ids with an inverse-CDF sampler, so
+//! serving benches can measure what hot-row locality buys the
+//! [`HotRowCache`](crate::serve::cache::HotRowCache).
 
 use crate::data::synth::{predict_planted, Planted, PlantedSpec};
 use crate::kruskal::KruskalCore;
 use crate::model::factors::FactorMatrices;
 use crate::tensor::SparseTensor;
 use crate::util::Rng;
+
+/// How arrival coordinates are drawn within each mode (ISSUE 10
+/// satellite). Real serving traffic is heavily skewed — a few hot users
+/// and items dominate — and the uniform model hides every cache/locality
+/// effect that skew creates.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ArrivalModel {
+    /// Every index in a mode equally likely (the original behaviour).
+    #[default]
+    Uniform,
+    /// Zipf-distributed indices: index `i` (0-based rank) is drawn with
+    /// probability proportional to `1 / (i + 1)^exponent`. Low ids are
+    /// the hot rows; `exponent` around 1.0 matches classic web/traffic
+    /// skew, larger is spikier.
+    Zipf { exponent: f64 },
+}
+
+/// Precomputed per-mode Zipf CDF: `cdf[i]` = P(index <= i). Sampling is
+/// inverse-transform — one `uniform_f64` draw, then a binary search — so
+/// arrival streams stay deterministic per seed, exactly like the
+/// uniform path.
+fn zipf_cdf(n: usize, exponent: f64) -> Vec<f64> {
+    assert!(n > 0, "zipf CDF over an empty mode");
+    assert!(
+        exponent.is_finite() && exponent > 0.0,
+        "zipf exponent must be finite and positive, got {exponent}"
+    );
+    let mut cdf = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        total += 1.0 / ((i + 1) as f64).powf(exponent);
+        cdf.push(total);
+    }
+    // Normalize by the generalized harmonic number H_{n,s}; pin the last
+    // entry to exactly 1.0 so the inverse transform can never fall off
+    // the end on a draw of ~1.0.
+    for c in cdf.iter_mut() {
+        *c /= total;
+    }
+    cdf[n - 1] = 1.0;
+    cdf
+}
+
+/// Inverse-transform draw from a precomputed CDF: the first index whose
+/// cumulative mass reaches `u`.
+fn sample_cdf(cdf: &[f64], u: f64) -> usize {
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
+}
 
 /// Draws arrival batches from a planted ground truth.
 #[derive(Clone, Debug)]
@@ -32,6 +85,10 @@ pub struct ArrivalSim {
     truth_core: KruskalCore,
     noise: f32,
     clamp: Option<(f32, f32)>,
+    /// Per-mode coordinate distribution for arrivals.
+    model: ArrivalModel,
+    /// Per-mode CDFs when `model` is Zipf (empty for Uniform).
+    cdfs: Vec<Vec<f64>>,
     /// Total nonzeros generated so far, across all batches.
     generated: usize,
 }
@@ -46,8 +103,28 @@ impl ArrivalSim {
             truth_core: planted.truth_core.clone(),
             noise: spec.noise,
             clamp: spec.clamp,
+            model: ArrivalModel::Uniform,
+            cdfs: Vec::new(),
             generated: 0,
         }
+    }
+
+    /// Builder: switch the per-mode coordinate distribution. Zipf CDFs
+    /// are precomputed here, once per mode, so `next_batch` stays
+    /// allocation-light.
+    pub fn with_arrival_model(mut self, model: ArrivalModel) -> Self {
+        self.model = model;
+        self.cdfs = match model {
+            ArrivalModel::Uniform => Vec::new(),
+            ArrivalModel::Zipf { exponent } => {
+                self.dims.iter().map(|&d| zipf_cdf(d, exponent)).collect()
+            }
+        };
+        self
+    }
+
+    pub fn arrival_model(&self) -> ArrivalModel {
+        self.model
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -69,7 +146,12 @@ impl ArrivalSim {
         let mut coords = vec![0u32; order];
         for _ in 0..nnz {
             for (n, &d) in self.dims.iter().enumerate() {
-                coords[n] = rng.gen_range(d) as u32;
+                coords[n] = match self.model {
+                    ArrivalModel::Uniform => rng.gen_range(d) as u32,
+                    ArrivalModel::Zipf { .. } => {
+                        sample_cdf(&self.cdfs[n], rng.uniform_f64()) as u32
+                    }
+                };
             }
             let mut x = predict_planted(&self.truth_factors, &self.truth_core, &coords);
             x += self.noise * rng.normal();
@@ -133,6 +215,56 @@ mod tests {
         let mut sim = ArrivalSim::from_planted(&p, &spec);
         let batch = sim.next_batch(&mut rng, 100);
         assert!(batch.values().iter().all(|v| (1.0..=5.0).contains(v)));
+    }
+
+    #[test]
+    fn zipf_cdf_is_normalized_monotone_and_invertible_at_the_edges() {
+        let cdf = zipf_cdf(10, 1.0);
+        assert_eq!(cdf.len(), 10);
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(cdf[9], 1.0);
+        // Rank 0 carries mass 1/H_10 ~= 0.3414 under exponent 1.
+        assert!((cdf[0] - 0.3414).abs() < 1e-3);
+        assert_eq!(sample_cdf(&cdf, 0.0), 0);
+        assert_eq!(sample_cdf(&cdf, 1.0), 9);
+        assert_eq!(sample_cdf(&cdf, cdf[0] + 1e-9), 1);
+    }
+
+    #[test]
+    fn zipf_arrivals_skew_toward_low_ids() {
+        let (p, spec, mut rng) = setup(0.1, None);
+        let mut sim = ArrivalSim::from_planted(&p, &spec)
+            .with_arrival_model(ArrivalModel::Zipf { exponent: 1.2 });
+        assert_eq!(sim.arrival_model(), ArrivalModel::Zipf { exponent: 1.2 });
+        let batch = sim.next_batch(&mut rng, 2000);
+        // Under Zipf(1.2) on 15 ids, ranks 0..4 carry ~70% of the mass;
+        // uniform would give them 4/15 ~= 27%. Split the difference for a
+        // comfortably non-flaky bound, and sanity-check the full range.
+        let low = (0..batch.nnz()).filter(|&k| batch.index(k)[0] < 4).count();
+        assert!(
+            low as f64 > 0.5 * batch.nnz() as f64,
+            "expected low-id dominance, got {low}/{}",
+            batch.nnz()
+        );
+        assert!((0..batch.nnz()).all(|k| (batch.index(k)[0] as usize) < spec.dims[0]));
+    }
+
+    #[test]
+    fn zipf_batches_are_deterministic_per_seed() {
+        let (p, spec, _) = setup(0.1, None);
+        let model = ArrivalModel::Zipf { exponent: 1.1 };
+        let mut sim_a = ArrivalSim::from_planted(&p, &spec).with_arrival_model(model);
+        let mut sim_b = ArrivalSim::from_planted(&p, &spec).with_arrival_model(model);
+        let (mut ra, mut rb) = (Rng::new(99), Rng::new(99));
+        let a = sim_a.next_batch(&mut ra, 64);
+        let b = sim_b.next_batch(&mut rb, 64);
+        for k in 0..a.nnz() {
+            assert_eq!(a.index(k), b.index(k));
+        }
+        assert_eq!(
+            a.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

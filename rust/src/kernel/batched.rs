@@ -43,14 +43,18 @@
 //! JAX `train_step` graph, used by the PJRT runtime's native executor.
 
 use crate::kernel::contract::{
-    prefix_suffix_w, strided_matvec, strided_weighted_sum, CoreLayout,
+    prefix_suffix_w, prefix_suffix_w_wide, strided_matvec, strided_matvec_wide,
+    strided_weighted_sum, strided_weighted_sum_wide, CoreLayout,
 };
 use crate::kernel::panel;
-use crate::kernel::plan::PlanScratch;
+use crate::kernel::plan::{Exactness, PlanScratch};
 use crate::kernel::{BatchPlan, FactorAccess, KernelStats};
 use crate::kruskal::KruskalCore;
 use crate::tensor::SparseTensor;
-use crate::util::linalg::{axpy, dot, matvec_rowmajor, scale_axpy, weighted_rowsum};
+use crate::util::linalg::{
+    axpy, dot, matvec_rowmajor, matvec_rowmajor_wide, scale_axpy, weighted_rowsum,
+    weighted_rowsum_wide,
+};
 
 /// Preallocated panels for batched execution (the GPU kernel's shared
 /// memory, sized once for a maximum group length `cap`).
@@ -83,6 +87,32 @@ pub struct BatchWorkspace {
     pub(crate) core_grad_count: usize,
     /// Reusable planning scratch (per-worker; see [`PlanScratch`]).
     pub(crate) plan_scratch: PlanScratch,
+    /// Lazily-allocated f64 scratch for the relaxed wide-accumulation
+    /// path ([`run_group_wide`]); `None` until the first wide group.
+    wide: Option<WideScratch>,
+}
+
+/// Per-sample f64 scratch of the wide-accumulation path (ISSUE 10):
+/// c/pre/suf/w for one sample plus one `gs` row — the wide path is
+/// sequential per sample, so nothing is panel-sized.
+struct WideScratch {
+    c: Vec<f64>,
+    pre: Vec<f64>,
+    suf: Vec<f64>,
+    w: Vec<f64>,
+    gs: Vec<f64>,
+}
+
+impl WideScratch {
+    fn new(order: usize, r_core: usize, j: usize) -> Self {
+        WideScratch {
+            c: vec![0.0; order * r_core],
+            pre: vec![0.0; (order + 1) * r_core],
+            suf: vec![0.0; (order + 1) * r_core],
+            w: vec![0.0; order * r_core],
+            gs: vec![0.0; j],
+        }
+    }
 }
 
 impl BatchWorkspace {
@@ -104,6 +134,7 @@ impl BatchWorkspace {
             core_grad: vec![0.0; order * r_core * j],
             core_grad_count: 0,
             plan_scratch: PlanScratch::new(),
+            wide: None,
         }
     }
 
@@ -142,8 +173,20 @@ pub fn run_plan<F: FactorAccess>(
 ) -> KernelStats {
     assert!(plan.max_batch() <= ws.cap, "plan exceeds workspace capacity");
     let beta = 1.0 - lr_f * lam_f;
-    // Panel-microkernel lane width for this plan (see `kernel::panel`).
+    // Panel-microkernel lane width and SIMD level for this plan (see
+    // `kernel::panel`) — resolved once per run, never handed to the
+    // kernels as `Auto`.
     let lanes = plan.params().lanes.resolve(ws.r_core);
+    let simd = plan.params().simd.resolve();
+    // ISSUE 10 mixed precision: wide f64 accumulation is relaxed-only
+    // (config validation rejects wide + exact — it would break the
+    // bitwise oracle by design); an exact plan that slips through in
+    // release ignores the flag rather than silently changing bits.
+    let wide = plan.params().wide_accum && plan.params().exactness == Exactness::Relaxed;
+    debug_assert!(
+        !(plan.params().wide_accum && plan.params().exactness == Exactness::Exact),
+        "wide_accum is relaxed-only (rejected by TrainConfig::validate)"
+    );
     let mut sse = 0.0f64;
     let mut samples = 0usize;
 
@@ -151,9 +194,16 @@ pub fn run_plan<F: FactorAccess>(
         let ids = plan.group(g);
         let b = ids.len();
         samples += b;
-        run_group(
-            ws, tensor, ids, core, strided, layout, lanes, lr_f, beta, factors, update_core,
-        );
+        if wide {
+            run_group_wide(
+                ws, tensor, ids, core, strided, layout, lr_f, beta, factors, update_core,
+            );
+        } else {
+            run_group(
+                ws, tensor, ids, core, strided, layout, lanes, simd, lr_f, beta, factors,
+                update_core,
+            );
+        }
         // Residual bookkeeping in plan order — the same per-sample f64
         // accumulation sequence as the historical inline loop, so the
         // refactor stays bitwise-neutral.
@@ -186,6 +236,7 @@ pub(crate) fn run_group<F: FactorAccess>(
     strided: &[Vec<f32>],
     layout: CoreLayout,
     lanes: usize,
+    simd: panel::SimdLevel,
     lr_f: f32,
     beta: f32,
     factors: &mut F,
@@ -219,6 +270,7 @@ pub(crate) fn run_group<F: FactorAccess>(
                 &ws.a_panel,
                 &mut ws.c_panel,
                 lanes,
+                simd,
             ),
             CoreLayout::Strided => panel::c_panel_strided(
                 &strided[n],
@@ -329,6 +381,7 @@ pub(crate) fn run_group<F: FactorAccess>(
                 &ws.w_panel,
                 &mut ws.gs_panel,
                 lanes,
+                simd,
             ),
             CoreLayout::Strided => panel::gs_panel_strided(
                 &strided[n],
@@ -380,6 +433,181 @@ pub(crate) fn run_group<F: FactorAccess>(
             ws.core_grad_count += 1;
         }
     }
+}
+
+/// The wide-accumulation group executor (ISSUE 10 mixed precision):
+/// same group semantics as [`run_group`] under a relaxed plan — modes
+/// ≥ 1 staged pre-group with deferred hogwild-composed updates, the
+/// mode-0 chain sequential over fiber sub-runs — but every contraction
+/// reduction (step 1 matvecs, step 2 prefix/suffix products, step 3
+/// weighted sums, the x̂ dot) runs in **f64**, narrowing to the f32
+/// storage exactly once per quantity: `w`/`gs` into the tape panels
+/// (read by the deferred SGD and Eq. 17 accumulation) and the hot
+/// mode-0 row at its SGD write-back. No panel microkernels — the wide
+/// path is sequential per sample by design (`dispatch_plan` never
+/// engages the pool for wide plans), trading throughput for
+/// accumulation headroom on long fibers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_group_wide<F: FactorAccess>(
+    ws: &mut BatchWorkspace,
+    tensor: &SparseTensor,
+    ids: &[u32],
+    core: &KruskalCore,
+    strided: &[Vec<f32>],
+    layout: CoreLayout,
+    lr_f: f32,
+    beta: f32,
+    factors: &mut F,
+    accumulate_core: bool,
+) {
+    let order = ws.order;
+    let r = ws.r_core;
+    let j = ws.j;
+    let b = ids.len();
+    let mut wide = ws
+        .wide
+        .take()
+        .unwrap_or_else(|| WideScratch::new(order, r, j));
+
+    // Gather modes >= 1 into the panel (pre-group mini-batch snapshots —
+    // the relaxed staging semantics of `run_group`).
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        for n in 1..order {
+            let base = (s * order + n) * j;
+            factors.stage(n, coords[n] as usize, &mut ws.a_panel[base..base + j]);
+        }
+    }
+
+    // Sequential per-sample chain, all reductions in f64.
+    let (beta_w, lr_w) = (beta as f64, lr_f as f64);
+    let mut cur_i0 = usize::MAX;
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        let i0 = coords[0] as usize;
+        if i0 != cur_i0 {
+            if cur_i0 != usize::MAX {
+                factors.store(0, cur_i0, &ws.a0);
+            }
+            factors.stage(0, i0, &mut ws.a0);
+            cur_i0 = i0;
+        }
+        let x = tensor.value(k as usize);
+        let abase = s * order * j;
+        // Snapshot the hot row (pre-update linearization point for the
+        // Eq. 17 tape, exactly as in `run_group`).
+        ws.a_panel[abase..abase + j].copy_from_slice(&ws.a0);
+
+        // Step 1, every mode: c[n][r] = b_r^(n) · a^(n), f64 accumulators.
+        for n in 0..order {
+            let a_row = &ws.a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            let c_out = &mut wide.c[n * r..(n + 1) * r];
+            match layout {
+                CoreLayout::Packed => {
+                    matvec_rowmajor_wide(core.factor(n).data(), r, j, a_row, c_out)
+                }
+                CoreLayout::Strided => strided_matvec_wide(&strided[n], r, a_row, c_out),
+            }
+        }
+
+        // Step 2: leave-one-out products in f64; narrow into the w tape
+        // (the Eq. 17 accumulation and the dispatcher-free replay read
+        // f32 — one narrowing per w element).
+        prefix_suffix_w_wide(&wide.c, order, r, &mut wide.pre, &mut wide.suf, &mut wide.w);
+        for (dst, &src) in ws.w_panel[s * order * r..(s + 1) * order * r]
+            .iter_mut()
+            .zip(wide.w.iter())
+        {
+            *dst = src as f32;
+        }
+
+        // Step 3 for mode 0 + residual, f64 end to end.
+        match layout {
+            CoreLayout::Packed => {
+                weighted_rowsum_wide(core.factor(0).data(), r, j, &wide.w[0..r], &mut wide.gs)
+            }
+            CoreLayout::Strided => {
+                strided_weighted_sum_wide(&strided[0], r, j, &wide.w[0..r], &mut wide.gs)
+            }
+        }
+        let mut xhat = 0.0f64;
+        for (&a, &g) in ws.a_panel[abase..abase + j].iter().zip(wide.gs.iter()) {
+            xhat += (a as f64) * g;
+        }
+        let e = xhat - x as f64;
+        ws.e[s] = e as f32;
+        // Eq. 13 on the hot mode-0 row: f64 arithmetic, one narrowing at
+        // the store.
+        for (a, &g) in ws.a0.iter_mut().zip(wide.gs.iter()) {
+            *a = (beta_w * (*a as f64) - lr_w * e * g) as f32;
+        }
+
+        // Step 3 for modes >= 1: f64 weighted sums narrowed into the gs
+        // panel; the deferred SGD below composes them hogwild-style.
+        for n in 1..order {
+            match layout {
+                CoreLayout::Packed => weighted_rowsum_wide(
+                    core.factor(n).data(),
+                    r,
+                    j,
+                    &wide.w[n * r..(n + 1) * r],
+                    &mut wide.gs,
+                ),
+                CoreLayout::Strided => strided_weighted_sum_wide(
+                    &strided[n],
+                    r,
+                    j,
+                    &wide.w[n * r..(n + 1) * r],
+                    &mut wide.gs,
+                ),
+            }
+            let gbase = (s * order + n) * j;
+            for (dst, &src) in ws.gs_panel[gbase..gbase + j].iter_mut().zip(wide.gs.iter()) {
+                *dst = src as f32;
+            }
+        }
+    }
+
+    // Write the last fiber's shared row back.
+    if cur_i0 != usize::MAX {
+        factors.store(0, cur_i0, &ws.a0);
+    }
+
+    // Deferred factor SGD for modes >= 1 (relaxed hogwild composition,
+    // identical to `run_group`).
+    for (s, &k) in ids.iter().enumerate() {
+        let coords = tensor.index(k as usize);
+        let e = ws.e[s];
+        for n in 1..order {
+            let gbase = (s * order + n) * j;
+            factors.update(
+                n,
+                coords[n] as usize,
+                beta,
+                -lr_f * e,
+                &ws.gs_panel[gbase..gbase + j],
+            );
+        }
+    }
+
+    // Eq. 17 core-gradient accumulation from the staged rows and the
+    // narrowed w tape (same association as `run_group`).
+    if accumulate_core {
+        for s in 0..b {
+            accumulate_sample_core_grad(
+                &mut ws.core_grad,
+                ws.e[s],
+                order,
+                r,
+                j,
+                &ws.w_panel[s * order * r..(s + 1) * order * r],
+                &ws.a_panel[s * order * j..(s + 1) * order * j],
+            );
+            ws.core_grad_count += 1;
+        }
+    }
+
+    ws.wide = Some(wide);
 }
 
 /// One sample's Eq. 17 core-gradient accumulation from its staged
@@ -660,11 +888,12 @@ mod tests {
 
     #[test]
     fn lane_widths_and_split_plans_match_scalar_bitwise() {
-        // Module-level pin of the PR-3 tentpole: forcing either lane
-        // width, and refining groups with the split-group rule, keeps
-        // exact batched execution bitwise identical to scalar over plan
+        // Module-level pin of the PR-3 tentpole, extended by ISSUE 10:
+        // forcing either lane width at any host-supported SIMD level,
+        // and refining groups with the split-group rule, keeps exact
+        // batched execution bitwise identical to scalar over plan
         // order. R=5 exercises the quad+tail boundary at both widths.
-        use crate::kernel::panel::Lanes;
+        use crate::kernel::panel::{Lanes, SimdLevel};
         let mut rng = Rng::new(8);
         let dims = vec![512usize, 60, 55];
         let tensor = crate::data::synth::random_uniform(&mut rng, &dims, 2000, 1.0, 5.0);
@@ -679,47 +908,112 @@ mod tests {
             // sub-run its own group) — guaranteed to engage on a tiled
             // hollow plan.
             for split in [1usize, 64] {
-                let params = crate::kernel::plan::PlanParams::tiled(64, 8)
-                    .with_lanes(lanes)
-                    .with_split(split);
-                let plan = BatchPlan::build_params(&tensor, &ids, params);
-                if split > 1 {
-                    assert!(plan.splits() > 0, "split rule never engaged");
-                }
-
-                let mut f_scalar = model.factors.clone();
-                let mut ws = Workspace::new(3, 5, 6);
-                let st_s = scalar::run_ids(
-                    &mut ws, &tensor, plan.ids(), &core, &[], CoreLayout::Packed,
-                    &mut f_scalar, 0.01, 0.001, true, None,
-                );
-
-                let mut f_batch = model.factors.clone();
-                let mut bws = BatchWorkspace::new(3, 5, 6, 64);
-                let st_b = run_plan(
-                    &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed,
-                    &mut f_batch, 0.01, 0.001, true, None,
-                );
-
-                assert_eq!(st_s.samples, st_b.samples);
-                assert_eq!(
-                    st_s.sse.to_bits(),
-                    st_b.sse.to_bits(),
-                    "{lanes:?} split {split}: sse diverged"
-                );
-                for n in 0..3 {
-                    for (a, b) in f_scalar
-                        .mat(n)
-                        .data()
-                        .iter()
-                        .zip(f_batch.mat(n).data().iter())
-                    {
-                        assert_eq!(
-                            a.to_bits(),
-                            b.to_bits(),
-                            "{lanes:?} split {split}: mode {n} factors diverged"
-                        );
+                // Scalar pins the oracle association; Auto resolves to
+                // the host's best vector level (or back to Scalar) and
+                // must not change a single bit.
+                for simd in [SimdLevel::Scalar, SimdLevel::Auto] {
+                    let params = crate::kernel::plan::PlanParams::tiled(64, 8)
+                        .with_lanes(lanes)
+                        .with_split(split)
+                        .with_simd(simd);
+                    let plan = BatchPlan::build_params(&tensor, &ids, params);
+                    if split > 1 {
+                        assert!(plan.splits() > 0, "split rule never engaged");
                     }
+
+                    let mut f_scalar = model.factors.clone();
+                    let mut ws = Workspace::new(3, 5, 6);
+                    let st_s = scalar::run_ids(
+                        &mut ws, &tensor, plan.ids(), &core, &[], CoreLayout::Packed,
+                        &mut f_scalar, 0.01, 0.001, true, None,
+                    );
+
+                    let mut f_batch = model.factors.clone();
+                    let mut bws = BatchWorkspace::new(3, 5, 6, 64);
+                    let st_b = run_plan(
+                        &mut bws, &tensor, &plan, &core, &[], CoreLayout::Packed,
+                        &mut f_batch, 0.01, 0.001, true, None,
+                    );
+
+                    assert_eq!(st_s.samples, st_b.samples);
+                    assert_eq!(
+                        st_s.sse.to_bits(),
+                        st_b.sse.to_bits(),
+                        "{lanes:?} split {split} {simd:?}: sse diverged"
+                    );
+                    for n in 0..3 {
+                        for (a, b) in f_scalar
+                            .mat(n)
+                            .data()
+                            .iter()
+                            .zip(f_batch.mat(n).data().iter())
+                        {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{lanes:?} split {split} {simd:?}: mode {n} factors diverged"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_accum_relaxed_tracks_f32_path_closely() {
+        // ISSUE 10 mixed precision: on the same relaxed plan (same sample
+        // order, same staging semantics) the wide f64-accumulation path
+        // must track the f32 path within rounding noise — it changes
+        // accumulation precision, not the algorithm. Both layouts.
+        use crate::kernel::contract::build_strided;
+        use crate::kernel::plan::{Exactness, PlanParams};
+        let mut rng = Rng::new(9);
+        let dims = vec![512usize, 60, 55];
+        let tensor = crate::data::synth::random_uniform(&mut rng, &dims, 2000, 1.0, 5.0);
+        let model = TuckerModel::init_kruskal(&mut rng, &dims, 6, 5);
+        let core = match &model.core {
+            CoreRepr::Kruskal(k) => k.clone(),
+            _ => unreachable!(),
+        };
+        let strided = build_strided(&core);
+        let ids: Vec<u32> = (0..tensor.nnz() as u32).collect();
+        for layout in [CoreLayout::Packed, CoreLayout::Strided] {
+            let run = |wide: bool| {
+                let params = PlanParams {
+                    exactness: Exactness::Relaxed,
+                    wide_accum: wide,
+                    ..PlanParams::tiled(64, 8)
+                };
+                let plan = BatchPlan::build_params(&tensor, &ids, params);
+                let mut f = model.factors.clone();
+                let mut bws = BatchWorkspace::new(3, 5, 6, 64);
+                let st = run_plan(
+                    &mut bws, &tensor, &plan, &core, &strided, layout, &mut f, 0.01,
+                    0.001, true, None,
+                );
+                (st, f)
+            };
+            let (st_f32, f_f32) = run(false);
+            let (st_wide, f_wide) = run(true);
+            assert_eq!(st_f32.samples, st_wide.samples);
+            assert!(
+                (st_f32.sse - st_wide.sse).abs() <= 1e-3 * st_f32.sse.max(1.0),
+                "{layout:?}: sse {} vs wide {}",
+                st_f32.sse,
+                st_wide.sse
+            );
+            for n in 0..3 {
+                for (a, b) in f_f32
+                    .mat(n)
+                    .data()
+                    .iter()
+                    .zip(f_wide.mat(n).data().iter())
+                {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "{layout:?} mode {n}: {a} vs wide {b}"
+                    );
                 }
             }
         }

@@ -248,6 +248,75 @@ pub(crate) fn prefix_suffix_w(
     }
 }
 
+/// Wide-accumulation [`prefix_suffix_w`]: identical recurrence over f64
+/// (ISSUE 10 `wide_accum` step 2). Kept next to the f32 definition so
+/// the two associations can be compared side by side — the wide path
+/// has no bitwise contract, but it must compute the *same* leave-one-out
+/// products.
+#[inline]
+pub(crate) fn prefix_suffix_w_wide(
+    c: &[f64],
+    order: usize,
+    r_core: usize,
+    pre: &mut [f64],
+    suf: &mut [f64],
+    w: &mut [f64],
+) {
+    for r in 0..r_core {
+        pre[r] = 1.0;
+    }
+    for n in 0..order {
+        for r in 0..r_core {
+            pre[(n + 1) * r_core + r] = pre[n * r_core + r] * c[n * r_core + r];
+        }
+    }
+    for r in 0..r_core {
+        suf[order * r_core + r] = 1.0;
+    }
+    for n in (0..order).rev() {
+        for r in 0..r_core {
+            suf[n * r_core + r] = suf[(n + 1) * r_core + r] * c[n * r_core + r];
+        }
+    }
+    for n in 0..order {
+        for r in 0..r_core {
+            w[n * r_core + r] = pre[n * r_core + r] * suf[(n + 1) * r_core + r];
+        }
+    }
+}
+
+/// Wide-accumulation [`strided_matvec`] (ISSUE 10 `wide_accum` under the
+/// Strided layout).
+#[inline]
+pub(crate) fn strided_matvec_wide(col: &[f32], r_core: usize, a_row: &[f32], out: &mut [f64]) {
+    for r in 0..r_core {
+        let mut acc = 0.0f64;
+        for (jj, &av) in a_row.iter().enumerate() {
+            acc += (col[jj * r_core + r] as f64) * (av as f64);
+        }
+        out[r] = acc;
+    }
+}
+
+/// Wide-accumulation [`strided_weighted_sum`] (ISSUE 10 `wide_accum`
+/// under the Strided layout).
+#[inline]
+pub(crate) fn strided_weighted_sum_wide(
+    col: &[f32],
+    r_core: usize,
+    j: usize,
+    w: &[f64],
+    out: &mut [f64],
+) {
+    for jj in 0..j {
+        let mut acc = 0.0f64;
+        for r in 0..r_core {
+            acc += w[r] * (col[jj * r_core + r] as f64);
+        }
+        out[jj] = acc;
+    }
+}
+
 /// Accumulate the Eq. 17 core gradient for the last contraction into
 /// `ws.core_grad` (uses the staged *pre-update* rows).
 #[inline]

@@ -61,11 +61,14 @@ use crate::tensor::SparseTensor;
 /// How many intra-worker threads an engine's dispatch pool runs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ThreadCount {
-    /// Harness-controlled: the `FASTTUCKER_POOL_THREADS` environment
-    /// variable when set (CI's 2-thread differential pass), else 1.
-    /// Conservative by design — exact pooling is bitwise-neutral, but
-    /// defaulting it on would make relaxed (hogwild) runs
-    /// nondeterministic without an explicit opt-in.
+    /// Measured policy (see
+    /// [`resolve_threads`](crate::kernel::planner::resolve_threads)):
+    /// the `FASTTUCKER_POOL_THREADS` environment variable when set
+    /// (CI's 2-thread differential pass); otherwise **exact** mode opens
+    /// a cores-aware pool (`min(available cores, AUTO_MAX_THREADS)`) —
+    /// bitwise-neutral by the wave contract, soaked through the CI
+    /// differential legs since PR 4 — while **relaxed** (hogwild) mode
+    /// stays at 1 so its nondeterminism remains an explicit opt-in.
     #[default]
     Auto,
     /// Exactly `n` threads (≥ 1; 1 = the sequential executor).
@@ -222,7 +225,19 @@ pub struct DispatchPool {
     tape_w: Vec<f32>,
     tape_a: Vec<f32>,
     color_scratch: ColorScratch,
+    /// Memoized coloring verdicts keyed by
+    /// `(plan fingerprint, tensor revision)` — see
+    /// [`Self::cached_coloring`]. `Some(c)` = the coloring paid off and
+    /// is reusable as-is; `None` = the pays-off gate rejected it
+    /// (sequential dispatch). Threads are implicit: a pool is built for
+    /// one thread count and rebuilt when it changes.
+    color_cache: std::collections::HashMap<(u64, u64), Option<SubGroupColoring>>,
 }
+
+/// Soft cap on memoized coloring verdicts per pool: a worker cycles
+/// through a handful of per-round plans, so anything past this is churn —
+/// the cache is cleared rather than LRU-tracked.
+const COLOR_CACHE_CAP: usize = 32;
 
 impl DispatchPool {
     /// Pool with `threads` workspaces shaped `(order, r_core, j, cap)`.
@@ -239,6 +254,7 @@ impl DispatchPool {
             tape_w: Vec::new(),
             tape_a: Vec::new(),
             color_scratch: ColorScratch::new(),
+            color_cache: std::collections::HashMap::new(),
         }
     }
 
@@ -266,6 +282,29 @@ impl DispatchPool {
     /// Coloring scratch paired with this pool.
     pub fn color_scratch_mut(&mut self) -> &mut ColorScratch {
         &mut self.color_scratch
+    }
+
+    /// Memoized coloring verdict for `(plan fingerprint, tensor
+    /// revision)`, if one was recorded: `Some(Some(c))` = reuse coloring
+    /// `c`, `Some(None)` = the pays-off gate already rejected this plan
+    /// (dispatch sequentially), `None` = not seen yet — color it and
+    /// record the verdict with [`Self::record_coloring`]. Sound because
+    /// the fingerprint pins the exact group structure and the revision
+    /// pins the coordinates the conflict graph is built from
+    /// ([`BatchPlan::fingerprint`]).
+    pub fn cached_coloring(&self, key: (u64, u64)) -> Option<Option<&SubGroupColoring>> {
+        self.color_cache.get(&key).map(|v| v.as_ref())
+    }
+
+    /// Record a coloring verdict (see [`Self::cached_coloring`]). The
+    /// cache is bounded: past [`COLOR_CACHE_CAP`] distinct keys it is
+    /// cleared outright — correct (it is a pure memo) and cheap, since
+    /// steady-state workers see a handful of plans, not thousands.
+    pub fn record_coloring(&mut self, key: (u64, u64), verdict: Option<SubGroupColoring>) {
+        if self.color_cache.len() >= COLOR_CACHE_CAP {
+            self.color_cache.clear();
+        }
+        self.color_cache.insert(key, verdict);
     }
 
     /// Core-gradient accumulator and count of the pool. Invariant: after
@@ -400,6 +439,7 @@ impl DispatchPool {
             (tape_budget / bytes_per_sample).max(plan.max_batch()).max(1);
 
         let lanes = plan.params().lanes.resolve(r);
+        let simd = plan.params().simd.resolve();
         let beta = 1.0 - lr_f * lam_f;
         let mut sse = 0.0f64;
         let mut samples = 0usize;
@@ -479,8 +519,8 @@ impl DispatchPool {
                                 let g = g as usize;
                                 let ids = plan.group(g);
                                 batched::run_group(
-                                    ws, tensor, ids, core, strided, layout, lanes, lr_f,
-                                    beta, &mut access, accumulate_inline,
+                                    ws, tensor, ids, core, strided, layout, lanes, simd,
+                                    lr_f, beta, &mut access, accumulate_inline,
                                 );
                                 // SAFETY: this thread exclusively claimed
                                 // group `g`; groups occupy disjoint

@@ -22,7 +22,7 @@
 //! | [`planner`]  | Cost model choosing [`PlanParams`] (cap, tile, lane width) from fiber-length stats and `R_core`; [`BatchSizing`] `Auto`/`Fixed`; thread resolution + the coloring pays-off gate |
 //! | [`scalar`]   | Reference executor: one nonzero at a time in stream order |
 //! | [`batched`]  | Fiber-batched executor over a plan: per-fiber hot rows, flat `batch × R_core` panels |
-//! | [`panel`]    | SIMD-shaped panel microkernels ([`Lanes`] 4/8 row blocks over `R_core`, scalar tails) the batched executor's deferred c/GS steps run on |
+//! | [`panel`]    | SIMD panel microkernels: [`Lanes`] 4/8 row blocks over `R_core` executed with real arch intrinsics (SSE2/AVX2/NEON) behind runtime detection ([`SimdLevel`] `Auto`/`Scalar`/`V128`/`V256`, `FASTTUCKER_SIMD`), scalar tails — bitwise-identical to the scalar association at every level |
 //! | [`dispatch`] | In-group thread pool ([`DispatchPool`]): fans a plan's split sub-groups across T threads as barrier-separated coloring waves (exact: bitwise-identical to sequential via the plan-order tape; relaxed: one hogwild wave) |
 //! | [`crate::analysis`] | Concurrency-safety layer over everything above: first-principles disjointness auditor (`strict-audit` re-checks every coloring/grid), shadow race detector (`shadow-ledger` records every `SharedFactors` row access), and the unsafe-discipline source lint |
 //! | [`crate::parallel::transport`] | Fault-tolerant exchange behind the device grid: boundary-row and core-gradient panels as framed, checksummed messages over a `Transport` trait (in-proc bitwise oracle + seeded fault injector), with retry/dedup/backoff recovery, typed `TransportError`s, and a protocol event log audited by `analysis::audit_exchange` |
@@ -73,7 +73,7 @@ pub use contract::{
     contract_staged, CoreLayout, Workspace,
 };
 pub use dispatch::{DispatchPool, ThreadCount};
-pub use panel::Lanes;
+pub use panel::{Lanes, SimdLevel};
 pub use plan::{BatchPlan, ColorScratch, ColorStats, Exactness, PlanParams, PlanScratch, SubGroupColoring};
 pub use planner::{BatchSizing, FiberStats};
 

@@ -1,4 +1,4 @@
-//! Panel microkernels: fixed-lane-width, SIMD-shaped inner loops over the
+//! Panel microkernels: fixed-lane-width SIMD inner loops over the
 //! batched executor's `batch × J` / `batch × R_core` panels.
 //!
 //! The batched executor ([`crate::kernel::batched`]) defers the mode-≥1
@@ -11,37 +11,55 @@
 //!
 //! This module owns those inner loops as **lane-blocked microkernels**:
 //! the `R_core` dimension is processed in fixed-width blocks of
-//! [`Lanes`] rows (4 or 8), each block keeping one scalar accumulator
-//! per row so LLVM sees straight-line, associativity-preserving code it
-//! can autovectorize today, and `std::simd` can replace verbatim once
-//! stable (each lane block is exactly one future `f32x4`/`f32x8`
-//! register group; cuFasterTucker's register blocking, arXiv:2210.06014,
-//! is the GPU analogue).
+//! [`Lanes`] rows (4 or 8), and since ISSUE 10 the full lane blocks
+//! execute with **real arch intrinsics** — SSE2/AVX2 on `x86_64`, NEON
+//! on `aarch64` — behind runtime feature detection
+//! (`is_x86_feature_detected!`). The [`SimdLevel`] knob
+//! (`PlanParams::simd` / config `simd = ...` / `--simd` /
+//! `FASTTUCKER_SIMD`) selects the vector width: `Scalar` keeps the
+//! original straight-line Rust, `V128` uses 128-bit registers
+//! (SSE2/NEON), `V256` uses 256-bit AVX2 registers (on hardware without
+//! AVX2, or on `aarch64`, `V256` runs as paired 128-bit ops), and
+//! `Auto` — the default — picks the widest level the host supports,
+//! unless `FASTTUCKER_SIMD` overrides it. cuFasterTucker's register
+//! blocking (arXiv:2210.06014) is the GPU analogue of this layout.
 //!
 //! **The bitwise contract.** Exact-mode batched execution must stay
-//! bit-identical to the scalar executor, so every microkernel reproduces
-//! the float association of the scalar path's primitives
-//! ([`matvec_rowmajor`] / [`weighted_rowsum`] / [`dot`] / [`axpy`]):
+//! bit-identical to the scalar executor at EVERY level, so the vector
+//! paths perform, per lane, exactly the float sequence of the scalar
+//! path's primitives ([`matvec_rowmajor`] / [`weighted_rowsum`] /
+//! [`dot`] / [`axpy`]):
 //!
-//! * rows `0 .. R - R%4` (the scalar primitives' full-quad region) are
-//!   plain sequential sums over `j`, one accumulator per row — widening
-//!   the lane block from 4 to 8 changes *which rows share a pass*, never
-//!   the per-row reduction order;
-//! * tail rows `R - R%4 .. R` go through [`dot`] (c-panel) and [`axpy`]
-//!   (gs-panel), the exact tail association of the scalar primitives;
-//! * an 8-lane gs block adds its two 4-term partial sums to `out[j]`
-//!   **separately**, matching the two quad passes of
-//!   [`weighted_rowsum`] bit for bit.
+//! * **c-panel** vectorizes *across* the block's rows: the lane block is
+//!   packed column-major once per block (`packed[jj*w + i] =
+//!   b_{rr+i}[jj]`, amortized over the group's samples) and each
+//!   `acc_vec += col_vec * splat(a[jj])` step is, in every lane `i`,
+//!   the scalar `acc[i] += rows[i][jj] * xj` in the same `jj` order;
+//! * **gs-panel** vectorizes *along* `j`: each lane `jj` evaluates the
+//!   scalar expression verbatim (width-4 block: `out[jj] += ((w0·r0 +
+//!   w1·r1) + w2·r2) + w3·r3`; width-8 block: two quad partials added
+//!   to `out[jj]` separately), with the leftover `j`-tail running the
+//!   identical scalar expression;
+//! * **no FMA anywhere** — fused multiply-add rounds once where the
+//!   scalar path rounds twice, so the vector paths use separate
+//!   mul/add intrinsics only (IEEE-exact, hence bit-equal per lane);
+//! * tail rows `R - R%4 .. R` go through [`dot`] (c-panel) and
+//!   [`axpy`] (gs-panel) at every level, the exact tail association of
+//!   the scalar primitives.
 //!
-//! Pinned by this module's unit tests (every lane width × tail length)
-//! and end-to-end by
+//! Because every level computes identical bits, level resolution is
+//! semantically invisible (an unsupported request silently degrades to
+//! the widest supported level) and the `FASTTUCKER_SIMD=scalar` CI leg
+//! is a whole-suite differential against the intrinsics. Pinned by this
+//! module's unit tests (every level × lane width × tail length) and
+//! end-to-end by
 //! `tests/properties.rs::prop_panel_microkernel_bitwise_matches_scalar`.
 //!
 //! Under [`CoreLayout::Strided`](crate::kernel::contract::CoreLayout) the
 //! panels walk the column-major core mirror per sample via the shared
-//! strided primitives — lane width does not apply there (the strided walk
-//! is the paper's uncoalesced global-memory ablation, kept structurally
-//! identical to the scalar path by construction).
+//! strided primitives — lane width and SIMD level do not apply there
+//! (the strided walk is the paper's uncoalesced global-memory ablation,
+//! kept structurally identical to the scalar path by construction).
 
 use crate::util::linalg::{axpy, dot, matvec_rowmajor, weighted_rowsum};
 
@@ -54,9 +72,9 @@ pub enum Lanes {
     /// else 4).
     #[default]
     Auto,
-    /// 4-row blocks (one future `f32x4` group; the legacy shape).
+    /// 4-row blocks (one `f32x4` group; the legacy shape).
     W4,
-    /// 8-row blocks (one future `f32x8` / AVX2 group).
+    /// 8-row blocks (one `f32x8` / AVX2 group).
     W8,
 }
 
@@ -99,10 +117,140 @@ impl Lanes {
     }
 }
 
+/// The `FASTTUCKER_SIMD` environment variable: overrides
+/// [`SimdLevel::Auto`] resolution (the CI forced-scalar differential
+/// leg). Accepted spellings: `auto`, `scalar`, `v128`, `v256`. Invalid
+/// values abort loudly — a typo'd level must never silently test less
+/// than CI thinks (the `FASTTUCKER_FAULT_*` validation precedent).
+pub const SIMD_VAR: &str = "FASTTUCKER_SIMD";
+
+/// Vector width of the panel microkernels' full lane blocks. Every
+/// level computes **identical bits** (see the module docs), so the knob
+/// trades only speed; resolution degrades unsupported requests to the
+/// widest supported level without changing results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Widest level the host supports (AVX2 → `V256`, else SSE2/NEON →
+    /// `V128`, else `Scalar`), unless `FASTTUCKER_SIMD` overrides.
+    #[default]
+    Auto,
+    /// The straight-line Rust lane blocks (the pre-ISSUE-10 code path;
+    /// the oracle the vector paths are differential-tested against).
+    Scalar,
+    /// 128-bit registers: SSE2 (`x86_64` baseline) or NEON (`aarch64`
+    /// baseline).
+    V128,
+    /// 256-bit AVX2 registers; on non-AVX2 `x86_64` hardware falls back
+    /// to `V128`, on `aarch64` runs as paired 128-bit NEON ops
+    /// (bit-identical either way).
+    V256,
+}
+
+impl SimdLevel {
+    /// Parse a config/CLI/env spelling.
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s {
+            "auto" => Some(SimdLevel::Auto),
+            "scalar" => Some(SimdLevel::Scalar),
+            "v128" => Some(SimdLevel::V128),
+            "v256" => Some(SimdLevel::V256),
+            _ => None,
+        }
+    }
+
+    /// Level as configured, for observability snapshots and cache keys
+    /// (0 = auto, 1 = scalar, 4/8 = vector lane floats).
+    #[inline]
+    pub fn code(self) -> usize {
+        match self {
+            SimdLevel::Auto => 0,
+            SimdLevel::Scalar => 1,
+            SimdLevel::V128 => 4,
+            SimdLevel::V256 => 8,
+        }
+    }
+
+    /// Resolve to a concrete, hardware-supported level (never `Auto`).
+    /// `Auto` consults `FASTTUCKER_SIMD` (invalid values abort loudly),
+    /// else detects the widest supported level; explicit levels are
+    /// honored, clamped to what the host can run. Resolution happens
+    /// once per plan execution (`run_plan` / the dispatch pool), not in
+    /// the hot loop.
+    pub fn resolve(self) -> SimdLevel {
+        let requested = match self {
+            SimdLevel::Auto => match env_simd() {
+                Some(SimdLevel::Auto) | None => SimdLevel::detect_best(),
+                Some(level) => level,
+            },
+            other => other,
+        };
+        SimdLevel::clamp_to_host(requested)
+    }
+
+    /// Widest level the host supports.
+    fn detect_best() -> SimdLevel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                SimdLevel::V256
+            } else {
+                SimdLevel::V128
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON is part of the aarch64 baseline; V256 would only pair
+            // two q-registers for the same bits, so Auto stops at V128.
+            SimdLevel::V128
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            SimdLevel::Scalar
+        }
+    }
+
+    /// Clamp an explicit request to what this host can execute. The
+    /// degrade is semantically invisible: all levels are bit-identical.
+    fn clamp_to_host(requested: SimdLevel) -> SimdLevel {
+        match requested {
+            SimdLevel::Scalar => SimdLevel::Scalar,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::V256 if !std::arch::is_x86_feature_detected!("avx2") => SimdLevel::V128,
+            #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+            other => other,
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// Cached `FASTTUCKER_SIMD` parse: `None` when unset, loud panic on an
+/// invalid or non-unicode value (never a silent default — the ISSUE 10
+/// env-validation rule, matching `FaultPlan::from_env`).
+fn env_simd() -> Option<SimdLevel> {
+    static ENV: std::sync::OnceLock<Option<SimdLevel>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var_os(SIMD_VAR)?;
+        let Some(s) = raw.to_str() else {
+            panic!("{SIMD_VAR} is not valid unicode: {raw:?} (expected auto|scalar|v128|v256)");
+        };
+        match SimdLevel::parse(s.trim()) {
+            Some(level) => Some(level),
+            None => panic!("{SIMD_VAR}={s:?} is not a SIMD level (expected auto|scalar|v128|v256)"),
+        }
+    })
+}
+
+/// Stack budget (floats) for the column-major lane-block pack buffer;
+/// `j * width` beyond it heap-allocates once per panel call.
+const PACK_STACK: usize = 256;
+
 /// Batched c-panel (Packed layout): `c[s][n] = B^(n) a[s][n]` for samples
-/// `0..b`, `B` rows lane-blocked by `width` (4 or 8). Per-(sample, row)
-/// accumulation is bitwise identical to [`matvec_rowmajor`]: sequential
-/// sums for rows below `r - r % 4`, [`dot`] association for the tail.
+/// `0..b`, `B` rows lane-blocked by `width` (4 or 8), full blocks
+/// executed at `simd` (a **resolved** level — never `Auto`). Per-(sample,
+/// row) accumulation is bitwise identical to [`matvec_rowmajor`] at every
+/// level: sequential sums for rows below `r - r % 4`, [`dot`] association
+/// for the tail.
 #[allow(clippy::too_many_arguments)]
 pub fn c_panel_packed(
     bm: &[f32],
@@ -114,8 +262,27 @@ pub fn c_panel_packed(
     a_panel: &[f32],
     c_panel: &mut [f32],
     width: usize,
+    simd: SimdLevel,
 ) {
     debug_assert!(width == 4 || width == 8);
+    debug_assert!(simd != SimdLevel::Auto, "resolve() the level before the hot loop");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if simd != SimdLevel::Scalar {
+        c_panel_packed_vector(
+            bm,
+            r,
+            j,
+            order,
+            n,
+            b,
+            a_panel,
+            c_panel,
+            width,
+            simd == SimdLevel::V256,
+        );
+        return;
+    }
+    let _ = simd;
     let mut rr = 0;
     if width == 8 {
         while rr + 8 <= r {
@@ -172,6 +339,23 @@ pub fn c_panel_packed(
         }
         rr += 4;
     }
+    c_panel_row_tail(bm, r, j, order, n, b, a_panel, c_panel, rr);
+}
+
+/// Shared `R`-tail of the c-panel (rows `rr..r` through [`dot`]) — one
+/// definition so the scalar and vector paths cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn c_panel_row_tail(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+    mut rr: usize,
+) {
     while rr < r {
         let brow = &bm[rr * j..(rr + 1) * j];
         for s in 0..b {
@@ -182,11 +366,71 @@ pub fn c_panel_packed(
     }
 }
 
+/// Vector c-panel: full lane blocks packed column-major once per block
+/// (`packed[jj*w + i] = b_{rr+i}[jj]` — the pack walks `bm` only, so it
+/// amortizes over the group's `b` samples), then per sample one
+/// `acc += col * splat(a[jj])` step per `jj` — in every lane the exact
+/// scalar sequence `acc[i] += rows[i][jj] * xj`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[allow(clippy::too_many_arguments)]
+fn c_panel_packed_vector(
+    bm: &[f32],
+    r: usize,
+    j: usize,
+    order: usize,
+    n: usize,
+    b: usize,
+    a_panel: &[f32],
+    c_panel: &mut [f32],
+    width: usize,
+    wide: bool,
+) {
+    let mut pack_stack = [0.0f32; PACK_STACK];
+    let mut pack_heap: Vec<f32> = Vec::new();
+    let packed: &mut [f32] = if j * width <= PACK_STACK {
+        &mut pack_stack[..j * width]
+    } else {
+        pack_heap.resize(j * width, 0.0);
+        &mut pack_heap[..]
+    };
+    let mut rr = 0;
+    if width == 8 {
+        while rr + 8 <= r {
+            for (i, row) in bm[rr * j..(rr + 8) * j].chunks_exact(j).enumerate() {
+                for (jj, &v) in row.iter().enumerate() {
+                    packed[jj * 8 + i] = v;
+                }
+            }
+            for s in 0..b {
+                let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+                let cbase = (s * order + n) * r + rr;
+                arch::c_cols8(packed, j, a, &mut c_panel[cbase..cbase + 8], wide);
+            }
+            rr += 8;
+        }
+    }
+    while rr + 4 <= r {
+        for (i, row) in bm[rr * j..(rr + 4) * j].chunks_exact(j).enumerate() {
+            for (jj, &v) in row.iter().enumerate() {
+                packed[jj * 4 + i] = v;
+            }
+        }
+        for s in 0..b {
+            let a = &a_panel[(s * order + n) * j..(s * order + n + 1) * j];
+            let cbase = (s * order + n) * r + rr;
+            arch::c_cols4(&packed[..j * 4], j, a, &mut c_panel[cbase..cbase + 4]);
+        }
+        rr += 4;
+    }
+    c_panel_row_tail(bm, r, j, order, n, b, a_panel, c_panel, rr);
+}
+
 /// Batched gs-panel (Packed layout): `GS[s][n] = Σ_r w[s][n][r] b_r`,
-/// lane-blocked by `width`. Bitwise identical to [`weighted_rowsum`]: an
-/// 8-lane block contributes its two quad partial sums to `out[j]` as two
-/// separate adds (the two quad passes of the scalar primitive); tail rows
-/// go through [`axpy`].
+/// lane-blocked by `width`, full blocks executed at `simd` (resolved).
+/// Bitwise identical to [`weighted_rowsum`] at every level: an 8-lane
+/// block contributes its two quad partial sums to `out[j]` as two
+/// separate adds (the two quad passes of the scalar primitive); tail
+/// rows go through [`axpy`].
 #[allow(clippy::too_many_arguments)]
 pub fn gs_panel_packed(
     bm: &[f32],
@@ -198,11 +442,19 @@ pub fn gs_panel_packed(
     w_panel: &[f32],
     gs_panel: &mut [f32],
     width: usize,
+    simd: SimdLevel,
 ) {
     debug_assert!(width == 4 || width == 8);
+    debug_assert!(simd != SimdLevel::Auto, "resolve() the level before the hot loop");
     for s in 0..b {
         gs_panel[(s * order + n) * j..(s * order + n + 1) * j].fill(0.0);
     }
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    let vector = simd != SimdLevel::Scalar;
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let vector = false;
+    let wide = simd == SimdLevel::V256;
+    let _ = (vector, wide);
     let mut rr = 0;
     if width == 8 {
         while rr + 8 <= r {
@@ -220,7 +472,11 @@ pub fn gs_panel_packed(
                 let wbase = (s * order + n) * r + rr;
                 let w = &w_panel[wbase..wbase + 8];
                 let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
-                for jj in 0..j {
+                #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+                let jj0 = if vector { arch::gs_rows8(&rows, w, out, j, wide) } else { 0 };
+                #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+                let jj0 = 0;
+                for jj in jj0..j {
                     // Two quad partial sums added separately: the exact
                     // float sequence of two width-4 passes.
                     let q0 =
@@ -247,7 +503,15 @@ pub fn gs_panel_packed(
                 w_panel[wbase + 3],
             );
             let out = &mut gs_panel[(s * order + n) * j..(s * order + n + 1) * j];
-            for jj in 0..j {
+            #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+            let jj0 = if vector {
+                arch::gs_rows4([r0, r1, r2, r3], [w0, w1, w2, w3], out, j, wide)
+            } else {
+                0
+            };
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            let jj0 = 0;
+            for jj in jj0..j {
                 out[jj] += w0 * r0[jj] + w1 * r1[jj] + w2 * r2[jj] + w3 * r3[jj];
             }
         }
@@ -264,10 +528,324 @@ pub fn gs_panel_packed(
     }
 }
 
+/// `x86_64` vector primitives (SSE2 baseline + runtime-detected AVX2).
+/// Separate mul/add only — never FMA (see the module's bitwise
+/// contract). Raw-pointer loads/stores are bounds-justified by each
+/// helper's debug-asserted slice lengths.
+#[cfg(target_arch = "x86_64")]
+mod arch {
+    use std::arch::x86_64::*;
+
+    /// One 4-row c-panel accumulation: `out[i] = Σ_jj packed[jj*4+i] *
+    /// a[jj]` with per-lane scalar association.
+    #[inline]
+    pub(super) fn c_cols4(packed: &[f32], j: usize, a: &[f32], out: &mut [f32]) {
+        debug_assert!(packed.len() >= j * 4 && a.len() >= j && out.len() >= 4);
+        // SAFETY: SSE2 is part of the x86_64 baseline ABI, and every
+        // load/store stays in bounds: jj < j so jj*4 + 4 <= packed.len(),
+        // and out holds >= 4 floats (both debug-asserted above).
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for jj in 0..j {
+                let col = _mm_loadu_ps(packed.as_ptr().add(jj * 4));
+                acc = _mm_add_ps(acc, _mm_mul_ps(col, _mm_set1_ps(a[jj])));
+            }
+            _mm_storeu_ps(out.as_mut_ptr(), acc);
+        }
+    }
+
+    /// One 8-row c-panel accumulation; `wide` selects AVX2 (one ymm
+    /// accumulator) vs paired SSE2 xmm accumulators — bit-identical, the
+    /// lanes never interact.
+    #[inline]
+    pub(super) fn c_cols8(packed: &[f32], j: usize, a: &[f32], out: &mut [f32], wide: bool) {
+        debug_assert!(packed.len() >= j * 8 && a.len() >= j && out.len() >= 8);
+        if wide {
+            // SAFETY: `wide` is only set after `is_x86_feature_detected!
+            // ("avx2")` succeeded (SimdLevel::resolve clamps V256 away on
+            // hosts without it), so the target-feature fn may run here.
+            unsafe { c_cols8_avx2(packed, j, a, out) }
+        } else {
+            // SAFETY: SSE2 baseline; bounds as debug-asserted above
+            // (jj*8 + 8 <= packed.len(), out >= 8 floats).
+            unsafe {
+                let mut acc0 = _mm_setzero_ps();
+                let mut acc1 = _mm_setzero_ps();
+                for jj in 0..j {
+                    let base = packed.as_ptr().add(jj * 8);
+                    let xj = _mm_set1_ps(a[jj]);
+                    acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(base), xj));
+                    acc1 = _mm_add_ps(acc1, _mm_mul_ps(_mm_loadu_ps(base.add(4)), xj));
+                }
+                _mm_storeu_ps(out.as_mut_ptr(), acc0);
+                _mm_storeu_ps(out.as_mut_ptr().add(4), acc1);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 via runtime feature detection; the
+    /// slice bounds of [`c_cols8`] must hold.
+    #[target_feature(enable = "avx2")]
+    unsafe fn c_cols8_avx2(packed: &[f32], j: usize, a: &[f32], out: &mut [f32]) {
+        // SAFETY: AVX2 guaranteed by the caller contract; unaligned
+        // loads/stores stay in bounds per c_cols8's debug asserts.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for jj in 0..j {
+                let col = _mm256_loadu_ps(packed.as_ptr().add(jj * 8));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(col, _mm256_set1_ps(a[jj])));
+            }
+            _mm256_storeu_ps(out.as_mut_ptr(), acc);
+        }
+    }
+
+    /// Vector body of a width-4 gs block: lanes `0..ret` of `out` get
+    /// `out[jj] += ((w0·r0[jj] + w1·r1[jj]) + w2·r2[jj]) + w3·r3[jj]`
+    /// (the scalar kernel's exact expression, per lane). Returns the
+    /// first unprocessed `jj`; the caller runs the scalar tail from it.
+    #[inline]
+    pub(super) fn gs_rows4(
+        rows: [&[f32]; 4],
+        w: [f32; 4],
+        out: &mut [f32],
+        j: usize,
+        wide: bool,
+    ) -> usize {
+        debug_assert!(rows.iter().all(|r| r.len() >= j) && out.len() >= j);
+        let mut jj = 0;
+        if wide {
+            // SAFETY: `wide` ⇒ AVX2 runtime-detected (see c_cols8).
+            unsafe {
+                jj = gs_rows4_avx2(rows, w, out, j);
+            }
+        }
+        // SAFETY: SSE2 baseline; every load/store covers jj..jj+4 with
+        // jj + 4 <= j <= each slice's length (debug-asserted above).
+        unsafe {
+            let w0 = _mm_set1_ps(w[0]);
+            let w1 = _mm_set1_ps(w[1]);
+            let w2 = _mm_set1_ps(w[2]);
+            let w3 = _mm_set1_ps(w[3]);
+            while jj + 4 <= j {
+                let mut q = _mm_mul_ps(w0, _mm_loadu_ps(rows[0].as_ptr().add(jj)));
+                q = _mm_add_ps(q, _mm_mul_ps(w1, _mm_loadu_ps(rows[1].as_ptr().add(jj))));
+                q = _mm_add_ps(q, _mm_mul_ps(w2, _mm_loadu_ps(rows[2].as_ptr().add(jj))));
+                q = _mm_add_ps(q, _mm_mul_ps(w3, _mm_loadu_ps(rows[3].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                _mm_storeu_ps(o, _mm_add_ps(_mm_loadu_ps(o), q));
+                jj += 4;
+            }
+        }
+        jj
+    }
+
+    /// # Safety
+    /// AVX2 must be runtime-detected; slice bounds of [`gs_rows4`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn gs_rows4_avx2(rows: [&[f32]; 4], w: [f32; 4], out: &mut [f32], j: usize) -> usize {
+        let mut jj = 0;
+        // SAFETY: AVX2 per the caller contract; loads/stores cover
+        // jj..jj+8 with jj + 8 <= j <= slice lengths.
+        unsafe {
+            let w0 = _mm256_set1_ps(w[0]);
+            let w1 = _mm256_set1_ps(w[1]);
+            let w2 = _mm256_set1_ps(w[2]);
+            let w3 = _mm256_set1_ps(w[3]);
+            while jj + 8 <= j {
+                let mut q = _mm256_mul_ps(w0, _mm256_loadu_ps(rows[0].as_ptr().add(jj)));
+                q = _mm256_add_ps(q, _mm256_mul_ps(w1, _mm256_loadu_ps(rows[1].as_ptr().add(jj))));
+                q = _mm256_add_ps(q, _mm256_mul_ps(w2, _mm256_loadu_ps(rows[2].as_ptr().add(jj))));
+                q = _mm256_add_ps(q, _mm256_mul_ps(w3, _mm256_loadu_ps(rows[3].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), q));
+                jj += 8;
+            }
+        }
+        jj
+    }
+
+    /// Vector body of a width-8 gs block: per lane the two quad partials
+    /// `q0`/`q1` are built left-associated and added to `out[jj]`
+    /// separately — `out[jj] = (out[jj] + q0) + q1`, the scalar kernel's
+    /// exact sequence. Returns the first unprocessed `jj`.
+    #[inline]
+    pub(super) fn gs_rows8(
+        rows: &[&[f32]; 8],
+        w: &[f32],
+        out: &mut [f32],
+        j: usize,
+        wide: bool,
+    ) -> usize {
+        debug_assert!(rows.iter().all(|r| r.len() >= j) && out.len() >= j && w.len() >= 8);
+        let mut jj = 0;
+        if wide {
+            // SAFETY: `wide` ⇒ AVX2 runtime-detected (see c_cols8).
+            unsafe {
+                jj = gs_rows8_avx2(rows, w, out, j);
+            }
+        }
+        // SAFETY: SSE2 baseline; loads/stores cover jj..jj+4 with
+        // jj + 4 <= j <= slice lengths (debug-asserted above).
+        unsafe {
+            while jj + 4 <= j {
+                let mut q0 = _mm_mul_ps(_mm_set1_ps(w[0]), _mm_loadu_ps(rows[0].as_ptr().add(jj)));
+                q0 = _mm_add_ps(q0, _mm_mul_ps(_mm_set1_ps(w[1]), _mm_loadu_ps(rows[1].as_ptr().add(jj))));
+                q0 = _mm_add_ps(q0, _mm_mul_ps(_mm_set1_ps(w[2]), _mm_loadu_ps(rows[2].as_ptr().add(jj))));
+                q0 = _mm_add_ps(q0, _mm_mul_ps(_mm_set1_ps(w[3]), _mm_loadu_ps(rows[3].as_ptr().add(jj))));
+                let mut q1 = _mm_mul_ps(_mm_set1_ps(w[4]), _mm_loadu_ps(rows[4].as_ptr().add(jj)));
+                q1 = _mm_add_ps(q1, _mm_mul_ps(_mm_set1_ps(w[5]), _mm_loadu_ps(rows[5].as_ptr().add(jj))));
+                q1 = _mm_add_ps(q1, _mm_mul_ps(_mm_set1_ps(w[6]), _mm_loadu_ps(rows[6].as_ptr().add(jj))));
+                q1 = _mm_add_ps(q1, _mm_mul_ps(_mm_set1_ps(w[7]), _mm_loadu_ps(rows[7].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                _mm_storeu_ps(o, _mm_add_ps(_mm_add_ps(_mm_loadu_ps(o), q0), q1));
+                jj += 4;
+            }
+        }
+        jj
+    }
+
+    /// # Safety
+    /// AVX2 must be runtime-detected; slice bounds of [`gs_rows8`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn gs_rows8_avx2(rows: &[&[f32]; 8], w: &[f32], out: &mut [f32], j: usize) -> usize {
+        let mut jj = 0;
+        // SAFETY: AVX2 per the caller contract; loads/stores cover
+        // jj..jj+8 with jj + 8 <= j <= slice lengths.
+        unsafe {
+            while jj + 8 <= j {
+                let mut q0 =
+                    _mm256_mul_ps(_mm256_set1_ps(w[0]), _mm256_loadu_ps(rows[0].as_ptr().add(jj)));
+                q0 = _mm256_add_ps(q0, _mm256_mul_ps(_mm256_set1_ps(w[1]), _mm256_loadu_ps(rows[1].as_ptr().add(jj))));
+                q0 = _mm256_add_ps(q0, _mm256_mul_ps(_mm256_set1_ps(w[2]), _mm256_loadu_ps(rows[2].as_ptr().add(jj))));
+                q0 = _mm256_add_ps(q0, _mm256_mul_ps(_mm256_set1_ps(w[3]), _mm256_loadu_ps(rows[3].as_ptr().add(jj))));
+                let mut q1 =
+                    _mm256_mul_ps(_mm256_set1_ps(w[4]), _mm256_loadu_ps(rows[4].as_ptr().add(jj)));
+                q1 = _mm256_add_ps(q1, _mm256_mul_ps(_mm256_set1_ps(w[5]), _mm256_loadu_ps(rows[5].as_ptr().add(jj))));
+                q1 = _mm256_add_ps(q1, _mm256_mul_ps(_mm256_set1_ps(w[6]), _mm256_loadu_ps(rows[6].as_ptr().add(jj))));
+                q1 = _mm256_add_ps(q1, _mm256_mul_ps(_mm256_set1_ps(w[7]), _mm256_loadu_ps(rows[7].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                _mm256_storeu_ps(o, _mm256_add_ps(_mm256_add_ps(_mm256_loadu_ps(o), q0), q1));
+                jj += 8;
+            }
+        }
+        jj
+    }
+}
+
+/// `aarch64` vector primitives (NEON is part of the aarch64 baseline).
+/// `wide` (V256) runs as paired q-registers — identical bits, the lanes
+/// never interact. Separate mul/add only — never FMA.
+#[cfg(target_arch = "aarch64")]
+mod arch {
+    use std::arch::aarch64::*;
+
+    /// One 4-row c-panel accumulation (see the x86_64 twin).
+    #[inline]
+    pub(super) fn c_cols4(packed: &[f32], j: usize, a: &[f32], out: &mut [f32]) {
+        debug_assert!(packed.len() >= j * 4 && a.len() >= j && out.len() >= 4);
+        // SAFETY: NEON is baseline on aarch64; every load/store stays in
+        // bounds (jj < j ⇒ jj*4 + 4 <= packed.len(); out >= 4 floats).
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for jj in 0..j {
+                let col = vld1q_f32(packed.as_ptr().add(jj * 4));
+                acc = vaddq_f32(acc, vmulq_f32(col, vdupq_n_f32(a[jj])));
+            }
+            vst1q_f32(out.as_mut_ptr(), acc);
+        }
+    }
+
+    /// One 8-row c-panel accumulation as paired q-registers (`wide` is
+    /// accepted for signature parity; both levels run the same ops).
+    #[inline]
+    pub(super) fn c_cols8(packed: &[f32], j: usize, a: &[f32], out: &mut [f32], _wide: bool) {
+        debug_assert!(packed.len() >= j * 8 && a.len() >= j && out.len() >= 8);
+        // SAFETY: NEON baseline; bounds as debug-asserted above
+        // (jj*8 + 8 <= packed.len(), out >= 8 floats).
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for jj in 0..j {
+                let base = packed.as_ptr().add(jj * 8);
+                let xj = vdupq_n_f32(a[jj]);
+                acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(base), xj));
+                acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(base.add(4)), xj));
+            }
+            vst1q_f32(out.as_mut_ptr(), acc0);
+            vst1q_f32(out.as_mut_ptr().add(4), acc1);
+        }
+    }
+
+    /// Vector body of a width-4 gs block (see the x86_64 twin; `wide`
+    /// changes nothing on NEON). Returns the first unprocessed `jj`.
+    #[inline]
+    pub(super) fn gs_rows4(
+        rows: [&[f32]; 4],
+        w: [f32; 4],
+        out: &mut [f32],
+        j: usize,
+        _wide: bool,
+    ) -> usize {
+        debug_assert!(rows.iter().all(|r| r.len() >= j) && out.len() >= j);
+        let mut jj = 0;
+        // SAFETY: NEON baseline; loads/stores cover jj..jj+4 with
+        // jj + 4 <= j <= slice lengths (debug-asserted above).
+        unsafe {
+            let w0 = vdupq_n_f32(w[0]);
+            let w1 = vdupq_n_f32(w[1]);
+            let w2 = vdupq_n_f32(w[2]);
+            let w3 = vdupq_n_f32(w[3]);
+            while jj + 4 <= j {
+                let mut q = vmulq_f32(w0, vld1q_f32(rows[0].as_ptr().add(jj)));
+                q = vaddq_f32(q, vmulq_f32(w1, vld1q_f32(rows[1].as_ptr().add(jj))));
+                q = vaddq_f32(q, vmulq_f32(w2, vld1q_f32(rows[2].as_ptr().add(jj))));
+                q = vaddq_f32(q, vmulq_f32(w3, vld1q_f32(rows[3].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                vst1q_f32(o, vaddq_f32(vld1q_f32(o), q));
+                jj += 4;
+            }
+        }
+        jj
+    }
+
+    /// Vector body of a width-8 gs block (see the x86_64 twin). Returns
+    /// the first unprocessed `jj`.
+    #[inline]
+    pub(super) fn gs_rows8(
+        rows: &[&[f32]; 8],
+        w: &[f32],
+        out: &mut [f32],
+        j: usize,
+        _wide: bool,
+    ) -> usize {
+        debug_assert!(rows.iter().all(|r| r.len() >= j) && out.len() >= j && w.len() >= 8);
+        let mut jj = 0;
+        // SAFETY: NEON baseline; loads/stores cover jj..jj+4 with
+        // jj + 4 <= j <= slice lengths (debug-asserted above).
+        unsafe {
+            while jj + 4 <= j {
+                let mut q0 = vmulq_f32(vdupq_n_f32(w[0]), vld1q_f32(rows[0].as_ptr().add(jj)));
+                q0 = vaddq_f32(q0, vmulq_f32(vdupq_n_f32(w[1]), vld1q_f32(rows[1].as_ptr().add(jj))));
+                q0 = vaddq_f32(q0, vmulq_f32(vdupq_n_f32(w[2]), vld1q_f32(rows[2].as_ptr().add(jj))));
+                q0 = vaddq_f32(q0, vmulq_f32(vdupq_n_f32(w[3]), vld1q_f32(rows[3].as_ptr().add(jj))));
+                let mut q1 = vmulq_f32(vdupq_n_f32(w[4]), vld1q_f32(rows[4].as_ptr().add(jj)));
+                q1 = vaddq_f32(q1, vmulq_f32(vdupq_n_f32(w[5]), vld1q_f32(rows[5].as_ptr().add(jj))));
+                q1 = vaddq_f32(q1, vmulq_f32(vdupq_n_f32(w[6]), vld1q_f32(rows[6].as_ptr().add(jj))));
+                q1 = vaddq_f32(q1, vmulq_f32(vdupq_n_f32(w[7]), vld1q_f32(rows[7].as_ptr().add(jj))));
+                let o = out.as_mut_ptr().add(jj);
+                vst1q_f32(o, vaddq_f32(vaddq_f32(vld1q_f32(o), q0), q1));
+                jj += 4;
+            }
+        }
+        jj
+    }
+}
+
 /// Batched c-panel under the Strided layout: per-sample calls of the
 /// shared [`strided_matvec`](crate::kernel::contract::strided_matvec) —
-/// bitwise identical to the scalar path by construction (lane width does
-/// not apply to the strided walk).
+/// bitwise identical to the scalar path by construction (lane width and
+/// SIMD level do not apply to the strided walk).
 #[allow(clippy::too_many_arguments)]
 pub fn c_panel_strided(
     col: &[f32],
@@ -383,13 +961,44 @@ mod tests {
         assert_eq!(Lanes::W8.code(), 8);
     }
 
-    /// Every lane width × every tail length (r mod 4 and r mod 8 both
-    /// sweep 0..) × odd j: the microkernels are bitwise equal to the
-    /// per-sample scalar primitives.
+    #[test]
+    fn simd_level_resolve_and_parse() {
+        assert_eq!(SimdLevel::parse("auto"), Some(SimdLevel::Auto));
+        assert_eq!(SimdLevel::parse("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("v128"), Some(SimdLevel::V128));
+        assert_eq!(SimdLevel::parse("v256"), Some(SimdLevel::V256));
+        assert_eq!(SimdLevel::parse("avx2"), None);
+        assert_eq!(SimdLevel::parse(""), None);
+        assert_eq!(SimdLevel::Auto.code(), 0);
+        assert_eq!(SimdLevel::Scalar.code(), 1);
+        assert_eq!(SimdLevel::V128.code(), 4);
+        assert_eq!(SimdLevel::V256.code(), 8);
+        // Resolution yields a concrete level and is idempotent; an
+        // explicit Scalar request is always honored (the CI forced-
+        // scalar leg relies on it).
+        let auto = SimdLevel::Auto.resolve();
+        assert_ne!(auto, SimdLevel::Auto);
+        assert_eq!(auto.resolve(), auto);
+        assert_eq!(SimdLevel::Scalar.resolve(), SimdLevel::Scalar);
+        for level in [SimdLevel::V128, SimdLevel::V256] {
+            let r = level.resolve();
+            assert_ne!(r, SimdLevel::Auto);
+            assert_eq!(r.resolve(), r);
+        }
+    }
+
+    /// Every SIMD level × lane width × every tail length (r mod 4 and
+    /// r mod 8 both sweep 0..) × odd j: the microkernels are bitwise
+    /// equal to the per-sample scalar primitives.
     #[test]
     fn microkernels_bitwise_match_reference_all_tails() {
         let mut rng = Rng::new(7);
         let (order, n, b) = (3usize, 1usize, 9usize);
+        let levels = [
+            SimdLevel::Scalar,
+            SimdLevel::V128.resolve(),
+            SimdLevel::V256.resolve(),
+        ];
         for r in 1..=17 {
             for j in [1usize, 3, 4, 6, 8, 11] {
                 let bm: Vec<f32> = (0..r * j).map(|_| rng.normal()).collect();
@@ -402,24 +1011,48 @@ mod tests {
                 gs_panel_reference(&bm, r, j, order, n, b, &w_panel, &mut gs_ref);
 
                 for width in [4usize, 8] {
-                    let mut c = vec![0.0f32; b * order * r];
-                    c_panel_packed(&bm, r, j, order, n, b, &a_panel, &mut c, width);
-                    for (x, y) in c.iter().zip(c_ref.iter()) {
-                        assert_eq!(
-                            x.to_bits(),
-                            y.to_bits(),
-                            "c-panel diverged: r={r} j={j} width={width}"
-                        );
+                    for level in levels {
+                        let mut c = vec![0.0f32; b * order * r];
+                        c_panel_packed(&bm, r, j, order, n, b, &a_panel, &mut c, width, level);
+                        for (x, y) in c.iter().zip(c_ref.iter()) {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "c-panel diverged: r={r} j={j} width={width} simd={level:?}"
+                            );
+                        }
+                        let mut gs = vec![0.0f32; b * order * j];
+                        gs_panel_packed(&bm, r, j, order, n, b, &w_panel, &mut gs, width, level);
+                        for (x, y) in gs.iter().zip(gs_ref.iter()) {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "gs-panel diverged: r={r} j={j} width={width} simd={level:?}"
+                            );
+                        }
                     }
-                    let mut gs = vec![0.0f32; b * order * j];
-                    gs_panel_packed(&bm, r, j, order, n, b, &w_panel, &mut gs, width);
-                    for (x, y) in gs.iter().zip(gs_ref.iter()) {
-                        assert_eq!(
-                            x.to_bits(),
-                            y.to_bits(),
-                            "gs-panel diverged: r={r} j={j} width={width}"
-                        );
-                    }
+                }
+            }
+        }
+    }
+
+    /// Wide shapes force the heap pack-buffer path (`j * width >
+    /// PACK_STACK`): still bitwise.
+    #[test]
+    fn microkernels_bitwise_with_heap_pack_buffer() {
+        let mut rng = Rng::new(11);
+        let (order, n, b, r, j) = (2usize, 0usize, 3usize, 9usize, 40usize);
+        assert!(j * 8 > PACK_STACK);
+        let bm: Vec<f32> = (0..r * j).map(|_| rng.normal()).collect();
+        let a_panel: Vec<f32> = (0..b * order * j).map(|_| rng.normal()).collect();
+        let mut c_ref = vec![0.0f32; b * order * r];
+        c_panel_reference(&bm, r, j, order, n, b, &a_panel, &mut c_ref);
+        for width in [4usize, 8] {
+            for level in [SimdLevel::V128.resolve(), SimdLevel::V256.resolve()] {
+                let mut c = vec![0.0f32; b * order * r];
+                c_panel_packed(&bm, r, j, order, n, b, &a_panel, &mut c, width, level);
+                for (x, y) in c.iter().zip(c_ref.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "width={width} simd={level:?}");
                 }
             }
         }

@@ -65,9 +65,10 @@
 //! (reusable via [`ColorScratch`]), because along a row's chain the last
 //! toucher always carries that chain's maximum color.
 
-use crate::kernel::panel::Lanes;
+use crate::kernel::panel::{Lanes, SimdLevel};
 use crate::metrics::PlanStats;
 use crate::tensor::SparseTensor;
+use crate::util::hash::{FNV_OFFSET, FNV_PRIME};
 
 /// Collision semantics of a plan (see module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -95,6 +96,18 @@ pub struct PlanParams {
     /// [`crate::kernel::panel`]); carried on the plan so the executor and
     /// the planner agree per workload. Does not affect group formation.
     pub lanes: Lanes,
+    /// Vector instruction level of the panel microkernels executing
+    /// this plan (see [`crate::kernel::panel::SimdLevel`]); carried on
+    /// the plan like `lanes` so the executor and the planner agree per
+    /// workload. Does not affect group formation, and — because every
+    /// level combines per-lane partial sums in the scalar association —
+    /// does not affect exact-mode results either.
+    pub simd: SimdLevel,
+    /// Accumulate the per-sample contraction in f64 even though
+    /// storage stays f32 (relaxed mode only — see
+    /// [`crate::kernel::batched::run_plan`]). Does not affect group
+    /// formation.
+    pub wide_accum: bool,
     /// Split-group factor (≥ 1): groups are additionally cut once they
     /// reach `ceil(max_batch / split)` samples — in [`Exactness::Exact`]
     /// mode only at fiber **sub-run boundaries** (so the per-fiber mode-0
@@ -119,6 +132,8 @@ impl Default for PlanParams {
             tile: 1,
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
+            simd: SimdLevel::Auto,
+            wide_accum: false,
             split: 1,
             degraded: false,
         }
@@ -153,6 +168,18 @@ impl PlanParams {
         self
     }
 
+    /// Builder-style SIMD level.
+    pub fn with_simd(mut self, simd: SimdLevel) -> PlanParams {
+        self.simd = simd;
+        self
+    }
+
+    /// Builder-style wide (f64) accumulation toggle.
+    pub fn with_wide_accum(mut self, wide_accum: bool) -> PlanParams {
+        self.wide_accum = wide_accum;
+        self
+    }
+
     /// Per-sub-group sample budget the split factor implies.
     pub fn split_budget(&self) -> usize {
         self.max_batch.div_ceil(self.split.max(1))
@@ -173,6 +200,23 @@ pub struct BatchPlan {
     /// Group boundaries introduced by the split-group rule (beyond the
     /// cap/tile/distinctness splits an unsplit plan would make).
     splits: usize,
+    /// FNV-1a over the grouping-relevant params and the sorted id
+    /// stream: two plans with equal fingerprints over the same tensor
+    /// revision form identical groups, so per-plan derived artifacts
+    /// (the sub-group coloring and its pays-off verdict —
+    /// [`crate::kernel::dispatch`]) can be cached against it. `lanes`/
+    /// `simd`/`wide_accum` are deliberately excluded: they never affect
+    /// group formation.
+    fingerprint: u64,
+}
+
+/// Fold `bytes` into an incremental FNV-1a state.
+#[inline]
+fn fnv_mix(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
 }
 
 /// Reusable scratch for [`BatchPlan::build_params_with_scratch`]: the
@@ -349,7 +393,18 @@ impl BatchPlan {
             offsets.push(sorted.len());
         }
         scratch.serial = serial;
-        BatchPlan { ids: sorted, offsets, params, fiber_slots, splits }
+        // Fingerprint: the grouping inputs (cap/tile/exactness/split)
+        // plus the sorted id stream. One O(nnz) byte sweep — small next
+        // to the sort above.
+        let mut fingerprint = FNV_OFFSET;
+        fnv_mix(&mut fingerprint, &(params.max_batch as u64).to_le_bytes());
+        fnv_mix(&mut fingerprint, &(params.tile as u64).to_le_bytes());
+        fnv_mix(&mut fingerprint, &[exact as u8]);
+        fnv_mix(&mut fingerprint, &(params.split as u64).to_le_bytes());
+        for &k in &sorted {
+            fnv_mix(&mut fingerprint, &k.to_le_bytes());
+        }
+        BatchPlan { ids: sorted, offsets, params, fiber_slots, splits, fingerprint }
     }
 
     /// All ids in execution order (the scalar reference must iterate this
@@ -406,6 +461,12 @@ impl BatchPlan {
     /// Fiber sub-runs summed over groups (see field docs).
     pub fn fiber_slots(&self) -> usize {
         self.fiber_slots
+    }
+
+    /// Grouping fingerprint (see the field docs): equal fingerprints on
+    /// the same tensor revision ⇒ identical groups ⇒ identical coloring.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     /// Group boundaries the split-group rule introduced (0 when

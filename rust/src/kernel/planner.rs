@@ -26,7 +26,7 @@
 //! single-fiber cap (0/1 = scalar execution).
 
 use crate::kernel::dispatch::ThreadCount;
-use crate::kernel::panel::Lanes;
+use crate::kernel::panel::{Lanes, SimdLevel};
 use crate::kernel::plan::{ColorStats, Exactness, PlanParams};
 use crate::log_warn;
 use crate::tensor::SparseTensor;
@@ -52,10 +52,11 @@ pub enum BatchSizing {
 
 impl BatchSizing {
     /// Resolve to concrete [`PlanParams`] for a workload, or `None` when
-    /// this sizing selects the scalar kernel. `lanes`/`split` are the
-    /// user's microkernel tuning ([`Lanes::Auto`] lets the planner pick
-    /// the lane width from `R_core`; `split` ≥ 1 is honored as given,
-    /// with 0 treated as 1).
+    /// this sizing selects the scalar kernel. `lanes`/`simd`/`split` are
+    /// the user's microkernel tuning ([`Lanes::Auto`] lets the planner
+    /// pick the lane width from `R_core`, [`SimdLevel::Auto`] the vector
+    /// level from the host via [`SimdLevel::resolve`]; `split` ≥ 1 is
+    /// honored as given, with 0 treated as 1).
     #[allow(clippy::too_many_arguments)]
     pub fn resolve(
         self,
@@ -66,6 +67,7 @@ impl BatchSizing {
         j: usize,
         exactness: Exactness,
         lanes: Lanes,
+        simd: SimdLevel,
         split: usize,
     ) -> Option<PlanParams> {
         match self {
@@ -75,12 +77,13 @@ impl BatchSizing {
                 tile: 1,
                 exactness,
                 lanes: resolve_lanes(lanes, r_core),
+                simd: simd.resolve(),
                 split: split.max(1),
-                degraded: false,
+                ..Default::default()
             }),
             BatchSizing::Auto => {
                 let stats = FiberStats::compute_full(tensor, ids_hint);
-                Some(choose_params(&stats, order, r_core, j, exactness, lanes, split))
+                Some(choose_params(&stats, order, r_core, j, exactness, lanes, simd, split))
             }
         }
     }
@@ -189,12 +192,14 @@ impl FiberStats {
 
 /// The cost model (see module docs): group cap from the panel footprint,
 /// tile width from the fiber-length statistics, lane width from `R_core`
-/// (via [`resolve_lanes`] when `lanes` is `Auto`), split factor honored
-/// as configured.
+/// (via [`resolve_lanes`] when `lanes` is `Auto`), SIMD level from the
+/// host (via [`SimdLevel::resolve`] when `simd` is `Auto`), split factor
+/// honored as configured.
 ///
 /// Degenerate workloads (empty tensor / empty id set: zero means in
 /// `stats`) resolve to the minimum cap with a single-fiber tile — never a
 /// zero cap, zero tile, or a division by zero.
+#[allow(clippy::too_many_arguments)]
 pub fn choose_params(
     stats: &FiberStats,
     order: usize,
@@ -202,9 +207,11 @@ pub fn choose_params(
     j: usize,
     exactness: Exactness,
     lanes: Lanes,
+    simd: SimdLevel,
     split: usize,
 ) -> PlanParams {
     let lanes = resolve_lanes(lanes, r_core);
+    let simd = simd.resolve();
     let split = split.max(1);
     if stats.n_ids == 0 || stats.n_fibers == 0 {
         // Empty/degenerate workload: nothing to batch — minimum cap,
@@ -223,7 +230,16 @@ pub fn choose_params(
                 stats.n_fibers
             );
         }
-        return PlanParams { max_batch: MIN_CAP, tile: 1, exactness, lanes, split, degraded };
+        return PlanParams {
+            max_batch: MIN_CAP,
+            tile: 1,
+            exactness,
+            lanes,
+            simd,
+            split,
+            degraded,
+            ..Default::default()
+        };
     }
     let bytes_per_sample = order.max(1) * 2 * (j + r_core) * 4;
     let mut cap = PANEL_BUDGET_BYTES / bytes_per_sample.max(1);
@@ -243,19 +259,35 @@ pub fn choose_params(
     } else {
         ((cap as f64 / mean).ceil() as usize).clamp(1, MAX_TILE.min(cap))
     };
-    PlanParams { max_batch: cap, tile, exactness, lanes, split, degraded: false }
+    PlanParams { max_batch: cap, tile, exactness, lanes, simd, split, ..Default::default() }
 }
+
+/// Widest pool `Auto` will open on its own: wave parallelism on the
+/// exact workloads the pool serves saturates quickly, and anything wider
+/// is the user's explicit call (`Fixed(n)` or the env knob).
+pub const AUTO_MAX_THREADS: usize = 4;
 
 /// Resolve a [`ThreadCount`] to a concrete in-group pool width.
 /// `Fixed(n)` is honored (clamped to ≥ 1). `Auto` reads
-/// `FASTTUCKER_POOL_THREADS` (the CI differential knob) and otherwise
-/// stays at 1 — exact pooling is bitwise-neutral, but relaxed (hogwild)
-/// pooling is racy by design, so pools engage only on explicit opt-in.
-pub fn resolve_threads(threads: ThreadCount) -> usize {
+/// `FASTTUCKER_POOL_THREADS` (the CI differential knob) first; without
+/// it, **exact** mode engages the measured cores-aware policy — pooled
+/// exact execution is bitwise-neutral and has soaked through the
+/// `FASTTUCKER_POOL_THREADS=2` CI leg since PR 4, so `Auto` now opens
+/// `min(available cores, `[`AUTO_MAX_THREADS`]`)` — while **relaxed**
+/// (hogwild) mode stays at 1: its pooling is racy by design and its
+/// RMSE-envelope pins assume a single-threaded run, so it still engages
+/// only on explicit opt-in.
+pub fn resolve_threads(threads: ThreadCount, exactness: Exactness) -> usize {
     match threads {
         ThreadCount::Fixed(n) => n.max(1),
         ThreadCount::Auto => match std::env::var("FASTTUCKER_POOL_THREADS") {
-            Err(_) => 1,
+            Err(_) => match exactness {
+                Exactness::Exact => std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .min(AUTO_MAX_THREADS),
+                Exactness::Relaxed => 1,
+            },
             Ok(raw) => match raw.trim().parse::<usize>() {
                 Ok(n) if n >= 1 => n,
                 _ => {
@@ -371,14 +403,14 @@ mod tests {
     fn planner_tiles_hollow_and_not_tall() {
         // All-singleton fibers => widest useful tile.
         let singleton = FiberStats { n_ids: 100_000, n_fibers: 100_000, mean_len: 1.0, p90_len: 1, max_len: 1 };
-        let p = choose_params(&singleton, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1);
+        let p = choose_params(&singleton, 3, 16, 16, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1);
         assert!(p.max_batch.is_power_of_two());
         assert!((MIN_CAP..=MAX_CAP).contains(&p.max_batch));
         assert_eq!(p.tile, MAX_TILE.min(p.max_batch), "singleton fibers want the max tile");
 
         // One giant fiber => single-fiber groups suffice.
         let giant = FiberStats { n_ids: 100_000, n_fibers: 1, mean_len: 100_000.0, p90_len: 100_000, max_len: 100_000 };
-        let p = choose_params(&giant, 3, 16, 16, Exactness::Relaxed, Lanes::Auto, 1);
+        let p = choose_params(&giant, 3, 16, 16, Exactness::Relaxed, Lanes::Auto, SimdLevel::Scalar, 1);
         assert_eq!(p.tile, 1);
         assert_eq!(p.exactness, Exactness::Relaxed);
     }
@@ -387,14 +419,14 @@ mod tests {
     fn planner_cap_respects_budget_and_workload() {
         // Budget shrinks the cap as panels grow.
         let s = FiberStats { n_ids: 1 << 20, n_fibers: 1 << 12, mean_len: 256.0, p90_len: 400, max_len: 800 };
-        let small = choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, 1).max_batch;
-        let big = choose_params(&s, 3, 64, 64, Exactness::Exact, Lanes::Auto, 1).max_batch;
+        let small = choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1).max_batch;
+        let big = choose_params(&s, 3, 64, 64, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1).max_batch;
         assert!(big <= small, "bigger panels must not get a bigger cap");
         assert!(big >= MIN_CAP);
 
         // Tiny workloads don't get giant workspaces.
         let tiny = FiberStats { n_ids: 20, n_fibers: 10, mean_len: 2.0, p90_len: 3, max_len: 4 };
-        let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
+        let p = choose_params(&tiny, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1);
         assert!(p.max_batch <= 32, "cap {} for a 20-sample workload", p.max_batch);
     }
 
@@ -403,23 +435,23 @@ mod tests {
         // ISSUE 4 satellite: a degenerate workload silently neutering
         // relaxed/split semantics must be recorded, not swallowed.
         let empty = FiberStats::default();
-        let p = choose_params(&empty, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 1);
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, SimdLevel::Scalar, 1);
         assert!(p.degraded, "relaxed on an empty workload must degrade loudly");
-        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 4);
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 4);
         assert!(p.degraded, "split > 1 on an empty workload must degrade loudly");
         assert_eq!(p.split, 4, "the requested split is still carried for observability");
         // Plain exact/unsplit degenerate resolution is NOT degraded.
-        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1);
         assert!(!p.degraded);
         // Healthy workloads are never degraded.
         let s = FiberStats { n_ids: 1000, n_fibers: 100, mean_len: 10.0, p90_len: 15, max_len: 30 };
-        let p = choose_params(&s, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 4);
+        let p = choose_params(&s, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, SimdLevel::Scalar, 4);
         assert!(!p.degraded);
 
         // Through the Auto path end to end, and into PlanStats.
         let t = SparseTensor::new_unchecked(vec![4, 4, 4], Vec::new(), Vec::new());
         let p = BatchSizing::Auto
-            .resolve(&t, 0, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 2)
+            .resolve(&t, 0, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, SimdLevel::Scalar, 2)
             .unwrap();
         assert!(p.degraded);
         let plan = crate::kernel::BatchPlan::build_params(&t, &[], p);
@@ -429,13 +461,25 @@ mod tests {
     #[test]
     fn thread_resolution_and_pays_off_gate() {
         use crate::kernel::dispatch::ThreadCount;
-        assert_eq!(resolve_threads(ThreadCount::Fixed(3)), 3);
-        assert_eq!(resolve_threads(ThreadCount::Fixed(0)), 1, "Fixed(0) clamps to 1");
-        // Auto without the env override stays sequential. (The env-set
-        // case is exercised by CI's FASTTUCKER_POOL_THREADS=2 pass; not
-        // asserted here to keep the test env-independent.)
+        assert_eq!(resolve_threads(ThreadCount::Fixed(3), Exactness::Exact), 3);
+        assert_eq!(
+            resolve_threads(ThreadCount::Fixed(0), Exactness::Relaxed),
+            1,
+            "Fixed(0) clamps to 1"
+        );
+        // Auto without the env override: exact mode engages the
+        // cores-aware policy (≥ 1, capped), relaxed mode stays
+        // sequential — its nondeterminism needs an explicit opt-in.
+        // (The env-set case is exercised by CI's
+        // FASTTUCKER_POOL_THREADS=2 pass; not asserted here to keep the
+        // test env-independent.)
         if std::env::var("FASTTUCKER_POOL_THREADS").is_err() {
-            assert_eq!(resolve_threads(ThreadCount::Auto), 1);
+            let auto = resolve_threads(ThreadCount::Auto, Exactness::Exact);
+            assert!(
+                (1..=AUTO_MAX_THREADS).contains(&auto),
+                "cores-aware Auto resolved to {auto}"
+            );
+            assert_eq!(resolve_threads(ThreadCount::Auto, Exactness::Relaxed), 1);
         }
 
         // Conflict-density gate: chains don't pay, wide waves do.
@@ -453,7 +497,7 @@ mod tests {
         // not divide by zero or emit a zero cap/tile.
         let empty = FiberStats::default();
         assert_eq!(empty.n_ids, 0);
-        let p = choose_params(&empty, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1);
+        let p = choose_params(&empty, 3, 16, 16, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1);
         assert_eq!(p.max_batch, MIN_CAP);
         assert_eq!(p.tile, 1);
         assert!(p.split >= 1);
@@ -461,17 +505,17 @@ mod tests {
         // Hand-built stats with n_ids > 0 but zeroed means must also be
         // safe (tile ≥ 1, cap ≥ MIN_CAP).
         let weird = FiberStats { n_ids: 5, n_fibers: 5, mean_len: 0.0, p90_len: 0, max_len: 0 };
-        let p = choose_params(&weird, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1);
+        let p = choose_params(&weird, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1);
         assert!(p.max_batch >= MIN_CAP && p.tile >= 1);
 
         // split = 0 is normalized to 1, not propagated.
-        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, 0);
+        let p = choose_params(&empty, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 0);
         assert_eq!(p.split, 1);
 
         // Empty tensor through the Auto path end to end.
         let t = SparseTensor::new_unchecked(vec![4, 4, 4], Vec::new(), Vec::new());
         let p = BatchSizing::Auto
-            .resolve(&t, 0, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
+            .resolve(&t, 0, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1)
             .unwrap();
         assert_eq!(p.max_batch, MIN_CAP);
         assert_eq!(p.tile, 1);
@@ -479,7 +523,7 @@ mod tests {
         // One-nnz tensor: minimum cap, nonzero tile.
         let one = SparseTensor::new_unchecked(vec![4, 4, 4], vec![1, 2, 3], vec![1.0]);
         let p = BatchSizing::Auto
-            .resolve(&one, 1, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
+            .resolve(&one, 1, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1)
             .unwrap();
         assert!(p.max_batch >= MIN_CAP && p.tile >= 1);
     }
@@ -488,25 +532,25 @@ mod tests {
     fn planner_selects_lane_width_from_r_core() {
         let s = FiberStats { n_ids: 1000, n_fibers: 100, mean_len: 10.0, p90_len: 15, max_len: 30 };
         assert_eq!(
-            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, 1).lanes,
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1).lanes,
             Lanes::W8
         );
         assert_eq!(
-            choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, 1).lanes,
+            choose_params(&s, 3, 8, 8, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1).lanes,
             Lanes::W8
         );
         assert_eq!(
-            choose_params(&s, 3, 7, 8, Exactness::Exact, Lanes::Auto, 1).lanes,
+            choose_params(&s, 3, 7, 8, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1).lanes,
             Lanes::W4
         );
         // Explicit widths are honored.
         assert_eq!(
-            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::W4, 1).lanes,
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::W4, SimdLevel::Scalar, 1).lanes,
             Lanes::W4
         );
         // Split passes through.
         assert_eq!(
-            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, 4).split,
+            choose_params(&s, 3, 16, 16, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 4).split,
             4
         );
     }
@@ -516,15 +560,15 @@ mod tests {
         let mut rng = Rng::new(9);
         let t = synth::random_uniform(&mut rng, &[128, 32, 32], 1000, 1.0, 5.0);
         assert_eq!(
-            BatchSizing::Fixed(0).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1),
+            BatchSizing::Fixed(0).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1),
             None
         );
         assert_eq!(
-            BatchSizing::Fixed(1).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1),
+            BatchSizing::Fixed(1).resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1),
             None
         );
         let fixed = BatchSizing::Fixed(48)
-            .resolve(&t, 1000, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, 2)
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Relaxed, Lanes::Auto, SimdLevel::Scalar, 2)
             .unwrap();
         assert_eq!(fixed.max_batch, 48);
         assert_eq!(fixed.tile, 1);
@@ -532,7 +576,7 @@ mod tests {
         assert_eq!(fixed.lanes, Lanes::W4, "r_core 4 resolves to 4-lane blocks");
         assert_eq!(fixed.split, 2);
         let auto = BatchSizing::Auto
-            .resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, 1)
+            .resolve(&t, 1000, 3, 4, 4, Exactness::Exact, Lanes::Auto, SimdLevel::Scalar, 1)
             .unwrap();
         assert!(auto.max_batch >= MIN_CAP);
         // mean fiber len ~ 1000/128 ≈ 7.8 — hollow, so the tile engages.

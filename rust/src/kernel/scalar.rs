@@ -3,6 +3,12 @@
 //! bit-for-bit. This is the per-sample update extracted from the old
 //! `FastTucker::train_epoch` inline loop (stage → contract → core-grad
 //! accumulate → factor SGD write-back).
+//!
+//! This kernel stays pure f32 at every [`SimdLevel`](crate::kernel::SimdLevel)
+//! and ignores `wide_accum` on purpose: it *is* the bitwise oracle the
+//! SIMD panel microkernels and the f64 wide-accumulation path (ISSUE 10,
+//! `kernel/batched.rs`) are differential-tested against, so it must
+//! never move.
 
 use crate::kernel::contract::{
     accumulate_core_grad, contract_staged, CoreLayout, Workspace,

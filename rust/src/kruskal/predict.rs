@@ -34,6 +34,11 @@
 //! tail`, exactly `dot`), so every intermediate is bit-equal and the
 //! final scores match `predict_one` bitwise — property-pinned below over
 //! layouts, orders, and candidate counts.
+//!
+//! Serving always reads the f32 instantiation of the (now generic, see
+//! [`crate::util::element::Element`]) factor storage: prediction is the
+//! bitwise contract surface, so it takes no `SimdLevel`/`wide_accum`
+//! dependence — those knobs live entirely in the training kernels.
 
 use crate::kruskal::KruskalCore;
 use crate::model::factors::FactorMatrices;

@@ -5,7 +5,8 @@
 //!                   [--engine native|parallel|pjrt] [--j N] [--r-core N]
 //!                   [--epochs N] [--workers M] [--seed S] [--scale F]
 //!                   [--batch auto|N] [--exactness exact|relaxed]
-//!                   [--lanes auto|4|8] [--split N] [--threads auto|N]
+//!                   [--lanes auto|4|8] [--simd auto|scalar|v128|v256]
+//!                   [--wide-accum] [--split N] [--threads auto|N]
 //!                   [--devices auto|D] [--transport auto|direct|channel]
 //!                   [--prefetch auto|off|async] [--staleness N]
 //!                   [--checkpoint OUT.ftck]
@@ -68,7 +69,8 @@ USAGE:
                     [--epochs N] [--workers M] [--seed S] [--scale F]
                     [--sample-frac F] [--no-core] [--checkpoint OUT.ftck]
                     [--batch auto|N] [--exactness exact|relaxed]
-                    [--lanes auto|4|8] [--split N] [--threads auto|N]
+                    [--lanes auto|4|8] [--simd auto|scalar|v128|v256]
+                    [--wide-accum] [--split N] [--threads auto|N]
                     [--devices auto|D] [--transport auto|direct|channel]
                     [--prefetch auto|off|async] [--staleness N]
                     [--eval-every N] [--eval-threads N]
@@ -136,6 +138,13 @@ fn apply_overrides(cfg: &mut TrainConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("lanes") {
         cfg.lanes = fasttucker::kernel::Lanes::parse(v)
             .ok_or_else(|| anyhow!("--lanes expects auto|4|8, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("simd") {
+        cfg.simd = fasttucker::kernel::SimdLevel::parse(v)
+            .ok_or_else(|| anyhow!("--simd expects auto|scalar|v128|v256, got {v:?}"))?;
+    }
+    if args.has_flag("wide-accum") {
+        cfg.wide_accum = true;
     }
     if let Some(v) = args.get_usize("split")? {
         cfg.split = v;

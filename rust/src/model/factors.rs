@@ -4,28 +4,36 @@
 //! of work) is one contiguous cache-line-friendly slice — the CPU analogue
 //! of the paper's memory-coalesced layout.
 
+use crate::util::element::Element;
 use crate::util::Rng;
 
 /// Row-major dense matrix.
+///
+/// The storage type `E` is any sealed [`Element`] (ISSUE 10): the
+/// default `f32` is what every hot kernel consumes; the type parameter
+/// keeps factor-storage precision an independent axis from the input
+/// value precision ([`crate::tensor::SparseTensor`]). Mixed precision
+/// pairs f32 storage with f64 *accumulation* (`PlanParams::wide_accum`)
+/// rather than f64 storage, so the hot rows stay half the size.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Matrix {
+pub struct Matrix<E: Element = f32> {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: Vec<E>,
 }
 
-impl Matrix {
+impl<E: Element> Matrix<E> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: vec![E::ZERO; rows * cols] }
     }
 
-    pub fn from_data(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+    pub fn from_data(rows: usize, cols: usize, data: Vec<E>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
     pub fn random(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Self {
-        let data = (0..rows * cols).map(|_| scale * rng.normal()).collect();
+        let data = (0..rows * cols).map(|_| E::from_f32(scale * rng.normal())).collect();
         Matrix { rows, cols, data }
     }
 
@@ -38,37 +46,37 @@ impl Matrix {
     }
 
     #[inline]
-    pub fn row(&self, i: usize) -> &[f32] {
+    pub fn row(&self, i: usize) -> &[E] {
         debug_assert!(i < self.rows);
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [E] {
         debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    pub fn data(&self) -> &[f32] {
+    pub fn data(&self) -> &[E] {
         &self.data
     }
 
-    pub fn data_mut(&mut self) -> &mut [f32] {
+    pub fn data_mut(&mut self) -> &mut [E] {
         &mut self.data
     }
 
     #[inline]
-    pub fn get(&self, i: usize, j: usize) -> f32 {
+    pub fn get(&self, i: usize, j: usize) -> E {
         self.data[i * self.cols + j]
     }
 
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+    pub fn set(&mut self, i: usize, j: usize, v: E) {
         self.data[i * self.cols + j] = v;
     }
 
     /// Transposed copy.
-    pub fn transposed(&self) -> Matrix {
+    pub fn transposed(&self) -> Matrix<E> {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
             for j in 0..self.cols {
@@ -78,21 +86,21 @@ impl Matrix {
         out
     }
 
-    /// Frobenius norm.
+    /// Frobenius norm (accumulated wide).
     pub fn frob_norm(&self) -> f32 {
-        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+        (self.data.iter().map(|&x| x.to_f64() * x.to_f64()).sum::<f64>()).sqrt() as f32
     }
 }
 
 /// The N per-mode factor matrices, all with the same rank J (as in the
 /// paper's experiments; per-mode J_n differs only in notation).
 #[derive(Clone, Debug)]
-pub struct FactorMatrices {
-    mats: Vec<Matrix>,
+pub struct FactorMatrices<E: Element = f32> {
+    mats: Vec<Matrix<E>>,
     rank: usize,
 }
 
-impl FactorMatrices {
+impl<E: Element> FactorMatrices<E> {
     pub fn random(rng: &mut Rng, dims: &[usize], rank: usize, scale: f32) -> Self {
         let mats = dims
             .iter()
@@ -106,7 +114,7 @@ impl FactorMatrices {
         FactorMatrices { mats, rank }
     }
 
-    pub fn from_mats(mats: Vec<Matrix>) -> Self {
+    pub fn from_mats(mats: Vec<Matrix<E>>) -> Self {
         let rank = mats.first().map(|m| m.cols()).unwrap_or(0);
         assert!(mats.iter().all(|m| m.cols() == rank));
         FactorMatrices { mats, rank }
@@ -124,25 +132,25 @@ impl FactorMatrices {
         self.mats.iter().map(|m| m.rows()).collect()
     }
 
-    pub fn mats(&self) -> &[Matrix] {
+    pub fn mats(&self) -> &[Matrix<E>] {
         &self.mats
     }
 
-    pub fn mat(&self, n: usize) -> &Matrix {
+    pub fn mat(&self, n: usize) -> &Matrix<E> {
         &self.mats[n]
     }
 
-    pub fn mat_mut(&mut self, n: usize) -> &mut Matrix {
+    pub fn mat_mut(&mut self, n: usize) -> &mut Matrix<E> {
         &mut self.mats[n]
     }
 
     #[inline]
-    pub fn row(&self, n: usize, i: usize) -> &[f32] {
+    pub fn row(&self, n: usize, i: usize) -> &[E] {
         self.mats[n].row(i)
     }
 
     #[inline]
-    pub fn row_mut(&mut self, n: usize, i: usize) -> &mut [f32] {
+    pub fn row_mut(&mut self, n: usize, i: usize) -> &mut [E] {
         self.mats[n].row_mut(i)
     }
 }
@@ -153,7 +161,7 @@ mod tests {
 
     #[test]
     fn matrix_row_access() {
-        let m = Matrix::from_data(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = Matrix::<f32>::from_data(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
         assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
         assert_eq!(m.get(1, 2), 6.0);
@@ -162,14 +170,14 @@ mod tests {
     #[test]
     fn transpose_roundtrip() {
         let mut rng = Rng::new(4);
-        let m = Matrix::random(&mut rng, 5, 7, 1.0);
+        let m = Matrix::<f32>::random(&mut rng, 5, 7, 1.0);
         assert_eq!(m.transposed().transposed(), m);
     }
 
     #[test]
     fn factor_matrices_shapes() {
         let mut rng = Rng::new(5);
-        let f = FactorMatrices::random(&mut rng, &[10, 20, 30], 4, 0.5);
+        let f = FactorMatrices::<f32>::random(&mut rng, &[10, 20, 30], 4, 0.5);
         assert_eq!(f.order(), 3);
         assert_eq!(f.rank(), 4);
         assert_eq!(f.dims(), vec![10, 20, 30]);
@@ -179,12 +187,29 @@ mod tests {
     #[test]
     #[should_panic]
     fn mismatched_ranks_panic() {
-        FactorMatrices::from_mats(vec![Matrix::zeros(2, 3), Matrix::zeros(2, 4)]);
+        FactorMatrices::from_mats(vec![Matrix::<f32>::zeros(2, 3), Matrix::zeros(2, 4)]);
+    }
+
+    #[test]
+    fn f64_instantiation_stores_wide_rows() {
+        // ISSUE 10: factor storage genericizes over the sealed Element
+        // types; an f64 matrix keeps values past f32 precision.
+        let wide_val = 1.0f64 + 1.0e-12;
+        let mut m = Matrix::<f64>::zeros(2, 2);
+        m.set(1, 1, wide_val);
+        assert_eq!(m.get(1, 1), wide_val);
+        assert_ne!(m.get(1, 1) as f32 as f64, wide_val);
+        let f = FactorMatrices::<f64>::zeros(&[3, 4], 2);
+        assert_eq!(f.dims(), vec![3, 4]);
+        assert_eq!(f.row(1, 3), &[0.0f64, 0.0]);
+        let mut rng = Rng::new(7);
+        let r = FactorMatrices::<f64>::random(&mut rng, &[5], 3, 1.0);
+        assert!(r.mat(0).frob_norm() > 0.0);
     }
 
     #[test]
     fn row_mut_writes() {
-        let mut f = FactorMatrices::zeros(&[3, 3], 2);
+        let mut f = FactorMatrices::<f32>::zeros(&[3, 3], 2);
         f.row_mut(0, 1).copy_from_slice(&[1.0, 2.0]);
         assert_eq!(f.row(0, 1), &[1.0, 2.0]);
         assert_eq!(f.row(0, 0), &[0.0, 0.0]);

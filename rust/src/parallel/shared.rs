@@ -398,10 +398,20 @@ impl crate::kernel::FactorAccess for RelaxedRowAccess<'_> {
 /// sequential access, which is safe but worth surfacing.
 ///
 /// Cost note: with `threads > 1` in exact mode, the coloring pass (one
-/// O(plan footprint) sweep, comparable to plan construction) runs on
-/// every pass even when the gate then rejects it — pools are explicit
-/// opt-in, so conflict-dense workloads pay a bounded planning overhead
-/// until the gate verdict is cached per block (ROADMAP follow-up).
+/// O(plan footprint) sweep, comparable to plan construction) and the
+/// pays-off verdict are **memoized per
+/// `(plan fingerprint, tensor revision)`** on the pool
+/// ([`DispatchPool::cached_coloring`]) — a worker re-running an
+/// unchanged plan every epoch pays the sweep once, not per pass
+/// (ISSUE 10 carried follow-up). The fingerprint pins the exact group
+/// structure, the revision the coordinates the conflict graph reads, and
+/// a pool is rebuilt on thread-count changes, so a hit is exactly the
+/// coloring the fresh sweep would produce.
+///
+/// Plans with [`PlanParams::wide_accum`](crate::kernel::PlanParams) set
+/// never engage the pool: wide (f64) accumulation is a sequential
+/// relaxed-path feature ([`batched::run_plan`]), and a multi-thread pool
+/// asked to run one degrades loudly like the other shape mismatches.
 ///
 /// # Safety
 /// Level-1 ownership: every factor row the plan touches must be owned
@@ -424,18 +434,33 @@ pub unsafe fn dispatch_plan(
     stats: &mut PlanStats,
 ) -> KernelStats {
     let exactness = plan.params().exactness;
-    let coloring = if pool.threads() > 1 && plan.n_groups() > 1 {
+    let wide = plan.params().wide_accum;
+    let coloring = if pool.threads() > 1 && plan.n_groups() > 1 && !wide {
         match exactness {
             Exactness::Exact => {
-                let c = plan.color_subgroups_with_scratch(tensor, pool.color_scratch_mut());
-                #[cfg(feature = "strict-audit")]
-                crate::analysis::audit_coloring(
-                    tensor,
-                    plan,
-                    &crate::analysis::waves_of(&c),
-                )
-                .assert_clean("sub-group coloring");
-                planner::coloring_pays_off(&c.stats()).then_some(c)
+                // Memoized coloring + gate verdict (see the cost note):
+                // keyed on the plan's grouping fingerprint and the
+                // tensor's content revision, both of which fully
+                // determine the conflict graph.
+                let key = (plan.fingerprint(), tensor.revision());
+                let cached = pool.cached_coloring(key).map(|v| v.cloned());
+                match cached {
+                    Some(verdict) => verdict,
+                    None => {
+                        let c = plan
+                            .color_subgroups_with_scratch(tensor, pool.color_scratch_mut());
+                        #[cfg(feature = "strict-audit")]
+                        crate::analysis::audit_coloring(
+                            tensor,
+                            plan,
+                            &crate::analysis::waves_of(&c),
+                        )
+                        .assert_clean("sub-group coloring");
+                        let verdict = planner::coloring_pays_off(&c.stats()).then_some(c);
+                        pool.record_coloring(key, verdict.clone());
+                        verdict
+                    }
+                }
             }
             Exactness::Relaxed => Some(SubGroupColoring::single_wave(plan.n_groups())),
         }
@@ -443,11 +468,13 @@ pub unsafe fn dispatch_plan(
         if exactness == Exactness::Relaxed && pool.threads() > 1 && !plan.is_empty() {
             // A relaxed plan that cannot engage the pool (≤ 1 sub-group:
             // a degenerate shard — e.g. a zero-row factor mode collapsed
-            // the geometry — or a too-small batch) silently runs the
-            // sequential *exact-style* non-atomic path below. That is
-            // safe and numerically fine, but it is not the hogwild
-            // execution the config asked for — degrade loudly like the
-            // PR 4/5 clamps instead of masking the shape problem.
+            // the geometry — or a too-small batch; or wide f64
+            // accumulation, which is sequential by design) silently runs
+            // the sequential path below. That is safe and numerically
+            // fine, but it is not the hogwild execution the config asked
+            // for — degrade loudly like the PR 4/5 clamps instead of
+            // masking the shape problem. (Wide accumulation still
+            // applies on the sequential path.)
             stats.degraded = true;
         }
         None

@@ -25,7 +25,7 @@ use std::time::Instant;
 use crate::algo::{AlgoError, AlgoResult, EpochStats, SgdHyper};
 use crate::kernel::{
     apply_core_grad_raw, build_strided, planner, BatchPlan, BatchSizing, CoreLayout,
-    DispatchPool, Exactness, FiberStats, Lanes, PlanParams, ThreadCount,
+    DispatchPool, Exactness, FiberStats, Lanes, PlanParams, SimdLevel, ThreadCount,
 };
 use crate::log_warn;
 use crate::metrics::{CommLedger, PlanAccum, PlanStats};
@@ -85,6 +85,18 @@ pub struct ParallelOptions {
     /// calls (`Auto` = planner-chosen from `R_core`; bitwise-neutral in
     /// exact mode).
     pub lanes: Lanes,
+    /// Panel-microkernel SIMD level (ISSUE 10 tentpole): `Auto` =
+    /// `FASTTUCKER_SIMD` or runtime feature detection
+    /// ([`SimdLevel::resolve`]); every level combines per-lane partial
+    /// sums in the scalar association, so exact mode stays bitwise at
+    /// any setting.
+    pub simd: SimdLevel,
+    /// Accumulate the per-sample contraction in f64 while storage stays
+    /// f32 (ISSUE 10 tentpole, relaxed mode only): stabler hogwild at
+    /// the cost of the pooled dispatch path — wide plans run
+    /// sequentially (see
+    /// [`dispatch_plan`](crate::parallel::shared::dispatch_plan)).
+    pub wide_accum: bool,
     /// Split-group factor (≥ 1, default 1): each worker's plan cuts long
     /// tiled groups into sub-groups at fiber sub-run boundaries (exact
     /// mode — bitwise identical to the unsplit plan, pinned by the
@@ -166,6 +178,8 @@ impl Default for ParallelOptions {
             batch: BatchSizing::Auto,
             exactness: Exactness::Exact,
             lanes: Lanes::Auto,
+            simd: SimdLevel::Auto,
+            wide_accum: false,
             split: 1,
             threads: ThreadCount::Auto,
             devices: DeviceCount::Auto,
@@ -227,6 +241,8 @@ pub struct ParallelFastTucker {
         BatchSizing,
         Exactness,
         Lanes,
+        SimdLevel,
+        bool,
         usize,
         usize,
         usize,
@@ -439,6 +455,8 @@ impl ParallelFastTucker {
             self.opts.batch,
             self.opts.exactness,
             self.opts.lanes,
+            self.opts.simd,
+            self.opts.wide_accum,
             self.opts.split,
             self.opts.workers,
             grid.devices(),
@@ -458,13 +476,15 @@ impl ParallelFastTucker {
                             j,
                             self.opts.exactness,
                             self.opts.lanes,
+                            self.opts.simd,
                             self.opts.split,
                         )
                         .unwrap_or(PlanParams {
                             max_batch: 1,
                             exactness: self.opts.exactness,
                             ..Default::default()
-                        });
+                        })
+                        .with_wide_accum(self.opts.wide_accum);
                     vec![p; grid.devices()]
                 }
                 BatchSizing::Auto => {
@@ -490,15 +510,17 @@ impl ParallelFastTucker {
                                 j,
                                 self.opts.exactness,
                                 self.opts.lanes,
+                                self.opts.simd,
                                 self.opts.split,
                             )
+                            .with_wide_accum(self.opts.wide_accum)
                         })
                         .collect()
                 }
             };
             self.device_params_for = Some(params_fp);
         }
-        let threads = planner::resolve_threads(self.opts.threads);
+        let threads = planner::resolve_threads(self.opts.threads, self.opts.exactness);
         let stale = self.pools.len() != self.opts.workers
             || self.pools.iter().enumerate().any(|(g, p)| {
                 let cap = self.device_params[grid.device_of(g)].max_batch;

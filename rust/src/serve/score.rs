@@ -7,8 +7,8 @@
 //! lane-blocked [`score_panel`] — **bitwise-identical to the pointwise
 //! [`TuckerModel::predict`] oracle**, property-pinned in
 //! `kruskal::predict` and re-pinned end-to-end here — and top-k
-//! selection orders by `(score desc, candidate asc)` so ties are
-//! deterministic across runs and layouts.
+//! selection orders by `(score desc, candidate asc)` — NaN scores sort
+//! strictly last — so ties are deterministic across runs and layouts.
 //!
 //! Dense-cored baseline models are served too (the dispatch is the same
 //! [`predict`](crate::kruskal::predict::predict) everywhere), but only
@@ -98,8 +98,9 @@ impl Scorer {
         }
     }
 
-    /// Top-k over the query's candidates: `(score desc, item asc)`,
-    /// truncated to `k`. Duplicate candidates rank independently.
+    /// Top-k over the query's candidates: `(score desc, item asc)` with
+    /// NaN scores sorted strictly last, truncated to `k`. Duplicate
+    /// candidates rank independently.
     pub fn top_k(
         &mut self,
         model: &TuckerModel,
@@ -114,11 +115,19 @@ impl Scorer {
             .zip(scores)
             .map(|(&item, score)| ScoredItem { item, score })
             .collect();
-        ranked.sort_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.item.cmp(&b.item))
+        // NaN-scored candidates (possible when a model is served mid-blowup,
+        // e.g. a diverged relaxed run) must sort strictly LAST, never
+        // displacing finite scores. The old `partial_cmp(..).unwrap_or(Equal)`
+        // treated NaN as tied-with-everything, so `sort_by` (which is not a
+        // total order under that comparator) could leave a NaN anywhere in
+        // the ranking — including above real recommendations. Note
+        // `total_cmp` alone is not the fix either: it orders +NaN *above*
+        // +inf, so a descending `total_cmp` would put NaN FIRST.
+        ranked.sort_by(|a, b| match (a.score.is_nan(), b.score.is_nan()) {
+            (true, true) => a.item.cmp(&b.item),
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => b.score.total_cmp(&a.score).then(a.item.cmp(&b.item)),
         });
         ranked.truncate(k);
         ranked
@@ -228,6 +237,66 @@ mod tests {
         let c = scorer.cache_counters();
         assert_eq!(c.invalidations, 1);
         assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn top_k_sorts_nan_scores_last_never_displacing_finite() {
+        // Regression (ISSUE 10 satellite): the old comparator used
+        // `partial_cmp(..).unwrap_or(Equal)`, which treats NaN as equal to
+        // everything — an intransitive comparator under which `sort_by`
+        // could leave a NaN-scored candidate anywhere, including ranked
+        // above real items. NaN must sort strictly last.
+        let mut rng = Rng::new(11);
+        let mut model = kruskal_model(&mut rng, &[6, 20, 5], 4, 4);
+        // Poison two item rows so their scores come out NaN.
+        for item in [3usize, 12] {
+            model.factors.mat_mut(1).row_mut(item).fill(f32::NAN);
+        }
+        let q = Query {
+            coords: vec![2, 0, 3],
+            candidate_mode: 1,
+            candidates: (0..20).collect(),
+        };
+        let mut scorer = Scorer::new(8);
+        let all = scorer.top_k(&model, 1, &q, 20);
+        assert_eq!(all.len(), 20);
+        // The two NaN candidates land in the last two slots, item-ordered.
+        assert!(all[18].score.is_nan() && all[19].score.is_nan());
+        assert_eq!((all[18].item, all[19].item), (3, 12));
+        // Every finite score ranks above every NaN, and finite prefix is
+        // descending with item-asc tiebreak.
+        for w in all[..18].windows(2) {
+            assert!(!w[0].score.is_nan() && !w[1].score.is_nan());
+            assert!(
+                w[0].score > w[1].score
+                    || (w[0].score == w[1].score && w[0].item <= w[1].item)
+            );
+        }
+        // A k that only covers the finite candidates must not contain NaN:
+        // NaN never displaces a finite score.
+        let top = scorer.top_k(&model, 1, &q, 18);
+        assert!(top.iter().all(|s| !s.score.is_nan()));
+    }
+
+    #[test]
+    fn top_k_batch_sorts_nan_scores_last() {
+        // Same regression pinned through the batch entry point.
+        let mut rng = Rng::new(12);
+        let mut model = kruskal_model(&mut rng, &[6, 10, 5], 4, 4);
+        model.factors.mat_mut(1).row_mut(0).fill(f32::NAN);
+        let queries: Vec<Query> = (0..3)
+            .map(|u| Query {
+                coords: vec![u, 0, 1],
+                candidate_mode: 1,
+                candidates: (0..10).collect(),
+            })
+            .collect();
+        let mut scorer = Scorer::new(8);
+        for ranked in scorer.top_k_batch(&model, 1, &queries, 10) {
+            assert_eq!(ranked.len(), 10);
+            assert!(ranked[9].score.is_nan() && ranked[9].item == 0);
+            assert!(ranked[..9].iter().all(|s| !s.score.is_nan()));
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::util::element::Element;
 use crate::util::error::{bail, Result};
 
 /// Process-global revision counter: every constructed or mutated
@@ -19,12 +20,18 @@ fn fresh_revision() -> u64 {
 }
 
 /// An order-N sparse tensor in coordinate format.
+///
+/// The value type `V` is any sealed [`Element`] (ISSUE 10): the default
+/// `f32` is the paper's input precision and what every engine consumes;
+/// `f64` instantiations carry full-precision inputs through the same
+/// container (the factor storage precision is a separate axis — see
+/// [`crate::model::factors::Matrix`]).
 #[derive(Clone, Debug)]
-pub struct SparseTensor {
+pub struct SparseTensor<V: Element = f32> {
     dims: Vec<usize>,
     /// Flat `nnz * order` coordinate array, sample-major.
     indices: Vec<u32>,
-    values: Vec<f32>,
+    values: Vec<V>,
     /// Content revision (ISSUE 9): a process-unique id assigned at
     /// construction and re-assigned by every mutation ([`Self::append`]).
     /// Engine caches (planner decisions, block partitions, device grids)
@@ -36,9 +43,9 @@ pub struct SparseTensor {
     revision: u64,
 }
 
-impl SparseTensor {
+impl<V: Element> SparseTensor<V> {
     /// Build from parts, validating bounds.
-    pub fn new(dims: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Result<Self> {
+    pub fn new(dims: Vec<usize>, indices: Vec<u32>, values: Vec<V>) -> Result<Self> {
         let order = dims.len();
         if order == 0 {
             bail!("tensor order must be >= 1");
@@ -71,7 +78,7 @@ impl SparseTensor {
 
     /// Build without bounds checks (generators that construct indices by
     /// `gen_range(dim)` are safe by construction; skips an O(nnz·N) pass).
-    pub fn new_unchecked(dims: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Self {
+    pub fn new_unchecked(dims: Vec<usize>, indices: Vec<u32>, values: Vec<V>) -> Self {
         debug_assert_eq!(indices.len(), values.len() * dims.len());
         SparseTensor { dims, indices, values, revision: fresh_revision() }
     }
@@ -99,7 +106,7 @@ impl SparseTensor {
     /// construction; `indices.len()` must be `values.len() * order`. On
     /// success the tensor gets a fresh [`Self::revision`]; on error it is
     /// untouched.
-    pub fn append(&mut self, indices: &[u32], values: &[f32]) -> Result<()> {
+    pub fn append(&mut self, indices: &[u32], values: &[V]) -> Result<()> {
         let order = self.order();
         if indices.len() != values.len() * order {
             bail!(
@@ -127,7 +134,7 @@ impl SparseTensor {
     /// Append every nonzero of `other` (an arrival batch). The dims must
     /// match exactly — a batch shaped for a different tensor is an error,
     /// not a silent re-index.
-    pub fn append_tensor(&mut self, other: &SparseTensor) -> Result<()> {
+    pub fn append_tensor(&mut self, other: &SparseTensor<V>) -> Result<()> {
         if self.dims != other.dims {
             bail!(
                 "append_tensor: dims mismatch: {:?} vs batch {:?}",
@@ -155,7 +162,7 @@ impl SparseTensor {
         &self.dims
     }
 
-    pub fn values(&self) -> &[f32] {
+    pub fn values(&self) -> &[V] {
         &self.values
     }
 
@@ -172,12 +179,12 @@ impl SparseTensor {
 
     /// Value of nonzero `k`.
     #[inline]
-    pub fn value(&self, k: usize) -> f32 {
+    pub fn value(&self, k: usize) -> V {
         self.values[k]
     }
 
     /// Iterate `(coords, value)` pairs.
-    pub fn iter(&self) -> impl Iterator<Item = (&[u32], f32)> + '_ {
+    pub fn iter(&self) -> impl Iterator<Item = (&[u32], V)> + '_ {
         let n = self.order();
         self.indices
             .chunks_exact(n)
@@ -190,17 +197,17 @@ impl SparseTensor {
         self.nnz() as f64 / total
     }
 
-    /// Mean of the stored values.
-    pub fn mean_value(&self) -> f32 {
+    /// Mean of the stored values (accumulated wide).
+    pub fn mean_value(&self) -> V {
         if self.values.is_empty() {
-            return 0.0;
+            return V::ZERO;
         }
-        (self.values.iter().map(|&v| v as f64).sum::<f64>() / self.nnz() as f64) as f32
+        V::from_f64(self.values.iter().map(|&v| v.to_f64()).sum::<f64>() / self.nnz() as f64)
     }
 
     /// Take a subset of nonzeros by id (used by the block partitioner and
     /// train/test splitting).
-    pub fn gather(&self, ids: &[usize]) -> SparseTensor {
+    pub fn gather(&self, ids: &[usize]) -> SparseTensor<V> {
         let n = self.order();
         let mut indices = Vec::with_capacity(ids.len() * n);
         let mut values = Vec::with_capacity(ids.len());
@@ -218,7 +225,7 @@ impl SparseTensor {
 
     /// A copy with `delta` added to every value (mean-centering for
     /// ratings data: train on `x - mean`, predict `x̂ + mean`).
-    pub fn with_shifted_values(&self, delta: f32) -> SparseTensor {
+    pub fn with_shifted_values(&self, delta: V) -> SparseTensor<V> {
         SparseTensor {
             dims: self.dims.clone(),
             indices: self.indices.clone(),
@@ -231,7 +238,7 @@ impl SparseTensor {
     /// space-overhead comparisons).
     pub fn footprint_bytes(&self) -> usize {
         self.indices.len() * std::mem::size_of::<u32>()
-            + self.values.len() * std::mem::size_of::<f32>()
+            + self.values.len() * std::mem::size_of::<V>()
     }
 }
 
@@ -342,6 +349,20 @@ mod tests {
         assert!(t.append(&[3, 0, 0], &[1.0]).is_err());
         assert_eq!(t.nnz(), 3);
         assert_eq!(t.revision(), r0);
+    }
+
+    #[test]
+    fn f64_instantiation_carries_wide_values() {
+        // ISSUE 10: the container genericizes over the sealed Element
+        // types — an f64 tensor holds values past f32 precision intact.
+        let wide_val = 1.0f64 + 1.0e-12;
+        let t = SparseTensor::<f64>::new(vec![2, 2], vec![0, 1], vec![wide_val]).unwrap();
+        assert_eq!(t.value(0), wide_val);
+        assert_ne!(t.value(0) as f32 as f64, wide_val);
+        assert_eq!(t.mean_value(), wide_val);
+        let shifted = t.with_shifted_values(1.0);
+        assert_eq!(shifted.value(0), wide_val + 1.0);
+        assert_eq!(t.footprint_bytes(), 2 * 4 + 8);
     }
 
     #[test]

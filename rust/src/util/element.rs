@@ -1,0 +1,158 @@
+//! The sealed [`Element`] scalar abstraction (ISSUE 10): one trait
+//! genericizing the value type of [`SparseTensor`] and the storage type
+//! of the dense factor containers ([`Matrix`] / `FactorMatrices`), so
+//! the **input precision** and the **factor precision** are independent
+//! axes.
+//!
+//! The paper's mixed-precision recipe stores everything that is *large*
+//! (the nonzero stream, the factor matrices) in f32 and accumulates
+//! everything that is *numerically delicate* (the Theorem-1/2
+//! contraction reductions) in f64 — [`Element::Wide`] names that
+//! accumulator type per storage type. The relaxed-mode wide path
+//! (`PlanParams::wide_accum`) is the consumer: f32 storage, f64
+//! accumulation, narrowing exactly once at the SGD write-back.
+//!
+//! The trait is **sealed** (only `f32` and `f64` implement it): the hot
+//! kernels monomorphize over a closed set, every implementation is a
+//! plain IEEE-754 type with the conversions below total and lossless in
+//! the directions the kernels use, and downstream crates cannot smuggle
+//! in a type that breaks the bitwise contracts pinned by
+//! `tests/properties.rs`.
+//!
+//! [`SparseTensor`]: crate::tensor::SparseTensor
+//! [`Matrix`]: crate::model::factors::Matrix
+
+use std::fmt::Debug;
+use std::ops::{Add, Mul, Sub};
+
+mod sealed {
+    /// Seals [`super::Element`]: the kernel layer's numeric contracts are
+    /// only audited for the two IEEE-754 types below.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// A scalar the tensor/factor containers can store and the kernels can
+/// reduce over. See the module docs for why it is sealed.
+pub trait Element:
+    sealed::Sealed
+    + Copy
+    + Debug
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+{
+    /// The accumulator type wide enough to sum many `Self` products
+    /// without catastrophic rounding (f64 for both storage types — for
+    /// f64 storage the accumulator is already as wide as it gets).
+    type Wide: Element;
+
+    /// Additive identity (`vec![Self::ZERO; n]` is the generic
+    /// `vec![0.0; n]`).
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// Widen into the accumulator type (lossless for both impls).
+    #[inline]
+    fn widen(self) -> Self::Wide {
+        Self::Wide::from_f64(self.to_f64())
+    }
+}
+
+impl Element for f32 {
+    type Wide = f64;
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+
+    #[inline]
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Element for f64 {
+    type Wide = f64;
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+
+    #[inline]
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities_and_conversions() {
+        assert_eq!(f32::ZERO + f32::ONE, 1.0f32);
+        assert_eq!(f64::ZERO + f64::ONE, 1.0f64);
+        assert_eq!(f32::from_f64(0.5), 0.5f32);
+        assert_eq!(f64::from_f32(0.5), 0.5f64);
+        assert_eq!(1.5f32.widen(), 1.5f64);
+        assert_eq!(1.5f64.widen(), 1.5f64);
+    }
+
+    #[test]
+    fn widening_f32_is_lossless() {
+        // Every f32 (including subnormals and the classic 0.1 rounding
+        // victim) round-trips exactly through its Wide type.
+        for v in [0.1f32, f32::MIN_POSITIVE, 1.0e-45, 3.4e38, -7.25] {
+            let w = v.widen();
+            assert_eq!(f32::from_f64(w), v);
+        }
+    }
+
+    fn generic_sum<E: Element>(xs: &[E]) -> E::Wide {
+        let mut acc = <E::Wide>::ZERO;
+        for &x in xs {
+            acc = acc + x.widen();
+        }
+        acc
+    }
+
+    #[test]
+    fn generic_reduction_monomorphizes_for_both_impls() {
+        assert_eq!(generic_sum(&[1.0f32, 2.0, 3.0]), 6.0f64);
+        assert_eq!(generic_sum(&[1.0f64, 2.0, 3.0]), 6.0f64);
+    }
+}

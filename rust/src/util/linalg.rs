@@ -106,6 +106,49 @@ pub fn weighted_rowsum(m: &[f32], rows: usize, cols: usize, w: &[f32], out: &mut
     }
 }
 
+/// Wide-accumulation dot product: f32 operands, every product and the
+/// running sum in f64 (ISSUE 10 `wide_accum` path). Plain sequential
+/// association — the wide path has no bitwise contract to pin, so no
+/// lane blocking.
+#[inline]
+pub fn dot_wide(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += (x as f64) * (y as f64);
+    }
+    acc
+}
+
+/// Wide-accumulation row-major matvec `out = M x`: f32 matrix and
+/// vector, f64 accumulators and output (ISSUE 10 `wide_accum` step 1).
+#[inline]
+pub fn matvec_rowmajor_wide(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        out[r] = dot_wide(&m[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// Wide-accumulation weighted row sum `out = Σ_r w[r] · M[r, :]`: f32
+/// matrix, f64 weights and accumulators (ISSUE 10 `wide_accum` step 3).
+#[inline]
+pub fn weighted_rowsum_wide(m: &[f32], rows: usize, cols: usize, w: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(w.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    for r in 0..rows {
+        let wr = w[r];
+        let row = &m[r * cols..(r + 1) * cols];
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += wr * (v as f64);
+        }
+    }
+}
+
 /// Dense symmetric positive-definite solve via Cholesky: `A x = b`,
 /// `A` row-major `n×n` (only the lower triangle is read). Returns `None`
 /// if the matrix is not (numerically) positive definite.

@@ -5,6 +5,7 @@
 //! crates**: the usual `rand`/`log`/`proptest`/`anyhow` stack is replaced
 //! by focused in-tree implementations.
 
+pub mod element;
 pub mod error;
 pub mod hash;
 pub mod rng;
@@ -12,6 +13,7 @@ pub mod logger;
 pub mod linalg;
 pub mod propcheck;
 
+pub use element::Element;
 pub use error::{Context, Error, Result};
 pub use hash::fnv1a64;
 pub use rng::Rng;

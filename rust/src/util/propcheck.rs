@@ -15,13 +15,45 @@
 
 use crate::util::Rng;
 
+/// The base-seed override variable consulted by [`forall`].
+pub const PROP_SEED_VAR: &str = "FASTTUCKER_PROP_SEED";
+
+const DEFAULT_PROP_SEED: u64 = 0xFA57_7C4E_5EED;
+
+/// Parse a `FASTTUCKER_PROP_SEED` value: an unsigned 64-bit integer,
+/// decimal or `0x`-prefixed hex (the harness reports replay seeds in
+/// hex, so pasting one back verbatim must work). Pure so it is testable
+/// without mutating process-global environment state.
+fn parse_seed(raw: &str) -> Result<u64, String> {
+    let s = raw.trim();
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse::<u64>(),
+    };
+    parsed.map_err(|_| {
+        format!("expected an unsigned 64-bit integer (decimal or 0x-hex), got {raw:?}")
+    })
+}
+
 /// Base seed; combined with the case index so each case is independent but
 /// reproducible. Override with `FASTTUCKER_PROP_SEED` to explore new cases.
+///
+/// Regression (ISSUE 10 satellite): a malformed override used to fall
+/// back **silently** to the default seed — a run the operator believed
+/// was exploring `FASTTUCKER_PROP_SEED=deadbeef` was actually re-running
+/// the stock cases. Malformed or non-unicode values now abort loudly
+/// with the offending value, matching the `FASTTUCKER_FAULT_*`
+/// validation precedent.
 fn base_seed() -> u64 {
-    std::env::var("FASTTUCKER_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xFA57_7C4E_5EED)
+    match std::env::var(PROP_SEED_VAR) {
+        Ok(raw) => parse_seed(&raw).unwrap_or_else(|e| {
+            panic!("invalid {PROP_SEED_VAR}: {e}");
+        }),
+        Err(std::env::VarError::NotPresent) => DEFAULT_PROP_SEED,
+        Err(std::env::VarError::NotUnicode(os)) => {
+            panic!("invalid {PROP_SEED_VAR}: value {os:?} is not valid unicode");
+        }
+    }
 }
 
 /// Run `cases` seeded cases of `prop`. Panics with the failing seed attached.
@@ -73,6 +105,27 @@ mod tests {
         let err = res.unwrap_err();
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn seed_parser_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("12345"), Ok(12345));
+        assert_eq!(parse_seed("  42 "), Ok(42));
+        assert_eq!(parse_seed("0xFA57"), Ok(0xFA57));
+        assert_eq!(parse_seed("0Xdeadbeef"), Ok(0xDEAD_BEEF));
+        assert_eq!(parse_seed(&format!("{:#x}", u64::MAX)), Ok(u64::MAX));
+    }
+
+    #[test]
+    fn seed_parser_rejects_garbage_with_the_offending_value() {
+        // Regression: these all used to silently fall back to the default
+        // base seed; they must now produce an error naming the bad value.
+        for bad in ["", "deadbeef", "-1", "1.5", "0x", "0xZZ", "12three"] {
+            let err = parse_seed(bad).unwrap_err();
+            assert!(err.contains(&format!("{bad:?}")), "{bad}: {err}");
+        }
+        // One past u64::MAX overflows rather than wrapping.
+        assert!(parse_seed("18446744073709551616").is_err());
     }
 
     #[test]

@@ -353,11 +353,14 @@ fn prop_tiled_batched_bitwise_matches_scalar() {
 
 #[test]
 fn prop_panel_microkernel_bitwise_matches_scalar() {
-    // ISSUE 3 tentpole invariant: every panel-microkernel lane width
-    // (Auto/4/8) × every R_core tail length × Packed/Strided layout ×
-    // split-group refinement keeps exact batched execution BITWISE
-    // identical to the scalar kernel over plan order — factors, core
-    // grads, sse, and the residual stream.
+    // ISSUE 3 tentpole invariant, extended by ISSUE 10: every
+    // panel-microkernel lane width (Auto/4/8) × every SIMD level
+    // (Scalar/V128/V256/Auto — explicit levels clamp to what the host
+    // supports, so the sweep is portable) × every R_core tail length ×
+    // Packed/Strided layout × split-group refinement keeps exact batched
+    // execution BITWISE identical to the scalar kernel over plan order —
+    // factors, core grads, sse, and the residual stream. One scalar
+    // reference per case, every SIMD level compared against it.
     forall("panel microkernels == scalar, bitwise", 14, |rng| {
         let order = 2 + rng.gen_range(3); // 2..=4
         // Skew mode 0 large so fibers are short and tiles really form.
@@ -389,58 +392,75 @@ fn prop_panel_microkernel_bitwise_matches_scalar() {
             1 => fasttucker::kernel::Lanes::W4,
             _ => fasttucker::kernel::Lanes::W8,
         };
-        let params = fasttucker::kernel::PlanParams::tiled(
+        let base = fasttucker::kernel::PlanParams::tiled(
             2 + rng.gen_range(95),
             1 + rng.gen_range(16),
         )
         .with_lanes(lanes)
         .with_split(1 + rng.gen_range(6));
-        let plan = BatchPlan::build_params(&tensor, &ids, params);
         let (lr, lam) = (0.01f32, 0.003f32);
         let update_core = rng.gen_range(2) == 0;
 
+        let ref_plan = BatchPlan::build_params(&tensor, &ids, base);
         let mut f_s = model.factors.clone();
         let mut ws = Workspace::new(order, r, j);
         let mut log_s = Vec::new();
         let st_s = scalar::run_ids(
-            &mut ws, &tensor, plan.ids(), &core, &strided, layout, &mut f_s, lr, lam,
+            &mut ws, &tensor, ref_plan.ids(), &core, &strided, layout, &mut f_s, lr, lam,
             update_core, Some(&mut log_s),
         );
+        let (gs, cs) = ws.core_grad_mut();
 
-        let mut f_b = model.factors.clone();
-        let mut bws = BatchWorkspace::new(order, r, j, params.max_batch);
-        let mut log_b = Vec::new();
-        let st_b = batched::run_plan(
-            &mut bws, &tensor, &plan, &core, &strided, layout, &mut f_b, lr, lam,
-            update_core, Some(&mut log_b),
-        );
+        for simd in [
+            fasttucker::kernel::SimdLevel::Scalar,
+            fasttucker::kernel::SimdLevel::V128,
+            fasttucker::kernel::SimdLevel::V256,
+            fasttucker::kernel::SimdLevel::Auto,
+        ] {
+            let params = base.with_simd(simd);
+            let plan = BatchPlan::build_params(&tensor, &ids, params);
+            let mut f_b = model.factors.clone();
+            let mut bws = BatchWorkspace::new(order, r, j, params.max_batch);
+            let mut log_b = Vec::new();
+            let st_b = batched::run_plan(
+                &mut bws, &tensor, &plan, &core, &strided, layout, &mut f_b, lr, lam,
+                update_core, Some(&mut log_b),
+            );
 
-        assert_eq!(st_s.samples, st_b.samples);
-        assert_eq!(
-            st_s.sse.to_bits(),
-            st_b.sse.to_bits(),
-            "sse diverged ({lanes:?}, split {})",
-            params.split
-        );
-        assert_eq!(log_s.len(), log_b.len());
-        for (i, (a, b)) in log_s.iter().zip(log_b.iter()).enumerate() {
-            assert_eq!(a.to_bits(), b.to_bits(), "residual {i} diverged ({lanes:?})");
-        }
-        for n in 0..order {
-            for (a, b) in f_s.mat(n).data().iter().zip(f_b.mat(n).data().iter()) {
+            assert_eq!(st_s.samples, st_b.samples);
+            assert_eq!(
+                st_s.sse.to_bits(),
+                st_b.sse.to_bits(),
+                "sse diverged ({simd:?}, {lanes:?}, split {})",
+                params.split
+            );
+            assert_eq!(log_s.len(), log_b.len());
+            for (i, (a, b)) in log_s.iter().zip(log_b.iter()).enumerate() {
                 assert_eq!(
                     a.to_bits(),
                     b.to_bits(),
-                    "mode {n} factors diverged ({lanes:?}, split {})",
-                    params.split
+                    "residual {i} diverged ({simd:?}, {lanes:?})"
                 );
             }
-        }
-        let (gs, cs) = ws.core_grad_mut();
-        let (gb, cb) = bws.core_grad_mut();
-        assert_eq!(*cs, *cb);
-        for (a, b) in gs.iter().zip(gb.iter()) {
-            assert_eq!(a.to_bits(), b.to_bits(), "core grads diverged ({lanes:?})");
+            for n in 0..order {
+                for (a, b) in f_s.mat(n).data().iter().zip(f_b.mat(n).data().iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "mode {n} factors diverged ({simd:?}, {lanes:?}, split {})",
+                        params.split
+                    );
+                }
+            }
+            let (gb, cb) = bws.core_grad_mut();
+            assert_eq!(*cs, *cb);
+            for (a, b) in gs.iter().zip(gb.iter()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "core grads diverged ({simd:?}, {lanes:?})"
+                );
+            }
         }
     });
 }
